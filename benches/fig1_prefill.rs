@@ -1,0 +1,61 @@
+//! Figure 1 / Table 11 — prefill time vs input length (32K..1M) for every
+//! method, with OOM verdicts, on the Llama-3.1-8B / 8×A800 profile.
+
+use apb::attnsim::{estimate, Hyper, Method, A800, LLAMA31_8B};
+use apb::bench_harness::{AsciiPlot, Table};
+use apb::report;
+use apb::util::json::{self, Json};
+
+fn main() {
+    let lengths: [f64; 6] = [32768.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0];
+    let labels = ["32K", "64K", "128K", "256K", "512K", "1024K"];
+    let hosts = 8.0;
+
+    let mut headers = vec!["Method"];
+    headers.extend(labels);
+    let mut table = Table::new("Figure 1 / Table 11: prefill time (s), Llama-3.1-8B, H=8",
+                               &headers);
+    let mut plot = AsciiPlot::new("Figure 1: log2(n) vs prefill seconds");
+    let mut rows = Vec::new();
+
+    for method in Method::ALL {
+        // FlashAttn / MInference run on a single device (§B.3).
+        let h = if method.uses_sequence_parallelism() { hosts } else { 1.0 };
+        let mut cells = vec![method.name().to_string()];
+        let mut pts = Vec::new();
+        for (&n, &lab) in lengths.iter().zip(&labels) {
+            let hy = Hyper::paper_schedule(n, hosts);
+            let est = estimate(method, &LLAMA31_8B, n, h, &hy, &A800, 64.0);
+            if est.oom {
+                cells.push("OOM".into());
+            } else {
+                cells.push(format!("{:.2}", est.prefill_s));
+                pts.push((n.log2(), est.prefill_s));
+            }
+            rows.push(report::row(vec![
+                ("method", json::s(method.name())),
+                ("n", json::s(lab)),
+                ("prefill_s", if est.oom { Json::Null } else { json::num(est.prefill_s) }),
+                ("oom", Json::Bool(est.oom)),
+                ("mem_gb", json::num(est.mem_bytes_peak / 1e9)),
+            ]));
+        }
+        table.row(cells);
+        plot.series(method.name(), pts);
+    }
+    table.print();
+    plot.print();
+
+    // Paper-anchored checks (Table 11 pattern).
+    let est_at = |m, n: f64, h| estimate(m, &LLAMA31_8B, n, h, &Hyper::paper_schedule(n, hosts), &A800, 64.0);
+    assert!(est_at(Method::FlashAttn, 262144.0, 1.0).oom, "FlashAttn OOM @256K");
+    assert!(!est_at(Method::Apb, 1048576.0, 8.0).oom, "APB survives 1M");
+    let apb = est_at(Method::Apb, 131072.0, 8.0).prefill_s;
+    let star = est_at(Method::StarAttn, 131072.0, 8.0).prefill_s;
+    println!("\nAPB vs StarAttn @128K: {:.2}x (paper: 3.50/0.94 = 3.7x)", star / apb);
+
+    let path = report::write_report("fig1_tab11_prefill",
+                                    vec![("hosts", json::num(hosts))], Json::Arr(rows))
+        .expect("report");
+    println!("[report] {}", path.display());
+}

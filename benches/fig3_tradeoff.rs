@@ -1,0 +1,88 @@
+//! Figure 3 — the speed/performance tradeoff scatter: average accuracy
+//! (Tables 1/2) vs average speed (Tables 9/12) per method and model.
+//! APB must sit top-right (best tradeoff).
+
+use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, ModelProfile, A800,
+                   LLAMA31_8B, QWEN25_14B, YI_34B};
+use apb::bench_harness::{AsciiPlot, Table};
+use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
+use apb::report;
+use apb::ruler::tasks::{infbench_tasks, ruler_tasks, ModelCol};
+use apb::util::json::{self, Json};
+
+const N: f64 = 131072.0;
+const HOSTS: f64 = 8.0;
+
+fn acc_method(m: Method) -> Option<AccMethod> {
+    match m {
+        Method::FlashAttn | Method::Ulysses | Method::RingAttn => Some(AccMethod::Full),
+        Method::MInference => Some(AccMethod::MInference),
+        Method::StarAttn => Some(AccMethod::StarAttn),
+        Method::Apb => Some(AccMethod::Apb(
+            ApbQuality::paper_default(4096.0, 2048.0, 16384.0))),
+    }
+}
+
+fn avg_speed(method: Method, model: &ModelProfile) -> Option<f64> {
+    let h = if method.uses_sequence_parallelism() { HOSTS } else { 1.0 };
+    let tasks: Vec<_> = infbench_tasks().into_iter().chain(ruler_tasks()).collect();
+    let mut sum = 0.0;
+    for t in &tasks {
+        let est = estimate(method, model, N, h, &Hyper::e2e_128k(), &A800,
+                           t.out_tokens as f64);
+        sum += speed_tok_per_s(&est, N, t.out_tokens as f64)?;
+    }
+    Some(sum / tasks.len() as f64)
+}
+
+fn avg_acc(method: Method, model: ModelCol) -> f64 {
+    let am = acc_method(method).unwrap();
+    let ctx = EvalCtx { n: N, hosts: HOSTS, model, samples: 0, seed: 0 };
+    let tasks: Vec<_> = infbench_tasks().into_iter().chain(ruler_tasks()).collect();
+    tasks.iter().map(|t| expected_score(t, am, &ctx)).sum::<f64>() / tasks.len() as f64
+}
+
+fn main() {
+    let models: [(&ModelProfile, ModelCol); 3] = [
+        (&LLAMA31_8B, ModelCol::Llama),
+        (&QWEN25_14B, ModelCol::Qwen),
+        (&YI_34B, ModelCol::Yi),
+    ];
+    let mut rows = Vec::new();
+    for (profile, col) in models {
+        let mut table = Table::new(
+            &format!("Figure 3: tradeoff — {}", profile.name),
+            &["Method", "speed tok/s", "avg score"],
+        );
+        let mut plot = AsciiPlot::new(&format!("Figure 3 ({}): speed → vs score ↑",
+                                               profile.name));
+        for method in Method::ALL {
+            let Some(speed) = avg_speed(method, profile) else {
+                table.row(vec![method.name().into(), "OOM".into(), "-".into()]);
+                continue;
+            };
+            let acc = avg_acc(method, col);
+            table.row(vec![method.name().into(), format!("{speed:.0}"),
+                           format!("{acc:.2}")]);
+            plot.series(method.name(), vec![(speed, acc)]);
+            rows.push(report::row(vec![
+                ("model", json::s(profile.name)),
+                ("method", json::s(method.name())),
+                ("speed", json::num(speed)),
+                ("score", json::num(acc)),
+            ]));
+        }
+        table.print();
+        plot.print();
+
+        // Pareto check: APB dominates StarAttn on both axes.
+        let apb = (avg_speed(Method::Apb, profile).unwrap(), avg_acc(Method::Apb, col));
+        let star = (avg_speed(Method::StarAttn, profile).unwrap(),
+                    avg_acc(Method::StarAttn, col));
+        assert!(apb.0 > star.0 && apb.1 > star.1,
+                "{}: APB must Pareto-dominate StarAttn", profile.name);
+    }
+    let path = report::write_report("fig3_tradeoff", vec![("n", json::num(N))],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

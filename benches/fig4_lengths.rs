@@ -1,0 +1,127 @@
+//! Figure 4 / Tables 14, 15 — accuracy (a), speed (b) and compute (c)
+//! across input lengths 32K..512K, Llama profile, RULER tasks, with the
+//! Table 5 hyperparameter schedule.
+
+use apb::attnsim::{apb_flops, estimate, fullattn_flops, speed_tok_per_s, starattn_flops,
+                   Hyper, Method, A800, LLAMA31_8B};
+use apb::bench_harness::{AsciiPlot, Table};
+use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
+use apb::report;
+use apb::ruler::tasks::{ruler_tasks, ModelCol, LENGTHS};
+use apb::util::json::{self, Json};
+
+const HOSTS: f64 = 8.0;
+const LABELS: [&str; 5] = ["32K", "64K", "128K", "256K", "512K"];
+
+fn acc_method(m: Method, n: f64) -> AccMethod {
+    let hy = Hyper::paper_schedule(n, HOSTS);
+    match m {
+        Method::FlashAttn | Method::Ulysses | Method::RingAttn => AccMethod::Full,
+        Method::MInference => AccMethod::MInference,
+        Method::StarAttn => AccMethod::StarAttn,
+        Method::Apb => {
+            AccMethod::Apb(ApbQuality::paper_default(hy.l_a, hy.l_p, n / HOSTS))
+        }
+    }
+}
+
+fn main() {
+    let tasks = ruler_tasks();
+    let mut rows = Vec::new();
+
+    // (a) accuracy vs length — Table 14.
+    let mut t_acc = Table::new("Figure 4(a) / Table 14: RULER avg score vs length",
+                               &["Method", "32K", "64K", "128K", "256K", "512K"]);
+    let mut p_acc = AsciiPlot::new("Figure 4(a): log2(n) vs avg score");
+    for method in [Method::FlashAttn, Method::MInference, Method::StarAttn, Method::Apb] {
+        let mut cells = vec![method.name().to_string()];
+        let mut pts = Vec::new();
+        for (i, &n) in LENGTHS.iter().enumerate() {
+            let ctx = EvalCtx { n, hosts: HOSTS, model: ModelCol::Llama,
+                                samples: 0, seed: 0 };
+            let am = acc_method(method, n);
+            let avg = tasks.iter().map(|t| expected_score(t, am, &ctx)).sum::<f64>()
+                / tasks.len() as f64;
+            cells.push(format!("{avg:.2}"));
+            pts.push((n.log2(), avg));
+            rows.push(report::row(vec![
+                ("panel", json::s("accuracy")),
+                ("method", json::s(method.name())),
+                ("n", json::s(LABELS[i])),
+                ("value", json::num(avg)),
+            ]));
+        }
+        t_acc.row(cells);
+        p_acc.series(method.name(), pts);
+    }
+    t_acc.print();
+    p_acc.print();
+
+    // (b) speed vs length — Table 15.
+    let mut t_sp = Table::new("Figure 4(b) / Table 15: speed (tok/s) vs length",
+                              &["Method", "32K", "64K", "128K", "256K", "512K"]);
+    for method in Method::ALL {
+        let h = if method.uses_sequence_parallelism() { HOSTS } else { 1.0 };
+        let mut cells = vec![method.name().to_string()];
+        for (i, &n) in LENGTHS.iter().enumerate() {
+            let hy = Hyper::paper_schedule(n, HOSTS);
+            let est = estimate(method, &LLAMA31_8B, n, h, &hy, &A800, 64.0);
+            match speed_tok_per_s(&est, n, 64.0) {
+                Some(s) => {
+                    cells.push(format!("{s:.0}"));
+                    rows.push(report::row(vec![
+                        ("panel", json::s("speed")),
+                        ("method", json::s(method.name())),
+                        ("n", json::s(LABELS[i])),
+                        ("value", json::num(s)),
+                    ]));
+                }
+                None => cells.push("OOM".into()),
+            }
+        }
+        t_sp.row(cells);
+    }
+    t_sp.print();
+
+    // (c) compute vs length — Table 6 visualization.
+    let mut t_fl = Table::new("Figure 4(c) / Table 6: FLOPs per forward (PFLOPs)",
+                              &["Method", "32K", "64K", "128K", "256K", "512K"]);
+    for (name, f) in [
+        ("FullAttn", Box::new(|n: f64| fullattn_flops(&LLAMA31_8B, n))
+            as Box<dyn Fn(f64) -> f64>),
+        ("StarAttn", Box::new(|n: f64| starattn_flops(&LLAMA31_8B, n, HOSTS))),
+        ("APB", Box::new(|n: f64| {
+            apb_flops(&LLAMA31_8B, n, &Hyper::paper_schedule(n, HOSTS))
+        })),
+    ] {
+        let mut cells = vec![name.to_string()];
+        for (i, &n) in LENGTHS.iter().enumerate() {
+            let v = f(n) / 1e15;
+            cells.push(format!("{v:.1}"));
+            rows.push(report::row(vec![
+                ("panel", json::s("flops")),
+                ("method", json::s(name)),
+                ("n", json::s(LABELS[i])),
+                ("value", json::num(v)),
+            ]));
+        }
+        t_fl.row(cells);
+    }
+    t_fl.print();
+
+    // Shape assertions from §4.3: APB best accuracy AND best speed at 512K;
+    // Star/APB speed *rises* from 32K to 128K while exact methods fall.
+    let speed = |m: Method, n: f64| {
+        let h = if m.uses_sequence_parallelism() { HOSTS } else { 1.0 };
+        let est = estimate(m, &LLAMA31_8B, n, h, &Hyper::paper_schedule(n, HOSTS),
+                           &A800, 64.0);
+        speed_tok_per_s(&est, n, 64.0).unwrap_or(0.0)
+    };
+    assert!(speed(Method::Apb, 524288.0) > speed(Method::StarAttn, 524288.0));
+    assert!(speed(Method::Apb, 131072.0) > speed(Method::Apb, 32768.0),
+            "APB speed should grow 32K->128K (compute not yet the bottleneck)");
+
+    let path = report::write_report("fig4_lengths", vec![("hosts", json::num(HOSTS))],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

@@ -1,0 +1,126 @@
+//! Figure 5 / Table 13 — prefill wall-time breakdown into the paper's 7
+//! components (QKV, retaining head, communication, attention, O-proj, FFN,
+//! others), per Transformer block at 128K.
+//!
+//! Two tables: (1) the analytical model on the paper's A800/Llama profile
+//! (Table 13's twin), and (2) a REAL measured breakdown from the tiny PJRT
+//! cluster (artifact granularity maps per coordinator::timing docs).
+
+use apb::attnsim::{estimate, Hyper, Method, A800, LLAMA31_8B};
+use apb::bench_harness::Table;
+use apb::config::ApbOptions;
+use apb::coordinator::{Cluster, PrefillTiming};
+use apb::report;
+use apb::util::json::{self, Json};
+
+fn analytical() -> Vec<Json> {
+    let n = 131072.0;
+    let mut table = Table::new(
+        "Figure 5 / Table 13: per-block prefill breakdown (ms), 128K, analytical",
+        &["Method", "QKV", "RetainHead", "Comm", "Attention", "O Proj", "FFN",
+          "Others", "Block total"],
+    );
+    let mut rows = Vec::new();
+    for method in Method::ALL {
+        let h = if method.uses_sequence_parallelism() { 8.0 } else { 1.0 };
+        let est = estimate(method, &LLAMA31_8B, n, h, &Hyper::e2e_128k(), &A800, 64.0);
+        let b = est.prefill;
+        let l = LLAMA31_8B.layers;
+        let ms = |x: f64| x / l * 1e3;
+        table.row(vec![
+            method.name().into(),
+            format!("{:.2}", ms(b.qkv)),
+            if b.retaining > 0.0 { format!("{:.2}", ms(b.retaining)) } else { "-".into() },
+            if b.comm > 0.0 { format!("{:.2}", ms(b.comm)) } else { "-".into() },
+            format!("{:.2}", ms(b.attention)),
+            format!("{:.2}", ms(b.o_proj)),
+            format!("{:.2}", ms(b.ffn)),
+            format!("{:.2}", ms(b.others)),
+            format!("{:.2}", ms(b.total())),
+        ]);
+        rows.push(report::row(vec![
+            ("method", json::s(method.name())),
+            ("qkv_ms", json::num(ms(b.qkv))),
+            ("retaining_ms", json::num(ms(b.retaining))),
+            ("comm_ms", json::num(ms(b.comm))),
+            ("attention_ms", json::num(ms(b.attention))),
+            ("o_proj_ms", json::num(ms(b.o_proj))),
+            ("ffn_ms", json::num(ms(b.ffn))),
+            ("others_ms", json::num(ms(b.others))),
+        ]));
+    }
+    table.print();
+
+    // Table 13 shape: APB block total < StarAttn < Ulysses < Ring << Flash.
+    let total = |m| {
+        let h = if m == Method::FlashAttn || m == Method::MInference { 1.0 } else { 8.0 };
+        estimate(m, &LLAMA31_8B, n, h, &Hyper::e2e_128k(), &A800, 64.0).prefill.total()
+    };
+    assert!(total(Method::Apb) < total(Method::StarAttn));
+    assert!(total(Method::StarAttn) < total(Method::Ulysses));
+    assert!(total(Method::Ulysses) < total(Method::RingAttn));
+    assert!(total(Method::RingAttn) < total(Method::FlashAttn));
+    rows
+}
+
+fn measured() -> Vec<Json> {
+    let Ok(cfg) = apb::load_config("tiny") else {
+        println!("(measured breakdown skipped: run `make artifacts` first)");
+        return Vec::new();
+    };
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let mut rng = apb::util::rng::Rng::new(5);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let opts = ApbOptions::default();
+    // Warm up once (PJRT JIT caches), then measure.
+    cluster.prefill(&doc, &query, &opts).expect("warmup");
+    cluster.clear().unwrap();
+    let rep = cluster.prefill(&doc, &query, &opts).expect("prefill");
+
+    let mut sum = PrefillTiming::default();
+    for t in &rep.per_host {
+        sum.add(t);
+    }
+    let nl = (cfg.model.n_layers * rep.per_host.len()) as f64;
+    let ms = |x: f64| x / nl * 1e3;
+    let mut table = Table::new(
+        "Measured (tiny PJRT cluster): per-block per-host breakdown (ms)",
+        &["Component", "ms/block", "maps to (paper Fig.5)"],
+    );
+    table.row(vec!["layer_pre".into(), format!("{:.3}", ms(sum.layer_pre_s)),
+                   "QKV proj + retaining head".into()]);
+    table.row(vec!["topk".into(), format!("{:.3}", ms(sum.topk_s)),
+                   "compressor select (others)".into()]);
+    table.row(vec!["comm".into(), format!("{:.3}", ms(sum.comm_s)),
+                   "communication".into()]);
+    table.row(vec!["layer_post".into(), format!("{:.3}", ms(sum.layer_post_s)),
+                   "attention + O proj + FFN".into()]);
+    table.row(vec!["cache".into(), format!("{:.3}", ms(sum.cache_s)),
+                   "others".into()]);
+    table.print();
+    println!("prefill wall: {:.1} ms, comm bytes: {}", rep.wall_seconds * 1e3,
+             rep.comm_bytes);
+
+    vec![report::row(vec![
+        ("layer_pre_ms", json::num(ms(sum.layer_pre_s))),
+        ("topk_ms", json::num(ms(sum.topk_s))),
+        ("comm_ms", json::num(ms(sum.comm_s))),
+        ("layer_post_ms", json::num(ms(sum.layer_post_s))),
+        ("cache_ms", json::num(ms(sum.cache_s))),
+        ("wall_ms", json::num(rep.wall_seconds * 1e3)),
+        ("comm_bytes", json::num(rep.comm_bytes as f64)),
+    ])]
+}
+
+fn main() {
+    let mut rows = analytical();
+    rows.extend(measured());
+    let path = report::write_report("fig5_tab13_breakdown", vec![],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

@@ -1,0 +1,70 @@
+//! Figure 6 / Table 10 — prefill vs decoding wall-time at 128K: prefill
+//! dominates (the motivation for optimizing prefill). Analytical on the
+//! paper profile + real measurement on the tiny cluster.
+
+use apb::attnsim::{estimate, Hyper, Method, A800, LLAMA31_8B};
+use apb::bench_harness::Table;
+use apb::config::ApbOptions;
+use apb::coordinator::Cluster;
+use apb::report;
+use apb::util::json::{self, Json};
+
+fn main() {
+    let n = 131072.0;
+    let n_out = 64.0;
+    let mut table = Table::new(
+        "Figure 6 / Table 10: prefill vs decoding time (ms), 128K, analytical",
+        &["Method", "Prefill", "Decoding", "Decode share"],
+    );
+    let mut rows = Vec::new();
+    for method in Method::ALL {
+        let h = if method.uses_sequence_parallelism() { 8.0 } else { 1.0 };
+        let est = estimate(method, &LLAMA31_8B, n, h, &Hyper::e2e_128k(), &A800, n_out);
+        let d = est.decode_per_token_s * n_out;
+        table.row(vec![
+            method.name().into(),
+            format!("{:.1}", est.prefill_s * 1e3),
+            format!("{:.1}", d * 1e3),
+            format!("{:.1}%", 100.0 * d / (d + est.prefill_s)),
+        ]);
+        rows.push(report::row(vec![
+            ("method", json::s(method.name())),
+            ("prefill_ms", json::num(est.prefill_s * 1e3)),
+            ("decode_ms", json::num(d * 1e3)),
+        ]));
+        // Figure 6's claim: prefill is the bottleneck for every method.
+        assert!(est.prefill_s > d, "{}: prefill must dominate", method.name());
+    }
+    table.print();
+
+    // Real measurement on the tiny cluster.
+    if let Ok(cfg) = apb::load_config("tiny") {
+        let cluster = Cluster::start(&cfg).expect("cluster");
+        let mut rng = apb::util::rng::Rng::new(9);
+        let doc: Vec<i32> = (0..cfg.apb.doc_len())
+            .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+            .collect();
+        let query: Vec<i32> = (0..cfg.apb.query_len)
+            .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+            .collect();
+        cluster.prefill(&doc, &query, &ApbOptions::default()).expect("warm");
+        cluster.clear().unwrap();
+        let pre = cluster.prefill(&doc, &query, &ApbOptions::default()).expect("prefill");
+        let gen = cluster.generate(&query, 8).expect("generate");
+        println!("\nMeasured tiny cluster: prefill {:.1} ms, decode {:.1} ms \
+                  ({} tokens, {:.1} ms/token incl. query chunk)",
+                 pre.wall_seconds * 1e3, gen.wall_seconds * 1e3, gen.tokens.len(),
+                 gen.wall_seconds * 1e3 / gen.tokens.len() as f64);
+        rows.push(report::row(vec![
+            ("method", json::s("APB-tiny-measured")),
+            ("prefill_ms", json::num(pre.wall_seconds * 1e3)),
+            ("decode_ms", json::num(gen.wall_seconds * 1e3)),
+        ]));
+    } else {
+        println!("(measured run skipped: `make artifacts` first)");
+    }
+
+    let path = report::write_report("fig6_tab10_prefill_decode", vec![],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

@@ -1,0 +1,56 @@
+//! Figure 7 — hyperparameter stability: E.QA score over the l_a × l_p grid
+//! {1K, 2K, 3K, 4K} at 128K. Both knobs saturate quickly — "it is not
+//! necessary to tune l_a and l_p delicately".
+
+use apb::bench_harness::Table;
+use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
+use apb::report;
+use apb::ruler::tasks::{infbench_tasks, ModelCol};
+use apb::util::json::{self, Json};
+
+fn main() {
+    let t = infbench_tasks().into_iter().find(|t| t.id == "E.QA").unwrap();
+    let ctx = EvalCtx { n: 131072.0, hosts: 8.0, model: ModelCol::Llama,
+                        samples: 50, seed: 6 };
+    let grid = [1024.0, 2048.0, 3072.0, 4096.0];
+    let l_b = 131072.0 / 8.0;
+
+    let mut table = Table::new(
+        "Figure 7: E.QA vs anchor length l_a (rows) × passing length l_p (cols)",
+        &["l_a \\ l_p", "1K", "2K", "3K", "4K"],
+    );
+    let mut rows = Vec::new();
+    let mut all = Vec::new();
+    for &l_a in &grid {
+        let mut cells = vec![format!("{}K", l_a as usize / 1024)];
+        for &l_p in &grid {
+            let q = ApbQuality::paper_default(l_a, l_p, l_b);
+            let s = expected_score(&t, AccMethod::Apb(q), &ctx);
+            all.push(s);
+            cells.push(format!("{s:.2}"));
+            rows.push(report::row(vec![
+                ("l_a", json::num(l_a)),
+                ("l_p", json::num(l_p)),
+                ("score", json::num(s)),
+            ]));
+        }
+        table.row(cells);
+    }
+    table.print();
+
+    let min = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!("\nscore range over the grid: [{min:.2}, {max:.2}] — spread {:.2}",
+             max - min);
+    // Paper: "both l_a and l_p are stable ... variation remains
+    // insignificant". Bound the spread to a few points.
+    assert!(max - min < 6.0, "hyperparameters must be stable, spread {}", max - min);
+    // Mild monotone trend with l_a (paper: slight improvement).
+    let s_small = all[0];
+    let s_big = all[all.len() - 1];
+    assert!(s_big >= s_small - 0.5);
+
+    let path = report::write_report("fig7_hparam_stability", vec![],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

@@ -1,0 +1,132 @@
+//! Table 3 — component ablation on E.MC (anchor A, passing P, compressor C
+//! = retaining heads R vs random Rd., query embedding Q), n=128K, l_b=32K,
+//! l_a=4K, l_p=2K (§B.2.3).
+//!
+//! Oracle-derived scores for all 9 paper rows, PLUS a real-cluster section
+//! measuring how each ablation changes the actual computation (logit
+//! distance to the full-APB baseline + compressor retention recall).
+
+use apb::bench_harness::Table;
+use apb::config::ApbOptions;
+use apb::coordinator::Cluster;
+use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
+use apb::report;
+use apb::ruler::tasks::{infbench_tasks, ModelCol};
+use apb::ruler::{gen_instance, TaskKind};
+use apb::util::json::{self, Json};
+use apb::util::rng::Rng;
+
+/// The 9 rows of Table 3: (no, A, P, retaining, Q).
+const ROWS: [(usize, bool, bool, bool, bool); 9] = [
+    (0, true, true, true, true),
+    (1, true, true, true, false),
+    (2, true, true, false, true),
+    (3, true, true, false, false),
+    (4, true, false, false, true),
+    (5, true, false, false, false),
+    (6, false, true, true, false),
+    (7, false, true, false, false),
+    (8, false, false, false, false),
+];
+
+fn opts_for(row: (usize, bool, bool, bool, bool)) -> ApbOptions {
+    ApbOptions {
+        use_anchor: row.1,
+        use_passing: row.2,
+        retaining_compressor: row.3,
+        embed_query: row.4,
+        rd_seed: 1234,
+    }
+}
+
+fn main() {
+    // --- Oracle section (paper numbers' twin) ---------------------------
+    let t = infbench_tasks().into_iter().find(|t| t.id == "E.MC").unwrap();
+    // n=128K split over 4 hosts -> l_b = 32K (§B.2.3).
+    let ctx = EvalCtx { n: 131072.0, hosts: 4.0, model: ModelCol::Llama,
+                        samples: 50, seed: 3 };
+    let (l_a, l_p, l_b) = (4096.0, 2048.0, 32768.0);
+    let mut table = Table::new(
+        "Table 3: ablation on E.MC (oracle)",
+        &["No.", "A", "P", "C", "Q", "E.MC"],
+    );
+    let mut rows = Vec::new();
+    let mut scores = Vec::new();
+    for row in ROWS {
+        let o = opts_for(row);
+        let q = ApbQuality::from_options(&o, l_a, l_p, l_b);
+        let s = expected_score(&t, AccMethod::Apb(q), &ctx);
+        scores.push(s);
+        table.row(vec![
+            row.0.to_string(),
+            if row.1 { "Y" } else { "x" }.into(),
+            if row.2 { "Y" } else { "x" }.into(),
+            if row.3 { "R" } else { "Rd." }.into(),
+            if row.4 { "Y" } else { "x" }.into(),
+            format!("{s:.2}"),
+        ]);
+        rows.push(report::row(vec![
+            ("no", json::num(row.0 as f64)),
+            ("anchor", Json::Bool(row.1)),
+            ("passing", Json::Bool(row.2)),
+            ("retaining", Json::Bool(row.3)),
+            ("query", Json::Bool(row.4)),
+            ("score", json::num(s)),
+        ]));
+    }
+    table.print();
+
+    // Paper orderings: row0 best; anchor removal catastrophic.
+    assert!(scores[0] >= scores[1] && scores[1] >= scores[2]);
+    assert!(scores[0] > scores[4] && scores[4] >= scores[5]);
+    assert!(scores[5] > scores[6] + 10.0, "anchor removal must collapse");
+    assert!(scores[6] >= scores[8]);
+
+    // --- Real-cluster section -------------------------------------------
+    if let Ok(cfg) = apb::load_config("tiny") {
+        let cluster = Cluster::start(&cfg).expect("cluster");
+        let mut rng = Rng::new(77);
+        let inst = gen_instance(&cfg, TaskKind::MultiKeyNiah { keys: 3 }, &mut rng);
+        let baseline = {
+            cluster.clear().unwrap();
+            cluster.prefill(&inst.doc, &inst.query, &ApbOptions::default()).unwrap();
+            cluster.generate(&inst.query, 2).unwrap().query_logits
+        };
+        let mut mtable = Table::new(
+            "Table 3 (measured, tiny cluster): ablation effect on computation",
+            &["No.", "retention recall", "logit Linf vs full APB", "comm bytes"],
+        );
+        for row in ROWS {
+            let o = opts_for(row);
+            cluster.clear().unwrap();
+            let rep = cluster.prefill(&inst.doc, &inst.query, &o).unwrap();
+            let gen = cluster.generate(&inst.query, 2).unwrap();
+            let linf = gen
+                .query_logits
+                .iter()
+                .zip(&baseline)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let recall = rep.retention_recall(&cfg, &inst.needle_positions);
+            mtable.row(vec![
+                row.0.to_string(),
+                format!("{recall:.3}"),
+                format!("{linf:.4}"),
+                rep.comm_bytes.to_string(),
+            ]);
+            rows.push(report::row(vec![
+                ("no", json::num(row.0 as f64)),
+                ("measured_recall", json::num(recall)),
+                ("logit_linf", json::num(linf as f64)),
+                ("comm_bytes", json::num(rep.comm_bytes as f64)),
+            ]));
+        }
+        mtable.print();
+    } else {
+        println!("(measured ablation skipped: `make artifacts` first)");
+    }
+
+    let path = report::write_report("tab3_ablation", vec![], Json::Arr(rows))
+        .expect("report");
+    println!("[report] {}", path.display());
+}

@@ -1,0 +1,57 @@
+//! Table 6 — FLOPs-per-forward closed forms for FULLATTN / STARATTN / APB,
+//! evaluated on the paper's models, cross-checked against the instrumented
+//! per-component counters (DESIGN.md invariant 7).
+
+use apb::attnsim::flops::{apb_components, fullattn_components, starattn_components,
+                          Hyper};
+use apb::attnsim::{apb_flops, fullattn_flops, starattn_flops, ALL_MODELS};
+use apb::bench_harness::Table;
+use apb::report;
+use apb::util::json::{self, Json};
+
+fn main() {
+    let n = 131072.0;
+    let hosts = 8.0;
+    let hy = Hyper::e2e_128k();
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Table 6: FLOPs per forward @128K (PFLOPs), closed form vs instrumented",
+        &["Model", "Method", "closed form", "instrumented", "rel diff"],
+    );
+    for m in &ALL_MODELS {
+        let entries: [(&str, f64, f64); 3] = [
+            ("FullAttn", fullattn_flops(m, n), fullattn_components(m, n).total()),
+            ("StarAttn", starattn_flops(m, n, hosts),
+             starattn_components(m, n, hosts).total() * hosts),
+            ("APB", apb_flops(m, n, &hy),
+             // Closed form aggregates all hosts; components give the last
+             // (critical-path) host — scale by H as an upper-bound check.
+             apb_components(m, n, &hy, 1024.0).total() * hosts),
+        ];
+        for (name, cf, inst) in entries {
+            let rel = (cf - inst).abs() / cf;
+            table.row(vec![
+                m.name.into(),
+                name.into(),
+                format!("{:.2}", cf / 1e15),
+                format!("{:.2}", inst / 1e15),
+                format!("{:.1}%", rel * 100.0),
+            ]);
+            rows.push(report::row(vec![
+                ("model", json::s(m.name)),
+                ("method", json::s(name)),
+                ("closed_pflops", json::num(cf / 1e15)),
+                ("instrumented_pflops", json::num(inst / 1e15)),
+            ]));
+            assert!(rel < 0.35, "{} {name}: closed vs instrumented {rel}", m.name);
+        }
+        // Ordering at the paper settings.
+        assert!(apb_flops(m, n, &hy) < starattn_flops(m, n, hosts));
+        assert!(starattn_flops(m, n, hosts) < fullattn_flops(m, n));
+    }
+    table.print();
+
+    let path = report::write_report("tab6_flops", vec![("n", json::num(n))],
+                                    Json::Arr(rows)).expect("report");
+    println!("[report] {}", path.display());
+}

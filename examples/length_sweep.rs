@@ -1,0 +1,58 @@
+//! Length-sweep explorer over the analytical model: prefill time, speed,
+//! FLOPs and memory for any method/host-count/length grid — the
+//! interactive companion to Figures 1 and 4.
+//!
+//!     cargo run --release --example length_sweep -- \
+//!         --hosts 4,8,16 --lengths 32768,131072,524288 --model llama
+
+use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B,
+                   QWEN25_14B, YI_34B};
+use apb::bench_harness::Table;
+use apb::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    args.check_known(&["hosts", "lengths", "model", "out"])?;
+    let hosts = args.usize_list_or("hosts", &[8])?;
+    let lengths = args.usize_list_or(
+        "lengths", &[32768, 65536, 131072, 262144, 524288, 1048576])?;
+    let model = match args.str_or("model", "llama").as_str() {
+        "llama" => LLAMA31_8B,
+        "qwen" => QWEN25_14B,
+        "yi" => YI_34B,
+        other => anyhow::bail!("unknown model '{other}' (llama|qwen|yi)"),
+    };
+    let n_out = args.usize_or("out", 64)? as f64;
+
+    for &h in &hosts {
+        let mut table = Table::new(
+            &format!("{} on {h} hosts — prefill s / speed tok/s / PFLOPs / peak GB",
+                     model.name),
+            &["Method", "n", "prefill", "speed", "PFLOPs", "mem GB"],
+        );
+        for method in Method::ALL {
+            let hm = if method.uses_sequence_parallelism() { h as f64 } else { 1.0 };
+            for &n in &lengths {
+                let n = n as f64;
+                let hy = Hyper::paper_schedule(n, h as f64);
+                let est = estimate(method, &model, n, hm, &hy, &A800, n_out);
+                let (pre, spd) = if est.oom {
+                    ("OOM".to_string(), "-".to_string())
+                } else {
+                    (format!("{:.2}", est.prefill_s),
+                     format!("{:.0}", speed_tok_per_s(&est, n, n_out).unwrap()))
+                };
+                table.row(vec![
+                    method.name().into(),
+                    format!("{}K", n as usize / 1024),
+                    pre,
+                    spd,
+                    format!("{:.1}", est.flops_total / 1e15),
+                    format!("{:.0}", est.mem_bytes_peak / 1e9),
+                ]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+"""AOT pipeline: lower every per-host stage function to HLO *text* and dump
+weights + manifest + golden files for the rust coordinator.
+
+HLO text (NOT `.serialize()`) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with return_tuple=True; the rust side
+unwraps with to_tuple().
+
+Usage:  python -m compile.aot --config tiny --out ../artifacts
+        python -m compile.aot --all --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, Config, get_config
+from . import model as M
+from .train_retaining import train_retaining_heads
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (reference recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _scalar():
+    return spec((), jnp.int32)
+
+
+def stage_functions(cfg: Config):
+    """Every artifact: name -> (fn, [(arg_name, ShapeDtypeStruct)]).
+
+    Weight arguments are named exactly like the manifest weight entries
+    (with a `layers.{i}.` prefix stripped to the per-layer name) so the
+    rust runtime can bind them mechanically.
+    """
+    m, a = cfg.model, cfg.apb
+    d, hd, h, kh = m.d_model, m.head_dim, m.n_heads, m.n_kv_heads
+    shapes = M.param_shapes(cfg)
+
+    def w(name):
+        key = name if name in shapes else f"layers.0.{name}"
+        return spec(shapes[key])
+
+    stages = {}
+
+    def embed_fn(tokens, w_embed):
+        return (M.embed(tokens, w_embed),)
+
+    for name, n in (("embed_prefill", a.n_tot), ("embed_query", a.query_len),
+                    ("embed_step", 1)):
+        stages[name] = (embed_fn, [("tokens", spec((n,), jnp.int32)),
+                                   ("embed", w("embed"))])
+
+    def layer_pre_fn(hidden, pos_offset, attn_norm, wq, wk, wv,
+                     rh_w1, rh_b1, rh_w2, rh_b2):
+        lp = {"attn_norm": attn_norm, "wq": wq, "wk": wk, "wv": wv,
+              "rh_w1": rh_w1, "rh_b1": rh_b1, "rh_w2": rh_w2, "rh_b2": rh_b2}
+        q, k, v, scores = M.layer_pre(hidden, lp, pos_offset, cfg)
+        return q, k, v, scores
+
+    stages["layer_pre"] = (layer_pre_fn, [
+        ("hidden", spec((a.n_tot, d))),
+        ("pos_offset", _scalar()),
+        ("attn_norm", w("attn_norm")), ("wq", w("wq")), ("wk", w("wk")),
+        ("wv", w("wv")), ("rh_w1", w("rh_w1")), ("rh_b1", w("rh_b1")),
+        ("rh_w2", w("rh_w2")), ("rh_b2", w("rh_b2")),
+    ])
+
+    def layer_post_fn(hidden, q, k, v, k_pass, v_pass, pass_len, n_anchor,
+                      wo, ffn_norm, w_gate, w_up, w_down):
+        lp = {"wo": wo, "ffn_norm": ffn_norm, "w_gate": w_gate,
+              "w_up": w_up, "w_down": w_down}
+        return (M.layer_post(hidden, q, k, v, k_pass, v_pass, pass_len,
+                             n_anchor, lp, cfg),)
+
+    stages["layer_post"] = (layer_post_fn, [
+        ("hidden", spec((a.n_tot, d))),
+        ("q", spec((a.n_tot, h, hd))),
+        ("k", spec((a.n_tot, kh, hd))),
+        ("v", spec((a.n_tot, kh, hd))),
+        ("k_pass", spec((a.pass_max, kh, hd))),
+        ("v_pass", spec((a.pass_max, kh, hd))),
+        ("pass_len", _scalar()), ("n_anchor", _scalar()),
+        ("wo", w("wo")), ("ffn_norm", w("ffn_norm")),
+        ("w_gate", w("w_gate")), ("w_up", w("w_up")),
+        ("w_down", w("w_down")),
+    ])
+
+    def decode_pre_fn(hidden, pos0, attn_norm, wq, wk, wv):
+        lp = {"attn_norm": attn_norm, "wq": wq, "wk": wk, "wv": wv}
+        return M.decode_pre(hidden, lp, pos0, cfg)
+
+    def decode_attn_fn(q, k_cache, v_cache, cache_len, self_causal):
+        from .kernels import decode_attention
+        return decode_attention(q, k_cache, v_cache, cache_len, self_causal,
+                                bq=m.kernel_block_q, bk=m.kernel_block_k)
+
+    def decode_post_fn(hidden, att, wo, ffn_norm, w_gate, w_up, w_down):
+        lp = {"wo": wo, "ffn_norm": ffn_norm, "w_gate": w_gate,
+              "w_up": w_up, "w_down": w_down}
+        return (M.decode_post(hidden, att, lp, cfg),)
+
+    def lm_head_fn(hidden, final_norm, w_lm):
+        return (M.lm_head(hidden, final_norm, w_lm, cfg),)
+
+    for tag, n in (("query", a.query_len), ("step", 1)):
+        stages[f"decode_pre_{tag}"] = (decode_pre_fn, [
+            ("hidden", spec((n, d))), ("pos0", _scalar()),
+            ("attn_norm", w("attn_norm")), ("wq", w("wq")),
+            ("wk", w("wk")), ("wv", w("wv")),
+        ])
+        stages[f"decode_attn_{tag}"] = (decode_attn_fn, [
+            ("q", spec((n, h, hd))),
+            ("k_cache", spec((a.cache_max, kh, hd))),
+            ("v_cache", spec((a.cache_max, kh, hd))),
+            ("cache_len", _scalar()), ("self_causal", _scalar()),
+        ])
+        stages[f"decode_post_{tag}"] = (decode_post_fn, [
+            ("hidden", spec((n, d))), ("att", spec((n, h, hd))),
+            ("wo", w("wo")), ("ffn_norm", w("ffn_norm")),
+            ("w_gate", w("w_gate")), ("w_up", w("w_up")),
+            ("w_down", w("w_down")),
+        ])
+        stages[f"lm_head_{tag}"] = (lm_head_fn, [
+            ("hidden", spec((n, d))), ("final_norm", w("final_norm")),
+            ("lm_head", w("lm_head")),
+        ])
+    return stages
+
+
+def write_blob(path: str, arrays: dict[str, np.ndarray]):
+    """Concatenate f32/i32 arrays little-endian; return manifest entries."""
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in arrays.items():
+            arr = np.ascontiguousarray(arr)
+            dtype = "i32" if arr.dtype == np.int32 else "f32"
+            raw = arr.astype("<i4" if dtype == "i32" else "<f4").tobytes()
+            f.write(raw)
+            entries.append({"name": name, "dtype": dtype,
+                            "shape": list(arr.shape), "offset": offset,
+                            "size": len(raw)})
+            offset += len(raw)
+    return entries
+
+
+def build_golden(params, cfg: Config, n_new: int = 4, seed: int = 42):
+    """Run the python cluster simulation end-to-end; the rust integration
+    test replays the same artifacts and must reproduce these outputs."""
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(1, cfg.model.vocab_size,
+                       cfg.apb.doc_len).astype(np.int32)
+    query = rng.integers(1, cfg.model.vocab_size,
+                         cfg.apb.query_len).astype(np.int32)
+    caches, hiddens = M.run_apb_prefill(params, cfg, doc, query)
+    gen, logits = M.run_decode(params, cfg, caches, query, n_new)
+    arrays = {
+        "doc_tokens": doc,
+        "query_tokens": query,
+        "generated": gen.astype(np.int32),
+        "query_logits": np.asarray(logits, np.float32),
+        "host0_hidden": np.asarray(hiddens[0], np.float32),
+        "hostH_hidden": np.asarray(hiddens[-1], np.float32),
+        "host0_cache_k_l0": np.asarray(caches[0][0][0], np.float32),
+        "hostH_cache_v_lN": np.asarray(caches[-1][-1][1], np.float32),
+    }
+    return arrays
+
+
+def build(cfg: Config, out_dir: str, train_steps: int, golden: bool,
+          golden_new: int = 4, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_params(cfg)
+    history = {}
+    if train_steps > 0:
+        params, history = train_retaining_heads(
+            params, cfg, steps=train_steps, verbose=verbose)
+
+    # --- weights.bin ---------------------------------------------------
+    weights = {name: np.asarray(params[name], np.float32)
+               for name in M.param_shapes(cfg)}
+    weight_entries = write_blob(os.path.join(out_dir, "weights.bin"), weights)
+
+    # --- HLO artifacts --------------------------------------------------
+    artifact_meta = {}
+    for name, (fn, args) in stage_functions(cfg).items():
+        lowered = jax.jit(fn).lower(*[s for _, s in args])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        leaves = jax.tree_util.tree_leaves(outs)
+        artifact_meta[name] = {
+            "file": fname,
+            "inputs": [{"name": n, "dtype": str(s.dtype),
+                        "shape": list(s.shape)} for n, s in args],
+            "outputs": [{"dtype": str(o.dtype), "shape": list(o.shape)}
+                        for o in leaves],
+        }
+        if verbose:
+            print(f"[aot] {name}: {len(text)} chars, "
+                  f"{len(args)} inputs, {len(leaves)} outputs")
+
+    # --- golden end-to-end run ------------------------------------------
+    golden_entry = None
+    if golden:
+        arrays = build_golden(params, cfg, n_new=golden_new)
+        golden_entries = write_blob(os.path.join(out_dir, "golden.bin"),
+                                    arrays)
+        golden_entry = {"file": "golden.bin", "n_new": golden_new,
+                        "entries": golden_entries}
+        if verbose:
+            print(f"[aot] golden: generated={arrays['generated'].tolist()}")
+
+    manifest = {
+        "config": cfg.to_json(),
+        "artifacts": artifact_meta,
+        "weights": {"file": "weights.bin", "entries": weight_entries},
+        "golden": golden_entry,
+        "retaining_history": {str(k): v for k, v in history.items()},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--config", default="tiny", choices=list(CONFIGS))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--train-steps", type=int, default=150)
+    p.add_argument("--no-golden", action="store_true")
+    p.add_argument("--golden-new", type=int, default=4)
+    args = p.parse_args()
+    names = list(CONFIGS) if args.all else [args.config]
+    for name in names:
+        cfg = get_config(name)
+        golden = (not args.no_golden) and name == "tiny"
+        build(cfg, os.path.join(args.out, name), args.train_steps, golden,
+              golden_new=args.golden_new)
+
+
+if __name__ == "__main__":
+    main()

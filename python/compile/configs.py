@@ -1,0 +1,143 @@
+"""Model / cluster / APB hyperparameter configs shared by the compile path
+(python) and the coordinator (rust, via artifacts/manifest.json).
+
+All sequence-layout quantities follow the paper's notation (§3.3):
+  l_q  query length (embedded at the front of every anchor block)
+  l_a  anchor length (first l_a document tokens)
+  l_b  per-host local block length (= l_d / H)
+  l_p  passing length (top-l_p KV units retained by the compressor)
+  H    number of hosts (sequence-parallel size)
+
+The HLO artifacts are compiled with static shapes; per-host variation
+(host 1 has no anchor block, host h receives (h-1)*l_p passing units) is
+expressed at runtime through two scalar operands:
+  n_anchor  in {0, l_aq}  — masks the anchor segment in/out
+  pass_len  in [0, Pmax]  — valid prefix of the padded passing segment
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-architecture dims (RMSNorm + RoPE + GQA + SwiGLU)."""
+
+    vocab_size: int = 512
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # Retaining-head (Locret) compressor MLP: [q_mean, k, v] -> r -> 1
+    retaining_hidden: int = 64
+    # Pallas kernel tile sizes. 128x128 is the MXU-shaped TPU default; the
+    # CPU-interpret artifacts use one big tile because interpret-mode loop
+    # overhead dominates there (§Perf L1 iteration log). Block-size
+    # invariance is pinned by test_apb_attention_block_size_invariance.
+    kernel_block_q: int = 1024
+    kernel_block_k: int = 1024
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def gqa_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class ApbConfig:
+    """Sequence layout + cluster topology for one compiled artifact set."""
+
+    n_hosts: int = 4
+    block_len: int = 256          # l_b
+    anchor_len: int = 32          # l_a
+    query_len: int = 16           # l_q
+    passing_len: int = 32         # l_p
+    max_new_tokens: int = 64
+
+    @property
+    def l_aq(self) -> int:
+        """Anchor block total length: query embedded before document head."""
+        return self.query_len + self.anchor_len
+
+    @property
+    def n_tot(self) -> int:
+        """Per-host prefill sequence length: [anchor | local block]."""
+        return self.l_aq + self.block_len
+
+    @property
+    def pass_max(self) -> int:
+        """Padded passing-segment capacity: (H-1) compressed blocks."""
+        return (self.n_hosts - 1) * self.passing_len
+
+    @property
+    def doc_len(self) -> int:
+        return self.n_hosts * self.block_len
+
+    @property
+    def cache_max(self) -> int:
+        """Decode-time KV cache capacity. Host H additionally stores the
+        re-processed query and generated tokens."""
+        return self.block_len + self.query_len + self.max_new_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    model: ModelConfig
+    apb: ApbConfig
+    seed: int = 0
+    name: str = "tiny"
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "seed": self.seed,
+            "model": dataclasses.asdict(self.model),
+            "apb": dataclasses.asdict(self.apb),
+            "derived": {
+                "head_dim": self.model.head_dim,
+                "gqa_groups": self.model.gqa_groups,
+                "l_aq": self.apb.l_aq,
+                "n_tot": self.apb.n_tot,
+                "pass_max": self.apb.pass_max,
+                "doc_len": self.apb.doc_len,
+                "cache_max": self.apb.cache_max,
+            },
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=2)
+
+
+# Smallest config: unit tests / CI. Everything fits in seconds on one core.
+TINY = Config(
+    name="tiny",
+    model=ModelConfig(),
+    apb=ApbConfig(n_hosts=4, block_len=256, anchor_len=32, query_len=16,
+                  passing_len=32, max_new_tokens=64),
+)
+
+# End-to-end serving demo: a bigger model + longer context, still CPU-viable.
+E2E = Config(
+    name="e2e",
+    model=ModelConfig(vocab_size=2048, n_layers=6, d_model=256, n_heads=8,
+                      n_kv_heads=4, d_ff=688, retaining_hidden=128),
+    apb=ApbConfig(n_hosts=4, block_len=512, anchor_len=128, query_len=32,
+                  passing_len=64, max_new_tokens=32),
+)
+
+CONFIGS = {c.name: c for c in (TINY, E2E)}
+
+
+def get_config(name: str) -> Config:
+    return CONFIGS[name]

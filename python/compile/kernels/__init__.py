@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .apb_attention import (  # noqa: F401
+    apb_attention,
+    causal_attention,
+    decode_attention,
+)
+from .retaining_head import (  # noqa: F401
+    build_features,
+    retaining_scores,
+    top_lp_select,
+)

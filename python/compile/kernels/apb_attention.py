@@ -1,0 +1,205 @@
+"""L1 — APB's modified FlashAttention as a Pallas kernel.
+
+The paper implements its computation stage (§3.6) as a FLASHATTN-2 CUDA
+kernel "with only the attention mask changed". This is the TPU/Pallas
+re-think (DESIGN.md §7):
+
+  * grid = (query_heads, query_tiles): one program per (head, q-tile) —
+    the threadblock of the CUDA version;
+  * the q tile is staged HBM→VMEM by its BlockSpec (shared-memory staging);
+  * the kernel sweeps KV tiles with `lax.fori_loop`, carrying the online
+    softmax state (m, l, acc) — the register accumulators of FLASHATTN;
+  * tiles use MXU-shaped (block, head_dim) matmuls in f32;
+  * the APB visibility mask over [anchor | passing | local] is evaluated
+    per tile from global row/col iotas; `n_anchor` and `pass_len` arrive
+    as runtime scalars so one compiled kernel serves every host.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see /opt/xla-example).
+Correctness is pinned against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _flash_body(params_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                mask_fn: Callable, scale: float, bq: int, bk: int,
+                nk_pad: int, nq_valid: int):
+    """Shared online-softmax flash attention body.
+
+    q_ref:  [1, bq, hd]   (this program's query tile, one head)
+    k_ref:  [1, nk_pad, hd] (full padded key sequence, this head's kv head)
+    v_ref:  [1, nk_pad, hd]
+    params_ref: [P] i32 runtime scalars forwarded to mask_fn
+    o_ref:  [1, bq, hd]; lse_ref: [1, bq]
+    """
+    qi = pl.program_id(1)
+    hd = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale           # [bq, hd]
+    qg = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    params = params_ref[...]
+
+    n_tiles = nk_pad // bk
+
+    def tile_step(t, carry):
+        m, l, acc = carry
+        start = t * bk
+        k = k_ref[0, pl.dslice(start, bk), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(start, bk), :].astype(jnp.float32)
+        kg = start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = mask_fn(qg, kg, params) & (qg < nq_valid)  # [bq, bk]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[:, None]), 0.0)
+        corr = jnp.where(m > NEG_INF / 2, jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, tile_step, (m0, l0, acc0))
+
+    l_safe = jnp.where(l > 0, l, 1.0)
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    m_safe = jnp.where(m > NEG_INF / 2, m, 0.0)
+    lse_ref[0] = jnp.where(l > 0, m_safe + jnp.log(l_safe), NEG_INF)
+
+
+def _pad_axis(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _run_flash(q, k, v, params, mask_fn, *, bq, bk, interpret=True):
+    """Launch the flash body over a (heads, q-tiles) grid.
+
+    q: [nq, h, hd]; k/v: [nk, kh, hd]; params: i32 [P].
+    Returns out [nq, h, hd] and lse [nq, h].
+    """
+    nq, h, hd = q.shape
+    nk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / float(np.sqrt(hd))
+    in_dtype = q.dtype
+
+    # Head-major layouts; pad seq dims to tile multiples (kernel masks).
+    qh = _pad_axis(jnp.transpose(q, (1, 0, 2)), 1, bq)      # [h, nq_pad, hd]
+    kh_ = _pad_axis(jnp.transpose(k, (1, 0, 2)), 1, bk)     # [kh, nk_pad, hd]
+    vh = _pad_axis(jnp.transpose(v, (1, 0, 2)), 1, bk)
+    nq_pad, nk_pad = qh.shape[1], kh_.shape[1]
+
+    grid = (h, nq_pad // bq)
+    body = functools.partial(
+        _flash_body, mask_fn=mask_fn, scale=scale, bq=bq, bk=bk,
+        nk_pad=nk_pad, nq_valid=nq)
+    out, lse = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(params.shape, lambda hh, qi: (0,) * params.ndim),
+            pl.BlockSpec((1, bq, hd), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((1, nk_pad, hd), lambda hh, qi: (hh // g, 0, 0)),
+            pl.BlockSpec((1, nk_pad, hd), lambda hh, qi: (hh // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda hh, qi: (hh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, nq_pad, hd), in_dtype),
+            jax.ShapeDtypeStruct((h, nq_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(params, qh, kh_, vh)
+    out = jnp.transpose(out, (1, 0, 2))[:nq]
+    lse = jnp.transpose(lse, (1, 0))[:nq]
+    return out, lse
+
+
+def apb_attention(q, k, v, n_anchor, pass_len, *, l_aq: int, pass_max: int,
+                  bq: int = 128, bk: int = 128, interpret: bool = True):
+    """APB prefill attention (paper Eq. 2).
+
+    q: [l_aq + l_b, h, hd] — [anchor | local] queries
+    k, v: [l_aq + pass_max + l_b, kh, hd] — [anchor | passing(pad) | local]
+    n_anchor: i32 scalar in {0, l_aq}; pass_len: i32 scalar in [0, pass_max]
+
+    Setting l_aq=0, pass_max=0 degenerates to plain causal FlashAttention —
+    that is the FLASHATTN baseline / H=1 fallback mode (paper Limitations).
+    Returns (out [nq, h, hd], lse [nq, h]).
+    """
+    nq = q.shape[0]
+    l_b = nq - l_aq
+    bq = min(bq, max(16, nq))
+    bk = min(bk, max(16, k.shape[0]))
+
+    def mask_fn(qg, kg, params):
+        n_anc, p_len = params[0], params[1]
+        is_anchor_q = qg < l_aq
+        k_anchor = kg < l_aq
+        k_passing = (kg >= l_aq) & (kg < l_aq + pass_max)
+        k_local = (kg >= l_aq + pass_max) & (kg < l_aq + pass_max + l_b)
+        anchor_vis = k_anchor & (kg <= qg)
+        local_vis = (
+            (k_anchor & (kg < n_anc))
+            | (k_passing & ((kg - l_aq) < p_len))
+            | (k_local & ((kg - l_aq - pass_max) <= (qg - l_aq)))
+        )
+        return jnp.where(is_anchor_q, anchor_vis, local_vis)
+
+    params = jnp.stack([jnp.asarray(n_anchor, jnp.int32),
+                        jnp.asarray(pass_len, jnp.int32)])
+    return _run_flash(q, k, v, params, mask_fn, bq=bq, bk=bk,
+                      interpret=interpret)
+
+
+def causal_attention(q, k, v, *, bq: int = 128, bk: int = 128,
+                     interpret: bool = True):
+    """Plain causal FlashAttention — the FLASHATTN baseline path."""
+    zero = jnp.zeros((), jnp.int32)
+    return apb_attention(q, k, v, zero, zero, l_aq=0, pass_max=0,
+                         bq=bq, bk=bk, interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, self_causal, *,
+                     bq: int = 128, bk: int = 128, interpret: bool = True):
+    """Per-host decode attention with LSE output (Algorithm 3 lines 3–8).
+
+    q: [n, h, hd] chunk of new-token queries (n = l_q for the query pass,
+    n = 1 for token-by-token decoding); k_cache/v_cache: [cmax, kh, hd]
+    padded cache. self_causal=1 on the last host where the chunk's own KV
+    has already been appended (cache_len includes it).
+    """
+    n = q.shape[0]
+    bq = min(bq, max(8, n))
+    bk = min(bk, max(16, k_cache.shape[0]))
+
+    def mask_fn(qg, kg, params):
+        c_len, sc = params[0], params[1]
+        visible = c_len - sc * (n - 1 - qg)
+        return kg < visible
+
+    params = jnp.stack([jnp.asarray(cache_len, jnp.int32),
+                        jnp.asarray(self_causal, jnp.int32)])
+    return _run_flash(q, k_cache, v_cache, params, mask_fn, bq=bq, bk=bk,
+                      interpret=interpret)

@@ -1,0 +1,149 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are deliberately naive O(n^2) dense implementations — the source of
+truth the kernels (and, transitively, the whole rust stack through golden
+files) are validated against.
+
+Mask semantics (paper Eq. 2 / Figure 2) for the APB prefill layout.
+
+Queries:  [ anchor (l_aq rows) | local (l_b rows) ]
+Keys:     [ anchor (l_aq) | passing (pass_max, padded) | local (l_b) ]
+
+  anchor query i (< l_aq):  sees anchor keys j <= i   (causal in anchor)
+  local  query i (>= l_aq): sees anchor keys j < n_anchor,
+                            passing keys with offset < pass_len,
+                            local keys causally (j_local <= i_local)
+
+`n_anchor` is 0 on host 1 (no anchor block) and l_aq elsewhere; when 0 the
+anchor rows still self-attend causally so their (discarded) outputs stay
+finite, but their keys are invisible to local queries.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def apb_mask(l_aq: int, pass_max: int, l_b: int, n_anchor, pass_len):
+    """Boolean [nq, nk] visibility mask for the APB prefill attention.
+
+    nq = l_aq + l_b ; nk = l_aq + pass_max + l_b.
+    `n_anchor` / `pass_len` may be python ints or traced scalars.
+    """
+    nq = l_aq + l_b
+    nk = l_aq + pass_max + l_b
+    qi = jnp.arange(nq)[:, None]            # [nq, 1]
+    kj = jnp.arange(nk)[None, :]            # [1, nk]
+
+    is_anchor_q = qi < l_aq
+    k_anchor = kj < l_aq
+    k_passing = (kj >= l_aq) & (kj < l_aq + pass_max)
+    k_local = kj >= l_aq + pass_max
+
+    # Anchor queries: strictly causal inside the anchor segment.
+    anchor_vis = k_anchor & (kj <= qi)
+    # Local queries: full visibility of the valid anchor + valid passing
+    # prefix, causal within the local segment.
+    local_vis = (
+        (k_anchor & (kj < n_anchor))
+        | (k_passing & ((kj - l_aq) < pass_len))
+        | (k_local & ((kj - l_aq - pass_max) <= (qi - l_aq)))
+    )
+    return jnp.where(is_anchor_q, anchor_vis, local_vis)
+
+
+def attention_ref(q, k, v, mask, scale=None):
+    """Dense masked attention. q:[nq,h,hd] k/v:[nk,kh,hd] mask:[nq,nk].
+
+    GQA: query head i uses kv head i // (h // kh). Returns [nq,h,hd] and
+    the log-sum-exp [nq,h] (base-e, matching online softmax accumulators).
+    """
+    nq, h, hd = q.shape
+    nk, kh, _ = k.shape
+    g = h // kh
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kv_idx = jnp.arange(h) // g
+    kh_exp = kf[:, kv_idx, :]               # [nk, h, hd]
+    vh_exp = vf[:, kv_idx, :]
+    scores = jnp.einsum("qhd,khd->hqk", qf, kh_exp) * scale
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[None, :, :], scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    # Rows with no visible keys: keep them finite (output 0, lse -inf).
+    m_safe = jnp.where(m > neg / 2, m, 0.0)
+    e = jnp.where(mask[None, :, :], jnp.exp(scores - m_safe), 0.0)
+    l = jnp.sum(e, axis=-1)                 # [h, nq]
+    out = jnp.einsum("hqk,khd->qhd", e, vh_exp)
+    l_safe = jnp.where(l > 0, l, 1.0)
+    out = out / l_safe.T[:, :, None]
+    lse = jnp.where(l > 0, m_safe[..., 0] + jnp.log(l_safe), -jnp.inf)
+    return out, lse.T                       # [nq,h,hd], [nq,h]
+
+
+def apb_attention_ref(q, k, v, n_anchor, pass_len, l_aq, pass_max):
+    """Oracle for the APB prefill kernel."""
+    nq = q.shape[0]
+    l_b = nq - l_aq
+    mask = apb_mask(l_aq, pass_max, l_b, n_anchor, pass_len)
+    return attention_ref(q, k, v, mask)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, self_causal):
+    """Oracle for the decode kernel: a chunk of n new queries against a
+    padded per-host cache.
+
+    q:[n,h,hd]; k_cache/v_cache:[cmax,kh,hd]. If self_causal=1 the chunk's
+    own KV has already been appended, so cache_len counts it and row i sees
+    j < cache_len - (n-1-i). Otherwise every row sees j < cache_len.
+    """
+    n = q.shape[0]
+    cmax = k_cache.shape[0]
+    qi = jnp.arange(n)[:, None]
+    kj = jnp.arange(cmax)[None, :]
+    visible_len = cache_len - self_causal * (n - 1 - qi)
+    mask = kj < visible_len
+    return attention_ref(q, k_cache, v_cache, mask)
+
+
+def merge_partials_ref(outs, lses):
+    """Online-softmax merge of per-host partial attention (Algorithm 3).
+
+    outs: [H][n,h,hd] partial numerator-normalized outputs
+    lses: [H][n,h]    log-sum-exp of each partial
+    Returns the exact softmax over the union of all hosts' keys.
+    """
+    outs = jnp.stack(outs)                  # [H,n,h,hd]
+    lses = jnp.stack(lses)                  # [H,n,h]
+    m = jnp.max(lses, axis=0)               # [n,h]
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    w = jnp.exp(lses - m_safe[None])        # [H,n,h]
+    w = jnp.where(jnp.isfinite(lses), w, 0.0)
+    denom = jnp.sum(w, axis=0)              # [n,h]
+    denom_safe = jnp.where(denom > 0, denom, 1.0)
+    merged = jnp.sum(outs * w[..., None], axis=0) / denom_safe[..., None]
+    lse = jnp.where(denom > 0, m_safe + jnp.log(denom_safe), -jnp.inf)
+    return merged, lse
+
+
+def retaining_head_ref(feat, w1, b1, w2, b2):
+    """Oracle for the Locret-style retaining head.
+
+    feat:[n,kh,3*hd] -> gelu(feat @ w1 + b1) @ w2 + b2 -> scores [n,kh].
+    """
+    x = feat.astype(jnp.float32)
+    h = jnp.dot(x, w1) + b1
+    h = 0.5 * h * (1.0 + jnp.tanh(np.sqrt(2.0 / np.pi) * (h + 0.044715 * h**3)))
+    s = jnp.dot(h, w2) + b2
+    return s[..., 0]
+
+
+def causal_mask(n: int):
+    """Plain causal mask — used by the FlashAttn/H=1 baseline path."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return j <= i

@@ -1,0 +1,453 @@
+"""L2 — the Llama-architecture model in JAX, structured as the per-host
+stage functions that aot.py lowers to HLO artifacts.
+
+APB's communication happens *inside* each transformer layer (Algorithm 2):
+compression + AllGather sit between the QKV projection and the attention of
+the same layer. Each layer is therefore split into two artifacts:
+
+  layer_pre   hidden -> (Q, K, V roped, compressed K_c/V_c + indices)
+  layer_post  (hidden, Q, K, V, passing block) -> next hidden
+
+with the AllGather owned by the rust coordinator between them. The decode
+path (Algorithm 3) splits the same way around the Gather+LSE merge:
+
+  decode_pre  hidden -> (q, k, v) for the new-token chunk
+  decode_attn per-host partial attention + LSE   (kernel, lowered directly)
+  decode_post merged attention -> next hidden
+
+This module also contains `run_apb_pipeline`, a pure-python simulation of
+the whole H-host cluster used to (a) unit-test the stage functions and
+(b) emit golden files the rust integration tests replay bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import Config
+from .kernels import (
+    apb_attention,
+    build_features,
+    decode_attention,
+    retaining_scores,
+    top_lp_select,
+)
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+GLOBAL_PARAMS = ("embed", "final_norm", "lm_head")
+LAYER_PARAMS = (
+    "attn_norm", "wq", "wk", "wv", "wo",
+    "ffn_norm", "w_gate", "w_up", "w_down",
+    "rh_w1", "rh_b1", "rh_w2", "rh_b2",
+)
+
+
+def param_shapes(cfg: Config) -> dict[str, tuple[int, ...]]:
+    """Deterministic name -> shape map; the manifest and weights.bin follow
+    this exact order (globals first, then per-layer blocks)."""
+    m = cfg.model
+    hd, kh, h = m.head_dim, m.n_kv_heads, m.n_heads
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (m.vocab_size, m.d_model),
+        "final_norm": (m.d_model,),
+        "lm_head": (m.d_model, m.vocab_size),
+    }
+    layer = {
+        "attn_norm": (m.d_model,),
+        "wq": (m.d_model, h * hd),
+        "wk": (m.d_model, kh * hd),
+        "wv": (m.d_model, kh * hd),
+        "wo": (h * hd, m.d_model),
+        "ffn_norm": (m.d_model,),
+        "w_gate": (m.d_model, m.d_ff),
+        "w_up": (m.d_model, m.d_ff),
+        "w_down": (m.d_ff, m.d_model),
+        "rh_w1": (3 * hd + 2, m.retaining_hidden),
+        "rh_b1": (m.retaining_hidden,),
+        "rh_w2": (m.retaining_hidden, 1),
+        "rh_b2": (1,),
+    }
+    for i in range(m.n_layers):
+        for name, shp in layer.items():
+            shapes[f"layers.{i}.{name}"] = shp
+    return shapes
+
+
+def init_params(cfg: Config, seed: int | None = None) -> dict[str, jnp.ndarray]:
+    """Scaled-gaussian init, deterministic in cfg.seed — with one
+    structural property of *trained* LLMs imposed: query/key projections
+    are aligned (W_q of each head = W_k of its kv-head + noise), so
+    q_i.k_j is elevated when token i matches token j. Pretraining produces
+    exactly this alignment (it is what makes induction/retrieval heads
+    work); a fully random init has E[q.k] = 0 and cannot retrieve, which
+    would void every retrieval-mechanism experiment (DESIGN.md §2)."""
+    seed = cfg.seed if seed is None else seed
+    rng = np.random.default_rng(seed)
+    params = {}
+    shapes = param_shapes(cfg)
+    m = cfg.model
+    for name, shp in shapes.items():
+        if name.endswith(("_norm", "norm")):
+            params[name] = jnp.ones(shp, jnp.float32)
+        elif name.endswith(("rh_b1", "rh_b2")):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        else:
+            fan_in = shp[0] if len(shp) > 1 else shp[0]
+            std = 1.0 / np.sqrt(fan_in)
+            params[name] = jnp.asarray(
+                rng.normal(0.0, std, size=shp), jnp.float32)
+    # Align W_q with W_k per GQA group: wq[:, head i] = wk[:, i//g] + noise.
+    hd, g = m.head_dim, m.gqa_groups
+    for li in range(m.n_layers):
+        wk = np.asarray(params[f"layers.{li}.wk"])          # [d, kh*hd]
+        wq = np.asarray(params[f"layers.{li}.wq"]).copy()   # [d, h*hd]
+        for h in range(m.n_heads):
+            kv = h // g
+            wq[:, h * hd:(h + 1) * hd] = (
+                wk[:, kv * hd:(kv + 1) * hd] + 0.5 * wq[:, h * hd:(h + 1) * hd])
+        params[f"layers.{li}.wq"] = jnp.asarray(wq, jnp.float32)
+    return params
+
+
+def layer_params(params: dict, i: int) -> dict[str, jnp.ndarray]:
+    return {k: params[f"layers.{i}.{k}"] for k in LAYER_PARAMS}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float):
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [n, heads, hd], positions: [n] i32."""
+    n, h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [n,half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.dot(x, w_gate)
+    u = jnp.dot(x, w_up)
+    return jnp.dot(jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Prefill stage functions (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def embed(tokens, w_embed):
+    """tokens [n] i32 -> hidden [n, d]."""
+    return jnp.take(w_embed, tokens, axis=0)
+
+
+def layer_pre(hidden, lp: dict, pos_offset, cfg: Config,
+              interpret: bool = True):
+    """QKV projection + RoPE + retaining-head scoring of the local block.
+
+    hidden: [n_tot, d] with rows [anchor (l_aq) | local (l_b)].
+    pos_offset: i32 scalar — global position of the first local token
+                (l_q + (h-1)*l_b).
+    Top-l_p selection itself is owned by the coordinator (rust) so the same
+    artifact serves the retaining-head and random-selector ablations.
+    Returns q [n,h,hd], k [n,kh,hd], v [n,kh,hd], scores [l_b,kh].
+    """
+    m, a = cfg.model, cfg.apb
+    hd = m.head_dim
+    x = rmsnorm(hidden, lp["attn_norm"], m.rms_eps)
+    n = hidden.shape[0]
+    q_nr = jnp.dot(x, lp["wq"]).reshape(n, m.n_heads, hd)
+    k_nr = jnp.dot(x, lp["wk"]).reshape(n, m.n_kv_heads, hd)
+    v = jnp.dot(x, lp["wv"]).reshape(n, m.n_kv_heads, hd)
+
+    # Anchor rows sit at their true global positions 0..l_aq-1; local rows
+    # at pos_offset..pos_offset+l_b-1. RoPE is applied BEFORE compression so
+    # passed K_c blocks are directly attendable on other hosts.
+    anchor_pos = jnp.arange(a.l_aq, dtype=jnp.int32)
+    local_pos = pos_offset + jnp.arange(a.block_len, dtype=jnp.int32)
+    positions = jnp.concatenate([anchor_pos, local_pos])
+    q = rope(q_nr, positions, m.rope_theta)
+    k = rope(k_nr, positions, m.rope_theta)
+
+    # Compressor scores over the local block only (host-local view, §3.4),
+    # conditioned on the embedded-query rows at the anchor front. Features
+    # use PRE-RoPE projections so the query-similarity signal is position
+    # independent (the query sits at different relative offsets during
+    # training vs inference).
+    feat = build_features(q_nr[a.l_aq:], k_nr[a.l_aq:], v[a.l_aq:],
+                          q_query=q_nr[:a.query_len])
+    scores = retaining_scores(feat, lp["rh_w1"], lp["rh_b1"], lp["rh_w2"],
+                              lp["rh_b2"], interpret=interpret)
+    return q, k, v, scores
+
+
+def layer_post(hidden, q, k, v, k_pass, v_pass, pass_len, n_anchor,
+               lp: dict, cfg: Config, interpret: bool = True):
+    """APB attention over [anchor | passing | local] + O-proj + FFN.
+
+    k_pass/v_pass: [pass_max, kh, hd], valid prefix pass_len. The passing
+    block is discarded after attention (paper §3.6) — it never enters the
+    FFN or the cache.
+    """
+    m, a = cfg.model, cfg.apb
+    n = hidden.shape[0]
+    k_attn = jnp.concatenate([k[:a.l_aq], k_pass, k[a.l_aq:]], axis=0)
+    v_attn = jnp.concatenate([v[:a.l_aq], v_pass, v[a.l_aq:]], axis=0)
+    att, _ = apb_attention(q, k_attn, v_attn, n_anchor, pass_len,
+                           l_aq=a.l_aq, pass_max=a.pass_max,
+                           bq=m.kernel_block_q, bk=m.kernel_block_k,
+                           interpret=interpret)
+    h = hidden + jnp.dot(att.reshape(n, -1), lp["wo"])
+    x = rmsnorm(h, lp["ffn_norm"], m.rms_eps)
+    return h + swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Decode stage functions (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def decode_pre(hidden, lp: dict, pos0, cfg: Config):
+    """New-token chunk projection. hidden [n, d]; pos0 scalar i32."""
+    m = cfg.model
+    hd = m.head_dim
+    n = hidden.shape[0]
+    x = rmsnorm(hidden, lp["attn_norm"], m.rms_eps)
+    q = jnp.dot(x, lp["wq"]).reshape(n, m.n_heads, hd)
+    k = jnp.dot(x, lp["wk"]).reshape(n, m.n_kv_heads, hd)
+    v = jnp.dot(x, lp["wv"]).reshape(n, m.n_kv_heads, hd)
+    positions = pos0 + jnp.arange(n, dtype=jnp.int32)
+    return rope(q, positions, m.rope_theta), rope(k, positions, m.rope_theta), v
+
+
+def decode_post(hidden, att, lp: dict, cfg: Config):
+    """Merged attention -> O-proj + residual + FFN. att: [n, h, hd]."""
+    m = cfg.model
+    n = hidden.shape[0]
+    h = hidden + jnp.dot(att.reshape(n, -1), lp["wo"])
+    x = rmsnorm(h, lp["ffn_norm"], m.rms_eps)
+    return h + swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def lm_head(hidden, w_norm, w_lm, cfg: Config):
+    """Final norm + LM head. hidden [n, d] -> logits [n, V]."""
+    return jnp.dot(rmsnorm(hidden, w_norm, cfg.model.rms_eps), w_lm)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic pseudo-random compressor (the "Rd." ablation, Table 3).
+# Must match rust/src/util/rng.rs::splitmix64 exactly.
+# ---------------------------------------------------------------------------
+
+def splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def random_scores(seed: int, layer: int, host: int, n: int, kh: int):
+    """Pseudo-scores for the random-selector ablation; identical sequence is
+    produced by the rust side (proptest'd)."""
+    out = np.empty((n, kh), np.float32)
+    for j in range(kh):
+        for i in range(n):
+            key = (seed << 40) ^ (layer << 28) ^ (host << 16) ^ (j << 12) ^ i
+            out[i, j] = splitmix64(key & 0xFFFFFFFFFFFFFFFF) / 2.0**64
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Whole-cluster golden pipeline (python simulation of the rust coordinator)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ApbOptions:
+    """Ablation toggles (paper Table 3)."""
+    use_anchor: bool = True       # "A"
+    use_passing: bool = True      # "P"
+    compressor: str = "retaining"  # "C": retaining | random
+    embed_query: bool = True      # "Q"
+    rd_seed: int = 1234
+
+
+def host_tokens(cfg: Config, doc: np.ndarray, query: np.ndarray, host: int,
+                opts: ApbOptions) -> np.ndarray:
+    """Token layout for one host: [anchor (l_aq) | local block].
+
+    Host 0 (paper's host 1) has no anchor; the slot is zero-filled and
+    masked out via n_anchor=0. With embed_query off, the query slot is
+    zero-filled (anchor = document head only, Table 3 "Q" ablation)."""
+    a = cfg.apb
+    block = doc[host * a.block_len:(host + 1) * a.block_len]
+    anchor = np.zeros(a.l_aq, np.int32)
+    if host > 0 and opts.use_anchor:
+        if opts.embed_query:
+            anchor[:a.query_len] = query
+        anchor[a.query_len:] = doc[:a.anchor_len]
+    return np.concatenate([anchor, block.astype(np.int32)])
+
+
+def n_anchor_for(cfg: Config, host: int, opts: ApbOptions) -> int:
+    return cfg.apb.l_aq if (host > 0 and opts.use_anchor) else 0
+
+
+def run_apb_prefill(params, cfg: Config, doc, query, opts=ApbOptions(),
+                    interpret: bool = True):
+    """Simulate the H-host APB prefill. Returns per-host per-layer local KV
+    caches and final hidden states.
+
+    caches[h][l] = (k_local [l_b,kh,hd], v_local) — what Algorithm 2 appends.
+    """
+    a = cfg.apb
+    H = a.n_hosts
+    hiddens = []
+    for h in range(H):
+        toks = host_tokens(cfg, doc, query, h, opts)
+        hiddens.append(embed(jnp.asarray(toks), params["embed"]))
+
+    caches: list[list[tuple]] = [[] for _ in range(H)]
+    for li in range(cfg.model.n_layers):
+        lp = layer_params(params, li)
+        pre = []
+        for h in range(H):
+            pos_offset = a.query_len + h * a.block_len
+            q, k, v, scores = layer_pre(hiddens[h], lp, pos_offset, cfg,
+                                        interpret=interpret)
+            if opts.compressor == "random":
+                scores = random_scores(opts.rd_seed, li, h, a.block_len,
+                                       cfg.model.n_kv_heads)
+            k_c, v_c, idx = top_lp_select(scores, k[a.l_aq:], v[a.l_aq:],
+                                          a.passing_len)
+            pre.append((q, k, v, k_c, v_c))
+        # AllGather of compressed blocks; host h keeps blocks from hosts < h.
+        for h in range(H):
+            q, k, v, _, _ = pre[h]
+            n_pass = h * a.passing_len if opts.use_passing else 0
+            k_pass = jnp.zeros((a.pass_max, cfg.model.n_kv_heads,
+                                cfg.model.head_dim), jnp.float32)
+            v_pass = jnp.zeros_like(k_pass)
+            if n_pass > 0:
+                kp = jnp.concatenate([pre[g][3] for g in range(h)], axis=0)
+                vp = jnp.concatenate([pre[g][4] for g in range(h)], axis=0)
+                k_pass = k_pass.at[:n_pass].set(kp)
+                v_pass = v_pass.at[:n_pass].set(vp)
+            n_anc = n_anchor_for(cfg, h, opts)
+            hiddens[h] = layer_post(hiddens[h], q, k, v, k_pass, v_pass,
+                                    n_pass, n_anc, lp, cfg,
+                                    interpret=interpret)
+            caches[h].append((k[a.l_aq:], v[a.l_aq:]))
+    return caches, hiddens
+
+
+def run_decode(params, cfg: Config, caches, query, n_new: int,
+               interpret: bool = True):
+    """Simulate distributed decode (Algorithm 3): process the query chunk
+    with exact distributed attention, then greedy-decode n_new tokens.
+
+    Returns (generated token ids [n_new], query-chunk logits [l_q, V])."""
+    a, m = cfg.apb, cfg.model
+    H = a.n_hosts
+    cmax = a.cache_max
+
+    # Padded per-host caches; host H-1 grows with the chunk + new tokens.
+    k_cache = [jnp.zeros((cmax, m.n_kv_heads, m.head_dim), jnp.float32)
+               for _ in range(H)]
+    v_cache = [jnp.zeros_like(k_cache[0]) for _ in range(H)]
+    cache_len = [a.block_len] * H
+    layer_k, layer_v = [], []
+    for li in range(m.n_layers):
+        lk, lv = [], []
+        for h in range(H):
+            kc, vc = caches[h][li]
+            lk.append(k_cache[h].at[:a.block_len].set(kc))
+            lv.append(v_cache[h].at[:a.block_len].set(vc))
+        layer_k.append(lk)
+        layer_v.append(lv)
+    cache_lens = [[a.block_len] * H for _ in range(m.n_layers)]
+
+    def step(tokens: np.ndarray, pos0: int):
+        n = len(tokens)
+        hidden = embed(jnp.asarray(tokens, jnp.int32), params["embed"])
+        for li in range(m.n_layers):
+            lp = layer_params(params, li)
+            q, k, v = decode_pre(hidden, lp, pos0, cfg)
+            outs, lses = [], []
+            for h in range(H):
+                if h == H - 1:
+                    cl = cache_lens[li][h]
+                    layer_k[li][h] = jax.lax.dynamic_update_slice(
+                        layer_k[li][h], k, (cl, 0, 0))
+                    layer_v[li][h] = jax.lax.dynamic_update_slice(
+                        layer_v[li][h], v, (cl, 0, 0))
+                    cache_lens[li][h] = cl + n
+                    o, s = decode_attention(q, layer_k[li][h],
+                                            layer_v[li][h],
+                                            cache_lens[li][h], 1,
+                                            interpret=interpret)
+                else:
+                    o, s = decode_attention(q, layer_k[li][h],
+                                            layer_v[li][h],
+                                            cache_lens[li][h], 0,
+                                            interpret=interpret)
+                outs.append(o)
+                lses.append(s)
+            att, _ = kref.merge_partials_ref(outs, lses)
+            hidden = decode_post(hidden, att, lp, cfg)
+        return lm_head(hidden, params["final_norm"], params["lm_head"], cfg)
+
+    # Query chunk at positions l_q + l_d ...
+    pos0 = a.query_len + a.doc_len
+    logits = step(np.asarray(query, np.int32), pos0)
+    gen = []
+    tok = int(jnp.argmax(logits[-1]))
+    for i in range(n_new):
+        gen.append(tok)
+        lg = step(np.asarray([tok], np.int32), pos0 + a.query_len + i)
+        tok = int(jnp.argmax(lg[-1]))
+    return np.asarray(gen, np.int32), np.asarray(logits)
+
+
+def run_exact_reference(params, cfg: Config, doc, query, n_new: int):
+    """Single-host exact-attention reference (the FULLATTN baseline):
+    causal prefill over [query-at-front? no —] document, then the same
+    decode path with H=1 semantics. Used for approximation-error metrics."""
+    a, m = cfg.apb, cfg.model
+    # Document tokens at global positions l_q .. l_q + l_d - 1 (identical
+    # position layout to APB so errors measure the approximation only).
+    hidden = embed(jnp.asarray(doc, jnp.int32), params["embed"])
+    caches = []
+    pos = a.query_len + jnp.arange(a.doc_len, dtype=jnp.int32)
+    for li in range(m.n_layers):
+        lp = layer_params(params, li)
+        x = rmsnorm(hidden, lp["attn_norm"], m.rms_eps)
+        n = hidden.shape[0]
+        q = jnp.dot(x, lp["wq"]).reshape(n, m.n_heads, m.head_dim)
+        k = jnp.dot(x, lp["wk"]).reshape(n, m.n_kv_heads, m.head_dim)
+        v = jnp.dot(x, lp["wv"]).reshape(n, m.n_kv_heads, m.head_dim)
+        q = rope(q, pos, m.rope_theta)
+        k = rope(k, pos, m.rope_theta)
+        att, _ = kref.attention_ref(q, k, v, kref.causal_mask(n))
+        h = hidden + jnp.dot(att.reshape(n, -1), lp["wo"])
+        xf = rmsnorm(h, lp["ffn_norm"], m.rms_eps)
+        hidden = h + swiglu(xf, lp["w_gate"], lp["w_up"], lp["w_down"])
+        caches.append((k, v))
+    return caches, hidden

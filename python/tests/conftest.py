@@ -1,0 +1,37 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+from compile.configs import ApbConfig, Config, ModelConfig  # noqa: E402
+from compile import model as M  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def test_cfg() -> Config:
+    """Small-but-structured config: GQA groups > 1, several hosts,
+    non-trivial anchor/passing lengths."""
+    return Config(
+        name="pytest",
+        model=ModelConfig(vocab_size=64, n_layers=2, d_model=32, n_heads=4,
+                          n_kv_heads=2, d_ff=64, retaining_hidden=16),
+        apb=ApbConfig(n_hosts=3, block_len=32, anchor_len=8, query_len=4,
+                      passing_len=8, max_new_tokens=8),
+    )
+
+
+@pytest.fixture(scope="session")
+def test_params(test_cfg):
+    return M.init_params(test_cfg)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,279 @@
+"""L1 kernel vs oracle — the core correctness signal of the compile path.
+
+Every Pallas kernel is pinned against the dense pure-jnp reference in
+kernels/ref.py, both on fixed tricky shapes and under hypothesis sweeps of
+shapes/dtypes/scalar settings.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    apb_attention,
+    causal_attention,
+    decode_attention,
+)
+from compile.kernels import ref
+
+HSETTINGS = dict(max_examples=12, deadline=None,
+                 suppress_health_check=list(hypothesis.HealthCheck))
+
+
+def rand(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol,
+                               rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# APB prefill attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_anchor,pass_len", [
+    (12, 20), (12, 0), (0, 0), (0, 20), (12, 1), (12, 19),
+])
+def test_apb_attention_matches_ref(rng, n_anchor, pass_len):
+    l_aq, pass_max, l_b, h, kh, hd = 12, 20, 40, 4, 2, 16
+    q = rand(rng, l_aq + l_b, h, hd)
+    k = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    v = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    out, lse = apb_attention(q, k, v, n_anchor, pass_len, l_aq=l_aq,
+                             pass_max=pass_max, bq=16, bk=16)
+    r_out, r_lse = ref.apb_attention_ref(q, k, v, n_anchor, pass_len, l_aq,
+                                         pass_max)
+    assert_close(out, r_out)
+    assert_close(lse, r_lse)
+
+
+def test_apb_attention_block_size_invariance(rng):
+    """Output must not depend on the tile decomposition."""
+    l_aq, pass_max, l_b, h, kh, hd = 8, 16, 24, 2, 2, 8
+    q = rand(rng, l_aq + l_b, h, hd)
+    k = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    v = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    ref_out, ref_lse = apb_attention(q, k, v, l_aq, 9, l_aq=l_aq,
+                                     pass_max=pass_max, bq=8, bk=8)
+    for bq, bk in [(16, 8), (8, 32), (32, 16), (128, 128), (7, 13)]:
+        out, lse = apb_attention(q, k, v, l_aq, 9, l_aq=l_aq,
+                                 pass_max=pass_max, bq=bq, bk=bk)
+        assert_close(out, ref_out)
+        assert_close(lse, ref_lse)
+
+
+def test_apb_attention_local_rows_ignore_anchor_when_masked(rng):
+    """n_anchor=0 (host 1): local outputs must be independent of the
+    anchor K/V contents — the paper's host-1 no-anchor semantics."""
+    l_aq, pass_max, l_b, h, kh, hd = 8, 0, 24, 2, 2, 8
+    q = rand(rng, l_aq + l_b, h, hd)
+    k1 = rand(rng, l_aq + l_b, kh, hd)
+    v1 = rand(rng, l_aq + l_b, kh, hd)
+    k2 = k1.at[:l_aq].set(999.0)
+    v2 = v1.at[:l_aq].set(-999.0)
+    out1, _ = apb_attention(q, k1, v1, 0, 0, l_aq=l_aq, pass_max=0, bq=8,
+                            bk=8)
+    out2, _ = apb_attention(q, k2, v2, 0, 0, l_aq=l_aq, pass_max=0, bq=8,
+                            bk=8)
+    assert_close(out1[l_aq:], out2[l_aq:])
+
+
+def test_apb_attention_passing_padding_is_inert(rng):
+    """Entries beyond pass_len in the padded passing segment must not
+    influence the result."""
+    l_aq, pass_max, l_b, h, kh, hd = 8, 16, 16, 2, 2, 8
+    nk = l_aq + pass_max + l_b
+    q = rand(rng, l_aq + l_b, h, hd)
+    k = rand(rng, nk, kh, hd)
+    v = rand(rng, nk, kh, hd)
+    pass_len = 5
+    k_dirty = k.at[l_aq + pass_len:l_aq + pass_max].set(7e3)
+    v_dirty = v.at[l_aq + pass_len:l_aq + pass_max].set(-7e3)
+    out, lse = apb_attention(q, k, v, l_aq, pass_len, l_aq=l_aq,
+                             pass_max=pass_max, bq=8, bk=8)
+    out2, lse2 = apb_attention(q, k_dirty, v_dirty, l_aq, pass_len,
+                               l_aq=l_aq, pass_max=pass_max, bq=8, bk=8)
+    assert_close(out, out2)
+    assert_close(lse, lse2)
+
+
+@hypothesis.given(
+    l_aq=st.sampled_from([0, 4, 12]),
+    pass_max=st.sampled_from([0, 8, 24]),
+    l_b=st.integers(1, 40),
+    heads=st.sampled_from([(1, 1), (4, 2), (4, 1), (6, 3)]),
+    hd=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_apb_attention_hypothesis(l_aq, pass_max, l_b, heads, hd, seed):
+    h, kh = heads
+    rng = np.random.default_rng(seed)
+    n_anchor = rng.choice([0, l_aq])
+    pass_len = int(rng.integers(0, pass_max + 1))
+    q = rand(rng, l_aq + l_b, h, hd)
+    k = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    v = rand(rng, l_aq + pass_max + l_b, kh, hd)
+    out, lse = apb_attention(q, k, v, n_anchor, pass_len, l_aq=l_aq,
+                             pass_max=pass_max, bq=16, bk=16)
+    r_out, r_lse = ref.apb_attention_ref(q, k, v, n_anchor, pass_len, l_aq,
+                                         pass_max)
+    assert_close(out, r_out, tol=5e-5)
+    assert_close(lse, r_lse, tol=5e-5)
+
+
+@hypothesis.given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    l_b=st.sampled_from([8, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_apb_attention_dtypes(dtype, l_b, seed):
+    """bf16 inputs accumulate in f32; tolerance scaled to bf16 ulp."""
+    rng = np.random.default_rng(seed)
+    l_aq, pass_max, h, kh, hd = 4, 8, 2, 2, 8
+    dt = jnp.dtype(dtype)
+    q = rand(rng, l_aq + l_b, h, hd, dtype=dt)
+    k = rand(rng, l_aq + pass_max + l_b, kh, hd, dtype=dt)
+    v = rand(rng, l_aq + pass_max + l_b, kh, hd, dtype=dt)
+    out, _ = apb_attention(q, k, v, l_aq, 3, l_aq=l_aq, pass_max=pass_max,
+                           bq=16, bk=16)
+    r_out, _ = ref.apb_attention_ref(q, k, v, l_aq, 3, l_aq, pass_max)
+    tol = 2e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r_out, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Causal (FLASHATTN baseline) mode
+# ---------------------------------------------------------------------------
+
+def test_causal_attention_matches_dense(rng):
+    n, h, kh, hd = 50, 4, 2, 16
+    q = rand(rng, n, h, hd)
+    k = rand(rng, n, kh, hd)
+    v = rand(rng, n, kh, hd)
+    out, lse = causal_attention(q, k, v, bq=16, bk=16)
+    r_out, r_lse = ref.attention_ref(q, k, v, ref.causal_mask(n))
+    assert_close(out, r_out)
+    assert_close(lse, r_lse)
+
+
+def test_causal_first_row_attends_self_only(rng):
+    n, h, hd = 8, 2, 8
+    q = rand(rng, n, h, hd)
+    k = rand(rng, n, h, hd)
+    v = rand(rng, n, h, hd)
+    out, _ = causal_attention(q, k, v, bq=8, bk=8)
+    assert_close(out[0], np.asarray(v[0]))
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,cache_len,self_causal", [
+    (1, 17, 0), (1, 18, 1), (5, 40, 0), (5, 45, 1), (5, 5, 1), (1, 1, 1),
+])
+def test_decode_attention_matches_ref(rng, n, cache_len, self_causal):
+    cmax, h, kh, hd = 48, 4, 2, 16
+    q = rand(rng, n, h, hd)
+    kc = rand(rng, cmax, kh, hd)
+    vc = rand(rng, cmax, kh, hd)
+    out, lse = decode_attention(q, kc, vc, cache_len, self_causal, bq=8,
+                                bk=16)
+    r_out, r_lse = ref.decode_attention_ref(q, kc, vc, cache_len,
+                                            self_causal)
+    assert_close(out, r_out)
+    assert_close(lse, r_lse)
+
+
+def test_decode_attention_padding_is_inert(rng):
+    cmax, n, h, kh, hd = 32, 3, 2, 2, 8
+    q = rand(rng, n, h, hd)
+    kc = rand(rng, cmax, kh, hd)
+    vc = rand(rng, cmax, kh, hd)
+    cl = 11
+    kc2 = kc.at[cl:].set(1e4)
+    vc2 = vc.at[cl:].set(-1e4)
+    out, _ = decode_attention(q, kc, vc, cl, 0, bq=8, bk=8)
+    out2, _ = decode_attention(q, kc2, vc2, cl, 0, bq=8, bk=8)
+    assert_close(out, out2)
+
+
+@hypothesis.given(
+    n=st.integers(1, 9),
+    kh=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    self_causal=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_decode_attention_hypothesis(n, kh, g, self_causal, seed):
+    rng = np.random.default_rng(seed)
+    cmax, hd = 40, 8
+    h = kh * g
+    lo = n if self_causal else 1
+    cache_len = int(rng.integers(lo, cmax + 1))
+    q = rand(rng, n, h, hd)
+    kc = rand(rng, cmax, kh, hd)
+    vc = rand(rng, cmax, kh, hd)
+    out, lse = decode_attention(q, kc, vc, cache_len, self_causal, bq=8,
+                                bk=16)
+    r_out, r_lse = ref.decode_attention_ref(q, kc, vc, cache_len,
+                                            self_causal)
+    assert_close(out, r_out, tol=5e-5)
+    assert_close(lse, r_lse, tol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Distributed LSE merge (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    hosts=st.integers(1, 5),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**HSETTINGS)
+def test_merge_partials_equals_global_softmax(hosts, n, seed):
+    """Splitting keys across hosts, computing per-host partials + LSE and
+    merging must equal single-host attention over all keys."""
+    rng = np.random.default_rng(seed)
+    h, kh, hd = 2, 2, 8
+    lens = rng.integers(1, 12, size=hosts)
+    q = rand(rng, n, h, hd)
+    ks = [rand(rng, int(l), kh, hd) for l in lens]
+    vs = [rand(rng, int(l), kh, hd) for l in lens]
+    outs, lses = [], []
+    for kpart, vpart in zip(ks, vs):
+        full = jnp.ones((n, kpart.shape[0]), bool)
+        o, s = ref.attention_ref(q, kpart, vpart, full)
+        outs.append(o)
+        lses.append(s)
+    merged, mlse = ref.merge_partials_ref(outs, lses)
+    k_all = jnp.concatenate(ks)
+    v_all = jnp.concatenate(vs)
+    o_all, lse_all = ref.attention_ref(
+        q, k_all, v_all, jnp.ones((n, k_all.shape[0]), bool))
+    assert_close(merged, o_all, tol=5e-5)
+    assert_close(mlse, lse_all, tol=5e-5)
+
+
+def test_merge_partials_handles_empty_host():
+    """A host whose partial saw zero keys (lse=-inf) must not corrupt the
+    merge."""
+    n, h, hd = 2, 2, 4
+    rng = np.random.default_rng(3)
+    o1 = rand(rng, n, h, hd)
+    l1 = jnp.zeros((n, h))
+    o2 = jnp.zeros((n, h, hd))
+    l2 = jnp.full((n, h), -np.inf)
+    merged, mlse = ref.merge_partials_ref([o1, o2], [l1, l2])
+    assert_close(merged, o1)
+    assert_close(mlse, l1)

@@ -1,0 +1,195 @@
+"""L2 model stage functions: shapes, H=1 exactness, ablation semantics,
+decode equivalence, position layout."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ApbConfig, Config
+from compile import model as M
+from compile.kernels import ref as kref
+
+
+@pytest.fixture(scope="module")
+def io(test_cfg, rng):
+    doc = rng.integers(1, test_cfg.model.vocab_size,
+                       test_cfg.apb.doc_len).astype(np.int32)
+    query = rng.integers(1, test_cfg.model.vocab_size,
+                         test_cfg.apb.query_len).astype(np.int32)
+    return doc, query
+
+
+def test_param_shapes_cover_all(test_cfg, test_params):
+    shapes = M.param_shapes(test_cfg)
+    assert set(shapes) == set(test_params)
+    for name, shp in shapes.items():
+        assert tuple(test_params[name].shape) == shp, name
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(5, 16)),
+                    jnp.float32)
+    y = M.rmsnorm(x, jnp.ones(16), 1e-6)
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_dot():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(6, 2, 8)), jnp.float32)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    y = M.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               atol=1e-4)
+    # Relative property: <rope(q,i), rope(k,j)> depends only on i-j.
+    q = jnp.asarray(rng.normal(size=(1, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 8)), jnp.float32)
+    def dot(i, j):
+        qi = M.rope(q, jnp.asarray([i], jnp.int32), 10000.0)
+        kj = M.rope(k, jnp.asarray([j], jnp.int32), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot(5, 3) - dot(9, 7)) < 1e-4
+    assert abs(dot(5, 3) - dot(5, 2)) > 1e-6
+
+
+def test_prefill_shapes(test_cfg, test_params, io):
+    doc, query = io
+    caches, hiddens = M.run_apb_prefill(test_params, test_cfg, doc, query)
+    a, m = test_cfg.apb, test_cfg.model
+    assert len(caches) == a.n_hosts
+    assert len(caches[0]) == m.n_layers
+    k0, v0 = caches[0][0]
+    assert k0.shape == (a.block_len, m.n_kv_heads, m.head_dim)
+    for h in hiddens:
+        assert h.shape == (a.n_tot, m.d_model)
+        assert np.isfinite(np.asarray(h)).all()
+
+
+def test_h1_apb_equals_exact_reference(test_cfg, rng):
+    """With a single host there is no anchor, no passing, no compression:
+    APB degenerates to exact causal attention (paper Limitations)."""
+    cfg1 = Config(name="h1", model=test_cfg.model,
+                  apb=ApbConfig(n_hosts=1, block_len=48, anchor_len=8,
+                                query_len=4, passing_len=8,
+                                max_new_tokens=8))
+    params = M.init_params(cfg1)
+    doc = rng.integers(1, cfg1.model.vocab_size,
+                       cfg1.apb.doc_len).astype(np.int32)
+    query = rng.integers(1, cfg1.model.vocab_size,
+                         cfg1.apb.query_len).astype(np.int32)
+    c_apb, h_apb = M.run_apb_prefill(params, cfg1, doc, query)
+    c_ref, h_ref = M.run_exact_reference(params, cfg1, doc, query, 0)
+    l_aq = cfg1.apb.l_aq
+    for li in range(cfg1.model.n_layers):
+        np.testing.assert_allclose(np.asarray(c_apb[0][li][0]),
+                                   np.asarray(c_ref[li][0]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c_apb[0][li][1]),
+                                   np.asarray(c_ref[li][1]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_apb[0][l_aq:]),
+                               np.asarray(h_ref), atol=1e-3, rtol=1e-3)
+
+
+def test_anchor_ablation_changes_outputs(test_cfg, test_params, io):
+    doc, query = io
+    base, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
+    no_anchor, _ = M.run_apb_prefill(test_params, test_cfg, doc, query,
+                                     M.ApbOptions(use_anchor=False))
+    # Host 0 has no anchor either way -> its layer-0 KV is identical.
+    np.testing.assert_allclose(np.asarray(base[0][0][0]),
+                               np.asarray(no_anchor[0][0][0]), atol=1e-6)
+    # Host 1 must differ (its local block saw the anchor).
+    d = np.abs(np.asarray(base[1][1][0]) -
+               np.asarray(no_anchor[1][1][0])).max()
+    assert d > 1e-4
+
+
+def test_passing_ablation_changes_outputs(test_cfg, test_params, io):
+    doc, query = io
+    base, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
+    no_pass, _ = M.run_apb_prefill(test_params, test_cfg, doc, query,
+                                   M.ApbOptions(use_passing=False))
+    # Host 0 never receives passing blocks -> unchanged.
+    np.testing.assert_allclose(np.asarray(base[0][-1][0]),
+                               np.asarray(no_pass[0][-1][0]), atol=1e-6)
+    d = np.abs(np.asarray(base[-1][-1][0]) -
+               np.asarray(no_pass[-1][-1][0])).max()
+    assert d > 1e-4
+
+
+def test_random_compressor_differs_from_retaining(test_cfg, test_params, io):
+    doc, query = io
+    base, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
+    rd, _ = M.run_apb_prefill(test_params, test_cfg, doc, query,
+                              M.ApbOptions(compressor="random"))
+    d = np.abs(np.asarray(base[-1][-1][0]) - np.asarray(rd[-1][-1][0])).max()
+    assert d > 1e-5
+
+
+def test_embed_query_ablation(test_cfg, io):
+    doc, query = io
+    t_with = M.host_tokens(test_cfg, doc, query, 1, M.ApbOptions())
+    t_without = M.host_tokens(test_cfg, doc, query, 1,
+                              M.ApbOptions(embed_query=False))
+    lq = test_cfg.apb.query_len
+    assert (t_with[:lq] == query).all()
+    assert (t_without[:lq] == 0).all()
+    np.testing.assert_array_equal(t_with[lq:], t_without[lq:])
+
+
+def test_host0_tokens_have_no_anchor(test_cfg, io):
+    doc, query = io
+    t0 = M.host_tokens(test_cfg, doc, query, 0, M.ApbOptions())
+    assert (t0[:test_cfg.apb.l_aq] == 0).all()
+    np.testing.assert_array_equal(t0[test_cfg.apb.l_aq:],
+                                  doc[:test_cfg.apb.block_len])
+    assert M.n_anchor_for(test_cfg, 0, M.ApbOptions()) == 0
+    assert M.n_anchor_for(test_cfg, 1, M.ApbOptions()) == test_cfg.apb.l_aq
+
+
+def test_decode_generates_and_is_deterministic(test_cfg, test_params, io):
+    doc, query = io
+    caches, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
+    gen1, logits1 = M.run_decode(test_params, test_cfg, caches, query, 3)
+    gen2, logits2 = M.run_decode(test_params, test_cfg, caches, query, 3)
+    np.testing.assert_array_equal(gen1, gen2)
+    np.testing.assert_allclose(logits1, logits2, atol=0)
+    assert gen1.shape == (3,)
+    assert np.isfinite(logits1).all()
+
+
+def test_decode_matches_monolithic_attention(test_cfg, test_params, io):
+    """The distributed decode (per-host partials + LSE merge) must equal a
+    single attention over the concatenated caches — exactness of
+    Algorithm 3."""
+    doc, query = io
+    a, m = test_cfg.apb, test_cfg.model
+    caches, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
+
+    # Distributed: one layer, one step, via the pipeline pieces.
+    lp = M.layer_params(test_params, 0)
+    hidden = M.embed(jnp.asarray(query[:1]), test_params["embed"])
+    pos0 = a.query_len + a.doc_len
+    q, k, v = M.decode_pre(hidden, lp, pos0, test_cfg)
+
+    outs, lses = [], []
+    k_all, v_all = [], []
+    for h in range(a.n_hosts):
+        kc, vc = caches[h][0]
+        if h == a.n_hosts - 1:
+            kfull = jnp.concatenate([kc, k])
+            vfull = jnp.concatenate([vc, v])
+        else:
+            kfull, vfull = kc, vc
+        o, s = kref.attention_ref(q, kfull, vfull,
+                                  jnp.ones((1, kfull.shape[0]), bool))
+        outs.append(o)
+        lses.append(s)
+        k_all.append(kfull)
+        v_all.append(vfull)
+    merged, _ = kref.merge_partials_ref(outs, lses)
+    mono, _ = kref.attention_ref(
+        q, jnp.concatenate(k_all), jnp.concatenate(v_all),
+        jnp.ones((1, sum(x.shape[0] for x in k_all)), bool))
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(mono),
+                               atol=1e-5)

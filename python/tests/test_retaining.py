@@ -1,0 +1,173 @@
+"""Retaining-head compressor: kernel vs oracle, selection invariants, and
+the trained-beats-random property that Table 3 relies on."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    build_features,
+    retaining_scores,
+    top_lp_select,
+)
+from compile.kernels import ref
+from compile import model as M
+from compile.train_retaining import (
+    _recall_at,
+    make_training_batch,
+    snapkv_labels,
+    train_retaining_heads,
+)
+
+HSETTINGS = dict(max_examples=10, deadline=None,
+                 suppress_health_check=list(hypothesis.HealthCheck))
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def test_retaining_scores_match_ref(rng):
+    n, kh, hd, r = 37, 2, 8, 16
+    feat = rand(rng, n, kh, 3 * hd)
+    w1 = rand(rng, 3 * hd, r) * 0.1
+    b1 = rand(rng, r) * 0.01
+    w2 = rand(rng, r, 1) * 0.1
+    b2 = rand(rng, 1) * 0.01
+    s = retaining_scores(feat, w1, b1, w2, b2, bn=16)
+    rs = ref.retaining_head_ref(feat, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-5,
+                               rtol=1e-5)
+
+
+@hypothesis.given(n=st.integers(4, 60), kh=st.sampled_from([1, 2, 3]),
+                  seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**HSETTINGS)
+def test_retaining_scores_hypothesis(n, kh, seed):
+    rng = np.random.default_rng(seed)
+    hd, r = 8, 8
+    feat = rand(rng, n, kh, 3 * hd)
+    w1 = rand(rng, 3 * hd, r) * 0.2
+    b1 = rand(rng, r) * 0.1
+    w2 = rand(rng, r, 1) * 0.2
+    b2 = rand(rng, 1) * 0.1
+    s = retaining_scores(feat, w1, b1, w2, b2, bn=16)
+    rs = ref.retaining_head_ref(feat, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_build_features_gqa_mean(rng):
+    n, h, kh, hd = 6, 4, 2, 8
+    q = rand(rng, n, h, hd)
+    k = rand(rng, n, kh, hd)
+    v = rand(rng, n, kh, hd)
+    feat = build_features(q, k, v)
+    assert feat.shape == (n, kh, 3 * hd + 2)
+    # No query rows -> similarity features are zero.
+    assert np.allclose(np.asarray(feat[..., -2:]), 0.0)
+    # With query rows the sim features light up on matching keys.
+    qq = rand(rng, 3, h, hd)
+    feat_q = build_features(q, k, v, q_query=qq)
+    assert feat_q.shape == (n, kh, 3 * hd + 2)
+    assert not np.allclose(np.asarray(feat_q[..., -2:]), 0.0)
+    g = h // kh
+    exp_q = np.asarray(q).reshape(n, kh, g, hd).mean(axis=2)
+    np.testing.assert_allclose(np.asarray(feat[..., :hd]), exp_q, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(feat[..., hd:2 * hd]),
+                               np.asarray(k), atol=1e-6)
+
+
+class TestTopLpSelect:
+    def test_selects_argmax_indices_sorted(self, rng):
+        n, kh, hd, lp = 20, 2, 4, 5
+        scores = rand(rng, n, kh)
+        k = rand(rng, n, kh, hd)
+        v = rand(rng, n, kh, hd)
+        k_c, v_c, idx = top_lp_select(scores, k, v, lp)
+        assert k_c.shape == (lp, kh, hd)
+        assert idx.shape == (lp, kh)
+        s = np.asarray(scores)
+        for j in range(kh):
+            expect = np.sort(np.argsort(-s[:, j])[:lp])
+            np.testing.assert_array_equal(np.asarray(idx[:, j]), expect)
+
+    def test_gathered_rows_match_indices(self, rng):
+        n, kh, hd, lp = 16, 2, 4, 4
+        scores = rand(rng, n, kh)
+        k = rand(rng, n, kh, hd)
+        v = rand(rng, n, kh, hd)
+        k_c, v_c, idx = top_lp_select(scores, k, v, lp)
+        for j in range(kh):
+            for t in range(lp):
+                i = int(idx[t, j])
+                np.testing.assert_allclose(np.asarray(k_c[t, j]),
+                                           np.asarray(k[i, j]), atol=1e-6)
+                np.testing.assert_allclose(np.asarray(v_c[t, j]),
+                                           np.asarray(v[i, j]), atol=1e-6)
+
+    @hypothesis.given(n=st.integers(2, 40), lp_frac=st.floats(0.1, 1.0),
+                      seed=st.integers(0, 2**31 - 1))
+    @hypothesis.settings(**HSETTINGS)
+    def test_invariants(self, n, lp_frac, seed):
+        """Exactly l_p indices, in-range, strictly ascending."""
+        rng = np.random.default_rng(seed)
+        kh, hd = 2, 4
+        lp = max(1, int(n * lp_frac))
+        scores = rand(rng, n, kh)
+        k = rand(rng, n, kh, hd)
+        v = rand(rng, n, kh, hd)
+        _, _, idx = top_lp_select(scores, k, v, lp)
+        ix = np.asarray(idx)
+        assert ix.shape == (lp, kh)
+        assert (ix >= 0).all() and (ix < n).all()
+        for j in range(kh):
+            assert (np.diff(ix[:, j]) > 0).all()
+
+
+def test_random_scores_deterministic():
+    a = np.asarray(M.random_scores(1, 2, 3, 8, 2))
+    b = np.asarray(M.random_scores(1, 2, 3, 8, 2))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(M.random_scores(1, 2, 4, 8, 2))
+    assert not np.array_equal(a, c)
+
+
+def test_splitmix64_vectors():
+    """Pinned vectors — rust util::rng::splitmix64 asserts the same ones."""
+    assert M.splitmix64(0) == 0xE220A8397B1DCDAF
+    assert M.splitmix64(1) == 0x910A2DEC89025CC1
+    assert M.splitmix64(0xDEADBEEF) == 0x4ADFB90F68C9EB9B
+
+
+def test_training_beats_random(test_cfg, test_params):
+    """The trained retaining head must rank true high-attention-mass units
+    far better than chance — the R vs Rd. mechanism of Table 3."""
+    params = dict(test_params)
+    params, hist = train_retaining_heads(params, test_cfg, steps=60,
+                                         verbose=False)
+    for li, h in hist.items():
+        assert h["lossN"] < h["loss0"], f"layer {li} did not train"
+        # The pytest backbone is far smaller (d=32) than the artifact
+        # configs, so the margin is looser here; the tiny artifact config
+        # reaches ~15x random (see aot build logs / EXPERIMENTS.md).
+        assert h["recall"] > 2 * h["rand_recall"], (
+            f"layer {li}: recall {h['recall']} vs random {h['rand_recall']}")
+
+
+def test_snapkv_labels_shapes(test_cfg, test_params, rng):
+    toks = make_training_batch(test_cfg, np.random.default_rng(0), 64, 8, 1)
+    from compile.train_retaining import backbone_qkv
+    qkv = backbone_qkv(test_params, test_cfg, toks[0])
+    q, k, v, _, _ = qkv[0]
+    lab = snapkv_labels(q, k, 8)
+    assert lab.shape == (64 - 8, test_cfg.model.n_kv_heads)
+    assert np.isfinite(np.asarray(lab)).all()
+    assert (np.asarray(lab) >= 0).all()
+
+
+def test_recall_at_is_one_for_identical():
+    lab = np.random.default_rng(0).normal(size=(30, 2)).astype(np.float32)
+    assert _recall_at(lab, lab, 7) == 1.0

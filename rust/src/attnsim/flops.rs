@@ -1,0 +1,260 @@
+//! FLOPs-per-forward formulas — paper Table 6, implemented verbatim, plus
+//! an instrumented per-component counter the closed forms are
+//! property-tested against (DESIGN.md invariant 7).
+//!
+//! Notation: L layers, n input length, d hidden, g GQA factor, I FFN
+//! intermediate, H hosts, l_a anchor length, l_p passing length.
+
+use super::profiles::ModelProfile;
+
+/// APB sequence-layout hyperparameters for the analytical model
+/// (paper Table 5 schedule by default).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyper {
+    pub hosts: f64,  // H
+    pub l_a: f64,
+    pub l_p: f64,
+    pub l_q: f64,
+}
+
+impl Hyper {
+    /// Table 5: the hyperparameters used for the length sweep (§4.3).
+    /// l_b = n/H; l_a = l_b/4 capped at 8K; l_p = l_b/8 capped at 8K.
+    pub fn paper_schedule(n: f64, hosts: f64) -> Hyper {
+        let l_b = n / hosts;
+        let cap = 8192.0;
+        Hyper {
+            hosts,
+            l_a: (l_b / 4.0).min(cap),
+            l_p: (l_b / 8.0).min(cap),
+            l_q: 128.0,
+        }
+    }
+
+    /// End-to-end benchmark setting (§B.2.1): l_a = 4K, l_p = 2K, H = 8.
+    pub fn e2e_128k() -> Hyper {
+        Hyper { hosts: 8.0, l_a: 4096.0, l_p: 2048.0, l_q: 128.0 }
+    }
+}
+
+/// Table 6 row 1 — FULLATTN (FlashAttn / RingAttn / Ulysses share this).
+pub fn fullattn_flops(m: &ModelProfile, n: f64) -> f64 {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    l * (4.0 * n * d * d + 4.0 / g * n * d * d + 2.0 * n * n * d + 6.0 * n * d * i)
+}
+
+/// Table 6 row 2 — STARATTN (anchor = block = n/H).
+pub fn starattn_flops(m: &ModelProfile, n: f64, hosts: f64) -> f64 {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    let h = hosts;
+    l / h
+        * ((8.0 * h - 4.0) * n * d * d
+            + (8.0 * h - 6.0) / g * n * d * d
+            + (8.0 * h - 6.0) / h * n * n * d
+            + (12.0 * h - 6.0) * n * d * i)
+}
+
+/// Table 6 row 3 — APB.
+pub fn apb_flops(m: &ModelProfile, n: f64, hy: &Hyper) -> f64 {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    let h = hy.hosts;
+    let term1 = 4.0
+        * (1.0 + 1.0 / g + 0.5 * n / (h * d) + 1.5 * i / d)
+        * (n / h)
+        * d
+        * d;
+    let blk = n / h + hy.l_a;
+    let term2 = 4.0 * (h - 1.0) * (1.0 + 1.0 / g + 0.5 * blk / d + 1.5 * i / d) * blk * d * d;
+    let term3 = hy.l_p * h * (h - 1.0) * blk * d;
+    l * (term1 + term2 + term3)
+}
+
+/// MINFERENCE: the paper excludes it from Table 6 ("depends on the head
+/// configuration search"). We model its attention term with an effective
+/// visible-key budget per query (the union of A-shape / vertical-slash /
+/// block-sparse patterns), keeping projections and FFN dense.
+pub fn minference_flops(m: &ModelProfile, n: f64, effective_keys: f64) -> f64 {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    let vis = effective_keys.min(n / 2.0); // causal average bound
+    l * (4.0 * n * d * d + 4.0 / g * n * d * d + 2.0 * n * vis * d + 6.0 * n * d * i)
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented per-component counter: sums what each host actually computes,
+// used (a) to cross-check the closed forms and (b) by the wall-time model.
+// ---------------------------------------------------------------------------
+
+/// Per-component FLOPs on ONE host's critical path for one forward.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ComponentFlops {
+    pub qkv: f64,
+    pub retaining: f64,
+    pub attention: f64,
+    pub o_proj: f64,
+    pub ffn: f64,
+}
+
+impl ComponentFlops {
+    pub fn total(&self) -> f64 {
+        self.qkv + self.retaining + self.attention + self.o_proj + self.ffn
+    }
+}
+
+/// FULLATTN on a single device: causal attention over n.
+pub fn fullattn_components(m: &ModelProfile, n: f64) -> ComponentFlops {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    ComponentFlops {
+        qkv: l * (2.0 + 2.0 / g) * n * d * d,
+        retaining: 0.0,
+        // Causal: sum_i 2*i*d ~ n^2 d (QK^T + PV each n^2/2 * 2 flops).
+        attention: l * 2.0 * 0.5 * n * n * d * 2.0 / 2.0 * 2.0 / 2.0 + l * n * n * d,
+        o_proj: l * 2.0 * n * d * d,
+        ffn: l * 6.0 * n * d * i,
+    }
+}
+
+/// Sequence-parallel exact attention (Ring/Ulysses): per-host sequence is
+/// n/H but attention work is the full causal set divided by H.
+pub fn sp_exact_components(m: &ModelProfile, n: f64, hosts: f64) -> ComponentFlops {
+    let full = fullattn_components(m, n);
+    ComponentFlops {
+        qkv: full.qkv / hosts,
+        retaining: 0.0,
+        attention: full.attention / hosts,
+        o_proj: full.o_proj / hosts,
+        ffn: full.ffn / hosts,
+    }
+}
+
+/// StarAttn: each host processes [anchor | block] with block-local +
+/// anchor attention, no communication. anchor = block = n/H.
+pub fn starattn_components(m: &ModelProfile, n: f64, hosts: f64) -> ComponentFlops {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    let l_b = n / hosts;
+    let l_anchor = l_b; // StarAttn uses anchor size == block size
+    let seq = l_b + l_anchor; // per-host processed length
+    // Attention: anchor rows causal over anchor (~anchor^2/2), block rows
+    // see anchor fully + causal local (~anchor*l_b + l_b^2/2); 2 matmuls
+    // (QK^T, PV) at 2 flops each -> factor 4.
+    let pairs = 0.5 * l_anchor * l_anchor + l_anchor * l_b + 0.5 * l_b * l_b;
+    ComponentFlops {
+        qkv: l * (2.0 + 2.0 / g) * seq * d * d,
+        retaining: 0.0,
+        attention: l * 4.0 * pairs * d,
+        o_proj: l * 2.0 * seq * d * d,
+        ffn: l * 6.0 * seq * d * i,
+    }
+}
+
+/// APB per-host components for the LAST host (the critical path: largest
+/// passing block). `retaining_hidden` sizes the compressor MLP.
+pub fn apb_components(m: &ModelProfile, n: f64, hy: &Hyper,
+                      retaining_hidden: f64) -> ComponentFlops {
+    let (l, d, g, i) = (m.layers, m.d, m.g(), m.inter);
+    let h = hy.hosts;
+    let l_b = n / h;
+    let l_aq = hy.l_a + hy.l_q;
+    let seq = l_b + l_aq;
+    let pass = (h - 1.0) * hy.l_p; // last host's passing block
+    let pairs = 0.5 * l_aq * l_aq          // anchor causal
+        + l_b * (l_aq + pass)               // local rows -> anchor+passing
+        + 0.5 * l_b * l_b;                  // local causal
+    let hd = m.head_dim();
+    let rh = l * l_b * m.kv_heads * (2.0 * 3.0 * hd * retaining_hidden
+        + 2.0 * retaining_hidden);
+    ComponentFlops {
+        qkv: l * (2.0 + 2.0 / g) * seq * d * d,
+        retaining: rh,
+        attention: l * 4.0 * pairs * d,
+        o_proj: l * 2.0 * seq * d * d,
+        ffn: l * 6.0 * seq * d * i,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attnsim::profiles::LLAMA31_8B;
+
+    const N128K: f64 = 131072.0;
+
+    #[test]
+    fn apb_below_star_below_full_at_paper_settings() {
+        // DESIGN.md invariant 7 (refined): APB < Star for all n >= 32K.
+        // Star < Full only once the quadratic attention term dominates the
+        // anchor-doubled linear terms (the Figure 4(c) crossover) — at the
+        // paper's settings that is n >= 128K.
+        for exp in 15..=19 {
+            let n = (1u64 << exp) as f64; // 32K..512K
+            let hy = Hyper::paper_schedule(n, 8.0);
+            let full = fullattn_flops(&LLAMA31_8B, n);
+            let star = starattn_flops(&LLAMA31_8B, n, 8.0);
+            let apb = apb_flops(&LLAMA31_8B, n, &hy);
+            assert!(apb < star, "n={n}: apb {apb} !< star {star}");
+            assert!(apb < full, "n={n}: apb {apb} !< full {full}");
+            if n >= 131072.0 {
+                assert!(star < full, "n={n}: star {star} !< full {full}");
+            }
+        }
+        // And the short-length regime indeed inverts (Star pays for its
+        // full-size anchors — the overhead §C calls out).
+        let n = 32768.0;
+        assert!(starattn_flops(&LLAMA31_8B, n, 8.0) > fullattn_flops(&LLAMA31_8B, n));
+    }
+
+    #[test]
+    fn apb_compute_reduction_grows_with_length() {
+        let r = |n: f64| {
+            apb_flops(&LLAMA31_8B, n, &Hyper::paper_schedule(n, 8.0))
+                / fullattn_flops(&LLAMA31_8B, n)
+        };
+        assert!(r(524288.0) < r(131072.0));
+        assert!(r(131072.0) < r(32768.0));
+        assert!(r(524288.0) < 0.5, "at 512K APB should be <50% of full");
+    }
+
+    #[test]
+    fn closed_forms_match_instrumented_within_tolerance() {
+        // FULLATTN closed form vs component sum: identical terms.
+        let n = N128K;
+        let cf = fullattn_flops(&LLAMA31_8B, n);
+        let comp = fullattn_components(&LLAMA31_8B, n).total();
+        let rel = (cf - comp).abs() / cf;
+        assert!(rel < 0.02, "fullattn closed {cf} vs components {comp}");
+    }
+
+    #[test]
+    fn star_components_track_closed_form_shape() {
+        // The paper's Star closed form aggregates all hosts; per-host * H
+        // should land within ~15% (their formula folds minor terms).
+        let n = N128K;
+        let h = 8.0;
+        let per_host = starattn_components(&LLAMA31_8B, n, h).total();
+        let agg = starattn_flops(&LLAMA31_8B, n, h);
+        let rel = (per_host * h - agg).abs() / agg;
+        assert!(rel < 0.15, "star rel diff {rel}");
+    }
+
+    #[test]
+    fn minference_between_full_and_linear() {
+        let n = N128K;
+        let dense = fullattn_flops(&LLAMA31_8B, n);
+        let sparse = minference_flops(&LLAMA31_8B, n, 8192.0);
+        assert!(sparse < dense);
+        // Still strictly more than a zero-attention lower bound.
+        let zero = minference_flops(&LLAMA31_8B, n, 0.0);
+        assert!(sparse > zero);
+    }
+
+    #[test]
+    fn paper_schedule_matches_table5() {
+        // Table 5: n=128K -> l_b=16K, l_a=4K, l_p=2K (H=8).
+        let hy = Hyper::paper_schedule(131072.0, 8.0);
+        assert_eq!(hy.l_a, 4096.0);
+        assert_eq!(hy.l_p, 2048.0);
+        // n=512K -> l_a=8K cap, l_p=8K cap.
+        let hy = Hyper::paper_schedule(524288.0, 8.0);
+        assert_eq!(hy.l_a, 8192.0);
+        assert_eq!(hy.l_p, 8192.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Hardware profiles for the analytical wall-time model.
+//!
+//! The paper's testbed (Appendix B.3): 8× NVIDIA A800-80GB per node,
+//! third-generation NVLink intra-node, HDR InfiniBand across nodes. We
+//! model each device with peak dense throughput, HBM bandwidth and
+//! capacity, plus an α–β (latency–bandwidth) interconnect model.
+//!
+//! Efficiency factors (MFU) are calibrated once against the paper's
+//! measured per-component times (Table 13) and then held fixed for every
+//! experiment — the model's job is to reproduce *orderings and ratios*,
+//! not absolute milliseconds (DESIGN.md §2).
+
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    /// Peak dense bf16 FLOP/s of one device.
+    pub flops_peak: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub mem_cap: f64,
+    /// Intra-node collective bandwidth per device, bytes/s (NVLink).
+    pub link_bw: f64,
+    /// Collective base latency per round, seconds.
+    pub link_latency: f64,
+    /// Achieved fraction of peak for big GEMMs.
+    pub mfu_gemm: f64,
+    /// Achieved fraction of peak for FlashAttention-style kernels.
+    pub mfu_attn: f64,
+    /// Bytes per element of activations/KV (bf16).
+    pub elem_bytes: f64,
+}
+
+/// A800-80G node (NVLink3 + HDR IB), the paper's testbed.
+pub const A800: Hardware = Hardware {
+    flops_peak: 312e12,
+    mem_bw: 2.0e12,
+    mem_cap: 80e9,
+    link_bw: 200e9, // effective per-direction NVLink collective bandwidth
+    link_latency: 20e-6,
+    mfu_gemm: 0.62,
+    mfu_attn: 0.55,
+    elem_bytes: 2.0,
+};
+
+impl Hardware {
+    /// Time for `flops` of GEMM work on one device.
+    pub fn t_gemm(&self, flops: f64) -> f64 {
+        flops / (self.flops_peak * self.mfu_gemm)
+    }
+
+    /// Time for `flops` of attention work on one device, with a memory-
+    /// bandwidth floor of `bytes` moved (roofline max).
+    pub fn t_attn(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / (self.flops_peak * self.mfu_attn)).max(bytes / self.mem_bw)
+    }
+
+    /// Memory-bound time for streaming `bytes` through HBM.
+    pub fn t_mem(&self, bytes: f64) -> f64 {
+        bytes / self.mem_bw
+    }
+
+    /// α–β model for one collective round moving `bytes` per device.
+    pub fn t_coll(&self, bytes: f64) -> f64 {
+        self.link_latency + bytes / self.link_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_time_scales_linearly() {
+        let t1 = A800.t_gemm(1e12);
+        let t2 = A800.t_gemm(2e12);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attn_respects_memory_floor() {
+        // Tiny FLOPs but huge bytes -> memory bound.
+        let t = A800.t_attn(1.0, 2.0e12);
+        assert!((t - 1.0).abs() < 1e-9);
+        // Huge FLOPs, tiny bytes -> compute bound.
+        let t = A800.t_attn(312e12 * A800.mfu_attn, 1.0);
+        assert!((t - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn collective_has_latency_floor() {
+        assert!(A800.t_coll(0.0) >= A800.link_latency);
+        assert!(A800.t_coll(200e9) > 1.0);
+    }
+}

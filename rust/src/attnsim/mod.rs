@@ -1,0 +1,17 @@
+//! Analytical performance model of the paper's testbed (S11/S12 in
+//! DESIGN.md): Table 6 FLOPs formulas, an A800 hardware profile, a
+//! component-level wall-time model for all six methods, and the memory/OOM
+//! model. Every speed table and figure in the paper is regenerated from
+//! this module (see benches/), while numerics correctness is established
+//! by the real PJRT cluster in `coordinator`.
+
+pub mod flops;
+pub mod hardware;
+pub mod memory;
+pub mod profiles;
+pub mod walltime;
+
+pub use flops::{apb_flops, fullattn_flops, minference_flops, starattn_flops, Hyper};
+pub use hardware::{Hardware, A800};
+pub use profiles::{ModelProfile, ALL_MODELS, LLAMA31_8B, QWEN25_14B, YI_34B};
+pub use walltime::{estimate, speed_tok_per_s, Breakdown, Estimate, Method};

@@ -1,0 +1,311 @@
+//! Analytical wall-time model for all six methods — the calibrated twin of
+//! the paper's measured speed results (Figures 1/3/4/5/6, Tables 9–15).
+//!
+//! Per method it produces the Figure 5 component breakdown for prefill,
+//! a per-step decode time, and an OOM verdict from the memory model. The
+//! model prices each component as max(compute, memory) roofline time on
+//! one device plus α–β collective costs, using the instrumented FLOPs
+//! counters from `flops.rs`.
+
+use super::flops::{self, ComponentFlops, Hyper};
+use super::hardware::Hardware;
+use super::memory;
+use super::profiles::ModelProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    FlashAttn,
+    Ulysses,
+    RingAttn,
+    MInference,
+    StarAttn,
+    Apb,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::FlashAttn,
+        Method::Ulysses,
+        Method::RingAttn,
+        Method::MInference,
+        Method::StarAttn,
+        Method::Apb,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FlashAttn => "FlashAttn",
+            Method::Ulysses => "Ulysses",
+            Method::RingAttn => "RingAttn",
+            Method::MInference => "MInference",
+            Method::StarAttn => "StarAttn",
+            Method::Apb => "APB",
+        }
+    }
+
+    pub fn uses_sequence_parallelism(&self) -> bool {
+        matches!(self, Method::Ulysses | Method::RingAttn | Method::StarAttn | Method::Apb)
+    }
+
+    pub fn exact_attention(&self) -> bool {
+        matches!(self, Method::FlashAttn | Method::Ulysses | Method::RingAttn)
+    }
+}
+
+/// MInference effective visible keys per query (head-pattern budget).
+pub const MINFERENCE_EFFECTIVE_KEYS: f64 = 12288.0;
+
+/// Figure 5 / Table 13 component breakdown (seconds, whole prefill on the
+/// critical-path host).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub qkv: f64,
+    pub retaining: f64,
+    pub comm: f64,
+    pub attention: f64,
+    pub o_proj: f64,
+    pub ffn: f64,
+    pub others: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.qkv + self.retaining + self.comm + self.attention + self.o_proj + self.ffn
+            + self.others
+    }
+
+    fn from_components(c: &ComponentFlops, hw: &Hardware, attn_bytes: f64) -> Breakdown {
+        let core = Breakdown {
+            qkv: hw.t_gemm(c.qkv),
+            retaining: hw.t_gemm(c.retaining),
+            comm: 0.0,
+            attention: hw.t_attn(c.attention, attn_bytes),
+            o_proj: hw.t_gemm(c.o_proj),
+            ffn: hw.t_gemm(c.ffn),
+            others: 0.0,
+        };
+        // "Others" (norms, rope, embedding, softmax epilogues) tracked as a
+        // fixed fraction of the core time, calibrated on Table 13 (~4–7%).
+        Breakdown { others: 0.05 * core.total(), ..core }
+    }
+}
+
+/// Full prefill+decode estimate for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    pub prefill: Breakdown,
+    pub prefill_s: f64,
+    pub decode_per_token_s: f64,
+    pub oom: bool,
+    pub flops_total: f64,
+    pub mem_bytes_peak: f64,
+}
+
+/// Attention HBM traffic on one device: Q/K/V/O streamed once plus the KV
+/// re-reads FlashAttention does per query tile (modelled as `reread` full
+/// passes over the visible KV).
+fn attn_bytes(m: &ModelProfile, seq_rows: f64, visible_avg: f64, hw: &Hardware) -> f64 {
+    let hd = m.head_dim();
+    let qo = 2.0 * seq_rows * m.heads * hd * hw.elem_bytes;
+    let kv = 2.0 * visible_avg * m.kv_heads * hd * hw.elem_bytes;
+    m.layers * (qo + 6.0 * kv)
+}
+
+/// Estimate one method at input length `n` with `hosts` devices.
+pub fn estimate(method: Method, m: &ModelProfile, n: f64, hosts: f64, hy: &Hyper,
+                hw: &Hardware, _n_out: f64) -> Estimate {
+    let mem = memory::peak_bytes(method, m, n, hosts, hy, hw);
+    let oom = mem > hw.mem_cap;
+    let (mut bd, flops_total) = match method {
+        Method::FlashAttn => {
+            let c = flops::fullattn_components(m, n);
+            let b = attn_bytes(m, n, n / 2.0, hw);
+            (Breakdown::from_components(&c, hw, b), c.total())
+        }
+        Method::MInference => {
+            let c0 = flops::fullattn_components(m, n);
+            let vis = MINFERENCE_EFFECTIVE_KEYS.min(n / 2.0);
+            let c = ComponentFlops {
+                attention: m.layers * 4.0 * n * vis * m.d / m.heads * m.heads,
+                ..c0
+            };
+            // Sparse attention is scatter/gather heavy: lower effective
+            // bandwidth (0.35x) + per-layer pattern-build overhead.
+            let b = attn_bytes(m, n, vis, hw) / 0.35;
+            let mut bd = Breakdown::from_components(&c, hw, b);
+            bd.others += m.layers * 2.5e-3; // pattern search/dispatch
+            (bd, c.total())
+        }
+        Method::Ulysses => {
+            let c = flops::sp_exact_components(m, n, hosts);
+            let b = attn_bytes(m, n / hosts, n / 2.0, hw);
+            let mut bd = Breakdown::from_components(&c, hw, b);
+            // 4 AllToAll rounds on Q,K,V,O per layer: each moves the
+            // per-host activation slab.
+            let slab = n / hosts * m.d * hw.elem_bytes;
+            bd.comm = m.layers * 4.0 * hw.t_coll(slab * (hosts - 1.0) / hosts);
+            (bd, c.total())
+        }
+        Method::RingAttn => {
+            let c = flops::sp_exact_components(m, n, hosts);
+            let b = attn_bytes(m, n / hosts, n / 2.0, hw);
+            let mut bd = Breakdown::from_components(&c, hw, b);
+            // H-1 rounds of KV-block ring passes per layer; overlap with
+            // compute is imperfect (paper: Ring slower than Ulysses), model
+            // exposed fraction as 60% of the volume.
+            let kv_blk = 2.0 * (n / hosts) * m.kv_heads * m.head_dim() * hw.elem_bytes;
+            bd.comm = m.layers * (hosts - 1.0) * hw.t_coll(kv_blk) * 0.6;
+            // Ring's attention can't start on later blocks early: add the
+            // pipeline bubble as attention inflation.
+            bd.attention *= 1.55;
+            (bd, c.total())
+        }
+        Method::StarAttn => {
+            let c = flops::starattn_components(m, n, hosts);
+            let seq = 2.0 * n / hosts;
+            let b = attn_bytes(m, seq, n / hosts * 1.5, hw);
+            (Breakdown::from_components(&c, hw, b), c.total() * hosts)
+        }
+        Method::Apb => {
+            let c = flops::apb_components(m, n, hy, 1024.0);
+            let l_aq = hy.l_a + hy.l_q;
+            let seq = n / hosts + l_aq;
+            let vis = l_aq + (hosts - 1.0) * hy.l_p / 2.0 + n / hosts / 2.0;
+            let b = attn_bytes(m, seq, vis, hw);
+            let mut bd = Breakdown::from_components(&c, hw, b);
+            // One AllGather of the compressed block per layer.
+            let blk = 2.0 * hy.l_p * m.kv_heads * m.head_dim() * hw.elem_bytes;
+            bd.comm = m.layers * hw.t_coll(blk * (hosts - 1.0));
+            (bd, flops::apb_flops(m, n, hy))
+        }
+    };
+    // LM head on the last position.
+    bd.others += hw.t_gemm(2.0 * m.d * m.vocab);
+
+    let decode = decode_per_token(method, m, n, hosts, hw);
+    Estimate {
+        prefill: bd,
+        prefill_s: bd.total(),
+        decode_per_token_s: decode,
+        oom,
+        flops_total,
+        mem_bytes_peak: mem,
+    }
+}
+
+/// Decode is memory-bound: stream weights + visible KV once per token.
+/// SP methods split the KV across hosts and add a small gather.
+pub fn decode_per_token(method: Method, m: &ModelProfile, n: f64, hosts: f64,
+                        hw: &Hardware) -> f64 {
+    let weight_bytes = m.params * hw.elem_bytes;
+    let kv_tokens = match method {
+        Method::MInference => n, // MInference keeps the dense cache
+        _ => n,
+    };
+    let kv_bytes = kv_tokens * m.kv_bytes_per_token(hw.elem_bytes);
+    if method.uses_sequence_parallelism() {
+        // Weights are replicated (read fully), KV split across hosts;
+        // plus one (out, lse) gather per layer.
+        let t_mem = hw.t_mem(weight_bytes + kv_bytes / hosts);
+        let gather = m.layers * hw.t_coll(m.heads * m.head_dim() * hw.elem_bytes);
+        t_mem + gather
+    } else {
+        let factor = if method == Method::MInference { 2.2 } else { 1.0 };
+        hw.t_mem(weight_bytes + kv_bytes) * factor
+    }
+}
+
+/// Paper speed metric (§4.1): (input + output tokens) / total time.
+pub fn speed_tok_per_s(est: &Estimate, n_in: f64, n_out: f64) -> Option<f64> {
+    if est.oom {
+        return None;
+    }
+    let total = est.prefill_s + est.decode_per_token_s * n_out;
+    Some((n_in + n_out) / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attnsim::hardware::A800;
+    use crate::attnsim::profiles::LLAMA31_8B;
+
+    fn est(method: Method, n: f64) -> Estimate {
+        let hy = Hyper::paper_schedule(n, 8.0);
+        estimate(method, &LLAMA31_8B, n, 8.0, &hy, &A800, 64.0)
+    }
+
+    #[test]
+    fn figure1_ordering_at_128k() {
+        // Paper Table 11 @128K: APB 0.94s < Star 3.50 < Ulysses 3.95 <
+        // Ring 6.34 < MInference 15.16 < FlashAttn 30.01.
+        let t = |m| est(m, 131072.0).prefill_s;
+        assert!(t(Method::Apb) < t(Method::StarAttn));
+        assert!(t(Method::StarAttn) < t(Method::Ulysses));
+        assert!(t(Method::Ulysses) < t(Method::RingAttn));
+        assert!(t(Method::RingAttn) < t(Method::MInference));
+        assert!(t(Method::MInference) < t(Method::FlashAttn));
+    }
+
+    #[test]
+    fn headline_speedups_within_band() {
+        // Paper headline: APB up to 9.2x vs FlashAttn, 4.2x vs Ring,
+        // 1.6x vs Star. Check the 128K point sits in a sane band.
+        let apb = est(Method::Apb, 131072.0).prefill_s;
+        let flash = est(Method::FlashAttn, 131072.0).prefill_s;
+        let ring = est(Method::RingAttn, 131072.0).prefill_s;
+        let star = est(Method::StarAttn, 131072.0).prefill_s;
+        let s_flash = flash / apb;
+        let s_ring = ring / apb;
+        let s_star = star / apb;
+        assert!((4.0..40.0).contains(&s_flash), "flash speedup {s_flash}");
+        assert!((2.0..12.0).contains(&s_ring), "ring speedup {s_ring}");
+        assert!((1.15..4.0).contains(&s_star), "star speedup {s_star}");
+    }
+
+    #[test]
+    fn oom_pattern_matches_table11() {
+        // FlashAttn & MInference OOM at 256K; SP methods OOM at 1M except APB.
+        assert!(!est(Method::FlashAttn, 131072.0).oom);
+        assert!(est(Method::FlashAttn, 262144.0).oom);
+        assert!(est(Method::MInference, 262144.0).oom);
+        assert!(!est(Method::Ulysses, 524288.0).oom);
+        assert!(est(Method::Ulysses, 1048576.0).oom);
+        assert!(est(Method::RingAttn, 1048576.0).oom);
+        assert!(est(Method::StarAttn, 1048576.0).oom);
+        assert!(!est(Method::Apb, 1048576.0).oom, "APB must survive 1M");
+    }
+
+    #[test]
+    fn apb_advantage_grows_with_length() {
+        let ratio = |n: f64| {
+            est(Method::StarAttn, n).prefill_s / est(Method::Apb, n).prefill_s
+        };
+        assert!(ratio(524288.0) > ratio(65536.0) * 0.95,
+                "APB advantage should not shrink with length");
+    }
+
+    #[test]
+    fn decode_negligible_vs_prefill_at_128k() {
+        // Figure 6: prefill dominates.
+        let e = est(Method::Apb, 131072.0);
+        let decode_total = e.decode_per_token_s * 64.0;
+        assert!(decode_total < e.prefill_s,
+                "decode {decode_total} vs prefill {}", e.prefill_s);
+    }
+
+    #[test]
+    fn speed_metric_none_on_oom() {
+        let e = est(Method::FlashAttn, 1048576.0);
+        assert!(e.oom);
+        assert_eq!(speed_tok_per_s(&e, 1048576.0, 64.0), None);
+    }
+
+    #[test]
+    fn apb_comm_small_vs_attention() {
+        // Figure 5: APB's communication is tiny (0.62ms vs 34ms attention).
+        let e = est(Method::Apb, 131072.0);
+        assert!(e.prefill.comm < 0.2 * e.prefill.attention,
+                "comm {} vs attention {}", e.prefill.comm, e.prefill.attention);
+    }
+}

@@ -1,0 +1,233 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `benches/*.rs` target (`cargo bench`, harness = false).
+//! Provides warmup + timed iterations with summary statistics, and a
+//! paper-style table renderer so each bench prints the rows of the table
+//! or figure it regenerates.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 2, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, iters: 3 }
+    }
+
+    /// Time `f`, returning per-iteration seconds summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(&samples)
+    }
+
+    pub fn report<F: FnMut()>(&self, name: &str, f: F) -> Summary {
+        let s = self.run(f);
+        println!(
+            "{name:<44} mean {:>10} ±{:>9}  p50 {:>10}  (n={})",
+            crate::util::stats::fmt_duration(s.mean),
+            crate::util::stats::fmt_duration(s.std),
+            crate::util::stats::fmt_duration(s.p50),
+            s.n
+        );
+        s
+    }
+}
+
+/// Honour `APB_BENCH_FAST=1` for CI-speed runs of the bench suite.
+pub fn default_bencher() -> Bencher {
+    if std::env::var("APB_BENCH_FAST").as_deref() == Ok("1") {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    }
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    if i == 0 {
+                        format!("{:<w$}", c, w = widths[i])
+                    } else {
+                        format!("{:>w$}", c, w = widths[i])
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// ASCII scatter/line plot for figure-style benches (speed vs length etc.).
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> Self {
+        AsciiPlot { title: title.to_string(), width: 72, height: 20, series: Vec::new() }
+    }
+
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) {
+        self.series.push((name.to_string(), points));
+    }
+
+    pub fn render(&self) -> String {
+        let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let all: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.1.clone()).collect();
+        if all.is_empty() {
+            return format!("== {} == (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            for &(x, y) in pts {
+                let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                grid[self.height - 1 - cy][cx] = marks[si % marks.len()];
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&format!("y: [{y0:.3e}, {y1:.3e}]\n"));
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!("x: [{x0:.3e}, {x1:.3e}]\n"));
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_returns_sane_timings() {
+        let b = Bencher { warmup_iters: 1, iters: 5 };
+        let s = b.run(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean > 0.0 && s.mean < 1.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["method", "speed"]);
+        t.row(vec!["APB".into(), "9.2x".into()]);
+        t.row(vec!["StarAttn".into(), "1.6x".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("APB"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_renders() {
+        let mut p = AsciiPlot::new("speed");
+        p.series("apb", vec![(1.0, 2.0), (2.0, 4.0)]);
+        p.series("star", vec![(1.0, 1.0), (2.0, 2.0)]);
+        let r = p.render();
+        assert!(r.contains("speed"));
+        assert!(r.contains('*') && r.contains('o'));
+    }
+}

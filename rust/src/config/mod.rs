@@ -1,0 +1,213 @@
+//! Configuration mirrored from `python/compile/configs.py`, loaded from
+//! `artifacts/<name>/manifest.json`. The python side is the source of
+//! truth (shapes are baked into the HLO artifacts); rust re-derives and
+//! cross-checks the derived quantities.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub retaining_hidden: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn gqa_groups(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApbParams {
+    pub n_hosts: usize,
+    pub block_len: usize,   // l_b
+    pub anchor_len: usize,  // l_a
+    pub query_len: usize,   // l_q
+    pub passing_len: usize, // l_p
+    pub max_new_tokens: usize,
+}
+
+impl ApbParams {
+    pub fn l_aq(&self) -> usize {
+        self.query_len + self.anchor_len
+    }
+
+    pub fn n_tot(&self) -> usize {
+        self.l_aq() + self.block_len
+    }
+
+    pub fn pass_max(&self) -> usize {
+        (self.n_hosts - 1) * self.passing_len
+    }
+
+    pub fn doc_len(&self) -> usize {
+        self.n_hosts * self.block_len
+    }
+
+    pub fn cache_max(&self) -> usize {
+        self.block_len + self.query_len + self.max_new_tokens
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub name: String,
+    pub seed: u64,
+    pub model: ModelConfig,
+    pub apb: ApbParams,
+    /// Artifact directory this config was loaded from.
+    pub dir: PathBuf,
+    /// Full parsed manifest (artifacts, weights, golden sections).
+    pub manifest: Json,
+}
+
+fn u(v: &Json, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .with_context(|| format!("field '{key}' not a usize"))
+}
+
+fn f(v: &Json, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .with_context(|| format!("field '{key}' not a number"))
+}
+
+impl Config {
+    /// Load `dir/manifest.json` and validate derived fields against the
+    /// python-side record.
+    pub fn load(dir: &Path) -> Result<Config> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let cfg_j = manifest.req("config")?;
+        let m = cfg_j.req("model")?;
+        let a = cfg_j.req("apb")?;
+        let model = ModelConfig {
+            vocab_size: u(m, "vocab_size")?,
+            n_layers: u(m, "n_layers")?,
+            d_model: u(m, "d_model")?,
+            n_heads: u(m, "n_heads")?,
+            n_kv_heads: u(m, "n_kv_heads")?,
+            d_ff: u(m, "d_ff")?,
+            rope_theta: f(m, "rope_theta")?,
+            rms_eps: f(m, "rms_eps")?,
+            retaining_hidden: u(m, "retaining_hidden")?,
+        };
+        let apb = ApbParams {
+            n_hosts: u(a, "n_hosts")?,
+            block_len: u(a, "block_len")?,
+            anchor_len: u(a, "anchor_len")?,
+            query_len: u(a, "query_len")?,
+            passing_len: u(a, "passing_len")?,
+            max_new_tokens: u(a, "max_new_tokens")?,
+        };
+        if model.d_model % model.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", model.d_model, model.n_heads);
+        }
+        if model.n_heads % model.n_kv_heads != 0 {
+            bail!("n_heads {} not divisible by n_kv_heads {}", model.n_heads,
+                  model.n_kv_heads);
+        }
+        // Cross-check python's derived block against our re-derivation.
+        let derived = cfg_j.req("derived")?;
+        for (key, want) in [
+            ("l_aq", apb.l_aq()),
+            ("n_tot", apb.n_tot()),
+            ("pass_max", apb.pass_max()),
+            ("doc_len", apb.doc_len()),
+            ("cache_max", apb.cache_max()),
+            ("head_dim", model.head_dim()),
+            ("gqa_groups", model.gqa_groups()),
+        ] {
+            let got = u(derived, key)?;
+            if got != want {
+                bail!("derived field '{key}': python {got} != rust {want}");
+            }
+        }
+        let name = cfg_j
+            .req("name")?
+            .as_str()
+            .context("config name")?
+            .to_string();
+        let seed = cfg_j.req("seed")?.as_i64().context("seed")? as u64;
+        Ok(Config { name, seed, model, apb, dir: dir.to_path_buf(), manifest })
+    }
+}
+
+/// Ablation toggles — rust mirror of `model.ApbOptions` (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ApbOptions {
+    pub use_anchor: bool,
+    pub use_passing: bool,
+    pub retaining_compressor: bool, // false => random selector "Rd."
+    pub embed_query: bool,
+    pub rd_seed: u64,
+}
+
+impl Default for ApbOptions {
+    fn default() -> Self {
+        ApbOptions {
+            use_anchor: true,
+            use_passing: true,
+            retaining_compressor: true,
+            embed_query: true,
+            rd_seed: 1234,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apb_params_derived() {
+        let a = ApbParams {
+            n_hosts: 4,
+            block_len: 256,
+            anchor_len: 32,
+            query_len: 16,
+            passing_len: 32,
+            max_new_tokens: 64,
+        };
+        assert_eq!(a.l_aq(), 48);
+        assert_eq!(a.n_tot(), 304);
+        assert_eq!(a.pass_max(), 96);
+        assert_eq!(a.doc_len(), 1024);
+        assert_eq!(a.cache_max(), 336);
+    }
+
+    #[test]
+    fn model_config_derived() {
+        let m = ModelConfig {
+            vocab_size: 512,
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            rope_theta: 1e4,
+            rms_eps: 1e-5,
+            retaining_hidden: 64,
+        };
+        assert_eq!(m.head_dim(), 32);
+        assert_eq!(m.gqa_groups(), 2);
+    }
+}

@@ -1,0 +1,340 @@
+//! Host worker: one simulated GPU. Owns a PJRT engine + KV cache, executes
+//! the per-layer APB stages, and participates in fabric collectives.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Fabric;
+use crate::config::{ApbOptions, Config};
+use crate::kvcache::KvCache;
+use crate::runtime::Engine;
+use crate::util::rng::random_score;
+use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
+
+use super::timing::{DecodeTiming, PrefillTiming, Stopwatch};
+use super::{Cmd, Resp};
+
+pub fn run_host(rank: usize, cfg: Config, fabric: Arc<Fabric>, cmd_rx: Receiver<Cmd>,
+                resp_tx: Sender<Resp>, ready_tx: Sender<Result<usize>>) {
+    match HostWorker::new(rank, cfg, fabric) {
+        Ok(mut w) => {
+            let _ = ready_tx.send(Ok(rank));
+            w.serve(cmd_rx, resp_tx);
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+        }
+    }
+}
+
+struct HostWorker {
+    rank: usize,
+    cfg: Config,
+    fabric: Arc<Fabric>,
+    engine: Engine,
+    cache: KvCache,
+}
+
+impl HostWorker {
+    fn new(rank: usize, cfg: Config, fabric: Arc<Fabric>) -> Result<Self> {
+        let engine = Engine::load(&cfg, &[])
+            .with_context(|| format!("host {rank}: loading engine"))?;
+        let cache = KvCache::new(
+            cfg.model.n_layers,
+            cfg.apb.cache_max(),
+            cfg.model.n_kv_heads,
+            cfg.model.head_dim(),
+        );
+        Ok(HostWorker { rank, cfg, fabric, engine, cache })
+    }
+
+    fn serve(&mut self, cmd_rx: Receiver<Cmd>, resp_tx: Sender<Resp>) {
+        while let Ok(cmd) = cmd_rx.recv() {
+            let resp = match cmd {
+                Cmd::Shutdown => break,
+                Cmd::Clear => {
+                    self.cache.clear();
+                    Resp::Cleared { host: self.rank }
+                }
+                Cmd::Prefill { tokens, opts } => match self.prefill(&tokens, &opts) {
+                    Ok((timing, retained)) => {
+                        Resp::PrefillDone { host: self.rank, timing, retained }
+                    }
+                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                },
+                Cmd::QueryChunk { tokens } => {
+                    let pos0 = (self.cfg.apb.query_len + self.cfg.apb.doc_len()) as i32;
+                    match self.decode_pass(&tokens, pos0, "query") {
+                        Ok((logits, timing)) => {
+                            Resp::StepDone { host: self.rank, logits, timing }
+                        }
+                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                    }
+                }
+                Cmd::DecodeStep { token, step } => {
+                    let a = &self.cfg.apb;
+                    let pos0 = (a.query_len + a.doc_len() + a.query_len + step) as i32;
+                    match self.decode_pass(&[token], pos0, "step") {
+                        Ok((logits, timing)) => {
+                            Resp::StepDone { host: self.rank, logits, timing }
+                        }
+                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                    }
+                }
+            };
+            if resp_tx.send(resp).is_err() {
+                break; // leader gone
+            }
+        }
+    }
+
+    /// Per-kv-head gather of compressed KV rows: k/v are the local slices
+    /// [l_b, kh, hd]; idx[j] lists ascending positions for head j.
+    fn gather_compressed(&self, k: &Tensor, v: &Tensor, idx: &[Vec<usize>])
+                         -> (Tensor, Tensor) {
+        let (kh, hd) = (k.shape[1], k.shape[2]);
+        let l_p = idx[0].len();
+        let mut kc = Tensor::zeros(vec![l_p, kh, hd]);
+        let mut vc = Tensor::zeros(vec![l_p, kh, hd]);
+        for j in 0..kh {
+            for (t, &i) in idx[j].iter().enumerate() {
+                let src = (i * kh + j) * hd;
+                let dst = (t * kh + j) * hd;
+                kc.data[dst..dst + hd].copy_from_slice(&k.data[src..src + hd]);
+                vc.data[dst..dst + hd].copy_from_slice(&v.data[src..src + hd]);
+            }
+        }
+        (kc, vc)
+    }
+
+    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout.
+    /// Returns timing + the per-layer/per-head retained indices.
+    fn prefill(&mut self, tokens: &[i32], opts: &ApbOptions)
+               -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
+        let cfg = &self.cfg;
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let eng = &self.engine;
+        self.cache.clear();
+        let mut tm = PrefillTiming::default();
+        let mut retained: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m.n_layers);
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let tok_buf = eng.upload_i32(tokens, &[a.n_tot()])?;
+        let mut hidden = eng
+            .exec("embed_prefill", &[&tok_buf, eng.weight("embed")?])?
+            .remove(0);
+        tm.embed_s += sw.lap();
+
+        let pos_offset = (a.query_len + self.rank * a.block_len) as i32;
+        let n_anchor = super::n_anchor_for(cfg, self.rank, opts);
+        let pass_len: i32 = if opts.use_passing {
+            (self.rank * a.passing_len) as i32
+        } else {
+            0
+        };
+        // Perf (§Perf iter 1): loop-invariant scalars staged once, not per
+        // layer — each upload is a full PJRT host-to-device call.
+        let pos_buf = eng.scalar_i32(pos_offset)?;
+        let pass_buf = eng.scalar_i32(pass_len)?;
+        let anchor_buf = eng.scalar_i32(n_anchor)?;
+
+        for li in 0..m.n_layers {
+            // --- layer_pre: QKV + RoPE + retaining scores ----------------
+            // The hidden-state buffer is uploaded once and reused by both
+            // layer stages (§Perf iter 1).
+            let h_buf = eng.upload_f32(&hidden)?;
+            let mut outs = eng.exec(
+                "layer_pre",
+                &[
+                    &h_buf,
+                    &pos_buf,
+                    eng.layer_weight(li, "attn_norm")?,
+                    eng.layer_weight(li, "wq")?,
+                    eng.layer_weight(li, "wk")?,
+                    eng.layer_weight(li, "wv")?,
+                    eng.layer_weight(li, "rh_w1")?,
+                    eng.layer_weight(li, "rh_b1")?,
+                    eng.layer_weight(li, "rh_w2")?,
+                    eng.layer_weight(li, "rh_b2")?,
+                ],
+            )?;
+            let scores = outs.pop().unwrap();
+            let v = outs.pop().unwrap();
+            let k = outs.pop().unwrap();
+            let q = outs.pop().unwrap();
+            tm.layer_pre_s += sw.lap();
+
+            // --- Top-l_p selection (coordinator side, §3.4) ---------------
+            let k_local = k.slice_rows(a.l_aq(), a.n_tot());
+            let v_local = v.slice_rows(a.l_aq(), a.n_tot());
+            let scores_used = if opts.retaining_compressor {
+                scores
+            } else {
+                let mut rd = Tensor::zeros(vec![a.block_len, m.n_kv_heads]);
+                for i in 0..a.block_len {
+                    for j in 0..m.n_kv_heads {
+                        rd.data[i * m.n_kv_heads + j] = random_score(
+                            opts.rd_seed, li as u64, self.rank as u64, j as u64, i as u64,
+                        );
+                    }
+                }
+                rd
+            };
+            let idx = top_lp_indices(&scores_used, a.passing_len);
+            retained.push(
+                idx.iter()
+                    .map(|head| head.iter().map(|&i| i as u32).collect())
+                    .collect(),
+            );
+            let (k_c, v_c) = self.gather_compressed(&k_local, &v_local, &idx);
+            tm.topk_s += sw.lap();
+
+            // --- AllGather of compressed blocks (§3.5) --------------------
+            let blocks: Vec<(Tensor, Tensor)> = if opts.use_passing {
+                self.fabric.kv_gather.all_gather(self.rank, (k_c, v_c))
+            } else {
+                Vec::new()
+            };
+            tm.comm_s += sw.lap();
+
+            // --- Passing-block assembly: ranks < mine, rank order ---------
+            let mut k_pass =
+                Tensor::zeros(vec![a.pass_max(), m.n_kv_heads, m.head_dim()]);
+            let mut v_pass = k_pass.clone();
+            for r in 0..self.rank.min(blocks.len()) {
+                k_pass.write_rows(r * a.passing_len, &blocks[r].0);
+                v_pass.write_rows(r * a.passing_len, &blocks[r].1);
+            }
+
+            // --- layer_post: APB attention + FFN (§3.6) -------------------
+            let args = [
+                h_buf,
+                eng.upload_f32(&q)?,
+                eng.upload_f32(&k)?,
+                eng.upload_f32(&v)?,
+                eng.upload_f32(&k_pass)?,
+                eng.upload_f32(&v_pass)?,
+            ];
+            let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+            refs.push(&pass_buf);
+            refs.push(&anchor_buf);
+            refs.push(eng.layer_weight(li, "wo")?);
+            refs.push(eng.layer_weight(li, "ffn_norm")?);
+            refs.push(eng.layer_weight(li, "w_gate")?);
+            refs.push(eng.layer_weight(li, "w_up")?);
+            refs.push(eng.layer_weight(li, "w_down")?);
+            hidden = eng.exec("layer_post", &refs)?.remove(0);
+            tm.layer_post_s += sw.lap();
+
+            // --- cache append: local block KV only (anchor discarded) -----
+            self.cache.append(li, &k_local, &v_local)?;
+            tm.cache_s += sw.lap();
+        }
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok((tm, retained))
+    }
+
+    /// Algorithm 3 — one decode pass (query chunk or single token).
+    /// Returns logits on the last host only.
+    fn decode_pass(&mut self, tokens: &[i32], pos0: i32, tag: &str)
+                   -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+        let cfg = &self.cfg;
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let eng = &self.engine;
+        let last = self.rank == a.n_hosts - 1;
+        let n = tokens.len();
+        let mut tm = DecodeTiming::default();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let tok_buf = eng.upload_i32(tokens, &[n])?;
+        let embed_name = if tag == "query" { "embed_query" } else { "embed_step" };
+        let mut hidden = eng
+            .exec(embed_name, &[&tok_buf, eng.weight("embed")?])?
+            .remove(0);
+        tm.pre_s += sw.lap();
+
+        // Perf (§Perf iter 1): position scalar staged once for all layers.
+        let pos_buf = eng.scalar_i32(pos0)?;
+        for li in 0..m.n_layers {
+            // decode_pre: project + rope the chunk.
+            let h_buf = eng.upload_f32(&hidden)?;
+            let mut outs = eng.exec(
+                &format!("decode_pre_{tag}"),
+                &[
+                    &h_buf,
+                    &pos_buf,
+                    eng.layer_weight(li, "attn_norm")?,
+                    eng.layer_weight(li, "wq")?,
+                    eng.layer_weight(li, "wk")?,
+                    eng.layer_weight(li, "wv")?,
+                ],
+            )?;
+            let v = outs.pop().unwrap();
+            let k = outs.pop().unwrap();
+            let q = outs.pop().unwrap();
+            tm.pre_s += sw.lap();
+
+            // Last host appends the chunk's KV before attending (line 7).
+            let self_causal = if last {
+                self.cache.append(li, &k, &v)?;
+                1
+            } else {
+                0
+            };
+            let lc = &self.cache.layers[li];
+            let attn_args = [
+                eng.upload_f32(&q)?,
+                eng.upload_f32(&lc.k)?,
+                eng.upload_f32(&lc.v)?,
+                eng.scalar_i32(lc.len as i32)?,
+                eng.scalar_i32(self_causal)?,
+            ];
+            let refs: Vec<&xla::PjRtBuffer> = attn_args.iter().collect();
+            let mut outs = eng.exec(&format!("decode_attn_{tag}"), &refs)?;
+            let lse = outs.pop().unwrap();
+            let out = outs.pop().unwrap();
+            tm.attn_s += sw.lap();
+
+            // Gather all hosts' partials (line 9) ...
+            let all = self.fabric.att_gather.all_gather(self.rank, (out, lse));
+            tm.comm_s += sw.lap();
+
+            // ... and merge with the online-softmax identity (line 10).
+            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
+            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
+            let att = merge_partials(&outs_v, &lses_v);
+            tm.merge_s += sw.lap();
+
+            // decode_post: O-proj + FFN, replicated (identical on all hosts).
+            let post_args = [eng.upload_f32(&hidden)?, eng.upload_f32(&att)?];
+            let mut refs: Vec<&xla::PjRtBuffer> = post_args.iter().collect();
+            refs.push(eng.layer_weight(li, "wo")?);
+            refs.push(eng.layer_weight(li, "ffn_norm")?);
+            refs.push(eng.layer_weight(li, "w_gate")?);
+            refs.push(eng.layer_weight(li, "w_up")?);
+            refs.push(eng.layer_weight(li, "w_down")?);
+            hidden = eng.exec(&format!("decode_post_{tag}"), &refs)?.remove(0);
+            tm.post_s += sw.lap();
+        }
+
+        let logits = if last {
+            let h_buf = eng.upload_f32(&hidden)?;
+            let l = eng
+                .exec(
+                    &format!("lm_head_{tag}"),
+                    &[&h_buf, eng.weight("final_norm")?, eng.weight("lm_head")?],
+                )?
+                .remove(0);
+            tm.lm_head_s += sw.lap();
+            Some(l.data)
+        } else {
+            None
+        };
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok((logits, tm))
+    }
+}

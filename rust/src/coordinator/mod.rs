@@ -1,0 +1,364 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! The `Cluster` owns one worker thread per host (each with its own PJRT
+//! engine + KV cache) and drives the APB inference procedure:
+//!
+//!   prefill (Algorithm 2, per layer):
+//!     layer_pre → top-l_p selection → AllGather(B^C) → passing-block
+//!     assembly → layer_post → cache append
+//!   decode (Algorithm 3, per layer):
+//!     decode_pre → per-host decode_attn(+LSE) → Gather → online-softmax
+//!     merge → decode_post; greedy next-token on the last host.
+//!
+//! The leader thread never touches tensors on the prefill path — it only
+//! routes commands; all compute + collectives happen inside host workers,
+//! exactly like the paper's one-process-per-GPU deployment.
+
+pub mod host;
+pub mod scheduler;
+pub mod timing;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::Fabric;
+use crate::config::{ApbOptions, Config};
+use crate::util::tensor::Tensor;
+
+pub use timing::{DecodeTiming, PrefillTiming};
+
+/// Commands from the leader to host workers.
+#[derive(Clone)]
+pub enum Cmd {
+    /// Run the APB prefill over this host's token layout.
+    Prefill { tokens: Arc<Vec<i32>>, opts: ApbOptions },
+    /// Process the re-fed query chunk (decode path, n = l_q).
+    QueryChunk { tokens: Arc<Vec<i32>> },
+    /// Decode one token (broadcast of the previously sampled token).
+    DecodeStep { token: i32, step: usize },
+    /// Drop the request state (cache + hidden).
+    Clear,
+    Shutdown,
+}
+
+/// Worker responses to the leader.
+pub enum Resp {
+    PrefillDone {
+        host: usize,
+        timing: PrefillTiming,
+        /// Per-layer, per-kv-head local-block indices the compressor
+        /// retained (for retention-recall experiments; paper §3.4).
+        retained: Vec<Vec<Vec<u32>>>,
+    },
+    /// Only the last host computes logits (all hosts hold identical hidden
+    /// states after the merge, so one LM head suffices).
+    StepDone { host: usize, logits: Option<Vec<f32>>, timing: DecodeTiming },
+    Cleared { host: usize },
+    Error { host: usize, msg: String },
+}
+
+struct HostHandle {
+    cmd_tx: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+pub struct Cluster {
+    pub cfg: Config,
+    pub fabric: Arc<Fabric>,
+    hosts: Vec<HostHandle>,
+    resp_rx: Receiver<Resp>,
+}
+
+/// Leader-side report for one prefill.
+#[derive(Debug, Clone)]
+pub struct PrefillReport {
+    pub per_host: Vec<PrefillTiming>,
+    /// retained[host][layer][kv_head] -> local-block indices kept by the
+    /// compressor (ascending).
+    pub retained: Vec<Vec<Vec<Vec<u32>>>>,
+    pub wall_seconds: f64,
+    pub comm_bytes: u64,
+}
+
+impl PrefillReport {
+    /// Recall of a set of *global document positions* in the compressor's
+    /// retained set, averaged over layers and kv-heads — the measured twin
+    /// of `oracle::compressor_recall`. Positions on host 0 are never
+    /// passed (host 0 sends to nobody's past), so callers typically plant
+    /// needles beyond block 0.
+    pub fn retention_recall(&self, cfg: &Config, positions: &[usize]) -> f64 {
+        let l_b = cfg.apb.block_len;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for &pos in positions {
+            let host = pos / l_b;
+            let local = (pos % l_b) as u32;
+            if host >= self.retained.len() {
+                continue;
+            }
+            for layer in &self.retained[host] {
+                for head in layer {
+                    total += 1;
+                    if head.binary_search(&local).is_ok() {
+                        hits += 1;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        hits as f64 / total as f64
+    }
+}
+
+/// Leader-side report for one generation.
+#[derive(Debug, Clone)]
+pub struct GenReport {
+    pub tokens: Vec<i32>,
+    pub query_logits: Vec<f32>,
+    pub wall_seconds: f64,
+    pub per_step_seconds: Vec<f64>,
+}
+
+/// Mirror of `model.host_tokens`: [anchor (l_aq) | local block] layout for
+/// host `rank`. Host 0 carries no anchor (zero-filled, masked out).
+pub fn host_tokens(cfg: &Config, doc: &[i32], query: &[i32], rank: usize,
+                   opts: &ApbOptions) -> Vec<i32> {
+    let a = &cfg.apb;
+    let mut out = vec![0i32; a.n_tot()];
+    if rank > 0 && opts.use_anchor {
+        if opts.embed_query {
+            out[..a.query_len].copy_from_slice(query);
+        }
+        out[a.query_len..a.l_aq()].copy_from_slice(&doc[..a.anchor_len]);
+    }
+    out[a.l_aq()..].copy_from_slice(&doc[rank * a.block_len..(rank + 1) * a.block_len]);
+    out
+}
+
+/// n_anchor runtime scalar for a host (mirror of `model.n_anchor_for`).
+pub fn n_anchor_for(cfg: &Config, rank: usize, opts: &ApbOptions) -> i32 {
+    if rank > 0 && opts.use_anchor {
+        cfg.apb.l_aq() as i32
+    } else {
+        0
+    }
+}
+
+impl Cluster {
+    /// Spawn one worker per host; each compiles the artifact set and
+    /// uploads weights. Blocks until all engines are ready.
+    pub fn start(cfg: &Config) -> Result<Cluster> {
+        let fabric = Fabric::new(cfg.apb.n_hosts);
+        let (resp_tx, resp_rx) = channel::<Resp>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        let mut hosts = Vec::with_capacity(cfg.apb.n_hosts);
+        for rank in 0..cfg.apb.n_hosts {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let cfg2 = cfg.clone();
+            let fabric2 = Arc::clone(&fabric);
+            let resp_tx2 = resp_tx.clone();
+            let ready_tx2 = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("apb-host-{rank}"))
+                .spawn(move || {
+                    host::run_host(rank, cfg2, fabric2, cmd_rx, resp_tx2, ready_tx2)
+                })
+                .context("spawning host thread")?;
+            hosts.push(HostHandle { cmd_tx, join: Some(join) });
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.apb.n_hosts {
+            ready_rx
+                .recv()
+                .context("host died during startup")??;
+        }
+        Ok(Cluster { cfg: cfg.clone(), fabric, hosts, resp_rx })
+    }
+
+    fn broadcast(&self, cmd: Cmd) -> Result<()> {
+        for h in &self.hosts {
+            h.cmd_tx
+                .send(cmd.clone())
+                .map_err(|_| anyhow::anyhow!("host channel closed"))?;
+        }
+        Ok(())
+    }
+
+    fn collect<F: FnMut(Resp) -> Result<()>>(&self, n: usize, mut f: F) -> Result<()> {
+        for _ in 0..n {
+            match self.resp_rx.recv().context("cluster response channel closed")? {
+                Resp::Error { host, msg } => bail!("host {host} failed: {msg}"),
+                other => f(other)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// APB prefill of a document + query (Algorithm 1 lines 1–12).
+    pub fn prefill(&self, doc: &[i32], query: &[i32], opts: &ApbOptions)
+                   -> Result<PrefillReport> {
+        let a = &self.cfg.apb;
+        if doc.len() != a.doc_len() {
+            bail!("doc length {} != configured {}", doc.len(), a.doc_len());
+        }
+        if query.len() != a.query_len {
+            bail!("query length {} != configured {}", query.len(), a.query_len);
+        }
+        self.fabric.meter.reset();
+        let t0 = std::time::Instant::now();
+        for (rank, h) in self.hosts.iter().enumerate() {
+            let tokens = Arc::new(host_tokens(&self.cfg, doc, query, rank, opts));
+            h.cmd_tx
+                .send(Cmd::Prefill { tokens, opts: *opts })
+                .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
+        }
+        let mut per_host = vec![PrefillTiming::default(); self.hosts.len()];
+        let mut retained = vec![Vec::new(); self.hosts.len()];
+        self.collect(self.hosts.len(), |r| {
+            if let Resp::PrefillDone { host, timing, retained: ret } = r {
+                per_host[host] = timing;
+                retained[host] = ret;
+            }
+            Ok(())
+        })?;
+        Ok(PrefillReport {
+            per_host,
+            retained,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            comm_bytes: self.fabric.meter.bytes_total(),
+        })
+    }
+
+    /// Decode: re-feed the query chunk with exact distributed attention,
+    /// then greedily generate `max_new` tokens (Algorithm 1 lines 13–25).
+    pub fn generate(&self, query: &[i32], max_new: usize) -> Result<GenReport> {
+        let t0 = std::time::Instant::now();
+        let chunk = Arc::new(query.to_vec());
+        self.broadcast(Cmd::QueryChunk { tokens: chunk })?;
+        let mut logits: Option<Vec<f32>> = None;
+        self.collect(self.hosts.len(), |r| {
+            if let Resp::StepDone { logits: Some(l), .. } = r {
+                logits = Some(l);
+            }
+            Ok(())
+        })?;
+        let query_logits = logits.context("no host produced query logits")?;
+        let vocab = self.cfg.model.vocab_size;
+        let last_row = &query_logits[query_logits.len() - vocab..];
+        let mut token = Tensor::argmax_row(last_row) as i32;
+
+        let mut tokens = Vec::with_capacity(max_new);
+        let mut per_step = Vec::with_capacity(max_new);
+        for step in 0..max_new {
+            tokens.push(token);
+            if step + 1 == max_new {
+                break; // the last sampled token needs no further forward
+            }
+            let ts = std::time::Instant::now();
+            self.broadcast(Cmd::DecodeStep { token, step })?;
+            let mut step_logits: Option<Vec<f32>> = None;
+            self.collect(self.hosts.len(), |r| {
+                if let Resp::StepDone { logits: Some(l), .. } = r {
+                    step_logits = Some(l);
+                }
+                Ok(())
+            })?;
+            per_step.push(ts.elapsed().as_secs_f64());
+            let l = step_logits.context("no step logits")?;
+            token = Tensor::argmax_row(&l) as i32;
+        }
+        Ok(GenReport {
+            tokens,
+            query_logits,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            per_step_seconds: per_step,
+        })
+    }
+
+    /// Drop request state on every host (between requests).
+    pub fn clear(&self) -> Result<()> {
+        self.broadcast(Cmd::Clear)?;
+        self.collect(self.hosts.len(), |_| Ok(()))
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.hosts.len()
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for h in &self.hosts {
+            let _ = h.cmd_tx.send(Cmd::Shutdown);
+        }
+        for h in &mut self.hosts {
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_cfg() -> Config {
+        // Hand-built config (no artifacts needed for token-layout tests).
+        let manifest = crate::util::json::Json::parse("{}").unwrap();
+        Config {
+            name: "fake".into(),
+            seed: 0,
+            model: crate::config::ModelConfig {
+                vocab_size: 64, n_layers: 2, d_model: 32, n_heads: 4,
+                n_kv_heads: 2, d_ff: 64, rope_theta: 1e4, rms_eps: 1e-5,
+                retaining_hidden: 16,
+            },
+            apb: crate::config::ApbParams {
+                n_hosts: 3, block_len: 8, anchor_len: 4, query_len: 2,
+                passing_len: 2, max_new_tokens: 4,
+            },
+            dir: std::path::PathBuf::from("/nonexistent"),
+            manifest,
+        }
+    }
+
+    #[test]
+    fn host_tokens_layout() {
+        let cfg = fake_cfg();
+        let doc: Vec<i32> = (100..124).collect();
+        let query = vec![7, 8];
+        let opts = ApbOptions::default();
+        let t0 = host_tokens(&cfg, &doc, &query, 0, &opts);
+        assert_eq!(t0.len(), cfg.apb.n_tot());
+        assert!(t0[..cfg.apb.l_aq()].iter().all(|&t| t == 0));
+        assert_eq!(&t0[cfg.apb.l_aq()..], &doc[..8]);
+
+        let t1 = host_tokens(&cfg, &doc, &query, 1, &opts);
+        assert_eq!(&t1[..2], &[7, 8]);
+        assert_eq!(&t1[2..6], &doc[..4]);
+        assert_eq!(&t1[6..], &doc[8..16]);
+        assert_eq!(n_anchor_for(&cfg, 0, &opts), 0);
+        assert_eq!(n_anchor_for(&cfg, 1, &opts), 6);
+    }
+
+    #[test]
+    fn host_tokens_ablations() {
+        let cfg = fake_cfg();
+        let doc: Vec<i32> = (100..124).collect();
+        let query = vec![7, 8];
+        let no_q = ApbOptions { embed_query: false, ..Default::default() };
+        let t1 = host_tokens(&cfg, &doc, &query, 1, &no_q);
+        assert_eq!(&t1[..2], &[0, 0]);
+        assert_eq!(&t1[2..6], &doc[..4]);
+
+        let no_a = ApbOptions { use_anchor: false, ..Default::default() };
+        let t1 = host_tokens(&cfg, &doc, &query, 1, &no_a);
+        assert!(t1[..cfg.apb.l_aq()].iter().all(|&t| t == 0));
+        assert_eq!(n_anchor_for(&cfg, 1, &no_a), 0);
+    }
+}

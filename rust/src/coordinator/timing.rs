@@ -1,0 +1,114 @@
+//! Per-component wall-time accounting, the measured twin of the paper's
+//! Figure 5 / Table 13 breakdown. Artifact granularity maps to the paper's
+//! components as:
+//!
+//!   layer_pre   -> QKV projection + retaining-head calculation
+//!   topk        -> compressor Top-l_p selection (coordinator-side)
+//!   comm        -> AllGather wait (communication)
+//!   layer_post  -> attention + O projection + FFN
+//!   cache       -> KV-cache append ("others")
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefillTiming {
+    pub embed_s: f64,
+    pub layer_pre_s: f64,
+    pub topk_s: f64,
+    pub comm_s: f64,
+    pub layer_post_s: f64,
+    pub cache_s: f64,
+    pub total_s: f64,
+}
+
+impl PrefillTiming {
+    pub fn accounted(&self) -> f64 {
+        self.embed_s + self.layer_pre_s + self.topk_s + self.comm_s + self.layer_post_s
+            + self.cache_s
+    }
+
+    pub fn other(&self) -> f64 {
+        (self.total_s - self.accounted()).max(0.0)
+    }
+
+    pub fn add(&mut self, o: &PrefillTiming) {
+        self.embed_s += o.embed_s;
+        self.layer_pre_s += o.layer_pre_s;
+        self.topk_s += o.topk_s;
+        self.comm_s += o.comm_s;
+        self.layer_post_s += o.layer_post_s;
+        self.cache_s += o.cache_s;
+        self.total_s += o.total_s;
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DecodeTiming {
+    pub pre_s: f64,
+    pub attn_s: f64,
+    pub comm_s: f64,
+    pub merge_s: f64,
+    pub post_s: f64,
+    pub lm_head_s: f64,
+    pub total_s: f64,
+}
+
+impl DecodeTiming {
+    pub fn add(&mut self, o: &DecodeTiming) {
+        self.pre_s += o.pre_s;
+        self.attn_s += o.attn_s;
+        self.comm_s += o.comm_s;
+        self.merge_s += o.merge_s;
+        self.post_s += o.post_s;
+        self.lm_head_s += o.lm_head_s;
+        self.total_s += o.total_s;
+    }
+}
+
+/// Tiny scope timer.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    /// Seconds since start (or last lap), resetting the clock.
+    pub fn lap(&mut self) -> f64 {
+        let now = std::time::Instant::now();
+        let dt = now.duration_since(self.0).as_secs_f64();
+        self.0 = now;
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let t = PrefillTiming {
+            embed_s: 0.1,
+            layer_pre_s: 0.2,
+            topk_s: 0.05,
+            comm_s: 0.1,
+            layer_post_s: 0.3,
+            cache_s: 0.05,
+            total_s: 1.0,
+        };
+        assert!((t.accounted() - 0.8).abs() < 1e-12);
+        assert!((t.other() - 0.2).abs() < 1e-12);
+        let mut sum = PrefillTiming::default();
+        sum.add(&t);
+        sum.add(&t);
+        assert!((sum.total_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_laps_monotone() {
+        let mut sw = Stopwatch::start();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.0 && b >= 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-host KV-cache manager.
+//!
+//! Holds one padded [cache_max, kv_heads, head_dim] K and V tensor per
+//! layer plus the valid length — what Algorithm 2 appends during prefill
+//! (the local block only; anchor and passing KV are discarded) and what
+//! Algorithm 3 reads and (on the last host) extends during decode.
+
+use anyhow::{bail, Result};
+
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub k: Tensor,
+    pub v: Tensor,
+    pub len: usize,
+}
+
+#[derive(Debug)]
+pub struct KvCache {
+    pub layers: Vec<LayerCache>,
+    pub cache_max: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, cache_max: usize, kv_heads: usize, head_dim: usize) -> Self {
+        let layers = (0..n_layers)
+            .map(|_| LayerCache {
+                k: Tensor::zeros(vec![cache_max, kv_heads, head_dim]),
+                v: Tensor::zeros(vec![cache_max, kv_heads, head_dim]),
+                len: 0,
+            })
+            .collect();
+        KvCache { layers, cache_max }
+    }
+
+    pub fn len(&self, layer: usize) -> usize {
+        self.layers[layer].len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.iter().all(|l| l.len == 0)
+    }
+
+    /// Append `k`/`v` rows ([n, kh, hd]) to a layer. Errors on overflow —
+    /// the scheduler's admission control must prevent this.
+    pub fn append(&mut self, layer: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        let lc = &mut self.layers[layer];
+        let n = k.shape[0];
+        if lc.len + n > self.cache_max {
+            bail!(
+                "kv cache overflow: layer {layer} len {} + {n} > cap {}",
+                lc.len,
+                self.cache_max
+            );
+        }
+        lc.k.write_rows(lc.len, k);
+        lc.v.write_rows(lc.len, v);
+        lc.len += n;
+        Ok(())
+    }
+
+    /// Reset all layers (request eviction).
+    pub fn clear(&mut self) {
+        for lc in &mut self.layers {
+            lc.len = 0;
+        }
+    }
+
+    /// Bytes currently resident (valid region only).
+    pub fn bytes_used(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| 2 * l.len * l.k.row_len() * 4)
+            .sum()
+    }
+
+    /// Bytes reserved (padded capacity).
+    pub fn bytes_reserved(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| 2 * l.k.numel() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, kh: usize, hd: usize, base: f32) -> Tensor {
+        let data = (0..n * kh * hd).map(|i| base + i as f32).collect();
+        Tensor::new(vec![n, kh, hd], data).unwrap()
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = KvCache::new(2, 8, 2, 4);
+        assert!(c.is_empty());
+        c.append(0, &rows(3, 2, 4, 0.0), &rows(3, 2, 4, 100.0)).unwrap();
+        c.append(0, &rows(2, 2, 4, 50.0), &rows(2, 2, 4, 150.0)).unwrap();
+        assert_eq!(c.len(0), 5);
+        assert_eq!(c.len(1), 0);
+        // First appended row intact.
+        assert_eq!(c.layers[0].k.slice_rows(0, 3), rows(3, 2, 4, 0.0));
+        assert_eq!(c.layers[0].k.slice_rows(3, 5), rows(2, 2, 4, 50.0));
+        assert_eq!(c.layers[0].v.slice_rows(3, 5), rows(2, 2, 4, 150.0));
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut c = KvCache::new(1, 4, 1, 2);
+        c.append(0, &rows(3, 1, 2, 0.0), &rows(3, 1, 2, 0.0)).unwrap();
+        assert!(c.append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).is_err());
+        // Failed append must not corrupt length.
+        assert_eq!(c.len(0), 3);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = KvCache::new(1, 4, 1, 2);
+        c.append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
+        assert!(c.bytes_used() > 0);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_used(), 0);
+        assert_eq!(c.bytes_reserved(), 2 * 4 * 1 * 2 * 4);
+    }
+}

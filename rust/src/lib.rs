@@ -1,0 +1,63 @@
+//! # APB — distributed long-context inference, reproduced in Rust+JAX+Pallas
+//!
+//! Reproduction of *"APB: Accelerating Distributed Long-Context Inference
+//! by Passing Compressed Context Blocks across GPUs"* (ACL 2025) as a
+//! three-layer stack:
+//!
+//! * **L1** (`python/compile/kernels/`): the APB modified-mask
+//!   FlashAttention and retaining-head compressor as Pallas kernels
+//!   (interpret=True), validated against pure-jnp oracles;
+//! * **L2** (`python/compile/model.py`): a Llama-architecture model whose
+//!   per-host stage functions are AOT-lowered to HLO text;
+//! * **L3** (this crate): the distributed coordinator — per-layer prefill
+//!   orchestration with compressed-block AllGather, distributed decode
+//!   with online-softmax merge, KV-cache management, scheduling — plus the
+//!   analytical performance model, synthetic benchmarks and the paper's
+//!   table/figure harnesses.
+//!
+//! Python never runs on the request path: `make artifacts` emits HLO text
+//! + weights once, and this crate executes them via PJRT (`xla` crate).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod attnsim;
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod oracle;
+pub mod report;
+pub mod ruler;
+pub mod runtime;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory for a named config: `$APB_ARTIFACTS`
+/// or `<repo-root>/artifacts`, then `/<name>`.
+pub fn artifacts_dir(name: &str) -> PathBuf {
+    let base = std::env::var("APB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            // Walk up from the executable/cwd to find `artifacts/`.
+            let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            let mut dir = cwd.as_path();
+            loop {
+                let cand = dir.join("artifacts");
+                if cand.is_dir() {
+                    return cand;
+                }
+                match dir.parent() {
+                    Some(p) => dir = p,
+                    None => return cwd.join("artifacts"),
+                }
+            }
+        });
+    base.join(name)
+}
+
+/// Load a config by name from the artifacts directory.
+pub fn load_config(name: &str) -> anyhow::Result<config::Config> {
+    config::Config::load(&artifacts_dir(name))
+}

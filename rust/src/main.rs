@@ -1,0 +1,203 @@
+//! `apb` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   info                         artifact + config inventory
+//!   run      [--config tiny]     one request end-to-end on the cluster
+//!   serve    [--requests N]      scheduler-driven serving demo
+//!   simulate [--lengths ...]     analytical prefill/speed estimates
+//!   eval     [--suite ruler]     oracle accuracy table
+//!   golden                       replay + verify the python golden run
+
+use anyhow::{bail, Result};
+
+use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B};
+use apb::bench_harness::Table;
+use apb::config::ApbOptions;
+use apb::coordinator::scheduler::{Request, Scheduler};
+use apb::coordinator::Cluster;
+use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
+use apb::ruler::tasks::{infbench_tasks, ruler_tasks, ModelCol};
+use apb::ruler::{gen_instance, TaskKind};
+use apb::util::cli::Args;
+use apb::util::rng::Rng;
+
+const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
+  info                              list artifacts and config
+  run      --config tiny --max-new 8
+  serve    --config tiny --requests 4 --max-new 4
+  simulate --lengths 32768,131072 --hosts 8
+  eval     --suite ruler|infbench --n 131072 --hosts 8
+  golden   --config tiny";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["star-mode", "help"])?;
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "info" => info(&args),
+        "run" => run(&args),
+        "serve" => serve(&args),
+        "simulate" => simulate(&args),
+        "eval" => eval(&args),
+        "golden" => golden(&args),
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    println!("config '{}' from {}", cfg.name, cfg.dir.display());
+    println!("  model: d={} L={} heads={}/{} ffn={} vocab={}",
+             cfg.model.d_model, cfg.model.n_layers, cfg.model.n_heads,
+             cfg.model.n_kv_heads, cfg.model.d_ff, cfg.model.vocab_size);
+    println!("  apb:   H={} l_b={} l_a={} l_q={} l_p={} (pass_max={}, cache_max={})",
+             cfg.apb.n_hosts, cfg.apb.block_len, cfg.apb.anchor_len,
+             cfg.apb.query_len, cfg.apb.passing_len, cfg.apb.pass_max(),
+             cfg.apb.cache_max());
+    let arts = cfg.manifest.req("artifacts")?.as_obj().unwrap();
+    println!("  artifacts ({}):", arts.len());
+    for (name, meta) in arts {
+        let ins = meta.req("inputs")?.as_arr().unwrap().len();
+        let outs = meta.req("outputs")?.as_arr().unwrap().len();
+        println!("    {name:<18} {ins:>2} inputs -> {outs} outputs");
+    }
+    Ok(())
+}
+
+fn default_request(cfg: &apb::config::Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let inst = gen_instance(cfg, TaskKind::SingleNiah, &mut rng);
+    (inst.doc, inst.query)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cluster = Cluster::start(&cfg)?;
+    let (doc, query) = default_request(&cfg, args.usize_or("seed", 1)? as u64);
+    let opts = if args.has("star-mode") {
+        ApbOptions { use_passing: false, ..Default::default() }
+    } else {
+        ApbOptions::default()
+    };
+    let rep = cluster.prefill(&doc, &query, &opts)?;
+    let gen = cluster.generate(&query, args.usize_or("max-new", 8)?)?;
+    println!("tokens: {:?}", gen.tokens);
+    println!("prefill {:.1} ms | decode {:.1} ms | comm {} B",
+             rep.wall_seconds * 1e3, gen.wall_seconds * 1e3, rep.comm_bytes);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cluster = Cluster::start(&cfg)?;
+    let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
+    let n = args.usize_or("requests", 4)?;
+    let mut rng = Rng::new(3);
+    for id in 0..n {
+        let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+        sched.submit(Request {
+            id: id as u64,
+            doc: inst.doc,
+            query: inst.query,
+            max_new: args.usize_or("max-new", 4)?,
+            opts: ApbOptions::default(),
+        })?;
+    }
+    sched.run_all()?;
+    let m = sched.metrics();
+    println!("served {} requests | prefill p50 {:.1} ms | e2e p50 {:.1} ms | \
+              speed mean {:.0} tok/s",
+             m.n_requests, m.prefill.p50 * 1e3, m.e2e.p50 * 1e3,
+             m.speed_tok_per_s.mean);
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let hosts = args.usize_or("hosts", 8)? as f64;
+    let lengths = args.usize_list_or("lengths",
+                                     &[32768, 131072, 524288, 1048576])?;
+    let mut table = Table::new(
+        "analytical estimates (Llama-3.1-8B, A800)",
+        &["Method", "n", "prefill s", "speed tok/s", "mem GB"],
+    );
+    for method in Method::ALL {
+        let h = if method.uses_sequence_parallelism() { hosts } else { 1.0 };
+        for &n in &lengths {
+            let n = n as f64;
+            let est = estimate(method, &LLAMA31_8B, n, h,
+                               &Hyper::paper_schedule(n, hosts), &A800, 64.0);
+            table.row(vec![
+                method.name().into(),
+                format!("{}K", n as usize / 1024),
+                if est.oom { "OOM".into() } else { format!("{:.2}", est.prefill_s) },
+                match speed_tok_per_s(&est, n, 64.0) {
+                    Some(s) => format!("{s:.0}"),
+                    None => "-".into(),
+                },
+                format!("{:.0}", est.mem_bytes_peak / 1e9),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let suite = args.str_or("suite", "ruler");
+    let tasks = match suite.as_str() {
+        "ruler" => ruler_tasks(),
+        "infbench" => infbench_tasks(),
+        other => bail!("unknown suite '{other}'"),
+    };
+    let n = args.usize_or("n", 131072)? as f64;
+    let hosts = args.usize_or("hosts", 8)? as f64;
+    let ctx = EvalCtx { n, hosts, model: ModelCol::Llama, samples: 0, seed: 0 };
+    let hy = Hyper::paper_schedule(n, hosts);
+    let methods = [
+        ("FullAttn", AccMethod::Full),
+        ("MInference", AccMethod::MInference),
+        ("StarAttn", AccMethod::StarAttn),
+        ("APB", AccMethod::Apb(ApbQuality::paper_default(hy.l_a, hy.l_p, n / hosts))),
+    ];
+    let mut headers = vec!["Method"];
+    headers.extend(tasks.iter().map(|t| t.id));
+    headers.push("Avg.");
+    let mut table = Table::new(&format!("{suite} @ {}K, H={hosts}", n as usize / 1024),
+                               &headers);
+    for (name, m) in methods {
+        let mut cells = vec![name.to_string()];
+        let mut sum = 0.0;
+        for t in &tasks {
+            let s = expected_score(t, m, &ctx);
+            sum += s;
+            cells.push(format!("{s:.1}"));
+        }
+        cells.push(format!("{:.1}", sum / tasks.len() as f64));
+        table.row(cells);
+    }
+    table.print();
+    Ok(())
+}
+
+fn golden(args: &Args) -> Result<()> {
+    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let Some((golden, n_new)) = apb::runtime::load_golden(&cfg)? else {
+        bail!("config '{}' carries no golden blob", cfg.name);
+    };
+    let doc = golden.i32s("doc_tokens")?;
+    let query = golden.i32s("query_tokens")?;
+    let want = golden.i32s("generated")?;
+    let cluster = Cluster::start(&cfg)?;
+    cluster.prefill(&doc, &query, &ApbOptions::default())?;
+    let gen = cluster.generate(&query, n_new)?;
+    println!("rust:   {:?}", gen.tokens);
+    println!("python: {want:?}");
+    if gen.tokens == want {
+        println!("golden replay OK — rust cluster == python pipeline");
+        Ok(())
+    } else {
+        bail!("golden replay MISMATCH")
+    }
+}

@@ -1,0 +1,325 @@
+//! Task-accuracy oracle (S14): a mechanism-level model of how each
+//! attention method succeeds or fails on long-context tasks.
+//!
+//! The paper's accuracy deltas come from three mechanisms (§4.2, §4.4):
+//!
+//!  1. **Context fragmentation** — under StarAttn each block is encoded
+//!     seeing only the anchor; dependencies that cross blocks are lost.
+//!     APB recovers them with probability ≈ the compressor's recall of
+//!     the relevant units (the passing block).
+//!  2. **Denoising** — compressed passing blocks carry *less distractor
+//!     mass* than raw context, so distractor-heavy retrieval (R.KV, MK2/3)
+//!     can exceed FULLATTN — the paper's "cleaner passing blocks" effect.
+//!  3. **Aggregation loss** — tasks that integrate the whole context
+//!     (CWE/FWE/E.Sum) degrade under any pruning, proportional to the
+//!     dropped context mass.
+//!
+//! FULLATTN scores are the paper's own measurements (calibration anchors
+//! in ruler::tasks); every other number is derived. We claim ordering and
+//! approximate deltas, not absolute cell values (DESIGN.md §2).
+
+use crate::config::ApbOptions;
+use crate::ruler::tasks::{ModelCol, TaskProfile};
+use crate::util::rng::Rng;
+
+/// Accuracy-relevant method description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccMethod {
+    /// FlashAttn / RingAttn / Ulysses — identical computation.
+    Full,
+    MInference,
+    StarAttn,
+    Apb(ApbQuality),
+}
+
+/// APB mechanism knobs derived from hyperparameters + ablation toggles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ApbQuality {
+    /// P(a query-relevant KV unit survives compression into B^C).
+    pub recall: f64,
+    /// Anchor block present?
+    pub anchor: bool,
+    /// Passing blocks present?
+    pub passing: bool,
+    /// Anchor-coverage saturation in [0,1] (grows with l_a).
+    pub anchor_cov: f64,
+}
+
+/// Retaining-head recall model: trained + query-aware heads retrieve the
+/// relevant units with high probability, saturating in l_p; the random
+/// selector only keeps l_p/l_b. Calibrated against the measured recall of
+/// our trained heads (aot build logs) and the paper's Table 3 ordering.
+pub fn compressor_recall(retaining: bool, query_embedded: bool, l_p: f64, l_b: f64) -> f64 {
+    let frac = (l_p / l_b).clamp(0.0, 1.0);
+    if !retaining {
+        return frac; // random selector
+    }
+    let ceiling = if query_embedded { 0.88 } else { 0.58 };
+    // Saturates once l_p exceeds a few times the relevant-set size
+    // (Figure 7: l_p >= 1K is already flat; Table 4: l_p = 0.5K at 32K
+    // H=8 still performs).
+    let sat = 1.0 - (-l_p / 200.0).exp();
+    (ceiling * sat).max(frac)
+}
+
+/// Anchor coverage: how much of the "attention sink + document head"
+/// context a given anchor length restores. Saturates fast (Figure 7).
+pub fn anchor_coverage(l_a: f64) -> f64 {
+    1.0 - (-l_a / 300.0).exp()
+}
+
+impl ApbQuality {
+    pub fn from_options(opts: &ApbOptions, l_a: f64, l_p: f64, l_b: f64) -> ApbQuality {
+        ApbQuality {
+            recall: compressor_recall(opts.retaining_compressor, opts.embed_query, l_p,
+                                      l_b),
+            anchor: opts.use_anchor,
+            passing: opts.use_passing,
+            anchor_cov: anchor_coverage(l_a),
+        }
+    }
+
+    pub fn paper_default(l_a: f64, l_p: f64, l_b: f64) -> ApbQuality {
+        ApbQuality::from_options(&ApbOptions::default(), l_a, l_p, l_b)
+    }
+}
+
+/// Evaluation context: length and host count (fragmentation exposure).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalCtx {
+    pub n: f64,
+    pub hosts: f64,
+    pub model: ModelCol,
+    pub samples: usize,
+    pub seed: u64,
+}
+
+/// Fraction of cross-block dependencies that fragmentation destroys under
+/// StarAttn: blocks only see the anchor, so on average (H-1)/H of the
+/// preceding context is invisible while encoding.
+fn fragmentation(hosts: f64) -> f64 {
+    ((hosts - 1.0) / hosts).clamp(0.0, 1.0)
+}
+
+/// Distractor confusion for block-local encoding when blocks get small:
+/// StarAttn's Table 4 degradation at 32K with many hosts.
+fn short_block_penalty(l_b: f64) -> f64 {
+    (1.0 - l_b / 8192.0).clamp(0.0, 1.0)
+}
+
+/// Expected score (0–100) of `method` on `task` under `ctx`.
+pub fn expected_score(task: &TaskProfile, method: AccMethod, ctx: &EvalCtx) -> f64 {
+    let base = task.base_at(ctx.model, ctx.n);
+    let l_b = ctx.n / ctx.hosts;
+    let frag = fragmentation(ctx.hosts);
+    let score = match method {
+        AccMethod::Full => base,
+        AccMethod::MInference => {
+            // Dense projections, sparse attention: mild retrieval loss,
+            // larger aggregation loss; slight "focus" gain on scan-style
+            // tasks (M.Find's pattern matches MInference's strengths).
+            let agg_loss = 0.42 * task.aggregation;
+            let cross_loss = 0.22 * task.cross_block;
+            let focus_gain = 0.10 * task.distractor * (1.0 - task.cross_block);
+            base * (1.0 - agg_loss - cross_loss) + focus_gain * (100.0 - base) * 0.5
+        }
+        AccMethod::StarAttn => {
+            let dep_loss = task.cross_block * frag * 0.32
+                + task.chain * frag * 0.12;
+            let distr_conf = 0.20 * task.distractor * short_block_penalty(l_b);
+            let agg_loss = 0.08 * task.aggregation * frag;
+            base * (1.0 - dep_loss - distr_conf - agg_loss)
+        }
+        AccMethod::Apb(q) => {
+            if !q.anchor {
+                // No anchor: the attention sink + document head are
+                // invisible; block encodings collapse (Table 3 rows 6–8).
+                let residual = if q.passing { 0.12 * q.recall } else { 0.04 };
+                return (task.chance + residual * base).clamp(0.0, 100.0);
+            }
+            let recall = if q.passing { q.recall } else { 0.0 };
+            // Unrecovered cross-block dependencies.
+            let dep_loss = task.cross_block * frag * (1.0 - recall) * 0.45
+                * (2.0 - q.anchor_cov);
+            // Multi-hop chains must survive compression at every hop.
+            let chain_loss = task.chain * frag
+                * (1.0 - recall * recall) * 0.30;
+            // Aggregation: pruned context mass is gone either way.
+            let agg_loss = 0.12 * task.aggregation * frag;
+            // Denoising: retained units arrive without distractor mass.
+            let denoise = 0.55 * task.distractor * recall * q.anchor_cov;
+            let s = base * (1.0 - dep_loss - chain_loss - agg_loss)
+                + denoise * (100.0 - base);
+            s.min(100.0)
+        }
+    };
+    score.clamp(task.chance, 100.0)
+}
+
+/// Sampled score: binomial noise at the benchmark's sample count, so
+/// regenerated tables wobble like real evaluations do.
+pub fn sampled_score(task: &TaskProfile, method: AccMethod, ctx: &EvalCtx) -> f64 {
+    let p = expected_score(task, method, ctx) / 100.0;
+    let mut rng = Rng::new(ctx.seed ^ hash_id(task.id) ^ method_tag(&method));
+    let n = ctx.samples.max(1);
+    let mut hits = 0usize;
+    for _ in 0..n {
+        if rng.f64() < p {
+            hits += 1;
+        }
+    }
+    100.0 * hits as f64 / n as f64
+}
+
+fn hash_id(id: &str) -> u64 {
+    id.bytes().fold(1469598103934665603u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(1099511628211)
+    })
+}
+
+fn method_tag(m: &AccMethod) -> u64 {
+    match m {
+        AccMethod::Full => 1,
+        AccMethod::MInference => 2,
+        AccMethod::StarAttn => 3,
+        AccMethod::Apb(q) => {
+            4 ^ ((q.recall * 1e6) as u64) << 8
+                ^ ((q.anchor as u64) << 3)
+                ^ ((q.passing as u64) << 4)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ruler::tasks::{infbench_tasks, ruler_tasks};
+
+    fn ctx() -> EvalCtx {
+        EvalCtx { n: 131072.0, hosts: 8.0, model: ModelCol::Llama,
+                  samples: 100_000, seed: 7 }
+    }
+
+    fn apb() -> AccMethod {
+        AccMethod::Apb(ApbQuality::paper_default(4096.0, 2048.0, 16384.0))
+    }
+
+    #[test]
+    fn apb_beats_star_on_average_ruler() {
+        let c = ctx();
+        let tasks = ruler_tasks();
+        let avg = |m: AccMethod| {
+            tasks.iter().map(|t| expected_score(t, m, &c)).sum::<f64>()
+                / tasks.len() as f64
+        };
+        let full = avg(AccMethod::Full);
+        let star = avg(AccMethod::StarAttn);
+        let minf = avg(AccMethod::MInference);
+        let apb_avg = avg(apb());
+        // Paper Table 2 (Llama): Full 82.2, APB 81.6, Star 76.8, MInf 73.0.
+        assert!(apb_avg > star, "apb {apb_avg} vs star {star}");
+        assert!(apb_avg > minf, "apb {apb_avg} vs minf {minf}");
+        assert!((apb_avg - full).abs() < 6.0, "apb {apb_avg} vs full {full}");
+        assert!(star < full);
+    }
+
+    #[test]
+    fn apb_wins_big_on_distractor_retrieval() {
+        // R.KV and MK3: the paper's headline accuracy wins (81.8 vs 51.0;
+        // 89.0 vs 67.0). The denoising mechanism must push APB above Full.
+        let c = ctx();
+        for (suite, id) in [("infbench", "R.KV"), ("ruler", "MK3"), ("ruler", "MK2")] {
+            let tasks = if suite == "ruler" { ruler_tasks() } else { infbench_tasks() };
+            let t = tasks.iter().find(|t| t.id == id).unwrap();
+            let full = expected_score(t, AccMethod::Full, &c);
+            let apb_s = expected_score(t, apb(), &c);
+            let star = expected_score(t, AccMethod::StarAttn, &c);
+            assert!(apb_s > full, "{id}: apb {apb_s} !> full {full}");
+            assert!(apb_s > star, "{id}: apb {apb_s} !> star {star}");
+        }
+    }
+
+    #[test]
+    fn apb_loses_slightly_on_chained_tracking() {
+        // VT: compression drops intermediate hops (paper: 51.96 vs 60.98).
+        let c = ctx();
+        let tasks = ruler_tasks();
+        let vt = tasks.iter().find(|t| t.id == "VT").unwrap();
+        let full = expected_score(vt, AccMethod::Full, &c);
+        let apb_s = expected_score(vt, apb(), &c);
+        assert!(apb_s < full);
+        assert!(apb_s > 0.5 * full, "loss should be moderate");
+    }
+
+    #[test]
+    fn ablation_ordering_matches_table3() {
+        // Table 3 on E.MC: full APB > no-query > random-C > no-passing >
+        // no-anchor (collapse towards chance).
+        let c = EvalCtx { hosts: 4.0, ..ctx() }; // l_b = 32K setting
+        let t = infbench_tasks().into_iter().find(|t| t.id == "E.MC").unwrap();
+        let (l_a, l_p, l_b) = (4096.0, 2048.0, 32768.0);
+        let q = |o: ApbOptions| {
+            AccMethod::Apb(ApbQuality::from_options(&o, l_a, l_p, l_b))
+        };
+        let s_full = expected_score(&t, q(ApbOptions::default()), &c);
+        let s_noq = expected_score(
+            &t, q(ApbOptions { embed_query: false, ..Default::default() }), &c);
+        let s_rd = expected_score(
+            &t, q(ApbOptions { retaining_compressor: false, ..Default::default() }),
+            &c);
+        let s_nop = expected_score(
+            &t, q(ApbOptions { use_passing: false, ..Default::default() }), &c);
+        let s_noa = expected_score(
+            &t, q(ApbOptions { use_anchor: false, ..Default::default() }), &c);
+        assert!(s_full > s_noq, "{s_full} !> {s_noq}");
+        assert!(s_noq > s_rd, "{s_noq} !> {s_rd}");
+        assert!(s_rd >= s_nop, "{s_rd} !>= {s_nop}");
+        assert!(s_nop > s_noa, "{s_nop} !> {s_noa}");
+        assert!(s_noa <= t.chance + 12.0, "no-anchor must collapse: {s_noa}");
+    }
+
+    #[test]
+    fn star_degrades_with_hosts_at_short_length_apb_stable() {
+        // Table 4 @32K: Star 94 -> 84 as H goes 2 -> 8; APB stays 92–94.
+        let t = infbench_tasks().into_iter().find(|t| t.id == "E.MC").unwrap();
+        let score = |m: AccMethod, hosts: f64| {
+            let c = EvalCtx { n: 32768.0, hosts, ..ctx() };
+            expected_score(&t, m, &c)
+        };
+        let star2 = score(AccMethod::StarAttn, 2.0);
+        let star8 = score(AccMethod::StarAttn, 8.0);
+        assert!(star8 < star2 - 2.0, "star {star2} -> {star8}");
+        let q = ApbQuality::paper_default(1024.0, 512.0, 32768.0 / 8.0);
+        let apb2 = score(AccMethod::Apb(q), 2.0);
+        let apb8 = score(AccMethod::Apb(q), 8.0);
+        // Paper's claim is *relative* stability: APB's degradation must be
+        // clearly smaller than StarAttn's, and APB stays on top at H=8.
+        let apb_drop = apb2 - apb8;
+        let star_drop = star2 - star8;
+        assert!(apb_drop < 0.75 * star_drop,
+                "apb drop {apb_drop} vs star drop {star_drop}");
+        assert!(apb8 > star8, "apb {apb8} !> star {star8}");
+    }
+
+    #[test]
+    fn recall_model_properties() {
+        // Trained >> random; query-embedding matters; saturates in l_p.
+        let r_full = compressor_recall(true, true, 2048.0, 16384.0);
+        let r_noq = compressor_recall(true, false, 2048.0, 16384.0);
+        let r_rand = compressor_recall(false, true, 2048.0, 16384.0);
+        assert!(r_full > r_noq && r_noq > r_rand);
+        assert!((r_rand - 0.125).abs() < 1e-9);
+        let r1 = compressor_recall(true, true, 1024.0, 16384.0);
+        let r4 = compressor_recall(true, true, 4096.0, 16384.0);
+        assert!(r4 - r1 < 0.12, "saturating: {r1} -> {r4} (Figure 7)");
+    }
+
+    #[test]
+    fn sampled_score_concentrates_on_expected() {
+        let c = ctx();
+        let t = &ruler_tasks()[0];
+        let e = expected_score(t, apb(), &c);
+        let s = sampled_score(t, apb(), &c);
+        assert!((s - e).abs() < 1.0, "sampled {s} vs expected {e}");
+    }
+}

@@ -1,0 +1,63 @@
+//! Report emission: every bench prints its paper-style table/figure AND
+//! appends a machine-readable JSON record under `target/apb-reports/`, so
+//! EXPERIMENTS.md can cite stable artifacts.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+pub fn reports_dir() -> PathBuf {
+    let dir = std::env::var("APB_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/apb-reports"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write one experiment record: `{experiment, meta, rows}`.
+pub fn write_report(experiment: &str, meta: Vec<(&str, Json)>, rows: Json) -> Result<PathBuf> {
+    let path = reports_dir().join(format!("{experiment}.json"));
+    let mut obj = vec![("experiment", json::s(experiment))];
+    obj.extend(meta);
+    obj.push(("rows", rows));
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(json::obj(obj).pretty().as_bytes())?;
+    Ok(path)
+}
+
+/// Row helper: ordered (key, value) pairs.
+pub fn row(pairs: Vec<(&str, Json)>) -> Json {
+    json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip() {
+        std::env::set_var("APB_REPORTS", std::env::temp_dir().join("apb-rep-test"));
+        let path = write_report(
+            "unit_test",
+            vec![("n", json::num(128.0))],
+            json::arr(vec![row(vec![("method", json::s("APB")),
+                                    ("speed", json::num(9.2))])]),
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("experiment").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(
+            v.get("rows").unwrap().as_arr().unwrap()[0]
+                .get("speed")
+                .unwrap()
+                .as_f64(),
+            Some(9.2)
+        );
+        std::env::remove_var("APB_REPORTS");
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic benchmark suites (S13): the 13 RULER tasks and the 10
+//! ∞Bench tasks the paper evaluates, in two forms:
+//!
+//! * `TaskProfile` — the mechanism-level description the accuracy oracle
+//!   consumes (needle structure, cross-block dependency strength,
+//!   distractor load, aggregation sensitivity) plus the paper's measured
+//!   FULLATTN scores as calibration anchors (DESIGN.md §2);
+//! * `gen_instance` — concrete token sequences with planted needles for
+//!   the REAL tiny-model cluster runs (retention/attention-mass metrics).
+
+pub mod tasks;
+
+pub use tasks::{
+    infbench_tasks, ruler_tasks, TaskKind, TaskProfile,
+};
+
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// A concrete instance for the real small-model cluster.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub doc: Vec<i32>,
+    pub query: Vec<i32>,
+    /// Document positions that carry the needle (answer-relevant) tokens.
+    pub needle_positions: Vec<usize>,
+    /// The needle value tokens (what retrieval must surface).
+    pub needle_values: Vec<i32>,
+}
+
+/// Generate a needle-in-a-haystack instance sized for `cfg`. The query
+/// repeats the needle key so a (trained or untrained) model's attention
+/// and the retaining heads have a concrete retrieval target.
+pub fn gen_instance(cfg: &Config, kind: TaskKind, rng: &mut Rng) -> Instance {
+    let a = &cfg.apb;
+    let vocab = cfg.model.vocab_size as i64;
+    let doc_len = a.doc_len();
+    let mut doc: Vec<i32> = (0..doc_len)
+        .map(|_| rng.range(1, vocab) as i32)
+        .collect();
+
+    let span = 4usize.min(a.query_len.max(2));
+    let n_needles = match kind {
+        TaskKind::SingleNiah | TaskKind::PassKey => 1,
+        TaskKind::MultiKeyNiah { keys } => keys,
+        TaskKind::MultiValueNiah | TaskKind::MultiQueryNiah => 4,
+        TaskKind::VariableTracking { hops } => hops,
+        TaskKind::Aggregation => 8,
+        TaskKind::Qa { hops } => hops,
+        _ => 1,
+    };
+
+    let mut needle_positions = Vec::new();
+    let mut needle_values = Vec::new();
+    let key: Vec<i32> = (0..span).map(|_| rng.range(1, vocab) as i32).collect();
+    for ni in 0..n_needles {
+        // Avoid the very first anchor region so retrieval is non-trivial.
+        let pos = rng.range((a.anchor_len + span) as i64,
+                            (doc_len - span) as i64) as usize;
+        let value: Vec<i32> = (0..span).map(|_| rng.range(1, vocab) as i32).collect();
+        for (i, (&k, &v)) in key.iter().zip(&value).enumerate() {
+            // key token then value token interleaved marks the needle.
+            doc[pos + i] = if ni == 0 { k } else { v };
+        }
+        for i in 0..span {
+            needle_positions.push(pos + i);
+        }
+        needle_values.extend(value);
+    }
+
+    // Query embeds the needle key (truncated/padded to l_q).
+    let mut query = vec![0i32; a.query_len];
+    for (i, q) in query.iter_mut().enumerate() {
+        *q = key[i % key.len()];
+    }
+    Instance { doc, query, needle_positions, needle_values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ApbParams, ModelConfig};
+
+    fn cfg() -> Config {
+        Config {
+            name: "t".into(),
+            seed: 0,
+            model: ModelConfig {
+                vocab_size: 64, n_layers: 2, d_model: 32, n_heads: 4,
+                n_kv_heads: 2, d_ff: 64, rope_theta: 1e4, rms_eps: 1e-5,
+                retaining_hidden: 16,
+            },
+            apb: ApbParams {
+                n_hosts: 4, block_len: 32, anchor_len: 8, query_len: 4,
+                passing_len: 8, max_new_tokens: 8,
+            },
+            dir: "/tmp".into(),
+            manifest: crate::util::json::Json::Null,
+        }
+    }
+
+    #[test]
+    fn instance_shapes_and_bounds() {
+        let c = cfg();
+        let mut rng = Rng::new(1);
+        for kind in [TaskKind::SingleNiah, TaskKind::MultiKeyNiah { keys: 3 },
+                     TaskKind::Aggregation] {
+            let inst = gen_instance(&c, kind, &mut rng);
+            assert_eq!(inst.doc.len(), c.apb.doc_len());
+            assert_eq!(inst.query.len(), c.apb.query_len);
+            assert!(!inst.needle_positions.is_empty());
+            assert!(inst.needle_positions.iter().all(|&p| p < c.apb.doc_len()));
+            assert!(inst.doc.iter().all(|&t| t >= 0 && (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn instances_vary_with_seed() {
+        let c = cfg();
+        let a = gen_instance(&c, TaskKind::SingleNiah, &mut Rng::new(1));
+        let b = gen_instance(&c, TaskKind::SingleNiah, &mut Rng::new(2));
+        assert_ne!(a.doc, b.doc);
+    }
+
+    #[test]
+    fn task_tables_complete() {
+        assert_eq!(ruler_tasks().len(), 13);
+        assert_eq!(infbench_tasks().len(), 10);
+        for t in ruler_tasks().iter().chain(infbench_tasks().iter()) {
+            assert!(t.base_acc.llama >= 0.0);
+            assert!(t.base_acc.llama <= 100.0);
+            assert!(t.out_tokens > 0);
+        }
+    }
+}

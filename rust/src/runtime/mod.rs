@@ -1,0 +1,232 @@
+//! PJRT runtime: load HLO-text artifacts produced by `python/compile/aot.py`,
+//! compile them on the CPU PJRT client, and execute them from the
+//! coordinator hot path.
+//!
+//! Two deliberate performance choices (EXPERIMENTS.md §Perf):
+//!  * model weights are uploaded to device buffers ONCE per engine and
+//!    executables run through `execute_b`, so the per-call cost is only the
+//!    activation transfers;
+//!  * one `Engine` per simulated host — mirroring the paper's one-process-
+//!    per-GPU topology and keeping PJRT state thread-local.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use crate::config::Config;
+use crate::util::blob::Blob;
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// Input/output declaration recorded by the AOT manifest.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+pub struct Artifact {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// A per-host PJRT engine holding the compiled executables and the
+/// device-resident weight buffers.
+pub struct Engine {
+    pub client: PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    weights: BTreeMap<String, PjRtBuffer>,
+}
+
+fn parse_iospec(v: &Json, default_name: &str) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or(default_name)
+            .to_string(),
+        dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+        shape: v.req("shape")?.usize_vec().context("shape")?,
+    })
+}
+
+impl Engine {
+    /// Compile the named artifacts (or all from the manifest when `names`
+    /// is empty) and upload all weights.
+    pub fn load(cfg: &Config, names: &[&str]) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_arts = cfg
+            .manifest
+            .req("artifacts")?
+            .as_obj()
+            .context("manifest artifacts not an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in manifest_arts {
+            if !names.is_empty() && !names.contains(&name.as_str()) {
+                continue;
+            }
+            let file = meta.req("file")?.as_str().context("artifact file")?;
+            let path = cfg.dir.join(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            let inputs = meta
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|v| parse_iospec(v, "?"))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = meta
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| parse_iospec(v, &format!("out{i}")))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                Artifact { name: name.clone(), exe, inputs, outputs },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("no artifacts loaded from {}", cfg.dir.display());
+        }
+
+        // Upload weights once.
+        let blob = Blob::load(&cfg.dir, cfg.manifest.req("weights")?)?;
+        let mut weights = BTreeMap::new();
+        for name in blob.names().map(str::to_string).collect::<Vec<_>>() {
+            let t = blob.tensor(&name)?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading weight {name}: {e:?}"))?;
+            weights.insert(name, buf);
+        }
+        Ok(Engine { client, artifacts, weights })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.weights
+            .get(name)
+            .with_context(|| format!("weight '{name}' not found"))
+    }
+
+    /// Per-layer weight lookup (`layers.{i}.{short}`).
+    pub fn layer_weight(&self, layer: usize, short: &str) -> Result<&PjRtBuffer> {
+        self.weight(&format!("layers.{layer}.{short}"))
+    }
+
+    pub fn upload_f32(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
+    }
+
+    pub fn upload_i32(&self, v: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(v, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
+    }
+
+    pub fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        self.upload_i32(&[v], &[])
+    }
+
+    /// Execute an artifact with pre-staged buffers; outputs decoded to
+    /// host-side f32 tensors using the manifest shapes.
+    pub fn exec(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        if args.len() != art.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                art.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = art
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: single tuple literal.
+        let parts: Vec<Literal> = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "artifact '{name}': manifest says {} outputs, tuple has {}",
+                art.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&art.outputs) {
+            let lit = match lit.ty() {
+                Ok(ElementType::F32) => lit,
+                _ => lit
+                    .convert(ElementType::F32.primitive_type())
+                    .map_err(|e| anyhow::anyhow!("converting {name} output: {e:?}"))?,
+            };
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading {name} output: {e:?}"))?;
+            tensors.push(Tensor::new(spec.shape.clone(), data)?);
+        }
+        Ok(tensors)
+    }
+
+    /// Convenience: execute with host-side values (tests / cold paths; the
+    /// hot path stages buffers itself and reuses weight buffers).
+    pub fn exec_t(&self, name: &str, args: &[HostArg]) -> Result<Vec<Tensor>> {
+        let staged: Vec<PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                HostArg::F32(t) => self.upload_f32(t),
+                HostArg::I32s(v, shape) => self.upload_i32(v, shape),
+                HostArg::ScalarI32(v) => self.scalar_i32(*v),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&PjRtBuffer> = staged.iter().collect();
+        self.exec(name, &refs)
+    }
+}
+
+/// Host-side argument for `exec_t` cold paths.
+pub enum HostArg {
+    F32(Tensor),
+    I32s(Vec<i32>, Vec<usize>),
+    ScalarI32(i32),
+}
+
+/// Load the golden blob recorded by aot.py (tiny config only).
+pub fn load_golden(cfg: &Config) -> Result<Option<(Blob, usize)>> {
+    match cfg.manifest.get("golden") {
+        None | Some(Json::Null) => Ok(None),
+        Some(g) => {
+            let n_new = g.req("n_new")?.as_usize().context("golden n_new")?;
+            Ok(Some((Blob::load(&cfg.dir, g)?, n_new)))
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Reader for the manifest-described binary blobs the AOT pipeline emits
+//! (`weights.bin`, `golden.bin`): little-endian f32/i32 arrays described by
+//! `entries: [{name, dtype, shape, offset, size}]` in `manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use super::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct BlobEntry {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug)]
+pub struct Blob {
+    pub entries: Vec<BlobEntry>,
+    bytes: Vec<u8>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Blob {
+    /// Load a blob file given its manifest description
+    /// (`{"file": ..., "entries": [...]}`) and the artifact directory.
+    pub fn load(dir: &Path, desc: &Json) -> Result<Blob> {
+        let file = desc
+            .req("file")?
+            .as_str()
+            .context("blob 'file' not a string")?;
+        let entries = parse_entries(desc.req("entries")?)?;
+        let bytes = std::fs::read(dir.join(file))
+            .with_context(|| format!("reading blob {file}"))?;
+        let total: usize = entries.iter().map(|e| e.size).sum();
+        if bytes.len() != total {
+            bail!("blob {file}: {} bytes on disk, manifest says {total}", bytes.len());
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(Blob { entries, bytes, index })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+
+    fn entry(&self, name: &str) -> Result<&BlobEntry> {
+        let i = *self
+            .index
+            .get(name)
+            .with_context(|| format!("blob entry '{name}' not found"))?;
+        Ok(&self.entries[i])
+    }
+
+    /// f32 tensor by name.
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        let e = self.entry(name)?;
+        if e.dtype != "f32" {
+            bail!("entry '{name}' has dtype {}, wanted f32", e.dtype);
+        }
+        let n: usize = e.shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        let raw = &self.bytes[e.offset..e.offset + e.size];
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Tensor::new(e.shape.clone(), data)
+    }
+
+    /// i32 vector by name (tokens, generated ids).
+    pub fn i32s(&self, name: &str) -> Result<Vec<i32>> {
+        let e = self.entry(name)?;
+        if e.dtype != "i32" {
+            bail!("entry '{name}' has dtype {}, wanted i32", e.dtype);
+        }
+        let raw = &self.bytes[e.offset..e.offset + e.size];
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn parse_entries(v: &Json) -> Result<Vec<BlobEntry>> {
+    let arr = v.as_arr().context("blob entries not an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    let mut expected_offset = 0usize;
+    for e in arr {
+        let entry = BlobEntry {
+            name: e.req("name")?.as_str().context("name")?.to_string(),
+            dtype: e.req("dtype")?.as_str().context("dtype")?.to_string(),
+            shape: e.req("shape")?.usize_vec().context("shape")?,
+            offset: e.req("offset")?.as_usize().context("offset")?,
+            size: e.req("size")?.as_usize().context("size")?,
+        };
+        if entry.offset != expected_offset {
+            bail!("entry '{}' offset {} != running total {}", entry.name, entry.offset,
+                  expected_offset);
+        }
+        let numel: usize = entry.shape.iter().product();
+        if entry.size != numel * 4 {
+            bail!("entry '{}' size {} != 4*numel {}", entry.name, entry.size, numel * 4);
+        }
+        expected_offset += entry.size;
+        out.push(entry);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_blob(dir: &Path) -> Json {
+        let mut f = std::fs::File::create(dir.join("t.bin")).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for v in [7i32, 8] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        Json::parse(
+            r#"{"file":"t.bin","entries":[
+                {"name":"w","dtype":"f32","shape":[2,3],"offset":0,"size":24},
+                {"name":"ids","dtype":"i32","shape":[2],"offset":24,"size":8}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("blob_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let desc = write_blob(&dir);
+        let blob = Blob::load(&dir, &desc).unwrap();
+        let w = blob.tensor("w").unwrap();
+        assert_eq!(w.shape, vec![2, 3]);
+        assert_eq!(w.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(blob.i32s("ids").unwrap(), vec![7, 8]);
+        assert!(blob.tensor("ids").is_err()); // dtype mismatch
+        assert!(blob.tensor("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("blob_test2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let desc = write_blob(&dir);
+        // Truncate the file.
+        let bytes = std::fs::read(dir.join("t.bin")).unwrap();
+        std::fs::write(dir.join("t.bin"), &bytes[..16]).unwrap();
+        assert!(Blob::load(&dir, &desc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

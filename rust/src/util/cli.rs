@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no `clap` offline): `--flag`, `--key value`,
+//! `--key=value`, positionals, typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: Vec<String>,
+    known_bools: Vec<&'static str>,
+}
+
+impl Args {
+    /// `known_bools` lists flags that take no value (e.g. `--verbose`).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_bools: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args { known_bools: known_bools.to_vec(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_bools.contains(&body) {
+                    out.bools.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{body} expects a value"))?;
+                    out.flags.insert(body.to_string(), v);
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("unknown short option '{a}' (use --long options)");
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} not a usize")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} not a float")),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--hosts 2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().with_context(|| format!("bad list item '{p}'")))
+                .collect(),
+        }
+    }
+
+    /// Sanity-check that every given flag is one the command understands.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        for b in &self.bools {
+            if !self.known_bools.contains(&b.as_str()) {
+                bail!("unknown flag --{b}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "json"]).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("serve --config tiny --hosts=4 --verbose pos1");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.get("config"), Some("tiny"));
+        assert_eq!(a.usize_or("hosts", 1).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("x --hosts 2,4,8");
+        assert_eq!(a.usize_list_or("hosts", &[1]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.usize_list_or("lens", &[32]).unwrap(), vec![32]);
+        assert_eq!(a.f64_or("alpha", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["--key".to_string()].into_iter(), &[]).is_err());
+        assert!(Args::parse(["-x".to_string()].into_iter(), &[]).is_err());
+        let a = parse("x --bogus 1");
+        assert!(a.check_known(&["config"]).is_err());
+        assert!(parse("x --config tiny").check_known(&["config"]).is_ok());
+    }
+}

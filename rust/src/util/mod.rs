@@ -1,0 +1,10 @@
+//! In-tree substrates for the offline environment (no serde/clap/rand/
+//! criterion in the registry): JSON, RNG, CLI parsing, binary blobs,
+//! dense f32 tensors, summary statistics.
+
+pub mod blob;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

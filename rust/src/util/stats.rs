@@ -1,0 +1,113 @@
+//! Summary statistics for the bench harness and serving metrics:
+//! mean / stddev / percentiles over latency samples.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize of empty sample set");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(2).saturating_sub(1) as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: percentile(&sorted, 0.50),
+        p90: percentile(&sorted, 0.90),
+        p99: percentile(&sorted, 0.99),
+        max: sorted[n - 1],
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Human-friendly duration formatting for reports.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1}ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2}µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2}ms", seconds * 1e3)
+    } else {
+        format!("{:.2}s", seconds)
+    }
+}
+
+/// Throughput formatting (tokens / second).
+pub fn fmt_rate(per_second: f64) -> String {
+    if per_second >= 1e6 {
+        format!("{:.2}M/s", per_second / 1e6)
+    } else if per_second >= 1e3 {
+        format!("{:.1}K/s", per_second / 1e3)
+    } else {
+        format!("{:.1}/s", per_second)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&sorted, 0.0), 0.0);
+        assert_eq!(percentile(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(2.5e-9), "2.5ns");
+        assert_eq!(fmt_duration(1.5e-4), "150.00µs");
+        assert_eq!(fmt_duration(0.25), "250.00ms");
+        assert_eq!(fmt_duration(3.2), "3.20s");
+        assert_eq!(fmt_rate(1234.0), "1.2K/s");
+        assert_eq!(fmt_rate(12.0), "12.0/s");
+        assert_eq!(fmt_rate(2.5e6), "2.50M/s");
+    }
+}

@@ -1,0 +1,280 @@
+//! Small dense f32 tensor used on the coordinator hot path.
+//!
+//! This is deliberately not a general NDArray — just the operations the
+//! L3 coordinator needs between PJRT calls: row slicing/stitching for KV
+//! blocks, top-k gathers for the compressor, argmax for greedy decoding,
+//! and the online-softmax LSE merge. Heavy math stays inside the AOT'd
+//! HLO executables.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of one "row" (all dims after the first).
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Rows `lo..hi` along axis 0 as a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(lo <= hi && hi <= self.shape[0], "slice {lo}..{hi} of {:?}", self.shape);
+        let rl = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor { shape, data: self.data[lo * rl..hi * rl].to_vec() }
+    }
+
+    /// Overwrite rows starting at `at` along axis 0.
+    pub fn write_rows(&mut self, at: usize, src: &Tensor) {
+        assert_eq!(self.shape[1..], src.shape[1..], "row shapes differ");
+        let rl = self.row_len();
+        let n = src.shape[0];
+        assert!(at + n <= self.shape[0], "write {at}+{n} into {:?}", self.shape);
+        self.data[at * rl..(at + n) * rl].copy_from_slice(&src.data);
+    }
+
+    /// Concatenate along axis 0. All inputs must share trailing dims.
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let trailing = &parts[0].shape[1..];
+        let rows: usize = parts.iter().map(|p| p.shape[0]).sum();
+        let mut shape = vec![rows];
+        shape.extend_from_slice(trailing);
+        let mut data = Vec::with_capacity(rows * parts[0].row_len());
+        for p in parts {
+            assert_eq!(&p.shape[1..], trailing);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// Gather rows by index along axis 0.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let rl = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        let mut data = Vec::with_capacity(idx.len() * rl);
+        for &i in idx {
+            assert!(i < self.shape[0]);
+            data.extend_from_slice(&self.data[i * rl..(i + 1) * rl]);
+        }
+        Tensor { shape, data }
+    }
+
+    /// View element [i, j] of a rank-2 tensor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Last row of a rank-2 tensor.
+    pub fn last_row(&self) -> &[f32] {
+        let rl = self.row_len();
+        &self.data[self.data.len() - rl..]
+    }
+
+    pub fn argmax_row(row: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Per-kv-head top-k over compressor scores, returning ascending indices —
+/// the coordinator half of the paper's Top-l_p selection (§3.4). `scores`
+/// is [n, kh] row-major; returns `kh` vectors of `l_p` ascending indices.
+pub fn top_lp_indices(scores: &Tensor, l_p: usize) -> Vec<Vec<usize>> {
+    assert_eq!(scores.rank(), 2);
+    let (n, kh) = (scores.shape[0], scores.shape[1]);
+    let l_p = l_p.min(n);
+    let mut out = Vec::with_capacity(kh);
+    for j in 0..kh {
+        let mut idx: Vec<usize> = (0..n).collect();
+        // Stable ordering tie-break on index to match jax.lax.top_k
+        // (which prefers lower indices on ties).
+        idx.sort_by(|&a, &b| {
+            scores.at2(b, j)
+                .partial_cmp(&scores.at2(a, j))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut top: Vec<usize> = idx[..l_p].to_vec();
+        top.sort_unstable();
+        out.push(top);
+    }
+    out
+}
+
+/// Online-softmax merge of per-host partial attentions (Algorithm 3
+/// line 10). outs[h]: [n, heads, hd]; lses[h]: [n, heads]. Exactness is
+/// property-tested against dense softmax in both python and rust.
+pub fn merge_partials(outs: &[Tensor], lses: &[Tensor]) -> Tensor {
+    assert_eq!(outs.len(), lses.len());
+    assert!(!outs.is_empty());
+    let shape = outs[0].shape.clone();
+    let (n, heads, hd) = (shape[0], shape[1], shape[2]);
+    let mut merged = Tensor::zeros(shape);
+    for i in 0..n {
+        for h in 0..heads {
+            let mut m = f32::NEG_INFINITY;
+            for l in lses {
+                m = m.max(l.at2(i, h));
+            }
+            let m_safe = if m.is_finite() { m } else { 0.0 };
+            let mut denom = 0.0f32;
+            let mut acc = vec![0.0f32; hd];
+            for (o, l) in outs.iter().zip(lses) {
+                let lse = l.at2(i, h);
+                if !lse.is_finite() {
+                    continue; // host saw zero keys
+                }
+                let w = (lse - m_safe).exp();
+                denom += w;
+                let base = (i * heads + h) * hd;
+                for d in 0..hd {
+                    acc[d] += w * o.data[base + d];
+                }
+            }
+            let denom = if denom > 0.0 { denom } else { 1.0 };
+            let base = (i * heads + h) * hd;
+            for d in 0..hd {
+                merged.data[base + d] = acc[d] / denom;
+            }
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_write_roundtrip() {
+        let mut a = Tensor::zeros(vec![4, 2]);
+        let b = t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        a.write_rows(1, &b);
+        assert_eq!(a.slice_rows(1, 3), b);
+        assert_eq!(a.slice_rows(0, 1).data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn concat_and_gather() {
+        let a = t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = t(vec![1, 2], vec![5.0, 6.0]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.shape, vec![3, 2]);
+        let g = c.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn argmax() {
+        assert_eq!(Tensor::argmax_row(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(Tensor::argmax_row(&[-5.0, -2.0, -2.0]), 1); // first wins
+    }
+
+    #[test]
+    fn top_lp_sorted_and_correct() {
+        // scores [4, 2]: head 0 prefers rows 3,1; head 1 prefers rows 0,2.
+        let s = t(vec![4, 2], vec![
+            0.1, 9.0, //
+            5.0, 0.2, //
+            0.3, 7.0, //
+            8.0, 0.4,
+        ]);
+        let top = top_lp_indices(&s, 2);
+        assert_eq!(top[0], vec![1, 3]);
+        assert_eq!(top[1], vec![0, 2]);
+    }
+
+    #[test]
+    fn top_lp_tie_prefers_lower_index() {
+        let s = t(vec![3, 1], vec![1.0, 1.0, 1.0]);
+        assert_eq!(top_lp_indices(&s, 2)[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn merge_single_host_is_identity() {
+        let o = t(vec![1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let l = t(vec![1, 2], vec![0.5, -1.0]);
+        let m = merge_partials(&[o.clone()], &[l]);
+        assert_eq!(m, o);
+    }
+
+    #[test]
+    fn merge_matches_dense_two_hosts() {
+        // Two hosts, one key each: softmax over 2 logits.
+        // host A: key score a, value va; host B: key score b, value vb.
+        let (a, b) = (0.3f32, -0.7f32);
+        let (va, vb) = (2.0f32, -1.0f32);
+        let oa = t(vec![1, 1, 1], vec![va]);
+        let ob = t(vec![1, 1, 1], vec![vb]);
+        let la = t(vec![1, 1], vec![a]); // lse of single logit = logit
+        let lb = t(vec![1, 1], vec![b]);
+        let m = merge_partials(&[oa, ob], &[la, lb]);
+        let (ea, eb) = (a.exp(), b.exp());
+        let want = (ea * va + eb * vb) / (ea + eb);
+        assert!((m.data[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_ignores_empty_host() {
+        let o1 = t(vec![1, 1, 2], vec![1.0, 2.0]);
+        let l1 = t(vec![1, 1], vec![0.0]);
+        let o2 = t(vec![1, 1, 2], vec![9.0, 9.0]);
+        let l2 = t(vec![1, 1], vec![f32::NEG_INFINITY]);
+        let m = merge_partials(&[o1.clone(), o2], &[l1, l2]);
+        assert_eq!(m, o1);
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end integration: the rust cluster replays the AOT artifacts and
+//! must reproduce the golden outputs recorded by the python cluster
+//! simulation (aot.py::build_golden) — same tokens, same logits.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use apb::config::ApbOptions;
+use apb::coordinator::Cluster;
+use apb::runtime::load_golden;
+
+fn tiny_config() -> Option<apb::config::Config> {
+    match apb::load_config("tiny") {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("SKIP golden_e2e: artifacts/tiny not built ({e:#})");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_generation_matches_python() {
+    let Some(cfg) = tiny_config() else { return };
+    let (golden, n_new) = load_golden(&cfg)
+        .expect("golden section")
+        .expect("tiny config carries a golden blob");
+    let doc = golden.i32s("doc_tokens").unwrap();
+    let query = golden.i32s("query_tokens").unwrap();
+    let want_gen = golden.i32s("generated").unwrap();
+    let want_logits = golden.tensor("query_logits").unwrap();
+
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+    let opts = ApbOptions::default();
+    let report = cluster.prefill(&doc, &query, &opts).expect("prefill");
+    assert!(report.comm_bytes > 0, "prefill must move compressed blocks");
+    for t in &report.per_host {
+        assert!(t.total_s > 0.0);
+    }
+
+    let gen = cluster.generate(&query, n_new).expect("generate");
+    assert_eq!(gen.tokens, want_gen, "greedy tokens must match python");
+
+    // Query-chunk logits: identical computation modulo HLO scheduling.
+    assert_eq!(gen.query_logits.len(), want_logits.data.len());
+    let mut max_abs = 0f32;
+    let mut max_rel = 0f32;
+    for (a, b) in gen.query_logits.iter().zip(&want_logits.data) {
+        let d = (a - b).abs();
+        max_abs = max_abs.max(d);
+        max_rel = max_rel.max(d / b.abs().max(1.0));
+    }
+    assert!(
+        max_abs < 2e-3 && max_rel < 2e-3,
+        "logits diverged: max_abs={max_abs} max_rel={max_rel}"
+    );
+}
+
+#[test]
+fn prefill_is_deterministic_across_runs() {
+    let Some(cfg) = tiny_config() else { return };
+    let (golden, _) = load_golden(&cfg).unwrap().unwrap();
+    let doc = golden.i32s("doc_tokens").unwrap();
+    let query = golden.i32s("query_tokens").unwrap();
+
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+    let opts = ApbOptions::default();
+    cluster.prefill(&doc, &query, &opts).unwrap();
+    let g1 = cluster.generate(&query, 3).unwrap();
+    cluster.clear().unwrap();
+    cluster.prefill(&doc, &query, &opts).unwrap();
+    let g2 = cluster.generate(&query, 3).unwrap();
+    assert_eq!(g1.tokens, g2.tokens);
+    assert_eq!(g1.query_logits, g2.query_logits);
+}
+
+#[test]
+fn ablations_change_generation_but_stay_finite() {
+    let Some(cfg) = tiny_config() else { return };
+    let (golden, _) = load_golden(&cfg).unwrap().unwrap();
+    let doc = golden.i32s("doc_tokens").unwrap();
+    let query = golden.i32s("query_tokens").unwrap();
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+
+    let variants = [
+        ApbOptions { use_passing: false, ..Default::default() },
+        ApbOptions { use_anchor: false, ..Default::default() },
+        ApbOptions { retaining_compressor: false, ..Default::default() },
+        ApbOptions { embed_query: false, ..Default::default() },
+    ];
+    let baseline = {
+        cluster.clear().unwrap();
+        cluster.prefill(&doc, &query, &ApbOptions::default()).unwrap();
+        cluster.generate(&query, 2).unwrap().query_logits
+    };
+    for (i, opts) in variants.iter().enumerate() {
+        cluster.clear().unwrap();
+        let rep = cluster.prefill(&doc, &query, opts).unwrap();
+        if !opts.use_passing {
+            assert_eq!(rep.comm_bytes, 0, "no-passing must not communicate");
+        }
+        let gen = cluster.generate(&query, 2).unwrap();
+        assert!(gen.query_logits.iter().all(|x| x.is_finite()),
+                "variant {i} produced non-finite logits");
+        let diff: f32 = gen
+            .query_logits
+            .iter()
+            .zip(&baseline)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-6, "variant {i} did not change the computation");
+    }
+}

@@ -1,0 +1,213 @@
+//! Randomized property tests (proptest is unavailable offline; these use
+//! the in-tree RNG with many seeded cases per property).
+
+use apb::cluster::collectives::{Collective, CommMeter};
+use apb::util::json::Json;
+use apb::util::rng::Rng;
+use apb::util::stats::{percentile, summarize};
+use apb::util::tensor::{merge_partials, top_lp_indices, Tensor};
+
+const CASES: usize = 200;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.normal() as f32).collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+/// Dense softmax over explicit per-host key sets — the oracle for the
+/// merge property.
+fn dense_softmax(q_logits: &[Vec<f32>], values: &[Vec<f32>]) -> f32 {
+    // Single (row, head, dim=1) problem: logits per key, scalar values.
+    let all_logits: Vec<f32> = q_logits.iter().flatten().copied().collect();
+    let all_vals: Vec<f32> = values.iter().flatten().copied().collect();
+    let m = all_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0.0;
+    let mut acc = 0.0;
+    for (&l, &v) in all_logits.iter().zip(&all_vals) {
+        let w = (l - m).exp();
+        denom += w;
+        acc += w * v;
+    }
+    acc / denom
+}
+
+#[test]
+fn prop_merge_partials_equals_dense_softmax() {
+    // For arbitrary host partitions of a key set, partial-softmax + LSE
+    // merge must equal the dense softmax (DESIGN.md invariant 4).
+    let mut rng = Rng::new(0xAB);
+    for case in 0..CASES {
+        let hosts = 1 + rng.below(6) as usize;
+        let mut logits = Vec::new();
+        let mut vals = Vec::new();
+        let mut outs = Vec::new();
+        let mut lses = Vec::new();
+        for _ in 0..hosts {
+            let k = 1 + rng.below(9) as usize;
+            let l: Vec<f32> = (0..k).map(|_| (rng.normal() * 3.0) as f32).collect();
+            let v: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            // Per-host partial: softmax over its own keys + lse.
+            let m = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let denom: f32 = l.iter().map(|x| (x - m).exp()).sum();
+            let out: f32 = l
+                .iter()
+                .zip(&v)
+                .map(|(x, y)| (x - m).exp() * y)
+                .sum::<f32>()
+                / denom;
+            outs.push(Tensor::new(vec![1, 1, 1], vec![out]).unwrap());
+            lses.push(Tensor::new(vec![1, 1], vec![m + denom.ln()]).unwrap());
+            logits.push(l);
+            vals.push(v);
+        }
+        let merged = merge_partials(&outs, &lses);
+        let want = dense_softmax(&logits, &vals);
+        assert!(
+            (merged.data[0] - want).abs() < 1e-4,
+            "case {case}: merged {} vs dense {want}",
+            merged.data[0]
+        );
+    }
+}
+
+#[test]
+fn prop_top_lp_matches_naive_selection() {
+    let mut rng = Rng::new(0xCD);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(64) as usize;
+        let kh = 1 + rng.below(4) as usize;
+        let l_p = 1 + rng.below(n as u64) as usize;
+        let scores = rand_tensor(&mut rng, vec![n, kh]);
+        let got = top_lp_indices(&scores, l_p);
+        for j in 0..kh {
+            // Naive: sort all indices by score desc, take l_p, sort asc.
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                scores.at2(b, j).partial_cmp(&scores.at2(a, j)).unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut want = idx[..l_p].to_vec();
+            want.sort_unstable();
+            assert_eq!(got[j], want);
+        }
+    }
+}
+
+#[test]
+fn prop_tensor_concat_slice_roundtrip() {
+    let mut rng = Rng::new(0xEF);
+    for _ in 0..CASES {
+        let rows_a = 1 + rng.below(10) as usize;
+        let rows_b = 1 + rng.below(10) as usize;
+        let cols = 1 + rng.below(8) as usize;
+        let a = rand_tensor(&mut rng, vec![rows_a, cols]);
+        let b = rand_tensor(&mut rng, vec![rows_b, cols]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.slice_rows(0, rows_a), a);
+        assert_eq!(c.slice_rows(rows_a, rows_a + rows_b), b);
+        // Gather identity permutation reproduces the tensor.
+        let idx: Vec<usize> = (0..c.shape[0]).collect();
+        assert_eq!(c.gather_rows(&idx), c);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    let mut rng = Rng::new(0x11);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => Json::Str(format!("s{}-\"esc\"\n{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let parsed = Json::parse(&v.dumps()).unwrap();
+        assert_eq!(parsed, v);
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_percentiles_bounded_and_monotone() {
+    let mut rng = Rng::new(0x22);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(50) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let s = summarize(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let p = percentile(&sorted, q);
+            assert!(p >= s.min && p <= s.max);
+        }
+    }
+}
+
+#[test]
+fn prop_collective_rank_order_under_random_scheduling() {
+    // Heavier-weight variant of the fabric test: random host counts,
+    // random per-round delays, many rounds; results must always arrive
+    // complete and in rank order.
+    let mut seed_rng = Rng::new(0x33);
+    for _ in 0..8 {
+        let n = 2 + seed_rng.below(5) as usize;
+        let rounds = 10;
+        let c = std::sync::Arc::new(Collective::new(
+            n,
+            std::sync::Arc::new(CommMeter::default()),
+        ));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let c = std::sync::Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(rank as u64 * 7 + 1);
+                for round in 0..rounds {
+                    if rng.below(2) == 0 {
+                        std::thread::yield_now();
+                    }
+                    let t = Tensor::new(vec![1], vec![(round * n + rank) as f32])
+                        .unwrap();
+                    let all = c.all_gather(rank, (t.clone(), t));
+                    for (r, (o, _)) in all.iter().enumerate() {
+                        assert_eq!(o.data[0] as usize, round * n + r);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_rng_python_parity_random_scores() {
+    // The rust random-selector scores must equal the python twin formula
+    // for arbitrary (seed, layer, host, head, idx) tuples. The python side
+    // pins the same splitmix64 vectors in test_retaining.py.
+    use apb::util::rng::{random_score, splitmix64};
+    let mut rng = Rng::new(0x44);
+    for _ in 0..CASES {
+        let seed = rng.below(1 << 20);
+        let layer = rng.below(64);
+        let host = rng.below(16);
+        let head = rng.below(8);
+        let idx = rng.below(4096);
+        let key = (seed << 40) ^ (layer << 28) ^ (host << 16) ^ (head << 12) ^ idx;
+        let want = splitmix64(key) as f64 / 2f64.powi(64);
+        let got = random_score(seed, layer, host, head, idx) as f64;
+        assert!((got - want).abs() < 1e-7);
+    }
+}
