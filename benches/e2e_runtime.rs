@@ -1,4 +1,5 @@
-//! Real end-to-end runtime bench on the PJRT cluster (tiny artifacts):
+//! Real end-to-end runtime bench on the cluster (SimEngine by default,
+//! PJRT tiny artifacts when built with `--features pjrt` + `make artifacts`):
 //! prefill wall-time, decode per-token latency, the paper's tok/s speed
 //! metric, and the coordinator-overhead share — the numbers the §Perf
 //! iteration log in EXPERIMENTS.md tracks.
@@ -12,10 +13,7 @@ use apb::util::rng::Rng;
 use apb::util::stats::fmt_duration;
 
 fn main() {
-    let Ok(cfg) = apb::load_config("tiny") else {
-        println!("e2e_runtime: artifacts/tiny missing — run `make artifacts`.");
-        return;
-    };
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
     let cluster = Cluster::start(&cfg).expect("cluster");
     let mut rng = Rng::new(123);
     let doc: Vec<i32> = (0..cfg.apb.doc_len())
@@ -27,8 +25,8 @@ fn main() {
     let opts = ApbOptions::default();
 
     let b = default_bencher();
-    println!("== e2e_runtime (tiny config: {} hosts, doc {} tokens) ==",
-             cfg.apb.n_hosts, cfg.apb.doc_len());
+    println!("== e2e_runtime ({} backend: {} hosts, doc {} tokens) ==",
+             cfg.backend.name(), cfg.apb.n_hosts, cfg.apb.doc_len());
 
     // Prefill (includes cache clear so each iteration is a fresh request).
     let s_prefill = b.report("prefill (full APB, per request)", || {
@@ -69,7 +67,7 @@ fn main() {
         sum.add(t);
     }
     let coord = sum.topk_s + sum.comm_s + sum.cache_s;
-    let share = coord / sum.total_s;
+    let share = coord / sum.total_s.max(1e-12);
     let mut table = Table::new("coordinator overhead (sum over hosts)",
                                &["component", "seconds", "share"]);
     for (name, v) in [("embed", sum.embed_s), ("layer_pre", sum.layer_pre_s),

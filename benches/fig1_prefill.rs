@@ -7,8 +7,19 @@ use apb::report;
 use apb::util::json::{self, Json};
 
 fn main() {
-    let lengths: [f64; 6] = [32768.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0];
-    let labels = ["32K", "64K", "128K", "256K", "512K", "1024K"];
+    // `--smoke` (CI): a reduced sweep that still exercises every method and
+    // the paper-anchored asserts below, so the perf harness cannot rot
+    // silently without burning CI minutes on the full grid.
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--quick");
+    let all_lengths: [f64; 6] =
+        [32768.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0];
+    let all_labels = ["32K", "64K", "128K", "256K", "512K", "1024K"];
+    let take = if smoke { 3 } else { all_lengths.len() };
+    let lengths = &all_lengths[..take];
+    let labels = &all_labels[..take];
+    if smoke {
+        println!("[fig1_prefill] smoke mode: {take} lengths");
+    }
     let hosts = 8.0;
 
     let mut headers = vec!["Method"];
@@ -23,7 +34,7 @@ fn main() {
         let h = if method.uses_sequence_parallelism() { hosts } else { 1.0 };
         let mut cells = vec![method.name().to_string()];
         let mut pts = Vec::new();
-        for (&n, &lab) in lengths.iter().zip(&labels) {
+        for (&n, &lab) in lengths.iter().zip(labels.iter()) {
             let hy = Hyper::paper_schedule(n, hosts);
             let est = estimate(method, &LLAMA31_8B, n, h, &hy, &A800, 64.0);
             if est.oom {
@@ -47,15 +58,23 @@ fn main() {
     plot.print();
 
     // Paper-anchored checks (Table 11 pattern).
-    let est_at = |m, n: f64, h| estimate(m, &LLAMA31_8B, n, h, &Hyper::paper_schedule(n, hosts), &A800, 64.0);
+    let est_at = |m, n: f64, h| {
+        estimate(m, &LLAMA31_8B, n, h, &Hyper::paper_schedule(n, hosts), &A800, 64.0)
+    };
     assert!(est_at(Method::FlashAttn, 262144.0, 1.0).oom, "FlashAttn OOM @256K");
     assert!(!est_at(Method::Apb, 1048576.0, 8.0).oom, "APB survives 1M");
     let apb = est_at(Method::Apb, 131072.0, 8.0).prefill_s;
     let star = est_at(Method::StarAttn, 131072.0, 8.0).prefill_s;
     println!("\nAPB vs StarAttn @128K: {:.2}x (paper: 3.50/0.94 = 3.7x)", star / apb);
 
-    let path = report::write_report("fig1_tab11_prefill",
-                                    vec![("hosts", json::num(hosts))], Json::Arr(rows))
-        .expect("report");
+    // Mark smoke runs in the report metadata so a truncated CI sweep can
+    // never be mistaken for (or silently overwrite the meaning of) the
+    // full 32K–1M grid.
+    let path = report::write_report(
+        "fig1_tab11_prefill",
+        vec![("hosts", json::num(hosts)), ("smoke", Json::Bool(smoke))],
+        Json::Arr(rows),
+    )
+    .expect("report");
     println!("[report] {}", path.display());
 }

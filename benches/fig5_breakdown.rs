@@ -64,10 +64,7 @@ fn analytical() -> Vec<Json> {
 }
 
 fn measured() -> Vec<Json> {
-    let Ok(cfg) = apb::load_config("tiny") else {
-        println!("(measured breakdown skipped: run `make artifacts` first)");
-        return Vec::new();
-    };
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
     let cluster = Cluster::start(&cfg).expect("cluster");
     let mut rng = apb::util::rng::Rng::new(5);
     let doc: Vec<i32> = (0..cfg.apb.doc_len())
@@ -77,7 +74,7 @@ fn measured() -> Vec<Json> {
         .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
         .collect();
     let opts = ApbOptions::default();
-    // Warm up once (PJRT JIT caches), then measure.
+    // Warm up once (PJRT JIT caches; harmless on sim), then measure.
     cluster.prefill(&doc, &query, &opts).expect("warmup");
     cluster.clear().unwrap();
     let rep = cluster.prefill(&doc, &query, &opts).expect("prefill");
@@ -88,8 +85,12 @@ fn measured() -> Vec<Json> {
     }
     let nl = (cfg.model.n_layers * rep.per_host.len()) as f64;
     let ms = |x: f64| x / nl * 1e3;
+    let title = format!(
+        "Measured (tiny {} cluster): per-block per-host breakdown (ms)",
+        cfg.backend.name()
+    );
     let mut table = Table::new(
-        "Measured (tiny PJRT cluster): per-block per-host breakdown (ms)",
+        &title,
         &["Component", "ms/block", "maps to (paper Fig.5)"],
     );
     table.row(vec!["layer_pre".into(), format!("{:.3}", ms(sum.layer_pre_s)),

@@ -37,8 +37,9 @@ fn main() {
     }
     table.print();
 
-    // Real measurement on the tiny cluster.
-    if let Ok(cfg) = apb::load_config("tiny") {
+    // Real measurement on the tiny cluster (sim backend by default).
+    {
+        let cfg = apb::load_config_or_sim("tiny").expect("config");
         let cluster = Cluster::start(&cfg).expect("cluster");
         let mut rng = apb::util::rng::Rng::new(9);
         let doc: Vec<i32> = (0..cfg.apb.doc_len())
@@ -57,11 +58,10 @@ fn main() {
                  gen.wall_seconds * 1e3 / gen.tokens.len() as f64);
         rows.push(report::row(vec![
             ("method", json::s("APB-tiny-measured")),
+            ("backend", json::s(cfg.backend.name())),
             ("prefill_ms", json::num(pre.wall_seconds * 1e3)),
             ("decode_ms", json::num(gen.wall_seconds * 1e3)),
         ]));
-    } else {
-        println!("(measured run skipped: `make artifacts` first)");
     }
 
     let path = report::write_report("fig6_tab10_prefill_decode", vec![],

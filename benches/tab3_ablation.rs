@@ -82,8 +82,9 @@ fn main() {
     assert!(scores[5] > scores[6] + 10.0, "anchor removal must collapse");
     assert!(scores[6] >= scores[8]);
 
-    // --- Real-cluster section -------------------------------------------
-    if let Ok(cfg) = apb::load_config("tiny") {
+    // --- Real-cluster section (sim backend by default) ------------------
+    {
+        let cfg = apb::load_config_or_sim("tiny").expect("config");
         let cluster = Cluster::start(&cfg).expect("cluster");
         let mut rng = Rng::new(77);
         let inst = gen_instance(&cfg, TaskKind::MultiKeyNiah { keys: 3 }, &mut rng);
@@ -122,8 +123,6 @@ fn main() {
             ]));
         }
         mtable.print();
-    } else {
-        println!("(measured ablation skipped: `make artifacts` first)");
     }
 
     let path = report::write_report("tab3_ablation", vec![], Json::Arr(rows))

@@ -15,7 +15,7 @@ use apb::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     args.check_known(&["config", "max-new", "seed"])?;
-    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
     let max_new = args.usize_or("max-new", 4)?;
     let cluster = Cluster::start(&cfg)?;
 

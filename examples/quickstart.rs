@@ -1,29 +1,30 @@
-//! Quickstart: start an APB cluster from prebuilt artifacts, prefill one
-//! long document, and generate greedily.
+//! Quickstart: start an APB cluster, prefill one long document, and
+//! generate greedily.
 //!
-//!     make artifacts          # once: python AOT -> artifacts/tiny
 //!     cargo run --release --example quickstart
 //!
-//! Python never runs here — the rust binary loads HLO text + weights and
-//! drives the whole distributed inference itself.
+//! runs out of the box on the native SimEngine backend (no artifacts).
+//! With `make artifacts` + `--features pjrt` the same code replays the
+//! AOT'd HLO artifacts instead. Python never runs on the request path.
 
 use apb::config::ApbOptions;
 use apb::coordinator::Cluster;
 use apb::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the manifest-described config (model dims, sequence layout).
-    let cfg = apb::load_config("tiny")?;
+    // 1. Load the artifact config when present, else the sim-tiny config.
+    let cfg = apb::load_config_or_sim("tiny")?;
     println!(
-        "config '{}': {} hosts × block {} (anchor {}, query {}, passing {}), \
-         model d={} L={}",
-        cfg.name, cfg.apb.n_hosts, cfg.apb.block_len, cfg.apb.anchor_len,
-        cfg.apb.query_len, cfg.apb.passing_len, cfg.model.d_model,
-        cfg.model.n_layers
+        "config '{}' ({} backend): {} hosts × block {} (anchor {}, query {}, \
+         passing {}), model d={} L={}",
+        cfg.name, cfg.backend.name(), cfg.apb.n_hosts, cfg.apb.block_len,
+        cfg.apb.anchor_len, cfg.apb.query_len, cfg.apb.passing_len,
+        cfg.model.d_model, cfg.model.n_layers
     );
 
-    // 2. Spawn the cluster: one thread per host, each compiling the AOT
-    //    artifacts on its own PJRT CPU client and uploading weights once.
+    // 2. Spawn the cluster: one worker thread per host, each owning its
+    //    execution backend (native SimEngine, or a PJRT engine that
+    //    compiles the AOT artifacts and uploads weights once).
     let cluster = Cluster::start(&cfg)?;
 
     // 3. Build a request: a document split across hosts plus a query.

@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     args.check_known(&["samples", "config", "seed"])?;
     let samples = args.usize_or("samples", 3)?;
-    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
     let cluster = Cluster::start(&cfg)?;
 
     let kinds: [(&str, TaskKind); 4] = [

@@ -26,10 +26,11 @@ fn main() -> anyhow::Result<()> {
     let config = args.str_or("config", "tiny");
     let seed = args.usize_or("seed", 7)? as u64;
 
-    let cfg = apb::load_config(&config)?;
+    let cfg = apb::load_config_or_sim(&config)?;
     println!(
-        "serving on {} hosts — model d={} L={} vocab={}, doc {} tokens/request",
-        cfg.apb.n_hosts, cfg.model.d_model, cfg.model.n_layers,
+        "serving on {} hosts ({} backend) — model d={} L={} vocab={}, doc {} \
+         tokens/request",
+        cfg.apb.n_hosts, cfg.backend.name(), cfg.model.d_model, cfg.model.n_layers,
         cfg.model.vocab_size, cfg.apb.doc_len()
     );
     let t_start = std::time::Instant::now();

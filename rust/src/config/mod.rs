@@ -64,15 +64,37 @@ impl ApbParams {
     }
 }
 
+/// Which execution backend a config is bound to (see `runtime`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust native engine: deterministic synthetic weights, no
+    /// artifacts, always available.
+    Sim,
+    /// PJRT engine replaying AOT'd HLO artifacts (`pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     pub name: String,
     pub seed: u64,
     pub model: ModelConfig,
     pub apb: ApbParams,
-    /// Artifact directory this config was loaded from.
+    /// Execution backend this config is bound to.
+    pub backend: BackendKind,
+    /// Artifact directory this config was loaded from (unused for `Sim`).
     pub dir: PathBuf,
-    /// Full parsed manifest (artifacts, weights, golden sections).
+    /// Full parsed manifest (artifacts, weights, golden sections);
+    /// `Json::Null` for `Sim` configs.
     pub manifest: Json,
 }
 
@@ -147,7 +169,58 @@ impl Config {
             .context("config name")?
             .to_string();
         let seed = cfg_j.req("seed")?.as_i64().context("seed")? as u64;
-        Ok(Config { name, seed, model, apb, dir: dir.to_path_buf(), manifest })
+        Ok(Config {
+            name,
+            seed,
+            model,
+            apb,
+            backend: BackendKind::Pjrt,
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Build a SimEngine-backed config directly (no artifacts on disk).
+    pub fn sim(name: &str, model: ModelConfig, apb: ApbParams, seed: u64) -> Config {
+        Config {
+            name: name.to_string(),
+            seed,
+            model,
+            apb,
+            backend: BackendKind::Sim,
+            dir: PathBuf::new(),
+            manifest: Json::Null,
+        }
+    }
+
+    /// The default self-contained tiny config: small enough that a full
+    /// prefill+decode runs in milliseconds on one CPU core, large enough
+    /// that every APB mechanism (anchor, passing blocks, compressor,
+    /// online-softmax merge) is exercised across 3 hosts.
+    pub fn sim_tiny() -> Config {
+        Config::sim(
+            "sim-tiny",
+            ModelConfig {
+                vocab_size: 128,
+                n_layers: 2,
+                d_model: 32,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_ff: 64,
+                rope_theta: 1e4,
+                rms_eps: 1e-5,
+                retaining_hidden: 16,
+            },
+            ApbParams {
+                n_hosts: 3,
+                block_len: 32,
+                anchor_len: 8,
+                query_len: 4,
+                passing_len: 8,
+                max_new_tokens: 8,
+            },
+            1234,
+        )
     }
 }
 
@@ -192,6 +265,17 @@ mod tests {
         assert_eq!(a.pass_max(), 96);
         assert_eq!(a.doc_len(), 1024);
         assert_eq!(a.cache_max(), 336);
+    }
+
+    #[test]
+    fn sim_tiny_is_consistent() {
+        let c = Config::sim_tiny();
+        assert_eq!(c.backend, BackendKind::Sim);
+        assert_eq!(c.model.d_model % c.model.n_heads, 0);
+        assert_eq!(c.model.n_heads % c.model.n_kv_heads, 0);
+        assert!(c.apb.passing_len <= c.apb.block_len);
+        assert!(c.apb.anchor_len + c.apb.query_len <= c.apb.block_len);
+        assert_eq!(c.apb.doc_len(), c.apb.n_hosts * c.apb.block_len);
     }
 
     #[test]

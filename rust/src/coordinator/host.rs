@@ -1,5 +1,6 @@
-//! Host worker: one simulated GPU. Owns a PJRT engine + KV cache, executes
-//! the per-layer APB stages, and participates in fabric collectives.
+//! Host worker: one simulated GPU. Owns an execution backend (SimEngine or
+//! PJRT, per `Config::backend`) + KV cache, executes the per-layer APB
+//! stages, and participates in fabric collectives.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -9,15 +10,21 @@ use anyhow::{Context, Result};
 use crate::cluster::Fabric;
 use crate::config::{ApbOptions, Config};
 use crate::kvcache::KvCache;
-use crate::runtime::Engine;
+use crate::runtime::{create_backend, ExecBackend};
 use crate::util::rng::random_score;
 use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
 
 use super::timing::{DecodeTiming, PrefillTiming, Stopwatch};
 use super::{Cmd, Resp};
 
-pub fn run_host(rank: usize, cfg: Config, fabric: Arc<Fabric>, cmd_rx: Receiver<Cmd>,
-                resp_tx: Sender<Resp>, ready_tx: Sender<Result<usize>>) {
+pub fn run_host(
+    rank: usize,
+    cfg: Config,
+    fabric: Arc<Fabric>,
+    cmd_rx: Receiver<Cmd>,
+    resp_tx: Sender<Resp>,
+    ready_tx: Sender<Result<usize>>,
+) {
     match HostWorker::new(rank, cfg, fabric) {
         Ok(mut w) => {
             let _ = ready_tx.send(Ok(rank));
@@ -33,21 +40,21 @@ struct HostWorker {
     rank: usize,
     cfg: Config,
     fabric: Arc<Fabric>,
-    engine: Engine,
+    backend: Box<dyn ExecBackend>,
     cache: KvCache,
 }
 
 impl HostWorker {
     fn new(rank: usize, cfg: Config, fabric: Arc<Fabric>) -> Result<Self> {
-        let engine = Engine::load(&cfg, &[])
-            .with_context(|| format!("host {rank}: loading engine"))?;
+        let backend = create_backend(&cfg)
+            .with_context(|| format!("host {rank}: creating {} backend", cfg.backend.name()))?;
         let cache = KvCache::new(
             cfg.model.n_layers,
             cfg.apb.cache_max(),
             cfg.model.n_kv_heads,
             cfg.model.head_dim(),
         );
-        Ok(HostWorker { rank, cfg, fabric, engine, cache })
+        Ok(HostWorker { rank, cfg, fabric, backend, cache })
     }
 
     fn serve(&mut self, cmd_rx: Receiver<Cmd>, resp_tx: Sender<Resp>) {
@@ -66,7 +73,7 @@ impl HostWorker {
                 },
                 Cmd::QueryChunk { tokens } => {
                     let pos0 = (self.cfg.apb.query_len + self.cfg.apb.doc_len()) as i32;
-                    match self.decode_pass(&tokens, pos0, "query") {
+                    match self.decode_pass(&tokens, pos0) {
                         Ok((logits, timing)) => {
                             Resp::StepDone { host: self.rank, logits, timing }
                         }
@@ -76,7 +83,7 @@ impl HostWorker {
                 Cmd::DecodeStep { token, step } => {
                     let a = &self.cfg.apb;
                     let pos0 = (a.query_len + a.doc_len() + a.query_len + step) as i32;
-                    match self.decode_pass(&[token], pos0, "step") {
+                    match self.decode_pass(&[token], pos0) {
                         Ok((logits, timing)) => {
                             Resp::StepDone { host: self.rank, logits, timing }
                         }
@@ -92,8 +99,12 @@ impl HostWorker {
 
     /// Per-kv-head gather of compressed KV rows: k/v are the local slices
     /// [l_b, kh, hd]; idx[j] lists ascending positions for head j.
-    fn gather_compressed(&self, k: &Tensor, v: &Tensor, idx: &[Vec<usize>])
-                         -> (Tensor, Tensor) {
+    fn gather_compressed(
+        &self,
+        k: &Tensor,
+        v: &Tensor,
+        idx: &[Vec<usize>],
+    ) -> (Tensor, Tensor) {
         let (kh, hd) = (k.shape[1], k.shape[2]);
         let l_p = idx[0].len();
         let mut kc = Tensor::zeros(vec![l_p, kh, hd]);
@@ -111,21 +122,21 @@ impl HostWorker {
 
     /// Algorithm 2 — APB prefill over this host's [anchor | local] layout.
     /// Returns timing + the per-layer/per-head retained indices.
-    fn prefill(&mut self, tokens: &[i32], opts: &ApbOptions)
-               -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
+    fn prefill(
+        &mut self,
+        tokens: &[i32],
+        opts: &ApbOptions,
+    ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
         let cfg = &self.cfg;
         let (a, m) = (&cfg.apb, &cfg.model);
-        let eng = &self.engine;
+        let backend = self.backend.as_ref();
         self.cache.clear();
         let mut tm = PrefillTiming::default();
         let mut retained: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m.n_layers);
         let mut sw = Stopwatch::start();
         let total0 = std::time::Instant::now();
 
-        let tok_buf = eng.upload_i32(tokens, &[a.n_tot()])?;
-        let mut hidden = eng
-            .exec("embed_prefill", &[&tok_buf, eng.weight("embed")?])?
-            .remove(0);
+        let mut hidden = backend.embed(tokens)?;
         tm.embed_s += sw.lap();
 
         let pos_offset = (a.query_len + self.rank * a.block_len) as i32;
@@ -135,36 +146,10 @@ impl HostWorker {
         } else {
             0
         };
-        // Perf (§Perf iter 1): loop-invariant scalars staged once, not per
-        // layer — each upload is a full PJRT host-to-device call.
-        let pos_buf = eng.scalar_i32(pos_offset)?;
-        let pass_buf = eng.scalar_i32(pass_len)?;
-        let anchor_buf = eng.scalar_i32(n_anchor)?;
 
         for li in 0..m.n_layers {
             // --- layer_pre: QKV + RoPE + retaining scores ----------------
-            // The hidden-state buffer is uploaded once and reused by both
-            // layer stages (§Perf iter 1).
-            let h_buf = eng.upload_f32(&hidden)?;
-            let mut outs = eng.exec(
-                "layer_pre",
-                &[
-                    &h_buf,
-                    &pos_buf,
-                    eng.layer_weight(li, "attn_norm")?,
-                    eng.layer_weight(li, "wq")?,
-                    eng.layer_weight(li, "wk")?,
-                    eng.layer_weight(li, "wv")?,
-                    eng.layer_weight(li, "rh_w1")?,
-                    eng.layer_weight(li, "rh_b1")?,
-                    eng.layer_weight(li, "rh_w2")?,
-                    eng.layer_weight(li, "rh_b2")?,
-                ],
-            )?;
-            let scores = outs.pop().unwrap();
-            let v = outs.pop().unwrap();
-            let k = outs.pop().unwrap();
-            let q = outs.pop().unwrap();
+            let (q, k, v, scores) = backend.layer_pre(li, &hidden, pos_offset)?;
             tm.layer_pre_s += sw.lap();
 
             // --- Top-l_p selection (coordinator side, §3.4) ---------------
@@ -210,23 +195,9 @@ impl HostWorker {
             }
 
             // --- layer_post: APB attention + FFN (§3.6) -------------------
-            let args = [
-                h_buf,
-                eng.upload_f32(&q)?,
-                eng.upload_f32(&k)?,
-                eng.upload_f32(&v)?,
-                eng.upload_f32(&k_pass)?,
-                eng.upload_f32(&v_pass)?,
-            ];
-            let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-            refs.push(&pass_buf);
-            refs.push(&anchor_buf);
-            refs.push(eng.layer_weight(li, "wo")?);
-            refs.push(eng.layer_weight(li, "ffn_norm")?);
-            refs.push(eng.layer_weight(li, "w_gate")?);
-            refs.push(eng.layer_weight(li, "w_up")?);
-            refs.push(eng.layer_weight(li, "w_down")?);
-            hidden = eng.exec("layer_post", &refs)?.remove(0);
+            hidden = backend.layer_post(
+                li, &hidden, &q, &k, &v, &k_pass, &v_pass, pass_len, n_anchor,
+            )?;
             tm.layer_post_s += sw.lap();
 
             // --- cache append: local block KV only (anchor discarded) -----
@@ -239,64 +210,36 @@ impl HostWorker {
 
     /// Algorithm 3 — one decode pass (query chunk or single token).
     /// Returns logits on the last host only.
-    fn decode_pass(&mut self, tokens: &[i32], pos0: i32, tag: &str)
-                   -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+    fn decode_pass(
+        &mut self,
+        tokens: &[i32],
+        pos0: i32,
+    ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
         let cfg = &self.cfg;
         let (a, m) = (&cfg.apb, &cfg.model);
-        let eng = &self.engine;
+        let backend = self.backend.as_ref();
         let last = self.rank == a.n_hosts - 1;
-        let n = tokens.len();
         let mut tm = DecodeTiming::default();
         let mut sw = Stopwatch::start();
         let total0 = std::time::Instant::now();
 
-        let tok_buf = eng.upload_i32(tokens, &[n])?;
-        let embed_name = if tag == "query" { "embed_query" } else { "embed_step" };
-        let mut hidden = eng
-            .exec(embed_name, &[&tok_buf, eng.weight("embed")?])?
-            .remove(0);
+        let mut hidden = backend.embed(tokens)?;
         tm.pre_s += sw.lap();
 
-        // Perf (§Perf iter 1): position scalar staged once for all layers.
-        let pos_buf = eng.scalar_i32(pos0)?;
         for li in 0..m.n_layers {
             // decode_pre: project + rope the chunk.
-            let h_buf = eng.upload_f32(&hidden)?;
-            let mut outs = eng.exec(
-                &format!("decode_pre_{tag}"),
-                &[
-                    &h_buf,
-                    &pos_buf,
-                    eng.layer_weight(li, "attn_norm")?,
-                    eng.layer_weight(li, "wq")?,
-                    eng.layer_weight(li, "wk")?,
-                    eng.layer_weight(li, "wv")?,
-                ],
-            )?;
-            let v = outs.pop().unwrap();
-            let k = outs.pop().unwrap();
-            let q = outs.pop().unwrap();
+            let (q, k, v) = backend.decode_pre(li, &hidden, pos0)?;
             tm.pre_s += sw.lap();
 
             // Last host appends the chunk's KV before attending (line 7).
             let self_causal = if last {
                 self.cache.append(li, &k, &v)?;
-                1
+                true
             } else {
-                0
+                false
             };
             let lc = &self.cache.layers[li];
-            let attn_args = [
-                eng.upload_f32(&q)?,
-                eng.upload_f32(&lc.k)?,
-                eng.upload_f32(&lc.v)?,
-                eng.scalar_i32(lc.len as i32)?,
-                eng.scalar_i32(self_causal)?,
-            ];
-            let refs: Vec<&xla::PjRtBuffer> = attn_args.iter().collect();
-            let mut outs = eng.exec(&format!("decode_attn_{tag}"), &refs)?;
-            let lse = outs.pop().unwrap();
-            let out = outs.pop().unwrap();
+            let (out, lse) = backend.decode_attn(&q, &lc.k, &lc.v, lc.len, self_causal)?;
             tm.attn_s += sw.lap();
 
             // Gather all hosts' partials (line 9) ...
@@ -310,25 +253,12 @@ impl HostWorker {
             tm.merge_s += sw.lap();
 
             // decode_post: O-proj + FFN, replicated (identical on all hosts).
-            let post_args = [eng.upload_f32(&hidden)?, eng.upload_f32(&att)?];
-            let mut refs: Vec<&xla::PjRtBuffer> = post_args.iter().collect();
-            refs.push(eng.layer_weight(li, "wo")?);
-            refs.push(eng.layer_weight(li, "ffn_norm")?);
-            refs.push(eng.layer_weight(li, "w_gate")?);
-            refs.push(eng.layer_weight(li, "w_up")?);
-            refs.push(eng.layer_weight(li, "w_down")?);
-            hidden = eng.exec(&format!("decode_post_{tag}"), &refs)?.remove(0);
+            hidden = backend.decode_post(li, &hidden, &att)?;
             tm.post_s += sw.lap();
         }
 
         let logits = if last {
-            let h_buf = eng.upload_f32(&hidden)?;
-            let l = eng
-                .exec(
-                    &format!("lm_head_{tag}"),
-                    &[&h_buf, eng.weight("final_norm")?, eng.weight("lm_head")?],
-                )?
-                .remove(0);
+            let l = backend.lm_head(&hidden)?;
             tm.lm_head_s += sw.lap();
             Some(l.data)
         } else {

@@ -308,23 +308,30 @@ mod tests {
     use super::*;
 
     fn fake_cfg() -> Config {
-        // Hand-built config (no artifacts needed for token-layout tests).
-        let manifest = crate::util::json::Json::parse("{}").unwrap();
-        Config {
-            name: "fake".into(),
-            seed: 0,
-            model: crate::config::ModelConfig {
-                vocab_size: 64, n_layers: 2, d_model: 32, n_heads: 4,
-                n_kv_heads: 2, d_ff: 64, rope_theta: 1e4, rms_eps: 1e-5,
+        // Hand-built sim config (no artifacts needed for token-layout tests).
+        Config::sim(
+            "fake",
+            crate::config::ModelConfig {
+                vocab_size: 64,
+                n_layers: 2,
+                d_model: 32,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_ff: 64,
+                rope_theta: 1e4,
+                rms_eps: 1e-5,
                 retaining_hidden: 16,
             },
-            apb: crate::config::ApbParams {
-                n_hosts: 3, block_len: 8, anchor_len: 4, query_len: 2,
-                passing_len: 2, max_new_tokens: 4,
+            crate::config::ApbParams {
+                n_hosts: 3,
+                block_len: 8,
+                anchor_len: 4,
+                query_len: 2,
+                passing_len: 2,
+                max_new_tokens: 4,
             },
-            dir: std::path::PathBuf::from("/nonexistent"),
-            manifest,
-        }
+            0,
+        )
     }
 
     #[test]

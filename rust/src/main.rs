@@ -47,8 +47,8 @@ fn main() -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
-    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
-    println!("config '{}' from {}", cfg.name, cfg.dir.display());
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
+    println!("config '{}' (backend: {})", cfg.name, cfg.backend.name());
     println!("  model: d={} L={} heads={}/{} ffn={} vocab={}",
              cfg.model.d_model, cfg.model.n_layers, cfg.model.n_heads,
              cfg.model.n_kv_heads, cfg.model.d_ff, cfg.model.vocab_size);
@@ -56,12 +56,16 @@ fn info(args: &Args) -> Result<()> {
              cfg.apb.n_hosts, cfg.apb.block_len, cfg.apb.anchor_len,
              cfg.apb.query_len, cfg.apb.passing_len, cfg.apb.pass_max(),
              cfg.apb.cache_max());
-    let arts = cfg.manifest.req("artifacts")?.as_obj().unwrap();
-    println!("  artifacts ({}):", arts.len());
-    for (name, meta) in arts {
-        let ins = meta.req("inputs")?.as_arr().unwrap().len();
-        let outs = meta.req("outputs")?.as_arr().unwrap().len();
-        println!("    {name:<18} {ins:>2} inputs -> {outs} outputs");
+    match cfg.manifest.get("artifacts").and_then(|a| a.as_obj()) {
+        Some(arts) => {
+            println!("  artifacts ({}):", arts.len());
+            for (name, meta) in arts {
+                let ins = meta.req("inputs")?.as_arr().unwrap().len();
+                let outs = meta.req("outputs")?.as_arr().unwrap().len();
+                println!("    {name:<18} {ins:>2} inputs -> {outs} outputs");
+            }
+        }
+        None => println!("  artifacts: none (native SimEngine, synthetic weights)"),
     }
     Ok(())
 }
@@ -73,7 +77,7 @@ fn default_request(cfg: &apb::config::Config, seed: u64) -> (Vec<i32>, Vec<i32>)
 }
 
 fn run(args: &Args) -> Result<()> {
-    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
     let cluster = Cluster::start(&cfg)?;
     let (doc, query) = default_request(&cfg, args.usize_or("seed", 1)? as u64);
     let opts = if args.has("star-mode") {
@@ -90,7 +94,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let cfg = apb::load_config(&args.str_or("config", "tiny"))?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
     let cluster = Cluster::start(&cfg)?;
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;

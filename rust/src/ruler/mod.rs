@@ -82,21 +82,29 @@ mod tests {
     use crate::config::{ApbParams, ModelConfig};
 
     fn cfg() -> Config {
-        Config {
-            name: "t".into(),
-            seed: 0,
-            model: ModelConfig {
-                vocab_size: 64, n_layers: 2, d_model: 32, n_heads: 4,
-                n_kv_heads: 2, d_ff: 64, rope_theta: 1e4, rms_eps: 1e-5,
+        Config::sim(
+            "t",
+            ModelConfig {
+                vocab_size: 64,
+                n_layers: 2,
+                d_model: 32,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_ff: 64,
+                rope_theta: 1e4,
+                rms_eps: 1e-5,
                 retaining_hidden: 16,
             },
-            apb: ApbParams {
-                n_hosts: 4, block_len: 32, anchor_len: 8, query_len: 4,
-                passing_len: 8, max_new_tokens: 8,
+            ApbParams {
+                n_hosts: 4,
+                block_len: 32,
+                anchor_len: 8,
+                query_len: 4,
+                passing_len: 8,
+                max_new_tokens: 8,
             },
-            dir: "/tmp".into(),
-            manifest: crate::util::json::Json::Null,
-        }
+            0,
+        )
     }
 
     #[test]

@@ -1,226 +1,141 @@
-//! PJRT runtime: load HLO-text artifacts produced by `python/compile/aot.py`,
-//! compile them on the CPU PJRT client, and execute them from the
-//! coordinator hot path.
+//! Execution backends for the per-host stage functions.
 //!
-//! Two deliberate performance choices (EXPERIMENTS.md §Perf):
-//!  * model weights are uploaded to device buffers ONCE per engine and
-//!    executables run through `execute_b`, so the per-call cost is only the
-//!    activation transfers;
-//!  * one `Engine` per simulated host — mirroring the paper's one-process-
-//!    per-GPU topology and keeping PJRT state thread-local.
+//! The coordinator hot path (`coordinator::host`) is written against the
+//! [`ExecBackend`] trait — one typed method per stage of Algorithm 2
+//! (prefill) and Algorithm 3 (decode). Two implementations exist:
+//!
+//! * [`SimEngine`] (`runtime::sim`, always built): a pure-Rust engine that
+//!   natively executes the tiny-model stages (embed → APB-masked attention →
+//!   SwiGLU MLP → LM head) with deterministic synthetic weights derived from
+//!   `util::rng`. No Python, no XLA, no artifacts — this is what CI runs.
+//! * `PjrtEngine` (`runtime::pjrt`, behind the `pjrt` cargo feature): the
+//!   original PJRT runtime that compiles HLO-text artifacts emitted by
+//!   `python/compile/aot.py` and replays them bit-for-bit against golden
+//!   files. Requires the `xla` crate (not vendored in the offline image).
+//!
+//! [`create_backend`] picks the implementation from `Config::backend`.
 
-use std::collections::BTreeMap;
+pub mod sim;
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
-          XlaComputation};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::config::Config;
+use anyhow::{Context, Result};
+
+use crate::config::{BackendKind, Config};
 use crate::util::blob::Blob;
 use crate::util::json::Json;
 use crate::util::tensor::Tensor;
 
-/// Input/output declaration recorded by the AOT manifest.
-#[derive(Debug, Clone)]
-pub struct IoSpec {
-    pub name: String,
-    pub dtype: String,
-    pub shape: Vec<usize>,
+pub use sim::SimEngine;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Artifact, Engine, HostArg, IoSpec};
+
+/// Per-host execution backend: the typed stage functions of the APB model.
+///
+/// All tensors are host-side dense f32 (`util::tensor::Tensor`); backends
+/// that stage device buffers (PJRT) do so internally. Shapes follow
+/// `python/compile/model.py`:
+///
+/// * `hidden`: `[n, d_model]`
+/// * `q`: `[n, n_heads, head_dim]`, `k`/`v`: `[n, n_kv_heads, head_dim]`
+/// * `scores`: `[block_len, n_kv_heads]` compressor scores (local rows only)
+/// * `lse`: `[n, n_heads]` log-sum-exp of the partial attention
+///
+/// Backends are constructed and used entirely inside one host-worker thread
+/// (PJRT state is deliberately thread-local), so no `Send` bound is imposed.
+pub trait ExecBackend {
+    /// Which backend this is (for logs and reports).
+    fn kind(&self) -> BackendKind;
+
+    /// Token embedding: `tokens [n] -> hidden [n, d]`.
+    fn embed(&self, tokens: &[i32]) -> Result<Tensor>;
+
+    /// Prefill stage 1 (Algorithm 2): QKV projection + RoPE + retaining-head
+    /// scores over the local block. `hidden` rows are `[anchor | local]`;
+    /// `pos_offset` is the global position of the first local token.
+    /// Returns `(q, k, v, scores)`.
+    fn layer_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos_offset: i32,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)>;
+
+    /// Prefill stage 2 (Algorithm 2): APB modified-mask attention over
+    /// `[anchor | passing | local]` keys, then O-proj + residual + FFN.
+    /// `k_pass`/`v_pass` are `[pass_max, kh, hd]` with valid prefix
+    /// `pass_len`; `n_anchor` is 0 on host 0 and `l_aq` elsewhere.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_post(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        k_pass: &Tensor,
+        v_pass: &Tensor,
+        pass_len: i32,
+        n_anchor: i32,
+    ) -> Result<Tensor>;
+
+    /// Decode stage 1 (Algorithm 3): project + RoPE the new-token chunk at
+    /// positions `pos0..pos0+n`. Returns `(q, k, v)`.
+    fn decode_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos0: i32,
+    ) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// Decode stage 2: per-host partial attention of the chunk against the
+    /// padded local KV cache, returning `(out, lse)` for the online-softmax
+    /// merge. If `self_causal`, the chunk's own KV has been appended and row
+    /// `i` sees `j < cache_len - (n-1-i)`; otherwise `j < cache_len`.
+    fn decode_attn(
+        &self,
+        q: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_len: usize,
+        self_causal: bool,
+    ) -> Result<(Tensor, Tensor)>;
+
+    /// Decode stage 3: merged attention -> O-proj + residual + FFN.
+    fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor>;
+
+    /// Final norm + LM head: `hidden [n, d] -> logits [n, vocab]`.
+    fn lm_head(&self, hidden: &Tensor) -> Result<Tensor>;
 }
 
-pub struct Artifact {
-    pub name: String,
-    pub exe: PjRtLoadedExecutable,
-    pub inputs: Vec<IoSpec>,
-    pub outputs: Vec<IoSpec>,
-}
-
-/// A per-host PJRT engine holding the compiled executables and the
-/// device-resident weight buffers.
-pub struct Engine {
-    pub client: PjRtClient,
-    artifacts: BTreeMap<String, Artifact>,
-    weights: BTreeMap<String, PjRtBuffer>,
-}
-
-fn parse_iospec(v: &Json, default_name: &str) -> Result<IoSpec> {
-    Ok(IoSpec {
-        name: v
-            .get("name")
-            .and_then(|n| n.as_str())
-            .unwrap_or(default_name)
-            .to_string(),
-        dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
-        shape: v.req("shape")?.usize_vec().context("shape")?,
-    })
-}
-
-impl Engine {
-    /// Compile the named artifacts (or all from the manifest when `names`
-    /// is empty) and upload all weights.
-    pub fn load(cfg: &Config, names: &[&str]) -> Result<Engine> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest_arts = cfg
-            .manifest
-            .req("artifacts")?
-            .as_obj()
-            .context("manifest artifacts not an object")?;
-        let mut artifacts = BTreeMap::new();
-        for (name, meta) in manifest_arts {
-            if !names.is_empty() && !names.contains(&name.as_str()) {
-                continue;
-            }
-            let file = meta.req("file")?.as_str().context("artifact file")?;
-            let path = cfg.dir.join(file);
-            let proto = HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-            let inputs = meta
-                .req("inputs")?
-                .as_arr()
-                .context("inputs")?
-                .iter()
-                .map(|v| parse_iospec(v, "?"))
-                .collect::<Result<Vec<_>>>()?;
-            let outputs = meta
-                .req("outputs")?
-                .as_arr()
-                .context("outputs")?
-                .iter()
-                .enumerate()
-                .map(|(i, v)| parse_iospec(v, &format!("out{i}")))
-                .collect::<Result<Vec<_>>>()?;
-            artifacts.insert(
-                name.clone(),
-                Artifact { name: name.clone(), exe, inputs, outputs },
-            );
-        }
-        if artifacts.is_empty() {
-            bail!("no artifacts loaded from {}", cfg.dir.display());
-        }
-
-        // Upload weights once.
-        let blob = Blob::load(&cfg.dir, cfg.manifest.req("weights")?)?;
-        let mut weights = BTreeMap::new();
-        for name in blob.names().map(str::to_string).collect::<Vec<_>>() {
-            let t = blob.tensor(&name)?;
-            let buf = client
-                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-                .map_err(|e| anyhow::anyhow!("uploading weight {name}: {e:?}"))?;
-            weights.insert(name, buf);
-        }
-        Ok(Engine { client, artifacts, weights })
-    }
-
-    pub fn artifact_names(&self) -> Vec<&str> {
-        self.artifacts.keys().map(|s| s.as_str()).collect()
-    }
-
-    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
-        self.artifacts
-            .get(name)
-            .with_context(|| format!("artifact '{name}' not loaded"))
-    }
-
-    pub fn weight(&self, name: &str) -> Result<&PjRtBuffer> {
-        self.weights
-            .get(name)
-            .with_context(|| format!("weight '{name}' not found"))
-    }
-
-    /// Per-layer weight lookup (`layers.{i}.{short}`).
-    pub fn layer_weight(&self, layer: usize, short: &str) -> Result<&PjRtBuffer> {
-        self.weight(&format!("layers.{layer}.{short}"))
-    }
-
-    pub fn upload_f32(&self, t: &Tensor) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
-    }
-
-    pub fn upload_i32(&self, v: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<i32>(v, shape, None)
-            .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
-    }
-
-    pub fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
-        self.upload_i32(&[v], &[])
-    }
-
-    /// Execute an artifact with pre-staged buffers; outputs decoded to
-    /// host-side f32 tensors using the manifest shapes.
-    pub fn exec(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
-        let art = self.artifact(name)?;
-        if args.len() != art.inputs.len() {
-            bail!(
-                "artifact '{name}' wants {} inputs, got {}",
-                art.inputs.len(),
-                args.len()
-            );
-        }
-        let outs = art
-            .exe
-            .execute_b(args)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
-        let tuple = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: single tuple literal.
-        let parts: Vec<Literal> = tuple
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))?;
-        if parts.len() != art.outputs.len() {
-            bail!(
-                "artifact '{name}': manifest says {} outputs, tuple has {}",
-                art.outputs.len(),
-                parts.len()
-            );
-        }
-        let mut tensors = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&art.outputs) {
-            let lit = match lit.ty() {
-                Ok(ElementType::F32) => lit,
-                _ => lit
-                    .convert(ElementType::F32.primitive_type())
-                    .map_err(|e| anyhow::anyhow!("converting {name} output: {e:?}"))?,
-            };
-            let data = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("reading {name} output: {e:?}"))?;
-            tensors.push(Tensor::new(spec.shape.clone(), data)?);
-        }
-        Ok(tensors)
-    }
-
-    /// Convenience: execute with host-side values (tests / cold paths; the
-    /// hot path stages buffers itself and reuses weight buffers).
-    pub fn exec_t(&self, name: &str, args: &[HostArg]) -> Result<Vec<Tensor>> {
-        let staged: Vec<PjRtBuffer> = args
-            .iter()
-            .map(|a| match a {
-                HostArg::F32(t) => self.upload_f32(t),
-                HostArg::I32s(v, shape) => self.upload_i32(v, shape),
-                HostArg::ScalarI32(v) => self.scalar_i32(*v),
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let refs: Vec<&PjRtBuffer> = staged.iter().collect();
-        self.exec(name, &refs)
+/// Instantiate the backend a config asks for. `Sim` always works; `Pjrt`
+/// needs the `pjrt` cargo feature (and artifacts on disk).
+pub fn create_backend(cfg: &Config) -> Result<Box<dyn ExecBackend>> {
+    match cfg.backend {
+        BackendKind::Sim => Ok(Box::new(SimEngine::new(cfg)?)),
+        BackendKind::Pjrt => load_pjrt(cfg),
     }
 }
 
-/// Host-side argument for `exec_t` cold paths.
-pub enum HostArg {
-    F32(Tensor),
-    I32s(Vec<i32>, Vec<usize>),
-    ScalarI32(i32),
+#[cfg(feature = "pjrt")]
+fn load_pjrt(cfg: &Config) -> Result<Box<dyn ExecBackend>> {
+    Ok(Box::new(pjrt::Engine::load(cfg)?))
 }
 
-/// Load the golden blob recorded by aot.py (tiny config only).
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt(cfg: &Config) -> Result<Box<dyn ExecBackend>> {
+    anyhow::bail!(
+        "config '{}' requests the PJRT backend, but this build has no `pjrt` \
+         feature; rebuild with `--features pjrt` (plus a vendored `xla` crate) \
+         or use a Sim config (Config::sim_tiny / load_config_or_sim)",
+        cfg.name
+    )
+}
+
+/// Load the golden blob recorded by aot.py (tiny config only). Sim configs
+/// carry no manifest and return `Ok(None)`.
 pub fn load_golden(cfg: &Config) -> Result<Option<(Blob, usize)>> {
     match cfg.manifest.get("golden") {
         None | Some(Json::Null) => Ok(None),
@@ -228,5 +143,32 @@ pub fn load_golden(cfg: &Config) -> Result<Option<(Blob, usize)>> {
             let n_new = g.req("n_new")?.as_usize().context("golden n_new")?;
             Ok(Some((Blob::load(&cfg.dir, g)?, n_new)))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_always_constructs() {
+        let cfg = Config::sim_tiny();
+        let b = create_backend(&cfg).expect("sim backend");
+        assert_eq!(b.kind(), BackendKind::Sim);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_gated_off_by_default() {
+        let mut cfg = Config::sim_tiny();
+        cfg.backend = BackendKind::Pjrt;
+        let err = create_backend(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn sim_config_has_no_golden() {
+        let cfg = Config::sim_tiny();
+        assert!(load_golden(&cfg).unwrap().is_none());
     }
 }

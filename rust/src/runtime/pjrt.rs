@@ -1,0 +1,403 @@
+//! PJRT runtime (behind the `pjrt` cargo feature): load HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them on the CPU PJRT client,
+//! and execute them from the coordinator hot path through [`ExecBackend`].
+//!
+//! Two deliberate performance choices (EXPERIMENTS.md §Perf):
+//!  * model weights are uploaded to device buffers ONCE per engine and
+//!    executables run through `execute_b`, so the per-call cost is only the
+//!    activation transfers;
+//!  * one `Engine` per simulated host — mirroring the paper's one-process-
+//!    per-GPU topology and keeping PJRT state thread-local.
+//!
+//! Artifact names are static-shape specialized (`embed_prefill` /
+//! `embed_query` / `embed_step`, `decode_*_query` / `decode_*_step`); the
+//! trait impl dispatches on the runtime chunk length.
+//!
+//! Known trade-off of the trait-granularity refactor: the pre-trait hot
+//! path staged the hidden buffer once per layer (shared by layer_pre and
+//! layer_post) and loop-invariant scalars (pos / pass_len / n_anchor) once
+//! per pass; the typed stage methods re-upload them per call. That costs
+//! O(n_layers) extra host-to-device transfers per pass versus the §Perf
+//! iter 1 numbers in EXPERIMENTS.md. Recover it, if it matters again, by
+//! adding staged-buffer caching inside this backend (keyed on the hidden
+//! pointer / scalar value), not by widening the trait.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+use xla::{
+    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+use crate::config::{BackendKind, Config};
+use crate::util::blob::Blob;
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+use super::ExecBackend;
+
+/// Input/output declaration recorded by the AOT manifest.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+pub struct Artifact {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// A per-host PJRT engine holding the compiled executables and the
+/// device-resident weight buffers.
+pub struct Engine {
+    pub client: PjRtClient,
+    cfg: Config,
+    artifacts: BTreeMap<String, Artifact>,
+    weights: BTreeMap<String, PjRtBuffer>,
+}
+
+fn parse_iospec(v: &Json, default_name: &str) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or(default_name)
+            .to_string(),
+        dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+        shape: v.req("shape")?.usize_vec().context("shape")?,
+    })
+}
+
+impl Engine {
+    /// Compile every artifact in the manifest and upload all weights.
+    pub fn load(cfg: &Config) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_arts = cfg
+            .manifest
+            .req("artifacts")?
+            .as_obj()
+            .context("manifest artifacts not an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in manifest_arts {
+            let file = meta.req("file")?.as_str().context("artifact file")?;
+            let path = cfg.dir.join(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            let inputs = meta
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|v| parse_iospec(v, "?"))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = meta
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| parse_iospec(v, &format!("out{i}")))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                Artifact { name: name.clone(), exe, inputs, outputs },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("no artifacts loaded from {}", cfg.dir.display());
+        }
+
+        // Upload weights once.
+        let blob = Blob::load(&cfg.dir, cfg.manifest.req("weights")?)?;
+        let mut weights = BTreeMap::new();
+        for name in blob.names().map(str::to_string).collect::<Vec<_>>() {
+            let t = blob.tensor(&name)?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading weight {name}: {e:?}"))?;
+            weights.insert(name, buf);
+        }
+        Ok(Engine { client, cfg: cfg.clone(), artifacts, weights })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.weights
+            .get(name)
+            .with_context(|| format!("weight '{name}' not found"))
+    }
+
+    /// Per-layer weight lookup (`layers.{i}.{short}`).
+    pub fn layer_weight(&self, layer: usize, short: &str) -> Result<&PjRtBuffer> {
+        self.weight(&format!("layers.{layer}.{short}"))
+    }
+
+    pub fn upload_f32(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
+    }
+
+    pub fn upload_i32(&self, v: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(v, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
+    }
+
+    pub fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        self.upload_i32(&[v], &[])
+    }
+
+    /// Execute an artifact with pre-staged buffers; outputs decoded to
+    /// host-side f32 tensors using the manifest shapes.
+    pub fn exec(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        if args.len() != art.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                art.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = art
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: single tuple literal.
+        let parts: Vec<Literal> = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "artifact '{name}': manifest says {} outputs, tuple has {}",
+                art.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&art.outputs) {
+            let lit = match lit.ty() {
+                Ok(ElementType::F32) => lit,
+                _ => lit
+                    .convert(ElementType::F32.primitive_type())
+                    .map_err(|e| anyhow::anyhow!("converting {name} output: {e:?}"))?,
+            };
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading {name} output: {e:?}"))?;
+            tensors.push(Tensor::new(spec.shape.clone(), data)?);
+        }
+        Ok(tensors)
+    }
+
+    /// Convenience: execute with host-side values (tests / cold paths; the
+    /// hot path stages buffers itself and reuses weight buffers).
+    pub fn exec_t(&self, name: &str, args: &[HostArg]) -> Result<Vec<Tensor>> {
+        let staged: Vec<PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                HostArg::F32(t) => self.upload_f32(t),
+                HostArg::I32s(v, shape) => self.upload_i32(v, shape),
+                HostArg::ScalarI32(v) => self.scalar_i32(*v),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&PjRtBuffer> = staged.iter().collect();
+        self.exec(name, &refs)
+    }
+
+    /// Static-shape artifact tag for a decode chunk of `n` tokens.
+    ///
+    /// The `_query` / `_step` artifact families are the SAME stage function
+    /// lowered at two static chunk shapes (aot.py), so shape is the only
+    /// thing that distinguishes them — when `query_len == 1` the families
+    /// coincide and either dispatch is correct by construction. If aot.py
+    /// ever specializes them semantically, this must thread an explicit tag
+    /// instead.
+    fn chunk_tag(&self, n: usize) -> &'static str {
+        if n == self.cfg.apb.query_len {
+            "query"
+        } else {
+            "step"
+        }
+    }
+}
+
+/// Host-side argument for `exec_t` cold paths.
+pub enum HostArg {
+    F32(Tensor),
+    I32s(Vec<i32>, Vec<usize>),
+    ScalarI32(i32),
+}
+
+impl ExecBackend for Engine {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Tensor> {
+        let n = tokens.len();
+        let name = if n == self.cfg.apb.n_tot() {
+            "embed_prefill"
+        } else if n == self.cfg.apb.query_len {
+            "embed_query"
+        } else {
+            "embed_step"
+        };
+        let tok_buf = self.upload_i32(tokens, &[n])?;
+        Ok(self.exec(name, &[&tok_buf, self.weight("embed")?])?.remove(0))
+    }
+
+    fn layer_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos_offset: i32,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let h_buf = self.upload_f32(hidden)?;
+        let pos_buf = self.scalar_i32(pos_offset)?;
+        let mut outs = self.exec(
+            "layer_pre",
+            &[
+                &h_buf,
+                &pos_buf,
+                self.layer_weight(layer, "attn_norm")?,
+                self.layer_weight(layer, "wq")?,
+                self.layer_weight(layer, "wk")?,
+                self.layer_weight(layer, "wv")?,
+                self.layer_weight(layer, "rh_w1")?,
+                self.layer_weight(layer, "rh_b1")?,
+                self.layer_weight(layer, "rh_w2")?,
+                self.layer_weight(layer, "rh_b2")?,
+            ],
+        )?;
+        let scores = outs.pop().context("layer_pre scores")?;
+        let v = outs.pop().context("layer_pre v")?;
+        let k = outs.pop().context("layer_pre k")?;
+        let q = outs.pop().context("layer_pre q")?;
+        Ok((q, k, v, scores))
+    }
+
+    fn layer_post(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        k_pass: &Tensor,
+        v_pass: &Tensor,
+        pass_len: i32,
+        n_anchor: i32,
+    ) -> Result<Tensor> {
+        let args = [
+            self.upload_f32(hidden)?,
+            self.upload_f32(q)?,
+            self.upload_f32(k)?,
+            self.upload_f32(v)?,
+            self.upload_f32(k_pass)?,
+            self.upload_f32(v_pass)?,
+            self.scalar_i32(pass_len)?,
+            self.scalar_i32(n_anchor)?,
+        ];
+        let mut refs: Vec<&PjRtBuffer> = args.iter().collect();
+        refs.push(self.layer_weight(layer, "wo")?);
+        refs.push(self.layer_weight(layer, "ffn_norm")?);
+        refs.push(self.layer_weight(layer, "w_gate")?);
+        refs.push(self.layer_weight(layer, "w_up")?);
+        refs.push(self.layer_weight(layer, "w_down")?);
+        Ok(self.exec("layer_post", &refs)?.remove(0))
+    }
+
+    fn decode_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos0: i32,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let tag = self.chunk_tag(hidden.shape[0]);
+        let h_buf = self.upload_f32(hidden)?;
+        let pos_buf = self.scalar_i32(pos0)?;
+        let mut outs = self.exec(
+            &format!("decode_pre_{tag}"),
+            &[
+                &h_buf,
+                &pos_buf,
+                self.layer_weight(layer, "attn_norm")?,
+                self.layer_weight(layer, "wq")?,
+                self.layer_weight(layer, "wk")?,
+                self.layer_weight(layer, "wv")?,
+            ],
+        )?;
+        let v = outs.pop().context("decode_pre v")?;
+        let k = outs.pop().context("decode_pre k")?;
+        let q = outs.pop().context("decode_pre q")?;
+        Ok((q, k, v))
+    }
+
+    fn decode_attn(
+        &self,
+        q: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_len: usize,
+        self_causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        let tag = self.chunk_tag(q.shape[0]);
+        let args = [
+            self.upload_f32(q)?,
+            self.upload_f32(k_cache)?,
+            self.upload_f32(v_cache)?,
+            self.scalar_i32(cache_len as i32)?,
+            self.scalar_i32(self_causal as i32)?,
+        ];
+        let refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let mut outs = self.exec(&format!("decode_attn_{tag}"), &refs)?;
+        let lse = outs.pop().context("decode_attn lse")?;
+        let out = outs.pop().context("decode_attn out")?;
+        Ok((out, lse))
+    }
+
+    fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor> {
+        let tag = self.chunk_tag(hidden.shape[0]);
+        let args = [self.upload_f32(hidden)?, self.upload_f32(att)?];
+        let mut refs: Vec<&PjRtBuffer> = args.iter().collect();
+        refs.push(self.layer_weight(layer, "wo")?);
+        refs.push(self.layer_weight(layer, "ffn_norm")?);
+        refs.push(self.layer_weight(layer, "w_gate")?);
+        refs.push(self.layer_weight(layer, "w_up")?);
+        refs.push(self.layer_weight(layer, "w_down")?);
+        Ok(self.exec(&format!("decode_post_{tag}"), &refs)?.remove(0))
+    }
+
+    fn lm_head(&self, hidden: &Tensor) -> Result<Tensor> {
+        let tag = self.chunk_tag(hidden.shape[0]);
+        let h_buf = self.upload_f32(hidden)?;
+        Ok(self
+            .exec(
+                &format!("lm_head_{tag}"),
+                &[&h_buf, self.weight("final_norm")?, self.weight("lm_head")?],
+            )?
+            .remove(0))
+    }
+}

@@ -1,0 +1,770 @@
+//! `SimEngine` — the pure-Rust execution backend.
+//!
+//! Natively executes the tiny-model stage functions with the exact semantics
+//! of `python/compile/model.py` + `python/compile/kernels/ref.py` (RMSNorm,
+//! RoPE, GQA attention under the APB modified mask, SwiGLU FFN, gelu
+//! retaining-head MLP), on `util::tensor` dense f32 tensors with f64
+//! accumulation. No Python, no XLA, no artifacts: weights are synthesized
+//! deterministically from `util::rng::Rng` keyed on `Config::seed`.
+//!
+//! Two structural properties of *trained* models are imposed on the
+//! synthetic weights (mirroring `model.init_params` — DESIGN.md §2):
+//!
+//! * query/key projections are aligned per GQA group
+//!   (`wq[:, head] = wk[:, kv_head] + 0.5·noise`), so `q·k` is elevated when
+//!   token i matches token j — without this no retrieval mechanism exists
+//!   and every retention experiment is void;
+//! * the retaining heads are the sim stand-in for the *trained* compressor
+//!   (`train_retaining.py` on the python side): the gelu MLP is wired to
+//!   read the query-similarity feature of `build_features`, so
+//!   query-relevant KV units score high, exactly what training produces.
+
+use anyhow::{bail, Result};
+
+use crate::config::{BackendKind, Config, ModelConfig};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::ExecBackend;
+
+// ---------------------------------------------------------------------------
+// Math primitives (pub: reused by the numerics test suite and benches)
+// ---------------------------------------------------------------------------
+
+/// Dense matmul `[n, a] x [a, b] -> [n, b]` with f64 accumulation.
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(w.rank(), 2);
+    let (n, a) = (x.shape[0], x.shape[1]);
+    let (aw, b) = (w.shape[0], w.shape[1]);
+    assert_eq!(a, aw, "matmul inner dims {a} vs {aw}");
+    let mut out = Tensor::zeros(vec![n, b]);
+    let mut acc = vec![0f64; b];
+    for i in 0..n {
+        for slot in acc.iter_mut() {
+            *slot = 0.0;
+        }
+        for t in 0..a {
+            let xv = x.data[i * a + t] as f64;
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[t * b..(t + 1) * b];
+            for (slot, &wv) in acc.iter_mut().zip(wrow) {
+                *slot += xv * wv as f64;
+            }
+        }
+        for (o, &slot) in out.data[i * b..(i + 1) * b].iter_mut().zip(&acc) {
+            *o = slot as f32;
+        }
+    }
+    out
+}
+
+/// Row-wise RMSNorm: `x * rsqrt(mean(x^2) + eps) * w`, `w` broadcast per row.
+pub fn rmsnorm(x: &Tensor, w: &[f32], eps: f64) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (n, d) = (x.shape[0], x.shape[1]);
+    assert_eq!(w.len(), d);
+    let mut out = Tensor::zeros(vec![n, d]);
+    for i in 0..n {
+        let row = &x.data[i * d..(i + 1) * d];
+        let var: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let scale = 1.0 / (var + eps).sqrt();
+        for (o, (&xv, &wv)) in out.data[i * d..(i + 1) * d]
+            .iter_mut()
+            .zip(row.iter().zip(w))
+        {
+            *o = (xv as f64 * scale * wv as f64) as f32;
+        }
+    }
+    out
+}
+
+/// Rotary embedding on `x [n, heads, hd]` at integer `positions [n]`
+/// (half-split rotation, matching `model.rope`).
+pub fn rope(x: &Tensor, positions: &[i32], theta: f64) -> Tensor {
+    assert_eq!(x.rank(), 3);
+    let (n, h, hd) = (x.shape[0], x.shape[1], x.shape[2]);
+    assert_eq!(positions.len(), n);
+    let half = hd / 2;
+    let freqs: Vec<f64> = (0..half)
+        .map(|t| theta.powf(-(t as f64) / half as f64))
+        .collect();
+    let mut out = x.clone();
+    for i in 0..n {
+        let pos = positions[i] as f64;
+        for (t, &freq) in freqs.iter().enumerate() {
+            let angle = pos * freq;
+            let (sin, cos) = angle.sin_cos();
+            for hh in 0..h {
+                let base = (i * h + hh) * hd;
+                let x1 = x.data[base + t] as f64;
+                let x2 = x.data[base + half + t] as f64;
+                out.data[base + t] = (x1 * cos - x2 * sin) as f32;
+                out.data[base + half + t] = (x1 * sin + x2 * cos) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// tanh-approximated gelu, matching `ref.retaining_head_ref`.
+pub fn gelu(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Dense masked GQA attention, the rust twin of `ref.attention_ref`:
+/// `q [nq, h, hd]`, `k`/`v` `[nk, kh, hd]`, query head `i` reads kv head
+/// `i / (h/kh)`. `visible(qi, kj)` is the boolean mask. Returns
+/// `(out [nq, h, hd], lse [nq, h])`; rows with no visible keys get output 0
+/// and lse `-inf` (the convention the online-softmax merge relies on).
+pub fn masked_attention<F: Fn(usize, usize) -> bool>(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    visible: F,
+) -> (Tensor, Tensor) {
+    assert_eq!(q.rank(), 3);
+    assert_eq!(k.rank(), 3);
+    assert_eq!(k.shape, v.shape);
+    let (nq, h, hd) = (q.shape[0], q.shape[1], q.shape[2]);
+    let (nk, kh) = (k.shape[0], k.shape[1]);
+    assert_eq!(k.shape[2], hd);
+    assert_eq!(h % kh, 0, "GQA heads {h} not divisible by kv heads {kh}");
+    let g = h / kh;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = Tensor::zeros(vec![nq, h, hd]);
+    let mut lse = Tensor::zeros(vec![nq, h]);
+    let mut vis_idx: Vec<usize> = Vec::with_capacity(nk);
+    let mut scores = vec![0f64; nk];
+    let mut acc = vec![0f64; hd];
+    for i in 0..nq {
+        // The mask depends only on (qi, kj): evaluate it once per row and
+        // iterate the visible-key list per head, so padded cache rows and
+        // masked keys cost nothing in the inner loops.
+        vis_idx.clear();
+        vis_idx.extend((0..nk).filter(|&kj| visible(i, kj)));
+        for hh in 0..h {
+            let j = hh / g;
+            let qb = (i * h + hh) * hd;
+            if vis_idx.is_empty() {
+                lse.data[i * h + hh] = f32::NEG_INFINITY;
+                continue; // output row stays zero
+            }
+            let mut m = f64::NEG_INFINITY;
+            for &kj in &vis_idx {
+                let kb = (kj * kh + j) * hd;
+                let mut dot = 0f64;
+                for d in 0..hd {
+                    dot += q.data[qb + d] as f64 * k.data[kb + d] as f64;
+                }
+                let s = dot * scale;
+                scores[kj] = s;
+                m = m.max(s);
+            }
+            for slot in acc.iter_mut() {
+                *slot = 0.0;
+            }
+            let mut denom = 0f64;
+            for &kj in &vis_idx {
+                let w = (scores[kj] - m).exp();
+                denom += w;
+                let vb = (kj * kh + j) * hd;
+                for (slot, &vv) in acc.iter_mut().zip(&v.data[vb..vb + hd]) {
+                    *slot += w * vv as f64;
+                }
+            }
+            for (o, &slot) in out.data[qb..qb + hd].iter_mut().zip(&acc) {
+                *o = (slot / denom) as f32;
+            }
+            lse.data[i * h + hh] = (m + denom.ln()) as f32;
+        }
+    }
+    (out, lse)
+}
+
+/// The APB prefill visibility rule (paper Eq. 2 / `ref.apb_mask`).
+///
+/// Queries are `[anchor (l_aq) | local]`, keys
+/// `[anchor (l_aq) | passing (pass_max, padded) | local]`:
+/// * anchor query `qi < l_aq`: causal within the anchor segment;
+/// * local query: the valid anchor prefix (`kj < n_anchor`), the valid
+///   passing prefix (`offset < pass_len`), and the local segment causally.
+pub fn apb_visible(
+    l_aq: usize,
+    pass_max: usize,
+    n_anchor: usize,
+    pass_len: usize,
+    qi: usize,
+    kj: usize,
+) -> bool {
+    if qi < l_aq {
+        kj < l_aq && kj <= qi
+    } else if kj < l_aq {
+        kj < n_anchor
+    } else if kj < l_aq + pass_max {
+        kj - l_aq < pass_len
+    } else {
+        kj - l_aq - pass_max <= qi - l_aq
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weights
+// ---------------------------------------------------------------------------
+
+struct LayerWeights {
+    attn_norm: Vec<f32>,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ffn_norm: Vec<f32>,
+    w_gate: Tensor,
+    w_up: Tensor,
+    w_down: Tensor,
+    rh_w1: Tensor,
+    rh_b1: Vec<f32>,
+    rh_w2: Tensor,
+    rh_b2: f32,
+}
+
+fn normal_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let fan_in = shape[0] as f64;
+    let std = 1.0 / fan_in.sqrt();
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+    Tensor { shape, data }
+}
+
+/// Shift that keeps the crafted retaining-head gelu in its monotone region
+/// for any plausible similarity feature value.
+const RH_GELU_SHIFT: f32 = 3.0;
+
+fn layer_weights(rng: &mut Rng, m: &ModelConfig) -> LayerWeights {
+    let (d, hd, h, kh) = (m.d_model, m.head_dim(), m.n_heads, m.n_kv_heads);
+    let g = m.gqa_groups();
+    let attn_norm = vec![1.0f32; d];
+    let mut wq = normal_tensor(rng, vec![d, h * hd]);
+    let wk = normal_tensor(rng, vec![d, kh * hd]);
+    let wv = normal_tensor(rng, vec![d, kh * hd]);
+    let wo = normal_tensor(rng, vec![h * hd, d]);
+    // Align W_q with W_k per GQA group (retrieval-capable init, see module
+    // docs): wq[:, head i] = wk[:, i/g] + 0.5 * noise.
+    for r in 0..d {
+        for hh in 0..h {
+            let kv = hh / g;
+            for c in 0..hd {
+                let qi = r * (h * hd) + hh * hd + c;
+                let ki = r * (kh * hd) + kv * hd + c;
+                wq.data[qi] = wk.data[ki] + 0.5 * wq.data[qi];
+            }
+        }
+    }
+    let ffn_norm = vec![1.0f32; d];
+    let w_gate = normal_tensor(rng, vec![d, m.d_ff]);
+    let w_up = normal_tensor(rng, vec![d, m.d_ff]);
+    let w_down = normal_tensor(rng, vec![m.d_ff, d]);
+    // Crafted "trained" retaining head: hidden unit 0 reads the sim_max
+    // feature (index 3*hd of build_features) shifted into gelu's monotone
+    // region, and the output reads hidden unit 0 — so scores order KV units
+    // by their query similarity, which is what the trained compressor does.
+    let r = m.retaining_hidden;
+    let mut rh_w1 = Tensor::zeros(vec![3 * hd + 2, r]);
+    rh_w1.data[3 * hd * r] = 1.0; // feat[3*hd] (sim_max) -> hidden 0
+    let mut rh_b1 = vec![0.0f32; r];
+    rh_b1[0] = RH_GELU_SHIFT;
+    let mut rh_w2 = Tensor::zeros(vec![r, 1]);
+    rh_w2.data[0] = 1.0; // hidden 0 -> score
+    LayerWeights {
+        attn_norm,
+        wq,
+        wk,
+        wv,
+        wo,
+        ffn_norm,
+        w_gate,
+        w_up,
+        w_down,
+        rh_w1,
+        rh_b1,
+        rh_w2,
+        rh_b2: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust per-host engine with deterministic synthetic weights. All hosts
+/// construct identical weights from `Config::seed` (the model is replicated,
+/// exactly like the PJRT path uploading one `weights.bin` everywhere).
+pub struct SimEngine {
+    model: ModelConfig,
+    l_aq: usize,
+    block_len: usize,
+    query_len: usize,
+    pass_max: usize,
+    embed: Tensor,
+    final_norm: Vec<f32>,
+    lm_head_w: Tensor,
+    layers: Vec<LayerWeights>,
+}
+
+impl SimEngine {
+    pub fn new(cfg: &Config) -> Result<SimEngine> {
+        let m = &cfg.model;
+        if m.d_model % m.n_heads != 0 || m.n_heads % m.n_kv_heads != 0 {
+            bail!(
+                "sim config '{}': d_model {} / heads {} / kv heads {} not divisible",
+                cfg.name,
+                m.d_model,
+                m.n_heads,
+                m.n_kv_heads
+            );
+        }
+        if m.head_dim() % 2 != 0 {
+            bail!("sim config '{}': head_dim {} must be even for RoPE", cfg.name, m.head_dim());
+        }
+        // One deterministic stream, identical traversal order on every host.
+        let mut rng = Rng::new(cfg.seed ^ 0xA9B_0C0DE);
+        let embed = normal_tensor(&mut rng, vec![m.vocab_size, m.d_model]);
+        let final_norm = vec![1.0f32; m.d_model];
+        let lm_head_w = normal_tensor(&mut rng, vec![m.d_model, m.vocab_size]);
+        let layers = (0..m.n_layers).map(|_| layer_weights(&mut rng, m)).collect();
+        Ok(SimEngine {
+            model: m.clone(),
+            l_aq: cfg.apb.l_aq(),
+            block_len: cfg.apb.block_len,
+            query_len: cfg.apb.query_len,
+            pass_max: cfg.apb.pass_max(),
+            embed,
+            final_norm,
+            lm_head_w,
+            layers,
+        })
+    }
+
+    fn project_qkv(&self, lw: &LayerWeights, hidden: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let m = &self.model;
+        let hd = m.head_dim();
+        let n = hidden.shape[0];
+        let x = rmsnorm(hidden, &lw.attn_norm, m.rms_eps);
+        let q = matmul(&x, &lw.wq).reshape(vec![n, m.n_heads, hd]);
+        let k = matmul(&x, &lw.wk).reshape(vec![n, m.n_kv_heads, hd]);
+        let v = matmul(&x, &lw.wv).reshape(vec![n, m.n_kv_heads, hd]);
+        (q, k, v)
+    }
+
+    /// O-proj + residual + SwiGLU FFN (shared tail of layer_post and
+    /// decode_post). `att` is `[n, h, hd]`.
+    fn attn_tail(&self, lw: &LayerWeights, hidden: &Tensor, att: &Tensor) -> Tensor {
+        let m = &self.model;
+        let n = hidden.shape[0];
+        let att2 = att.clone().reshape(vec![n, m.n_heads * m.head_dim()]);
+        let proj = matmul(&att2, &lw.wo);
+        let mut h = hidden.clone();
+        for (a, &b) in h.data.iter_mut().zip(&proj.data) {
+            *a += b;
+        }
+        let x = rmsnorm(&h, &lw.ffn_norm, m.rms_eps);
+        let gate = matmul(&x, &lw.w_gate);
+        let up = matmul(&x, &lw.w_up);
+        let mut act = Tensor::zeros(vec![n, m.d_ff]);
+        for (o, (&gv, &uv)) in act.data.iter_mut().zip(gate.data.iter().zip(&up.data)) {
+            *o = (silu(gv as f64) * uv as f64) as f32;
+        }
+        let down = matmul(&act, &lw.w_down);
+        for (a, &b) in h.data.iter_mut().zip(&down.data) {
+            *a += b;
+        }
+        h
+    }
+
+    /// `build_features` + retaining-head MLP over the local block
+    /// (pre-RoPE projections, per `kernels.build_features`): features are
+    /// `[mean-of-group(Q), K, V, sim_max, sim_mean]`, scored by the gelu MLP.
+    fn retaining_scores(
+        &self,
+        lw: &LayerWeights,
+        q_nr: &Tensor,
+        k_nr: &Tensor,
+        v: &Tensor,
+    ) -> Tensor {
+        let m = &self.model;
+        let (hd, kh, g) = (m.head_dim(), m.n_kv_heads, m.gqa_groups());
+        let l_b = self.block_len;
+        let w = self.query_len;
+        let feat_dim = 3 * hd + 2;
+        let scale = 1.0 / (hd as f64).sqrt();
+        // Group-mean of the anchor's embedded-query rows (pre-RoPE).
+        let mut qq = vec![0f64; w * kh * hd];
+        for wi in 0..w {
+            for j in 0..kh {
+                for d in 0..hd {
+                    let mut s = 0f64;
+                    for t in 0..g {
+                        s += q_nr.data[(wi * m.n_heads + j * g + t) * hd + d] as f64;
+                    }
+                    qq[(wi * kh + j) * hd + d] = s / g as f64;
+                }
+            }
+        }
+        let mut scores = Tensor::zeros(vec![l_b, kh]);
+        let mut feat = vec![0f64; feat_dim];
+        for i in 0..l_b {
+            let row = self.l_aq + i; // local rows sit after the anchor
+            for j in 0..kh {
+                // Q component: mean over the GQA group.
+                for d in 0..hd {
+                    let mut s = 0f64;
+                    for t in 0..g {
+                        s += q_nr.data[(row * m.n_heads + j * g + t) * hd + d] as f64;
+                    }
+                    feat[d] = s / g as f64;
+                }
+                let kb = (row * kh + j) * hd;
+                for d in 0..hd {
+                    feat[hd + d] = k_nr.data[kb + d] as f64;
+                    feat[2 * hd + d] = v.data[kb + d] as f64;
+                }
+                // Query-similarity statistics over the embedded-query rows.
+                let mut smax = f64::NEG_INFINITY;
+                let mut smean = 0f64;
+                for wi in 0..w {
+                    let mut dot = 0f64;
+                    for d in 0..hd {
+                        dot += qq[(wi * kh + j) * hd + d] * k_nr.data[kb + d] as f64;
+                    }
+                    let s = dot * scale;
+                    smax = smax.max(s);
+                    smean += s;
+                }
+                feat[3 * hd] = if w > 0 { smax } else { 0.0 };
+                feat[3 * hd + 1] = if w > 0 { smean / w as f64 } else { 0.0 };
+                // gelu MLP: scores[i, j] = gelu(feat·w1 + b1)·w2 + b2.
+                let r = m.retaining_hidden;
+                let mut out = lw.rh_b2 as f64;
+                for u in 0..r {
+                    let mut hsum = lw.rh_b1[u] as f64;
+                    for (fi, &fv) in feat.iter().enumerate() {
+                        hsum += fv * lw.rh_w1.data[fi * r + u] as f64;
+                    }
+                    out += gelu(hsum) * lw.rh_w2.data[u] as f64;
+                }
+                scores.data[i * kh + j] = out as f32;
+            }
+        }
+        scores
+    }
+}
+
+impl ExecBackend for SimEngine {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Tensor> {
+        let d = self.model.d_model;
+        let vocab = self.model.vocab_size;
+        let mut out = Tensor::zeros(vec![tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            if t < 0 || t as usize >= vocab {
+                bail!("token {t} out of vocabulary (size {vocab})");
+            }
+            let src = t as usize * d;
+            out.data[i * d..(i + 1) * d].copy_from_slice(&self.embed.data[src..src + d]);
+        }
+        Ok(out)
+    }
+
+    fn layer_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos_offset: i32,
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let lw = &self.layers[layer];
+        let n = hidden.shape[0];
+        if n != self.l_aq + self.block_len {
+            bail!("layer_pre wants {} rows, got {n}", self.l_aq + self.block_len);
+        }
+        let (q_nr, k_nr, v) = self.project_qkv(lw, hidden);
+        // Anchor rows at their true global positions 0..l_aq-1, local rows
+        // at pos_offset.. — RoPE before compression so passed K blocks are
+        // directly attendable on other hosts (§3.5).
+        let positions: Vec<i32> = (0..self.l_aq as i32)
+            .chain((0..self.block_len as i32).map(|i| pos_offset + i))
+            .collect();
+        let scores = self.retaining_scores(lw, &q_nr, &k_nr, &v);
+        let q = rope(&q_nr, &positions, self.model.rope_theta);
+        let k = rope(&k_nr, &positions, self.model.rope_theta);
+        Ok((q, k, v, scores))
+    }
+
+    fn layer_post(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        k_pass: &Tensor,
+        v_pass: &Tensor,
+        pass_len: i32,
+        n_anchor: i32,
+    ) -> Result<Tensor> {
+        let lw = &self.layers[layer];
+        let l_aq = self.l_aq;
+        let (pass_len, n_anchor) = (pass_len.max(0) as usize, n_anchor.max(0) as usize);
+        let k_anchor = k.slice_rows(0, l_aq);
+        let k_local = k.slice_rows(l_aq, k.shape[0]);
+        let v_anchor = v.slice_rows(0, l_aq);
+        let v_local = v.slice_rows(l_aq, v.shape[0]);
+        let k_attn = Tensor::concat_rows(&[&k_anchor, k_pass, &k_local]);
+        let v_attn = Tensor::concat_rows(&[&v_anchor, v_pass, &v_local]);
+        let pass_max = self.pass_max;
+        let (att, _lse) = masked_attention(q, &k_attn, &v_attn, |qi, kj| {
+            apb_visible(l_aq, pass_max, n_anchor, pass_len, qi, kj)
+        });
+        Ok(self.attn_tail(lw, hidden, &att))
+    }
+
+    fn decode_pre(
+        &self,
+        layer: usize,
+        hidden: &Tensor,
+        pos0: i32,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let lw = &self.layers[layer];
+        let n = hidden.shape[0];
+        let (q, k, v) = self.project_qkv(lw, hidden);
+        let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
+        Ok((
+            rope(&q, &positions, self.model.rope_theta),
+            rope(&k, &positions, self.model.rope_theta),
+            v,
+        ))
+    }
+
+    fn decode_attn(
+        &self,
+        q: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_len: usize,
+        self_causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        let n = q.shape[0];
+        Ok(masked_attention(q, k_cache, v_cache, |qi, kj| {
+            let visible_len = if self_causal {
+                cache_len.saturating_sub(n - 1 - qi)
+            } else {
+                cache_len
+            };
+            kj < visible_len
+        }))
+    }
+
+    fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor> {
+        Ok(self.attn_tail(&self.layers[layer], hidden, att))
+    }
+
+    fn lm_head(&self, hidden: &Tensor) -> Result<Tensor> {
+        let x = rmsnorm(hidden, &self.final_norm, self.model.rms_eps);
+        Ok(matmul(&x, &self.lm_head_w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> SimEngine {
+        SimEngine::new(&Config::sim_tiny()).unwrap()
+    }
+
+    #[test]
+    fn weights_deterministic_across_hosts() {
+        let cfg = Config::sim_tiny();
+        let a = SimEngine::new(&cfg).unwrap();
+        let b = SimEngine::new(&cfg).unwrap();
+        assert_eq!(a.embed.data, b.embed.data);
+        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+        let h = a.embed(&[1, 2, 3]).unwrap();
+        let (qa, ..) = a.decode_pre(0, &h, 5).unwrap();
+        let (qb, ..) = b.decode_pre(0, &h, 5).unwrap();
+        assert_eq!(qa, qb);
+    }
+
+    #[test]
+    fn different_seed_changes_weights() {
+        let mut cfg = Config::sim_tiny();
+        let a = SimEngine::new(&cfg).unwrap();
+        cfg.seed += 1;
+        let b = SimEngine::new(&cfg).unwrap();
+        assert_ne!(a.embed.data, b.embed.data);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let y = matmul(&x, &w);
+        assert_eq!(y.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        // A row of all-equal values has rms == |value|: output is sign(x)·w.
+        let x = Tensor::new(vec![1, 4], vec![3.0, 3.0, 3.0, 3.0]).unwrap();
+        let y = rmsnorm(&x, &[1.0, 1.0, 1.0, 2.0], 0.0);
+        for (got, want) in y.data.iter().zip([1.0, 1.0, 1.0, 2.0]) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rope_identity_at_position_zero_and_preserves_norm() {
+        let x = Tensor::new(vec![2, 1, 4], vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.5, 2.0, 0.0])
+            .unwrap();
+        let y = rope(&x, &[0, 7], 1e4);
+        assert_eq!(&y.data[..4], &x.data[..4], "position 0 must be identity");
+        let n0: f32 = x.data[4..].iter().map(|v| v * v).sum();
+        let n1: f32 = y.data[4..].iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4, "rotation must preserve norm");
+    }
+
+    #[test]
+    fn attention_matches_manual_two_keys() {
+        // 1 query, 2 visible keys, h=kh=1, hd=1: plain softmax of q·k.
+        let q = Tensor::new(vec![1, 1, 1], vec![2.0]).unwrap();
+        let k = Tensor::new(vec![2, 1, 1], vec![0.5, -1.0]).unwrap();
+        let v = Tensor::new(vec![2, 1, 1], vec![10.0, 20.0]).unwrap();
+        let (out, lse) = masked_attention(&q, &k, &v, |_, _| true);
+        let (s0, s1): (f64, f64) = (2.0 * 0.5, 2.0 * -1.0); // scale = 1/sqrt(1)
+        let (e0, e1) = (s0.exp(), s1.exp());
+        let want = (e0 * 10.0 + e1 * 20.0) / (e0 + e1);
+        assert!((out.data[0] as f64 - want).abs() < 1e-5);
+        let want_lse = (e0 + e1).ln();
+        assert!((lse.data[0] as f64 - want_lse).abs() < 1e-5);
+    }
+
+    #[test]
+    fn attention_no_visible_keys_is_zero_with_neg_inf_lse() {
+        let q = Tensor::new(vec![1, 2, 2], vec![1.0; 4]).unwrap();
+        let k = Tensor::new(vec![3, 1, 2], vec![1.0; 6]).unwrap();
+        let v = k.clone();
+        let (out, lse) = masked_attention(&q, &k, &v, |_, _| false);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        assert!(lse.data.iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn apb_mask_semantics() {
+        let (l_aq, pass_max) = (3, 4);
+        // Anchor query 1: causal inside anchor only.
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 1, 0));
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 1, 1));
+        assert!(!apb_visible(l_aq, pass_max, 3, 2, 1, 2));
+        assert!(!apb_visible(l_aq, pass_max, 3, 2, 1, 3)); // no passing keys
+        assert!(!apb_visible(l_aq, pass_max, 3, 2, 1, 7)); // no local keys
+        // Local query 0 (qi = 3): anchor prefix, passing prefix, self.
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 3, 0));
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 3, 2));
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 3, 3)); // passing 0 < pass_len
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 3, 4)); // passing 1 < pass_len
+        assert!(!apb_visible(l_aq, pass_max, 3, 2, 3, 5)); // passing 2 >= pass_len
+        assert!(apb_visible(l_aq, pass_max, 3, 2, 3, 7)); // own local position
+        assert!(!apb_visible(l_aq, pass_max, 3, 2, 3, 8)); // future local
+        // n_anchor = 0 (host 0): local queries see no anchor keys at all.
+        assert!(!apb_visible(l_aq, pass_max, 0, 2, 3, 0));
+        // But anchor rows still self-attend causally (outputs discarded).
+        assert!(apb_visible(l_aq, pass_max, 0, 2, 0, 0));
+    }
+
+    #[test]
+    fn retaining_scores_rank_query_matching_tokens_first() {
+        // Put the query token inside the local block: its sim_max feature
+        // must dominate, so the crafted retaining head ranks it on top.
+        let e = engine();
+        let cfg = Config::sim_tiny();
+        let a = &cfg.apb;
+        let needle = 42i32;
+        let mut tokens = vec![0i32; a.n_tot()];
+        // Anchor query rows carry the needle token.
+        for slot in tokens.iter_mut().take(a.query_len) {
+            *slot = needle;
+        }
+        // Local block: distinct filler tokens, needle planted at local row 5.
+        for (i, slot) in tokens.iter_mut().enumerate().skip(a.l_aq()) {
+            *slot = 1 + (i as i32 % 30);
+        }
+        tokens[a.l_aq() + 5] = needle;
+        let hidden = e.embed(&tokens).unwrap();
+        let (_q, _k, _v, scores) = e.layer_pre(0, &hidden, a.query_len as i32).unwrap();
+        assert_eq!(scores.shape, vec![a.block_len, cfg.model.n_kv_heads]);
+        for j in 0..cfg.model.n_kv_heads {
+            let needle_score = scores.at2(5, j);
+            let mut rank = 0;
+            for i in 0..a.block_len {
+                if scores.at2(i, j) > needle_score {
+                    rank += 1;
+                }
+            }
+            assert!(
+                rank < a.passing_len,
+                "head {j}: needle rank {rank} not within top l_p = {}",
+                a.passing_len
+            );
+        }
+    }
+
+    #[test]
+    fn decode_attn_respects_cache_len_and_self_causal() {
+        let e = engine();
+        let hd = e.model.head_dim();
+        let (h, kh) = (e.model.n_heads, e.model.n_kv_heads);
+        let mut rng = Rng::new(9);
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let q = rand(&mut rng, vec![2, h, hd]);
+        let kc = rand(&mut rng, vec![8, kh, hd]);
+        let vc = rand(&mut rng, vec![8, kh, hd]);
+        // cache_len 4, self_causal: row 0 sees 3 keys, row 1 sees 4.
+        let (_out, lse) = e.decode_attn(&q, &kc, &vc, 4, true).unwrap();
+        let (_o3, lse3) = masked_attention(&q, &kc, &vc, |qi, kj| kj < 3 + qi);
+        for (a, b) in lse.data.iter().zip(&lse3.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Empty cache, not self-causal: all -inf.
+        let (out0, lse0) = e.decode_attn(&q, &kc, &vc, 0, false).unwrap();
+        assert!(out0.data.iter().all(|&x| x == 0.0));
+        assert!(lse0.data.iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn lm_head_shape_and_finite() {
+        let e = engine();
+        let h = e.embed(&[3, 4]).unwrap();
+        let logits = e.lm_head(&h).unwrap();
+        assert_eq!(logits.shape, vec![2, e.model.vocab_size]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn embed_rejects_out_of_vocab() {
+        let e = engine();
+        assert!(e.embed(&[-1]).is_err());
+        assert!(e.embed(&[e.model.vocab_size as i32]).is_err());
+    }
+}

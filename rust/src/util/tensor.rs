@@ -32,6 +32,14 @@ impl Tensor {
         self.data.len()
     }
 
+    /// Reinterpret the shape (same element count, same row-major data).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape;
+        self
+    }
+
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -206,6 +214,21 @@ mod tests {
         a.write_rows(1, &b);
         assert_eq!(a.slice_rows(1, 3), b);
         assert_eq!(a.slice_rows(0, 1).data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = t(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = a.clone().reshape(vec![3, 2]);
+        assert_eq!(b.shape, vec![3, 2]);
+        assert_eq!(b.data, a.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape")]
+    fn reshape_rejects_bad_numel() {
+        let a = t(vec![2, 2], vec![0.0; 4]);
+        let _ = a.reshape(vec![3, 2]);
     }
 
     #[test]

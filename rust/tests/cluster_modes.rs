@@ -1,27 +1,24 @@
-//! Cluster behaviour across method modes and failure conditions
-//! (requires `make artifacts`; tests skip otherwise).
+//! Cluster behaviour across method modes and failure conditions.
+//!
+//! Runs on the native SimEngine backend by default (no artifacts needed, so
+//! these are non-skipping tier-1 tests); with `--features pjrt` and
+//! `make artifacts` the same assertions run against the PJRT cluster.
 
 use apb::config::ApbOptions;
 use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::rng::Rng;
 
-fn cluster() -> Option<(apb::config::Config, Cluster)> {
-    match apb::load_config("tiny") {
-        Ok(cfg) => {
-            let c = Cluster::start(&cfg).expect("cluster start");
-            Some((cfg, c))
-        }
-        Err(e) => {
-            eprintln!("SKIP cluster_modes: {e:#}");
-            None
-        }
-    }
+fn cluster() -> (apb::config::Config, Cluster) {
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
+    println!("APB-RUN cluster_modes backend={}", cfg.backend.name());
+    let c = Cluster::start(&cfg).expect("cluster start");
+    (cfg, c)
 }
 
 #[test]
 fn wrong_sized_inputs_are_rejected_not_fatal() {
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let opts = ApbOptions::default();
     // Wrong doc length.
     assert!(cluster.prefill(&[1, 2, 3], &[0; 16], &opts).is_err());
@@ -37,7 +34,7 @@ fn wrong_sized_inputs_are_rejected_not_fatal() {
 
 #[test]
 fn star_mode_moves_zero_bytes_and_differs() {
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let mut rng = Rng::new(5);
     let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
     let apb_rep = cluster
@@ -62,41 +59,63 @@ fn star_mode_moves_zero_bytes_and_differs() {
 
 #[test]
 fn retention_recall_trained_beats_random() {
-    // The measured heart of the R vs Rd. ablation: trained retaining heads
-    // must keep planted needles at a much higher rate than the random
-    // selector's l_p/l_b baseline.
-    let Some((cfg, cluster)) = cluster() else { return };
+    // The measured heart of the R vs Rd. ablation: retaining heads (trained
+    // on the PJRT path, query-similarity-wired on the sim path) must keep
+    // planted needles at a much higher rate than the random selector's
+    // l_p/l_b baseline.
+    let (cfg, cluster) = cluster();
     let mut rng = Rng::new(17);
     let mut r_trained = 0.0;
     let mut r_random = 0.0;
-    let samples = 3;
+    let mut used = 0usize;
+    let samples = 6;
     for _ in 0..samples {
         let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+        // Host 0 carries no anchor, so its compressor sees no embedded
+        // query and scores ~randomly by construction (same on the python
+        // side); measure needles on hosts > 0, where the passing mechanism
+        // actually applies (see PrefillReport::retention_recall docs).
+        let positions: Vec<usize> = inst
+            .needle_positions
+            .iter()
+            .copied()
+            .filter(|&p| p >= cfg.apb.block_len)
+            .collect();
+        if positions.is_empty() {
+            continue;
+        }
+        used += 1;
         cluster.clear().unwrap();
         let rep = cluster
             .prefill(&inst.doc, &inst.query, &ApbOptions::default())
             .unwrap();
-        r_trained += rep.retention_recall(&cfg, &inst.needle_positions);
+        r_trained += rep.retention_recall(&cfg, &positions);
         cluster.clear().unwrap();
         let rep = cluster
             .prefill(&inst.doc, &inst.query,
                      &ApbOptions { retaining_compressor: false, ..Default::default() })
             .unwrap();
-        r_random += rep.retention_recall(&cfg, &inst.needle_positions);
+        r_random += rep.retention_recall(&cfg, &positions);
     }
-    r_trained /= samples as f64;
-    r_random /= samples as f64;
+    assert!(used >= 2, "too few needles landed beyond block 0 ({used})");
+    r_trained /= used as f64;
+    r_random /= used as f64;
     let frac = cfg.apb.passing_len as f64 / cfg.apb.block_len as f64;
-    println!("trained {r_trained:.3} random {r_random:.3} (l_p/l_b = {frac:.3})");
-    // Random selector keeps ~l_p/l_b of anything.
-    assert!((r_random - frac).abs() < 0.15);
-    assert!(r_trained > 1.5 * r_random,
-            "trained heads must beat random: {r_trained} vs {r_random}");
+    println!("trained {r_trained:.3} random {r_random:.3} over {used} samples \
+              (l_p/l_b = {frac:.3})");
+    // Random selector keeps ~l_p/l_b of anything (the selection is
+    // coordinator-side and backend-independent, so this holds on both tiers).
+    assert!((r_random - frac).abs() < 0.15, "random recall {r_random} vs {frac}");
+    // Both a multiplicative and an absolute margin: the ratio guards the
+    // trained/PJRT tier against regressions toward random, the absolute gap
+    // guards against a tiny-random-recall sample making the ratio vacuous.
+    assert!(r_trained > 1.5 * r_random && r_trained > r_random + 0.1,
+            "retaining heads must beat random: {r_trained} vs {r_random}");
 }
 
 #[test]
 fn rd_seed_changes_random_selection_deterministically() {
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let mut rng = Rng::new(29);
     let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
     let run = |seed: u64| {
@@ -117,7 +136,7 @@ fn rd_seed_changes_random_selection_deterministically() {
 fn generate_without_prefill_works_on_empty_caches() {
     // Degenerate but must not deadlock or crash: decode over empty caches
     // relies on the -inf LSE merge path.
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     cluster.clear().unwrap();
     let query = vec![1i32; cfg.apb.query_len];
     let gen = cluster.generate(&query, 1).expect("empty-cache decode");

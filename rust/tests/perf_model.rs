@@ -21,7 +21,7 @@ fn abstract_headline_speedups() {
             .filter_map(|&n| {
                 let b = est(base, n, 8.0);
                 let a = est(Method::Apb, n, 8.0);
-                (!b.oom && !a.oom).then(|| b.prefill_s / a.prefill_s)
+                (!b.oom && !a.oom).then_some(b.prefill_s / a.prefill_s)
             })
             .fold(0.0f64, f64::max)
     };

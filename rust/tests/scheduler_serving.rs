@@ -1,4 +1,5 @@
-//! Scheduler + serving-path integration (requires `make artifacts`).
+//! Scheduler + serving-path integration. Runs on the native SimEngine by
+//! default (non-skipping); uses PJRT artifacts when present + enabled.
 
 use apb::config::ApbOptions;
 use apb::coordinator::scheduler::{Request, Scheduler};
@@ -6,17 +7,11 @@ use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::rng::Rng;
 
-fn cluster() -> Option<(apb::config::Config, Cluster)> {
-    match apb::load_config("tiny") {
-        Ok(cfg) => {
-            let c = Cluster::start(&cfg).expect("cluster start");
-            Some((cfg, c))
-        }
-        Err(e) => {
-            eprintln!("SKIP scheduler_serving: {e:#}");
-            None
-        }
-    }
+fn cluster() -> (apb::config::Config, Cluster) {
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
+    println!("APB-RUN scheduler_serving backend={}", cfg.backend.name());
+    let c = Cluster::start(&cfg).expect("cluster start");
+    (cfg, c)
 }
 
 fn request(cfg: &apb::config::Config, id: u64, rng: &mut Rng) -> Request {
@@ -27,7 +22,7 @@ fn request(cfg: &apb::config::Config, id: u64, rng: &mut Rng) -> Request {
 
 #[test]
 fn fifo_order_and_complete_metrics() {
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let mut sched = Scheduler::new(&cluster, 16);
     let mut rng = Rng::new(1);
     for id in 0..3 {
@@ -52,7 +47,7 @@ fn fifo_order_and_complete_metrics() {
 
 #[test]
 fn backpressure_rejects_beyond_capacity() {
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let mut sched = Scheduler::new(&cluster, 2);
     let mut rng = Rng::new(2);
     sched.submit(request(&cfg, 0, &mut rng)).unwrap();
@@ -72,7 +67,7 @@ fn backpressure_rejects_beyond_capacity() {
 fn per_request_isolation() {
     // Identical requests produce identical tokens even when interleaved
     // with different ones — no KV-cache leakage between requests.
-    let Some((cfg, cluster)) = cluster() else { return };
+    let (cfg, cluster) = cluster();
     let mut rng = Rng::new(3);
     let a = request(&cfg, 0, &mut rng);
     let b = request(&cfg, 1, &mut rng);

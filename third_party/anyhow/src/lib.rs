@@ -1,0 +1,240 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io registry, so this path dependency
+//! provides the subset of the `anyhow` API the workspace uses: [`Error`] as a
+//! message-chain error, [`Result`] with a defaulted error type, the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`.
+//!
+//! Semantics intentionally mirror `anyhow`:
+//! * `{}` displays the outermost message, `{:#}` the whole chain joined with
+//!   `": "`, and `{:?}` a readable multi-line report (what `unwrap()` prints);
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain;
+//! * like the real crate, [`Error`] deliberately does NOT implement
+//!   `std::error::Error` (that is what keeps the blanket `From` coherent).
+
+use std::fmt;
+
+/// A message-chain error: `msgs[0]` is the outermost context, the last entry
+/// is the root cause.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the default
+/// error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the [`Context`] trait).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, m) in self.msgs[1..].iter().enumerate() {
+                if self.msgs.len() > 2 {
+                    write!(f, "\n    {i}: {m}")?;
+                } else {
+                    write!(f, "\n    {m}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: no `impl std::error::Error for Error` — its absence is what makes the
+// blanket conversion below coherent with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let e: Error = Err::<(), _>(anyhow!("inner {}", 7))
+            .with_context(|| "outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        let o: Result<i32> = None.context("missing value");
+        assert_eq!(format!("{:#}", o.unwrap_err()), "missing value");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+
+    #[test]
+    fn debug_report_includes_causes() {
+        let e: Error = Err::<(), _>(io_err()).context("a").context("b").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains('b') && dbg.contains("Caused by"));
+    }
+}
