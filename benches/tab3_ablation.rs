@@ -35,7 +35,9 @@ fn opts_for(row: (usize, bool, bool, bool, bool)) -> ApbOptions {
         use_passing: row.2,
         retaining_compressor: row.3,
         embed_query: row.4,
-        rd_seed: 1234,
+        // The measured section reads retention_recall per row.
+        record_retained: true,
+        ..Default::default()
     }
 }
 

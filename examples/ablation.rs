@@ -24,7 +24,8 @@ fn main() -> anyhow::Result<()> {
 
     // Baseline: full APB.
     cluster.clear()?;
-    let base_rep = cluster.prefill(&inst.doc, &inst.query, &ApbOptions::default())?;
+    let recorded = ApbOptions { record_retained: true, ..Default::default() };
+    let base_rep = cluster.prefill(&inst.doc, &inst.query, &recorded)?;
     let base = cluster.generate(&inst.query, max_new)?;
     println!("baseline tokens: {:?}  (recall {:.3}, comm {} B)",
              base.tokens,
@@ -42,7 +43,8 @@ fn main() -> anyhow::Result<()> {
             use_passing: bits & 4 != 0,
             retaining_compressor: bits & 2 != 0,
             embed_query: bits & 1 != 0,
-            rd_seed: 1234,
+            record_retained: true,
+            ..Default::default()
         };
         cluster.clear()?;
         let rep = cluster.prefill(&inst.doc, &inst.query, &o)?;

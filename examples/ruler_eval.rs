@@ -54,10 +54,10 @@ fn main() -> anyhow::Result<()> {
         let mut comm = 0u64;
         for _ in 0..samples {
             let inst = gen_instance(&cfg, kind, &mut rng);
-            // Full APB.
+            // Full APB (recall experiments opt in to the retained record).
             cluster.clear()?;
-            let rep = cluster.prefill(&inst.doc, &inst.query,
-                                      &ApbOptions::default())?;
+            let recorded = ApbOptions { record_retained: true, ..Default::default() };
+            let rep = cluster.prefill(&inst.doc, &inst.query, &recorded)?;
             let base = cluster.generate(&inst.query, 1)?.query_logits;
             recall_r += rep.retention_recall(&cfg, &inst.needle_positions);
             comm += rep.comm_bytes;
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             cluster.clear()?;
             let rep_rd = cluster.prefill(
                 &inst.doc, &inst.query,
-                &ApbOptions { retaining_compressor: false, ..Default::default() })?;
+                &ApbOptions { retaining_compressor: false, ..recorded })?;
             let g_rd = cluster.generate(&inst.query, 1)?.query_logits;
             recall_rd += rep_rd.retention_recall(&cfg, &inst.needle_positions);
             d_rd = d_rd.max(linf(&g_rd, &base));

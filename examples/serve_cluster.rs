@@ -1,9 +1,9 @@
-//! End-to-end serving driver (DESIGN.md deliverable): load a small real
-//! model through PJRT, serve a batch of queued long-context requests
-//! through the scheduler, and report latency/throughput percentiles —
-//! all layers composing: Pallas-kernel HLO ← JAX model ← rust cluster.
+//! End-to-end serving driver (DESIGN.md deliverable): serve a queue of
+//! overlapping long-context requests through the continuous-batching
+//! scheduler — several sessions' KV resident on the cluster at once, one
+//! stacked decode pass per layer per step — and report latency/throughput
+//! percentiles including TTFT/TPOT.
 //!
-//!     make artifacts
 //!     cargo run --release --example serve_cluster -- --requests 6 \
 //!         --config tiny --max-new 6
 //!
@@ -19,7 +19,7 @@ use apb::util::rng::Rng;
 use apb::util::stats::{fmt_duration, fmt_rate};
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["star-mode"])?;
+    let args = Args::parse(std::env::args().skip(1), &["star-mode", "smoke"])?;
     args.check_known(&["requests", "config", "max-new", "queue", "seed"])?;
     let n_requests = args.usize_or("requests", 6)?;
     let max_new = args.usize_or("max-new", 6)?;
@@ -29,9 +29,9 @@ fn main() -> anyhow::Result<()> {
     let cfg = apb::load_config_or_sim(&config)?;
     println!(
         "serving on {} hosts ({} backend) — model d={} L={} vocab={}, doc {} \
-         tokens/request",
+         tokens/request, up to {} sessions resident",
         cfg.apb.n_hosts, cfg.backend.name(), cfg.model.d_model, cfg.model.n_layers,
-        cfg.model.vocab_size, cfg.apb.doc_len()
+        cfg.model.vocab_size, cfg.apb.doc_len(), cfg.apb.max_resident
     );
     let t_start = std::time::Instant::now();
     let cluster = Cluster::start(&cfg)?;
@@ -76,9 +76,16 @@ fn main() -> anyhow::Result<()> {
                    format!("{:.2} req/s", done as f64 / wall)]);
     table.row(vec!["token throughput (in+out)".into(), fmt_rate(
         (done * (cfg.apb.doc_len() + cfg.apb.query_len + max_new)) as f64 / wall)]);
+    table.row(vec!["peak resident sessions".into(), m.peak_resident.to_string()]);
     table.row(vec!["prefill p50 / p99".into(),
                    format!("{} / {}", fmt_duration(m.prefill.p50),
                            fmt_duration(m.prefill.p99))]);
+    table.row(vec!["ttft p50 / p99".into(),
+                   format!("{} / {}", fmt_duration(m.ttft.p50),
+                           fmt_duration(m.ttft.p99))]);
+    table.row(vec!["tpot p50 / p99".into(),
+                   format!("{} / {}", fmt_duration(m.tpot.p50),
+                           fmt_duration(m.tpot.p99))]);
     table.row(vec!["decode p50 / p99".into(),
                    format!("{} / {}", fmt_duration(m.decode.p50),
                            fmt_duration(m.decode.p99))]);
@@ -86,13 +93,25 @@ fn main() -> anyhow::Result<()> {
                    format!("{} / {}", fmt_duration(m.e2e.p50),
                            fmt_duration(m.e2e.p99))]);
     table.row(vec!["queue wait p50".into(), fmt_duration(m.queue_wait.p50)]);
+    table.row(vec!["decode comm".into(), format!("{} B", m.decode_comm_bytes)]);
     table.row(vec!["paper speed metric (mean)".into(),
                    format!("{:.0} tok/s", m.speed_tok_per_s.mean)]);
     table.print();
 
     for r in &scheduler.completed {
-        println!("  req {:>2}: tokens {:?}  speed {:.0} tok/s", r.id, r.tokens,
-                 r.speed_tok_per_s);
+        println!("  req {:>2}: tokens {:?}  ttft {}  speed {:.0} tok/s", r.id,
+                 r.tokens, fmt_duration(r.ttft_s), r.speed_tok_per_s);
+    }
+    if args.has("smoke") {
+        // CI gate: the continuous-batching path must actually overlap
+        // sessions when more than one request is queued.
+        assert_eq!(done, n_requests, "all requests must complete");
+        if n_requests >= 2 && cfg.apb.max_resident >= 2 {
+            assert!(m.peak_resident >= 2,
+                    "smoke: expected >= 2 sessions resident, saw {}",
+                    m.peak_resident);
+        }
+        println!("serve_cluster --smoke OK");
     }
     Ok(())
 }

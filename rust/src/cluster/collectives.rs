@@ -7,32 +7,63 @@
 //! and a rank cannot contribute to round r+1 before returning from round
 //! r — so every rank reads an intact result.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 
+#[derive(Default, Clone, Copy)]
+struct MeterSlot {
+    bytes: u64,
+    rounds: u64,
+}
+
 /// Bytes-on-the-wire meter, summed across all collectives of a fabric.
+///
+/// Contributions are recorded both in the fabric total and under the
+/// contributing collective's label ("kv" for the prefill compressed-block
+/// AllGather, "att" for the decode partial-attention AllGather), so the
+/// prefill and decode communication volumes stay separable even though the
+/// serving loop interleaves them.
 #[derive(Default)]
 pub struct CommMeter {
-    bytes: Mutex<u64>,
-    rounds: Mutex<u64>,
+    total: Mutex<MeterSlot>,
+    by_label: Mutex<BTreeMap<&'static str, MeterSlot>>,
 }
 
 impl CommMeter {
-    pub fn add(&self, bytes: u64) {
-        *self.bytes.lock().unwrap() += bytes;
-        *self.rounds.lock().unwrap() += 1;
+    pub fn add(&self, label: &'static str, bytes: u64) {
+        {
+            let mut t = self.total.lock().unwrap();
+            t.bytes += bytes;
+            t.rounds += 1;
+        }
+        let mut m = self.by_label.lock().unwrap();
+        let slot = m.entry(label).or_default();
+        slot.bytes += bytes;
+        slot.rounds += 1;
     }
 
     pub fn bytes_total(&self) -> u64 {
-        *self.bytes.lock().unwrap()
+        self.total.lock().unwrap().bytes
     }
 
     pub fn rounds_total(&self) -> u64 {
-        *self.rounds.lock().unwrap()
+        self.total.lock().unwrap().rounds
+    }
+
+    pub fn bytes_for(&self, label: &str) -> u64 {
+        self.by_label.lock().unwrap().get(label).copied().unwrap_or_default().bytes
+    }
+
+    /// Per-rank contribution count under a label: one batched decode step
+    /// contributes `n_hosts * n_layers` "att" rounds regardless of how many
+    /// sessions ride in the batch.
+    pub fn rounds_for(&self, label: &str) -> u64 {
+        self.by_label.lock().unwrap().get(label).copied().unwrap_or_default().rounds
     }
 
     pub fn reset(&self) {
-        *self.bytes.lock().unwrap() = 0;
-        *self.rounds.lock().unwrap() = 0;
+        *self.total.lock().unwrap() = MeterSlot::default();
+        self.by_label.lock().unwrap().clear();
     }
 }
 
@@ -63,6 +94,9 @@ struct GatherState<T> {
     items: Vec<Option<T>>,
     count: usize,
     generation: u64,
+    /// Session/round tag agreed by the round's first contributor; every
+    /// other rank must present the same tag (serving-desync tripwire).
+    tag: u64,
     result: Vec<T>,
 }
 
@@ -70,6 +104,7 @@ struct GatherState<T> {
 /// contributions in rank order.
 pub struct Collective<T> {
     n: usize,
+    label: &'static str,
     state: Mutex<GatherState<T>>,
     cv: Condvar,
     meter: Arc<CommMeter>,
@@ -77,12 +112,18 @@ pub struct Collective<T> {
 
 impl<T: Clone + Meterable> Collective<T> {
     pub fn new(n: usize, meter: Arc<CommMeter>) -> Self {
+        Self::labeled(n, "comm", meter)
+    }
+
+    pub fn labeled(n: usize, label: &'static str, meter: Arc<CommMeter>) -> Self {
         Collective {
             n,
+            label,
             state: Mutex::new(GatherState {
                 items: (0..n).map(|_| None).collect(),
                 count: 0,
                 generation: 0,
+                tag: 0,
                 result: Vec::new(),
             }),
             cv: Condvar::new(),
@@ -91,13 +132,27 @@ impl<T: Clone + Meterable> Collective<T> {
     }
 
     pub fn all_gather(&self, rank: usize, item: T) -> Vec<T> {
+        self.all_gather_tagged(rank, 0, item)
+    }
+
+    /// AllGather with a per-round tag (the session id, or a digest of the
+    /// decode batch). All ranks of a round must contribute the same tag —
+    /// a mismatch means the hosts desynchronized across sessions, which
+    /// would silently merge attention partials of *different* requests, so
+    /// it is asserted rather than reported.
+    pub fn all_gather_tagged(&self, rank: usize, tag: u64, item: T) -> Vec<T> {
         assert!(rank < self.n, "rank {rank} out of {}", self.n);
         // Ring AllGather moves (N-1)/N of the total payload through each
         // link; meter the aggregate volume every rank sends once.
-        self.meter.add(item.wire_bytes());
+        self.meter.add(self.label, item.wire_bytes());
         let mut st = self.state.lock().unwrap();
         let my_gen = st.generation;
         assert!(st.items[rank].is_none(), "rank {rank} double contribution");
+        if st.count == 0 {
+            st.tag = tag;
+        } else {
+            check_round_tag(self.label, st.tag, tag, rank);
+        }
         st.items[rank] = Some(item);
         st.count += 1;
         if st.count == self.n {
@@ -122,6 +177,18 @@ impl<T: Clone + Meterable> Collective<T> {
         let all = self.all_gather(rank, item);
         (rank == root).then_some(all)
     }
+}
+
+/// The per-round tag tripwire: a rank joining an open round must present
+/// the tag the round was opened with. A mismatch means hosts desynchronized
+/// across sessions — merging attention partials of *different* requests —
+/// so it is a panic, not a recoverable error.
+fn check_round_tag(label: &str, open_tag: u64, tag: u64, rank: usize) {
+    assert_eq!(
+        open_tag, tag,
+        "collective '{label}' round tag mismatch: rank {rank} joined with \
+         tag {tag} while the round in flight is {open_tag} (session desync)"
+    );
 }
 
 #[cfg(test)]
@@ -151,6 +218,56 @@ mod tests {
         assert_eq!(m.rounds_total(), 1);
         m.reset();
         assert_eq!(m.bytes_total(), 0);
+    }
+
+    #[test]
+    fn meter_separates_labels() {
+        let m = Arc::new(CommMeter::default());
+        let kv = Collective::labeled(1, "kv", Arc::clone(&m));
+        let att = Collective::labeled(1, "att", Arc::clone(&m));
+        kv.all_gather(0, t(1.0));
+        kv.all_gather(0, t(2.0));
+        att.all_gather(0, t(3.0));
+        assert_eq!(m.bytes_for("kv"), 8);
+        assert_eq!(m.rounds_for("kv"), 2);
+        assert_eq!(m.bytes_for("att"), 4);
+        assert_eq!(m.rounds_for("att"), 1);
+        assert_eq!(m.bytes_total(), 12);
+        assert_eq!(m.bytes_for("unknown"), 0);
+        m.reset();
+        assert_eq!(m.rounds_for("kv"), 0);
+    }
+
+    #[test]
+    fn tagged_rounds_agree_across_ranks() {
+        let n = 3;
+        let c = Arc::new(Collective::new(n, Arc::new(CommMeter::default())));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let c = Arc::clone(&c);
+            handles.push(thread::spawn(move || {
+                // Successive rounds for different sessions: every rank
+                // presents the matching tag and rounds complete normally.
+                for sid in [7u64, 8, 7] {
+                    let all = c.all_gather_tagged(rank, sid, t(rank as f32));
+                    assert_eq!(all.len(), n);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tag_check_accepts_match() {
+        check_round_tag("att", 42, 42, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "round tag mismatch")]
+    fn tag_check_panics_on_mismatch() {
+        check_round_tag("att", 7, 8, 1);
     }
 
     #[test]

@@ -30,11 +30,18 @@ impl Fabric {
         let meter = Arc::new(CommMeter::default());
         Arc::new(Fabric {
             n_hosts,
-            kv_gather: Collective::new(n_hosts, Arc::clone(&meter)),
-            att_gather: Collective::new(n_hosts, Arc::clone(&meter)),
+            kv_gather: Collective::labeled(n_hosts, Fabric::KV_LABEL, Arc::clone(&meter)),
+            att_gather: Collective::labeled(n_hosts, Fabric::ATT_LABEL, Arc::clone(&meter)),
             meter,
         })
     }
+}
+
+impl Fabric {
+    /// Meter label of the prefill compressed-KV AllGather.
+    pub const KV_LABEL: &'static str = "kv";
+    /// Meter label of the decode partial-attention AllGather.
+    pub const ATT_LABEL: &'static str = "att";
 }
 
 #[cfg(test)]

@@ -40,6 +40,10 @@ pub struct ApbParams {
     pub query_len: usize,   // l_q
     pub passing_len: usize, // l_p
     pub max_new_tokens: usize,
+    /// Serving residency: KV-pool slots per host, i.e. how many sessions
+    /// may hold their caches on the cluster simultaneously (continuous
+    /// batching). 1 reproduces the paper's one-request-at-a-time setting.
+    pub max_resident: usize,
 }
 
 impl ApbParams {
@@ -139,7 +143,16 @@ impl Config {
             query_len: u(a, "query_len")?,
             passing_len: u(a, "passing_len")?,
             max_new_tokens: u(a, "max_new_tokens")?,
+            // Older manifests predate serving slots; one resident session
+            // (the paper's setting) keeps their artifact shapes valid.
+            max_resident: match a.get("max_resident") {
+                Some(v) => v.as_usize().context("field 'max_resident' not a usize")?,
+                None => 1,
+            },
         };
+        if apb.max_resident == 0 {
+            bail!("max_resident must be >= 1");
+        }
         if model.d_model % model.n_heads != 0 {
             bail!("d_model {} not divisible by n_heads {}", model.d_model, model.n_heads);
         }
@@ -218,6 +231,7 @@ impl Config {
                 query_len: 4,
                 passing_len: 8,
                 max_new_tokens: 8,
+                max_resident: 4,
             },
             1234,
         )
@@ -232,6 +246,12 @@ pub struct ApbOptions {
     pub retaining_compressor: bool, // false => random selector "Rd."
     pub embed_query: bool,
     pub rd_seed: u64,
+    /// Record the compressor's per-layer/per-head retained index sets in
+    /// `PrefillReport.retained` (retention-recall experiments, §3.4).
+    /// Off by default: the serving path would otherwise keep
+    /// O(layers × kv_heads × l_p) of dead weight alive per completed
+    /// request.
+    pub record_retained: bool,
 }
 
 impl Default for ApbOptions {
@@ -242,6 +262,7 @@ impl Default for ApbOptions {
             retaining_compressor: true,
             embed_query: true,
             rd_seed: 1234,
+            record_retained: false,
         }
     }
 }
@@ -259,6 +280,7 @@ mod tests {
             query_len: 16,
             passing_len: 32,
             max_new_tokens: 64,
+            max_resident: 2,
         };
         assert_eq!(a.l_aq(), 48);
         assert_eq!(a.n_tot(), 304);
@@ -271,6 +293,7 @@ mod tests {
     fn sim_tiny_is_consistent() {
         let c = Config::sim_tiny();
         assert_eq!(c.backend, BackendKind::Sim);
+        assert!(c.apb.max_resident >= 2, "serving config must allow residency overlap");
         assert_eq!(c.model.d_model % c.model.n_heads, 0);
         assert_eq!(c.model.n_heads % c.model.n_kv_heads, 0);
         assert!(c.apb.passing_len <= c.apb.block_len);

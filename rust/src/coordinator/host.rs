@@ -1,7 +1,9 @@
 //! Host worker: one simulated GPU. Owns an execution backend (SimEngine or
-//! PJRT, per `Config::backend`) + KV cache, executes the per-layer APB
-//! stages, and participates in fabric collectives.
+//! PJRT, per `Config::backend`), a KV pool with one slot per resident
+//! session, and per-session position bookkeeping; executes the per-layer
+//! APB stages and participates in fabric collectives.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
@@ -9,8 +11,8 @@ use anyhow::{Context, Result};
 
 use crate::cluster::Fabric;
 use crate::config::{ApbOptions, Config};
-use crate::kvcache::KvCache;
-use crate::runtime::{create_backend, ExecBackend};
+use crate::kvcache::{KvPool, SessionId};
+use crate::runtime::{create_backend, ExecBackend, KvView};
 use crate::util::rng::random_score;
 use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
 
@@ -36,65 +38,105 @@ pub fn run_host(
     }
 }
 
+/// Per-session decode bookkeeping owned by the worker: the global position
+/// of the next token row this session will decode. Set to
+/// `query_len + doc_len` by prefill (the first re-fed query-chunk row) and
+/// advanced by every decode pass — the session twin of the `pos0`
+/// arithmetic that used to be hardcoded per command.
+struct SessionState {
+    next_pos: i32,
+}
+
+/// Collective round tag for a decode batch: order-sensitive digest of the
+/// session ids, so desynchronized batch composition across hosts trips the
+/// fabric's tag assertion instead of silently merging the wrong partials.
+fn batch_tag(entries: &[(SessionId, i32)]) -> u64 {
+    entries
+        .iter()
+        .fold(0x517C_C1B7_2722_0A95u64, |acc, (sid, _)| {
+            acc.wrapping_mul(0x100_0000_01B3).wrapping_add(sid ^ 0x9E37_79B9_7F4A_7C15)
+        })
+}
+
 struct HostWorker {
     rank: usize,
     cfg: Config,
     fabric: Arc<Fabric>,
     backend: Box<dyn ExecBackend>,
-    cache: KvCache,
+    pool: KvPool,
+    sessions: HashMap<SessionId, SessionState>,
 }
 
 impl HostWorker {
     fn new(rank: usize, cfg: Config, fabric: Arc<Fabric>) -> Result<Self> {
         let backend = create_backend(&cfg)
             .with_context(|| format!("host {rank}: creating {} backend", cfg.backend.name()))?;
-        let cache = KvCache::new(
+        let pool = KvPool::new(
+            cfg.apb.max_resident,
             cfg.model.n_layers,
             cfg.apb.cache_max(),
             cfg.model.n_kv_heads,
             cfg.model.head_dim(),
         );
-        Ok(HostWorker { rank, cfg, fabric, backend, cache })
+        Ok(HostWorker { rank, cfg, fabric, backend, pool, sessions: HashMap::new() })
     }
 
     fn serve(&mut self, cmd_rx: Receiver<Cmd>, resp_tx: Sender<Resp>) {
         while let Ok(cmd) = cmd_rx.recv() {
             let resp = match cmd {
                 Cmd::Shutdown => break,
-                Cmd::Clear => {
-                    self.cache.clear();
+                Cmd::Clear { sid } => {
+                    self.pool.free(sid);
+                    self.sessions.remove(&sid);
                     Resp::Cleared { host: self.rank }
                 }
-                Cmd::Prefill { tokens, opts } => match self.prefill(&tokens, &opts) {
-                    Ok((timing, retained)) => {
-                        Resp::PrefillDone { host: self.rank, timing, retained }
+                Cmd::ClearAll => {
+                    self.pool.clear_all();
+                    self.sessions.clear();
+                    Resp::Cleared { host: self.rank }
+                }
+                Cmd::Prefill { sid, tokens, opts } => {
+                    match self.prefill(sid, &tokens, &opts) {
+                        Ok((timing, retained)) => {
+                            Resp::PrefillDone { host: self.rank, sid, timing, retained }
+                        }
+                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                    }
+                }
+                Cmd::QueryChunk { sid, tokens } => match self.decode_pass(sid, &tokens) {
+                    Ok((logits, timing)) => {
+                        Resp::StepDone { host: self.rank, sid, logits, timing }
                     }
                     Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
                 },
-                Cmd::QueryChunk { tokens } => {
-                    let pos0 = (self.cfg.apb.query_len + self.cfg.apb.doc_len()) as i32;
-                    match self.decode_pass(&tokens, pos0) {
-                        Ok((logits, timing)) => {
-                            Resp::StepDone { host: self.rank, logits, timing }
-                        }
-                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                Cmd::DecodeBatch { entries } => match self.decode_batch(&entries) {
+                    Ok((logits, timing)) => {
+                        Resp::BatchDone { host: self.rank, logits, timing }
                     }
-                }
-                Cmd::DecodeStep { token, step } => {
-                    let a = &self.cfg.apb;
-                    let pos0 = (a.query_len + a.doc_len() + a.query_len + step) as i32;
-                    match self.decode_pass(&[token], pos0) {
-                        Ok((logits, timing)) => {
-                            Resp::StepDone { host: self.rank, logits, timing }
-                        }
-                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-                    }
-                }
+                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                },
             };
             if resp_tx.send(resp).is_err() {
                 break; // leader gone
             }
         }
+    }
+
+    /// Position of the first re-fed query-chunk row (end of the global
+    /// [query | document] prefix every session's prefill covers).
+    fn decode_pos0(&self) -> i32 {
+        (self.cfg.apb.query_len + self.cfg.apb.doc_len()) as i32
+    }
+
+    /// Session lookup for decode, creating state on demand: a session that
+    /// never prefilled (degenerate empty-cache decode) gets a fresh slot
+    /// and starts at the post-prefill position.
+    fn ensure_session(&mut self, sid: SessionId) -> Result<()> {
+        if !self.sessions.contains_key(&sid) {
+            self.pool.alloc(sid)?;
+            self.sessions.insert(sid, SessionState { next_pos: self.decode_pos0() });
+        }
+        Ok(())
     }
 
     /// Per-kv-head gather of compressed KV rows: k/v are the local slices
@@ -120,19 +162,25 @@ impl HostWorker {
         (kc, vc)
     }
 
-    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout.
-    /// Returns timing + the per-layer/per-head retained indices.
+    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout
+    /// into session `sid`'s pool slot. The KV slot is claimed (or reset)
+    /// BEFORE any collective, so pool exhaustion fails identically on every
+    /// host — backpressure, never a deadlocked half-round.
+    /// Returns timing + the per-layer/per-head retained indices (empty
+    /// unless `opts.record_retained`).
     fn prefill(
         &mut self,
+        sid: SessionId,
         tokens: &[i32],
         opts: &ApbOptions,
     ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
+        self.pool.alloc(sid)?;
+        self.sessions.insert(sid, SessionState { next_pos: self.decode_pos0() });
         let cfg = &self.cfg;
         let (a, m) = (&cfg.apb, &cfg.model);
         let backend = self.backend.as_ref();
-        self.cache.clear();
         let mut tm = PrefillTiming::default();
-        let mut retained: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m.n_layers);
+        let mut retained: Vec<Vec<Vec<u32>>> = Vec::new();
         let mut sw = Stopwatch::start();
         let total0 = std::time::Instant::now();
 
@@ -169,17 +217,19 @@ impl HostWorker {
                 rd
             };
             let idx = top_lp_indices(&scores_used, a.passing_len);
-            retained.push(
-                idx.iter()
-                    .map(|head| head.iter().map(|&i| i as u32).collect())
-                    .collect(),
-            );
+            if opts.record_retained {
+                retained.push(
+                    idx.iter()
+                        .map(|head| head.iter().map(|&i| i as u32).collect())
+                        .collect(),
+                );
+            }
             let (k_c, v_c) = self.gather_compressed(&k_local, &v_local, &idx);
             tm.topk_s += sw.lap();
 
-            // --- AllGather of compressed blocks (§3.5) --------------------
+            // --- AllGather of compressed blocks (§3.5), session-tagged ----
             let blocks: Vec<(Tensor, Tensor)> = if opts.use_passing {
-                self.fabric.kv_gather.all_gather(self.rank, (k_c, v_c))
+                self.fabric.kv_gather.all_gather_tagged(self.rank, sid, (k_c, v_c))
             } else {
                 Vec::new()
             };
@@ -201,20 +251,24 @@ impl HostWorker {
             tm.layer_post_s += sw.lap();
 
             // --- cache append: local block KV only (anchor discarded) -----
-            self.cache.append(li, &k_local, &v_local)?;
+            self.pool.get_mut(sid)?.append(li, &k_local, &v_local)?;
             tm.cache_s += sw.lap();
         }
         tm.total_s = total0.elapsed().as_secs_f64();
         Ok((tm, retained))
     }
 
-    /// Algorithm 3 — one decode pass (query chunk or single token).
-    /// Returns logits on the last host only.
+    /// Algorithm 3 — one decode pass over a single session's chunk (the
+    /// re-fed query). Returns logits on the last host only.
     fn decode_pass(
         &mut self,
+        sid: SessionId,
         tokens: &[i32],
-        pos0: i32,
     ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+        self.ensure_session(sid)?;
+        let n = tokens.len();
+        let pos0 = self.sessions[&sid].next_pos;
+        let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
         let cfg = &self.cfg;
         let (a, m) = (&cfg.apb, &cfg.model);
         let backend = self.backend.as_ref();
@@ -228,22 +282,22 @@ impl HostWorker {
 
         for li in 0..m.n_layers {
             // decode_pre: project + rope the chunk.
-            let (q, k, v) = backend.decode_pre(li, &hidden, pos0)?;
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
             tm.pre_s += sw.lap();
 
             // Last host appends the chunk's KV before attending (line 7).
             let self_causal = if last {
-                self.cache.append(li, &k, &v)?;
+                self.pool.get_mut(sid)?.append(li, &k, &v)?;
                 true
             } else {
                 false
             };
-            let lc = &self.cache.layers[li];
+            let lc = &self.pool.get(sid)?.layers[li];
             let (out, lse) = backend.decode_attn(&q, &lc.k, &lc.v, lc.len, self_causal)?;
             tm.attn_s += sw.lap();
 
-            // Gather all hosts' partials (line 9) ...
-            let all = self.fabric.att_gather.all_gather(self.rank, (out, lse));
+            // Gather all hosts' partials (line 9), session-tagged ...
+            let all = self.fabric.att_gather.all_gather_tagged(self.rank, sid, (out, lse));
             tm.comm_s += sw.lap();
 
             // ... and merge with the online-softmax identity (line 10).
@@ -256,6 +310,7 @@ impl HostWorker {
             hidden = backend.decode_post(li, &hidden, &att)?;
             tm.post_s += sw.lap();
         }
+        self.sessions.get_mut(&sid).unwrap().next_pos += n as i32;
 
         let logits = if last {
             let l = backend.lm_head(&hidden)?;
@@ -266,5 +321,112 @@ impl HostWorker {
         };
         tm.total_s = total0.elapsed().as_secs_f64();
         Ok((logits, tm))
+    }
+
+    /// Continuous-batching decode step: one single-token row PER SESSION,
+    /// stacked into ONE backend pass per layer (decode_pre with per-row
+    /// positions + decode_attn_batch against per-row caches + one merge +
+    /// one decode_post), so the per-step cost grows sublinearly in the
+    /// number of active sessions. Row order — and therefore collective
+    /// payload layout — is the leader's entry order on every host.
+    fn decode_batch(
+        &mut self,
+        entries: &[(SessionId, i32)],
+    ) -> Result<(Option<Vec<Vec<f32>>>, DecodeTiming)> {
+        // Strict residency: decoding a cleared (or never-admitted) session
+        // is a scheduler bug; silently resurrecting an empty cache would
+        // turn it into plausible-but-wrong tokens. Checked before any
+        // collective (session maps are identical on every host).
+        for &(sid, _) in entries {
+            if !self.sessions.contains_key(&sid) {
+                anyhow::bail!("session {sid} not resident: cannot decode-batch");
+            }
+        }
+        let tag = batch_tag(entries);
+        let tokens: Vec<i32> = entries.iter().map(|&(_, t)| t).collect();
+        let positions: Vec<i32> =
+            entries.iter().map(|&(sid, _)| self.sessions[&sid].next_pos).collect();
+        let cfg = &self.cfg;
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let backend = self.backend.as_ref();
+        let last = self.rank == a.n_hosts - 1;
+        let mut tm = DecodeTiming::default();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let mut hidden = backend.embed(&tokens)?;
+        tm.pre_s += sw.lap();
+
+        for li in 0..m.n_layers {
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
+            tm.pre_s += sw.lap();
+
+            // Last host appends each session's new row to ITS cache before
+            // attending; each row then sees exactly its own cache's valid
+            // prefix (the n=1 self-causal rule).
+            if last {
+                for (i, &(sid, _)) in entries.iter().enumerate() {
+                    self.pool.get_mut(sid)?.append(
+                        li,
+                        &k.slice_rows(i, i + 1),
+                        &v.slice_rows(i, i + 1),
+                    )?;
+                }
+            }
+            let views: Vec<KvView<'_>> = entries
+                .iter()
+                .map(|&(sid, _)| {
+                    let lc = &self.pool.get(sid)?.layers[li];
+                    Ok(KvView { k: &lc.k, v: &lc.v, len: lc.len })
+                })
+                .collect::<Result<_>>()?;
+            let (out, lse) = backend.decode_attn_batch(&q, &views)?;
+            tm.attn_s += sw.lap();
+
+            // One batch-tagged AllGather round per layer for ALL sessions.
+            let all = self.fabric.att_gather.all_gather_tagged(self.rank, tag, (out, lse));
+            tm.comm_s += sw.lap();
+
+            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
+            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
+            let att = merge_partials(&outs_v, &lses_v);
+            tm.merge_s += sw.lap();
+
+            hidden = backend.decode_post(li, &hidden, &att)?;
+            tm.post_s += sw.lap();
+        }
+        for &(sid, _) in entries {
+            self.sessions.get_mut(&sid).unwrap().next_pos += 1;
+        }
+
+        let logits = if last {
+            let l = backend.lm_head(&hidden)?;
+            tm.lm_head_s += sw.lap();
+            let vocab = m.vocab_size;
+            Some(
+                (0..entries.len())
+                    .map(|i| l.data[i * vocab..(i + 1) * vocab].to_vec())
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok((logits, tm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_tag_is_order_sensitive_and_token_blind() {
+        let a = batch_tag(&[(1, 5), (2, 9)]);
+        let b = batch_tag(&[(2, 5), (1, 9)]);
+        let c = batch_tag(&[(1, 0), (2, 0)]);
+        assert_ne!(a, b, "session order must change the round tag");
+        assert_eq!(a, c, "sampled tokens must not change the round tag");
+        assert_ne!(batch_tag(&[(1, 0)]), batch_tag(&[(1, 0), (2, 0)]));
     }
 }

@@ -1,7 +1,7 @@
 //! L3 coordinator — the paper's system contribution.
 //!
 //! The `Cluster` owns one worker thread per host (each with its own PJRT
-//! engine + KV cache) and drives the APB inference procedure:
+//! engine + KV pool) and drives the APB inference procedure:
 //!
 //!   prefill (Algorithm 2, per layer):
 //!     layer_pre → top-l_p selection → AllGather(B^C) → passing-block
@@ -10,9 +10,14 @@
 //!     decode_pre → per-host decode_attn(+LSE) → Gather → online-softmax
 //!     merge → decode_post; greedy next-token on the last host.
 //!
-//! The leader thread never touches tensors on the prefill path — it only
-//! routes commands; all compute + collectives happen inside host workers,
-//! exactly like the paper's one-process-per-GPU deployment.
+//! Requests are first-class **sessions**: every command carries a
+//! [`SessionId`], each host worker keeps one KV-pool slot plus position
+//! bookkeeping per resident session, and a continuous-batching step decodes
+//! all active sessions in ONE stacked backend pass per layer
+//! (`Cmd::DecodeBatch`). The leader thread never touches tensors on the
+//! prefill path — it only routes commands; all compute + collectives happen
+//! inside host workers, exactly like the paper's one-process-per-GPU
+//! deployment.
 
 pub mod host;
 pub mod scheduler;
@@ -27,19 +32,31 @@ use crate::cluster::Fabric;
 use crate::config::{ApbOptions, Config};
 use crate::util::tensor::Tensor;
 
+pub use crate::kvcache::SessionId;
 pub use timing::{DecodeTiming, PrefillTiming};
 
-/// Commands from the leader to host workers.
+/// Session id used by the legacy single-request helpers
+/// ([`Cluster::prefill`] / [`Cluster::generate`]); scheduler-issued ids
+/// start at 1 so they never collide.
+pub const LEGACY_SESSION: SessionId = 0;
+
+/// Commands from the leader to host workers. Every request-scoped command
+/// names its session.
 #[derive(Clone)]
 pub enum Cmd {
-    /// Run the APB prefill over this host's token layout.
-    Prefill { tokens: Arc<Vec<i32>>, opts: ApbOptions },
+    /// Run the APB prefill over this host's token layout into the
+    /// session's KV-pool slot.
+    Prefill { sid: SessionId, tokens: Arc<Vec<i32>>, opts: ApbOptions },
     /// Process the re-fed query chunk (decode path, n = l_q).
-    QueryChunk { tokens: Arc<Vec<i32>> },
-    /// Decode one token (broadcast of the previously sampled token).
-    DecodeStep { token: i32, step: usize },
-    /// Drop the request state (cache + hidden).
-    Clear,
+    QueryChunk { sid: SessionId, tokens: Arc<Vec<i32>> },
+    /// One continuous-batching decode step: one (session, previous token)
+    /// entry per active session, executed as a single stacked backend pass
+    /// per layer.
+    DecodeBatch { entries: Arc<Vec<(SessionId, i32)>> },
+    /// Drop one session's state (KV slot + positions).
+    Clear { sid: SessionId },
+    /// Drop every session (between serving phases / legacy callers).
+    ClearAll,
     Shutdown,
 }
 
@@ -47,14 +64,19 @@ pub enum Cmd {
 pub enum Resp {
     PrefillDone {
         host: usize,
+        sid: SessionId,
         timing: PrefillTiming,
         /// Per-layer, per-kv-head local-block indices the compressor
-        /// retained (for retention-recall experiments; paper §3.4).
+        /// retained — recorded only when `ApbOptions::record_retained`
+        /// (retention-recall experiments; paper §3.4), empty otherwise.
         retained: Vec<Vec<Vec<u32>>>,
     },
     /// Only the last host computes logits (all hosts hold identical hidden
     /// states after the merge, so one LM head suffices).
-    StepDone { host: usize, logits: Option<Vec<f32>>, timing: DecodeTiming },
+    StepDone { host: usize, sid: SessionId, logits: Option<Vec<f32>>, timing: DecodeTiming },
+    /// Batched decode step: last host returns one logits row per entry, in
+    /// entry order.
+    BatchDone { host: usize, logits: Option<Vec<Vec<f32>>>, timing: DecodeTiming },
     Cleared { host: usize },
     Error { host: usize, msg: String },
 }
@@ -74,9 +96,11 @@ pub struct Cluster {
 /// Leader-side report for one prefill.
 #[derive(Debug, Clone)]
 pub struct PrefillReport {
+    pub sid: SessionId,
     pub per_host: Vec<PrefillTiming>,
     /// retained[host][layer][kv_head] -> local-block indices kept by the
-    /// compressor (ascending).
+    /// compressor (ascending). Populated only when the request opted in
+    /// via `ApbOptions::record_retained`; empty per-host vectors otherwise.
     pub retained: Vec<Vec<Vec<Vec<u32>>>>,
     pub wall_seconds: f64,
     pub comm_bytes: u64,
@@ -85,9 +109,10 @@ pub struct PrefillReport {
 impl PrefillReport {
     /// Recall of a set of *global document positions* in the compressor's
     /// retained set, averaged over layers and kv-heads — the measured twin
-    /// of `oracle::compressor_recall`. Positions on host 0 are never
-    /// passed (host 0 sends to nobody's past), so callers typically plant
-    /// needles beyond block 0.
+    /// of `oracle::compressor_recall`. Requires the prefill to have run
+    /// with `ApbOptions::record_retained` (returns 0.0 otherwise).
+    /// Positions on host 0 are never passed (host 0 sends to nobody's
+    /// past), so callers typically plant needles beyond block 0.
     pub fn retention_recall(&self, cfg: &Config, positions: &[usize]) -> f64 {
         let l_b = cfg.apb.block_len;
         let mut hits = 0usize;
@@ -121,6 +146,30 @@ pub struct GenReport {
     pub query_logits: Vec<f32>,
     pub wall_seconds: f64,
     pub per_step_seconds: Vec<f64>,
+    /// Decode-path communication (query-chunk + per-step attention
+    /// AllGathers), the decode twin of `PrefillReport::comm_bytes`.
+    pub comm_bytes: u64,
+}
+
+/// Leader-side report for one session's query-chunk decode pass.
+#[derive(Debug, Clone)]
+pub struct ChunkReport {
+    pub sid: SessionId,
+    /// `[l_q, vocab]` logits rows (flattened) from the last host.
+    pub logits: Vec<f32>,
+    pub per_host: Vec<DecodeTiming>,
+    pub wall_seconds: f64,
+    pub comm_bytes: u64,
+}
+
+/// Leader-side report for one continuous-batching decode step.
+#[derive(Debug, Clone)]
+pub struct StepBatchReport {
+    /// One `[vocab]` logits row per submitted entry, in entry order.
+    pub logits: Vec<(SessionId, Vec<f32>)>,
+    pub per_host: Vec<DecodeTiming>,
+    pub wall_seconds: f64,
+    pub comm_bytes: u64,
 }
 
 /// Mirror of `model.host_tokens`: [anchor (l_aq) | local block] layout for
@@ -188,19 +237,35 @@ impl Cluster {
         Ok(())
     }
 
+    /// Collect exactly `n` responses, DRAINING the round even when hosts
+    /// report errors — a partial drain would leave stale responses queued
+    /// and desynchronize every later round. Fails after the drain with the
+    /// joined error messages.
     fn collect<F: FnMut(Resp) -> Result<()>>(&self, n: usize, mut f: F) -> Result<()> {
+        let mut errors: Vec<String> = Vec::new();
         for _ in 0..n {
             match self.resp_rx.recv().context("cluster response channel closed")? {
-                Resp::Error { host, msg } => bail!("host {host} failed: {msg}"),
+                Resp::Error { host, msg } => errors.push(format!("host {host}: {msg}")),
                 other => f(other)?,
             }
+        }
+        if !errors.is_empty() {
+            bail!("{}", errors.join("; "));
         }
         Ok(())
     }
 
-    /// APB prefill of a document + query (Algorithm 1 lines 1–12).
-    pub fn prefill(&self, doc: &[i32], query: &[i32], opts: &ApbOptions)
-                   -> Result<PrefillReport> {
+    /// APB prefill of a document + query (Algorithm 1 lines 1–12) into
+    /// session `sid`'s KV slot. The session stays resident — holding its
+    /// caches on every host — until [`Cluster::clear_session`]. Fails with
+    /// a backpressure error when every KV-pool slot is occupied.
+    pub fn prefill_session(
+        &self,
+        sid: SessionId,
+        doc: &[i32],
+        query: &[i32],
+        opts: &ApbOptions,
+    ) -> Result<PrefillReport> {
         let a = &self.cfg.apb;
         if doc.len() != a.doc_len() {
             bail!("doc length {} != configured {}", doc.len(), a.doc_len());
@@ -208,47 +273,130 @@ impl Cluster {
         if query.len() != a.query_len {
             bail!("query length {} != configured {}", query.len(), a.query_len);
         }
-        self.fabric.meter.reset();
+        let bytes0 = self.fabric.meter.bytes_total();
         let t0 = std::time::Instant::now();
         for (rank, h) in self.hosts.iter().enumerate() {
             let tokens = Arc::new(host_tokens(&self.cfg, doc, query, rank, opts));
             h.cmd_tx
-                .send(Cmd::Prefill { tokens, opts: *opts })
+                .send(Cmd::Prefill { sid, tokens, opts: *opts })
                 .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
         }
         let mut per_host = vec![PrefillTiming::default(); self.hosts.len()];
         let mut retained = vec![Vec::new(); self.hosts.len()];
         self.collect(self.hosts.len(), |r| {
-            if let Resp::PrefillDone { host, timing, retained: ret } = r {
+            if let Resp::PrefillDone { host, sid: rsid, timing, retained: ret } = r {
+                debug_assert_eq!(rsid, sid);
                 per_host[host] = timing;
                 retained[host] = ret;
             }
             Ok(())
         })?;
         Ok(PrefillReport {
+            sid,
             per_host,
             retained,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            comm_bytes: self.fabric.meter.bytes_total(),
+            comm_bytes: self.fabric.meter.bytes_total() - bytes0,
         })
     }
 
-    /// Decode: re-feed the query chunk with exact distributed attention,
-    /// then greedily generate `max_new` tokens (Algorithm 1 lines 13–25).
-    pub fn generate(&self, query: &[i32], max_new: usize) -> Result<GenReport> {
+    /// Re-feed a session's query chunk with exact distributed attention
+    /// (Algorithm 1 lines 13–16), returning the chunk logits.
+    pub fn decode_query_chunk(&self, sid: SessionId, query: &[i32]) -> Result<ChunkReport> {
+        if query.len() != self.cfg.apb.query_len {
+            bail!("query length {} != configured {}", query.len(), self.cfg.apb.query_len);
+        }
+        let bytes0 = self.fabric.meter.bytes_total();
         let t0 = std::time::Instant::now();
-        let chunk = Arc::new(query.to_vec());
-        self.broadcast(Cmd::QueryChunk { tokens: chunk })?;
+        self.broadcast(Cmd::QueryChunk { sid, tokens: Arc::new(query.to_vec()) })?;
         let mut logits: Option<Vec<f32>> = None;
+        let mut per_host = vec![DecodeTiming::default(); self.hosts.len()];
         self.collect(self.hosts.len(), |r| {
-            if let Resp::StepDone { logits: Some(l), .. } = r {
-                logits = Some(l);
+            if let Resp::StepDone { host, logits: l, timing, .. } = r {
+                per_host[host] = timing;
+                if let Some(l) = l {
+                    logits = Some(l);
+                }
             }
             Ok(())
         })?;
-        let query_logits = logits.context("no host produced query logits")?;
+        Ok(ChunkReport {
+            sid,
+            logits: logits.context("no host produced query logits")?,
+            per_host,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            comm_bytes: self.fabric.meter.bytes_total() - bytes0,
+        })
+    }
+
+    /// One continuous-batching decode step over the active sessions: each
+    /// entry is (session, previously sampled token). All entries ride ONE
+    /// stacked backend pass per layer on every host; logits come back per
+    /// session in entry order.
+    pub fn decode_step_batch(&self, entries: &[(SessionId, i32)]) -> Result<StepBatchReport> {
+        if entries.is_empty() {
+            bail!("decode_step_batch of zero sessions");
+        }
+        for (i, (sid, _)) in entries.iter().enumerate() {
+            if entries[..i].iter().any(|(s, _)| s == sid) {
+                bail!("session {sid} appears twice in one decode batch");
+            }
+        }
+        let bytes0 = self.fabric.meter.bytes_total();
+        let t0 = std::time::Instant::now();
+        self.broadcast(Cmd::DecodeBatch { entries: Arc::new(entries.to_vec()) })?;
+        let mut rows: Option<Vec<Vec<f32>>> = None;
+        let mut per_host = vec![DecodeTiming::default(); self.hosts.len()];
+        self.collect(self.hosts.len(), |r| {
+            if let Resp::BatchDone { host, logits, timing } = r {
+                per_host[host] = timing;
+                if let Some(l) = logits {
+                    rows = Some(l);
+                }
+            }
+            Ok(())
+        })?;
+        let rows = rows.context("no host produced batch logits")?;
+        if rows.len() != entries.len() {
+            bail!("batch returned {} logit rows for {} entries", rows.len(), entries.len());
+        }
+        Ok(StepBatchReport {
+            logits: entries.iter().map(|(s, _)| *s).zip(rows).collect(),
+            per_host,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            comm_bytes: self.fabric.meter.bytes_total() - bytes0,
+        })
+    }
+
+    /// Drop one session's state (KV slot + position bookkeeping) on every
+    /// host, freeing its residency slot.
+    pub fn clear_session(&self, sid: SessionId) -> Result<()> {
+        self.broadcast(Cmd::Clear { sid })?;
+        self.collect(self.hosts.len(), |_| Ok(()))
+    }
+
+    /// Drop every session's state on every host.
+    pub fn clear(&self) -> Result<()> {
+        self.broadcast(Cmd::ClearAll)?;
+        self.collect(self.hosts.len(), |_| Ok(()))
+    }
+
+    /// Legacy single-request prefill: runs as [`LEGACY_SESSION`], resetting
+    /// that session's slot in place (the pre-session behaviour).
+    pub fn prefill(&self, doc: &[i32], query: &[i32], opts: &ApbOptions)
+                   -> Result<PrefillReport> {
+        self.prefill_session(LEGACY_SESSION, doc, query, opts)
+    }
+
+    /// Decode: re-feed the query chunk with exact distributed attention,
+    /// then greedily generate `max_new` tokens (Algorithm 1 lines 13–25)
+    /// for the legacy session.
+    pub fn generate(&self, query: &[i32], max_new: usize) -> Result<GenReport> {
+        let t0 = std::time::Instant::now();
+        let chunk = self.decode_query_chunk(LEGACY_SESSION, query)?;
+        let mut comm_bytes = chunk.comm_bytes;
         let vocab = self.cfg.model.vocab_size;
-        let last_row = &query_logits[query_logits.len() - vocab..];
+        let last_row = &chunk.logits[chunk.logits.len() - vocab..];
         let mut token = Tensor::argmax_row(last_row) as i32;
 
         let mut tokens = Vec::with_capacity(max_new);
@@ -258,31 +406,18 @@ impl Cluster {
             if step + 1 == max_new {
                 break; // the last sampled token needs no further forward
             }
-            let ts = std::time::Instant::now();
-            self.broadcast(Cmd::DecodeStep { token, step })?;
-            let mut step_logits: Option<Vec<f32>> = None;
-            self.collect(self.hosts.len(), |r| {
-                if let Resp::StepDone { logits: Some(l), .. } = r {
-                    step_logits = Some(l);
-                }
-                Ok(())
-            })?;
-            per_step.push(ts.elapsed().as_secs_f64());
-            let l = step_logits.context("no step logits")?;
-            token = Tensor::argmax_row(&l) as i32;
+            let rep = self.decode_step_batch(&[(LEGACY_SESSION, token)])?;
+            per_step.push(rep.wall_seconds);
+            comm_bytes += rep.comm_bytes;
+            token = Tensor::argmax_row(&rep.logits[0].1) as i32;
         }
         Ok(GenReport {
             tokens,
-            query_logits,
+            query_logits: chunk.logits,
             wall_seconds: t0.elapsed().as_secs_f64(),
             per_step_seconds: per_step,
+            comm_bytes,
         })
-    }
-
-    /// Drop request state on every host (between requests).
-    pub fn clear(&self) -> Result<()> {
-        self.broadcast(Cmd::Clear)?;
-        self.collect(self.hosts.len(), |_| Ok(()))
     }
 
     pub fn n_hosts(&self) -> usize {
@@ -329,6 +464,7 @@ mod tests {
                 query_len: 2,
                 passing_len: 2,
                 max_new_tokens: 4,
+                max_resident: 2,
             },
             0,
         )
@@ -367,5 +503,14 @@ mod tests {
         let t1 = host_tokens(&cfg, &doc, &query, 1, &no_a);
         assert!(t1[..cfg.apb.l_aq()].iter().all(|&t| t == 0));
         assert_eq!(n_anchor_for(&cfg, 1, &no_a), 0);
+    }
+
+    #[test]
+    fn duplicate_sessions_in_one_batch_rejected() {
+        let cfg = fake_cfg();
+        let cluster = Cluster::start(&cfg).expect("cluster");
+        let err = cluster.decode_step_batch(&[(1, 0), (2, 0), (1, 3)]).unwrap_err();
+        assert!(format!("{err:#}").contains("twice"));
+        assert!(cluster.decode_step_batch(&[]).is_err());
     }
 }

@@ -1,13 +1,21 @@
-//! Per-host KV-cache manager.
+//! Per-host KV-cache management.
 //!
-//! Holds one padded [cache_max, kv_heads, head_dim] K and V tensor per
-//! layer plus the valid length — what Algorithm 2 appends during prefill
-//! (the local block only; anchor and passing KV are discarded) and what
-//! Algorithm 3 reads and (on the last host) extends during decode.
+//! [`KvCache`] holds one padded [cache_max, kv_heads, head_dim] K and V
+//! tensor per layer plus the valid length — what Algorithm 2 appends during
+//! prefill (the local block only; anchor and passing KV are discarded) and
+//! what Algorithm 3 reads and (on the last host) extends during decode.
+//!
+//! [`KvPool`] turns that single implicit request into multi-request
+//! residency: a fixed set of `KvCache` slots keyed by [`SessionId`], with
+//! byte-accounted alloc/free and an explicit exhaustion error so slot
+//! pressure surfaces as scheduler backpressure, never as corruption.
 
 use anyhow::{bail, Result};
 
 use crate::util::tensor::Tensor;
+
+/// Identity of one serving session (request) resident on the cluster.
+pub type SessionId = u64;
 
 #[derive(Debug, Clone)]
 pub struct LayerCache {
@@ -84,6 +92,127 @@ impl KvCache {
     }
 }
 
+struct Slot {
+    sid: Option<SessionId>,
+    cache: KvCache,
+}
+
+/// Fixed-capacity pool of per-session KV caches (one per residency slot).
+///
+/// Every host owns one pool sized `ApbParams::max_resident`; a session's
+/// cache lives in its slot from prefill until `free`, so several requests
+/// can hold KV on the cluster simultaneously (continuous batching).
+pub struct KvPool {
+    slots: Vec<Slot>,
+}
+
+impl KvPool {
+    pub fn new(
+        n_slots: usize,
+        n_layers: usize,
+        cache_max: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        let slots = (0..n_slots.max(1))
+            .map(|_| Slot {
+                sid: None,
+                cache: KvCache::new(n_layers, cache_max, kv_heads, head_dim),
+            })
+            .collect();
+        KvPool { slots }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Sessions currently holding a slot.
+    pub fn resident(&self) -> usize {
+        self.slots.iter().filter(|s| s.sid.is_some()).count()
+    }
+
+    pub fn resident_sids(&self) -> Vec<SessionId> {
+        self.slots.iter().filter_map(|s| s.sid).collect()
+    }
+
+    pub fn contains(&self, sid: SessionId) -> bool {
+        self.slots.iter().any(|s| s.sid == Some(sid))
+    }
+
+    /// Claim a slot for `sid`, returning its (cleared) cache. Re-allocating
+    /// a resident session resets its cache in place (a fresh prefill of the
+    /// same session id). Errors — without touching any resident cache —
+    /// when every slot is occupied by another session.
+    pub fn alloc(&mut self, sid: SessionId) -> Result<&mut KvCache> {
+        if let Some(i) = self.slots.iter().position(|s| s.sid == Some(sid)) {
+            self.slots[i].cache.clear();
+            return Ok(&mut self.slots[i].cache);
+        }
+        let Some(i) = self.slots.iter().position(|s| s.sid.is_none()) else {
+            bail!(
+                "kv pool exhausted ({}/{} slots resident): backpressure — \
+                 free a session before admitting another",
+                self.slots.len(),
+                self.slots.len()
+            );
+        };
+        self.slots[i].sid = Some(sid);
+        self.slots[i].cache.clear();
+        Ok(&mut self.slots[i].cache)
+    }
+
+    pub fn get(&self, sid: SessionId) -> Result<&KvCache> {
+        self.slots
+            .iter()
+            .find(|s| s.sid == Some(sid))
+            .map(|s| &s.cache)
+            .ok_or_else(|| anyhow::anyhow!("session {sid} not resident in kv pool"))
+    }
+
+    pub fn get_mut(&mut self, sid: SessionId) -> Result<&mut KvCache> {
+        self.slots
+            .iter_mut()
+            .find(|s| s.sid == Some(sid))
+            .map(|s| &mut s.cache)
+            .ok_or_else(|| anyhow::anyhow!("session {sid} not resident in kv pool"))
+    }
+
+    /// Release `sid`'s slot (no-op when absent). Returns whether a slot was
+    /// actually freed.
+    pub fn free(&mut self, sid: SessionId) -> bool {
+        match self.slots.iter_mut().find(|s| s.sid == Some(sid)) {
+            Some(s) => {
+                s.sid = None;
+                s.cache.clear();
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn clear_all(&mut self) {
+        for s in &mut self.slots {
+            s.sid = None;
+            s.cache.clear();
+        }
+    }
+
+    /// Bytes resident across occupied slots (valid regions only).
+    pub fn bytes_used(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.sid.is_some())
+            .map(|s| s.cache.bytes_used())
+            .sum()
+    }
+
+    /// Bytes reserved by the whole pool (padded capacity of every slot).
+    pub fn bytes_reserved(&self) -> usize {
+        self.slots.iter().map(|s| s.cache.bytes_reserved()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +254,58 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!(c.bytes_used(), 0);
         assert_eq!(c.bytes_reserved(), 2 * 4 * 1 * 2 * 4);
+    }
+
+    #[test]
+    fn pool_alloc_get_free_roundtrip() {
+        let mut p = KvPool::new(2, 1, 4, 1, 2);
+        assert_eq!(p.n_slots(), 2);
+        assert_eq!(p.resident(), 0);
+        p.alloc(7).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 9.0)).unwrap();
+        p.alloc(8).unwrap();
+        assert_eq!(p.resident(), 2);
+        assert!(p.contains(7) && p.contains(8) && !p.contains(9));
+        assert_eq!(p.get(7).unwrap().len(0), 2);
+        assert_eq!(p.get(8).unwrap().len(0), 0);
+        assert!(p.free(7));
+        assert!(!p.free(7), "double free is a no-op");
+        assert_eq!(p.resident(), 1);
+        assert!(p.get(7).is_err());
+    }
+
+    #[test]
+    fn pool_exhaustion_errors_without_corruption() {
+        let mut p = KvPool::new(1, 1, 4, 1, 2);
+        p.alloc(1).unwrap().append(0, &rows(3, 1, 2, 5.0), &rows(3, 1, 2, 6.0)).unwrap();
+        let err = p.alloc(2).unwrap_err();
+        assert!(format!("{err:#}").contains("backpressure"));
+        // The resident session's cache is untouched by the failed alloc.
+        assert_eq!(p.get(1).unwrap().len(0), 3);
+        assert_eq!(p.get(1).unwrap().layers[0].k.slice_rows(0, 3), rows(3, 1, 2, 5.0));
+    }
+
+    #[test]
+    fn pool_realloc_resets_in_place() {
+        let mut p = KvPool::new(1, 1, 4, 1, 2);
+        p.alloc(3).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
+        assert_eq!(p.get(3).unwrap().len(0), 2);
+        // Fresh prefill of the same session id starts from an empty cache.
+        assert_eq!(p.alloc(3).unwrap().len(0), 0);
+        assert_eq!(p.resident(), 1);
+    }
+
+    #[test]
+    fn pool_byte_accounting() {
+        let mut p = KvPool::new(2, 1, 4, 1, 2);
+        assert_eq!(p.bytes_used(), 0);
+        assert_eq!(p.bytes_reserved(), 2 * (2 * 4 * 1 * 2 * 4));
+        p.alloc(1).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
+        let one = p.bytes_used();
+        assert_eq!(one, 2 * 2 * 2 * 4);
+        p.alloc(2).unwrap().append(0, &rows(1, 1, 2, 0.0), &rows(1, 1, 2, 0.0)).unwrap();
+        assert_eq!(p.bytes_used(), one + 2 * 2 * 4);
+        p.clear_all();
+        assert_eq!(p.bytes_used(), 0);
+        assert_eq!(p.resident(), 0);
     }
 }

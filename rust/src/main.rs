@@ -111,10 +111,11 @@ fn serve(args: &Args) -> Result<()> {
     }
     sched.run_all()?;
     let m = sched.metrics();
-    println!("served {} requests | prefill p50 {:.1} ms | e2e p50 {:.1} ms | \
-              speed mean {:.0} tok/s",
-             m.n_requests, m.prefill.p50 * 1e3, m.e2e.p50 * 1e3,
-             m.speed_tok_per_s.mean);
+    println!("served {} requests ({} sessions resident at peak) | prefill p50 \
+              {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | e2e p50 {:.1} ms \
+              | speed mean {:.0} tok/s",
+             m.n_requests, m.peak_resident, m.prefill.p50 * 1e3, m.ttft.p50 * 1e3,
+             m.tpot.p50 * 1e3, m.e2e.p50 * 1e3, m.speed_tok_per_s.mean);
     Ok(())
 }
 

@@ -102,6 +102,7 @@ mod tests {
                 query_len: 4,
                 passing_len: 8,
                 max_new_tokens: 8,
+                max_resident: 2,
             },
             0,
         )

@@ -32,6 +32,15 @@ pub use sim::SimEngine;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Artifact, Engine, HostArg, IoSpec};
 
+/// Borrowed view of one session's per-layer KV cache for batched decode:
+/// padded `k`/`v` tensors plus the valid prefix length.
+#[derive(Clone, Copy)]
+pub struct KvView<'a> {
+    pub k: &'a Tensor,
+    pub v: &'a Tensor,
+    pub len: usize,
+}
+
 /// Per-host execution backend: the typed stage functions of the APB model.
 ///
 /// All tensors are host-side dense f32 (`util::tensor::Tensor`); backends
@@ -82,12 +91,15 @@ pub trait ExecBackend {
     ) -> Result<Tensor>;
 
     /// Decode stage 1 (Algorithm 3): project + RoPE the new-token chunk at
-    /// positions `pos0..pos0+n`. Returns `(q, k, v)`.
+    /// per-row positions `pos` (`pos.len() == hidden rows`). A single
+    /// session's chunk passes consecutive positions; a continuous-batching
+    /// step stacks one row per active session, each at its own position.
+    /// Returns `(q, k, v)`.
     fn decode_pre(
         &self,
         layer: usize,
         hidden: &Tensor,
-        pos0: i32,
+        pos: &[i32],
     ) -> Result<(Tensor, Tensor, Tensor)>;
 
     /// Decode stage 2: per-host partial attention of the chunk against the
@@ -102,6 +114,35 @@ pub trait ExecBackend {
         cache_len: usize,
         self_causal: bool,
     ) -> Result<(Tensor, Tensor)>;
+
+    /// Batched decode attention: one backend pass serving all active
+    /// sessions of a continuous-batching step. `q` is `[B, h, hd]` with one
+    /// row per session; row `i` attends its own session's cache
+    /// `caches[i]` (`kj < caches[i].len` — the row's own KV, if any, has
+    /// already been appended by the caller). Returns stacked
+    /// `(out [B, h, hd], lse [B, h])`.
+    ///
+    /// The default implementation slices per row through [`decode_attn`];
+    /// backends that can fuse the batch (SimEngine) override it.
+    fn decode_attn_batch(
+        &self,
+        q: &Tensor,
+        caches: &[KvView<'_>],
+    ) -> Result<(Tensor, Tensor)> {
+        let b = q.shape[0];
+        anyhow::ensure!(caches.len() == b, "decode_attn_batch: {} rows, {} caches",
+                        b, caches.len());
+        let mut outs = Vec::with_capacity(b);
+        let mut lses = Vec::with_capacity(b);
+        for (i, c) in caches.iter().enumerate() {
+            let (o, l) = self.decode_attn(&q.slice_rows(i, i + 1), c.k, c.v, c.len, false)?;
+            outs.push(o);
+            lses.push(l);
+        }
+        let out_refs: Vec<&Tensor> = outs.iter().collect();
+        let lse_refs: Vec<&Tensor> = lses.iter().collect();
+        Ok((Tensor::concat_rows(&out_refs), Tensor::concat_rows(&lse_refs)))
+    }
 
     /// Decode stage 3: merged attention -> O-proj + residual + FFN.
     fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor>;

@@ -333,26 +333,50 @@ impl ExecBackend for Engine {
         &self,
         layer: usize,
         hidden: &Tensor,
-        pos0: i32,
+        pos: &[i32],
     ) -> Result<(Tensor, Tensor, Tensor)> {
-        let tag = self.chunk_tag(hidden.shape[0]);
-        let h_buf = self.upload_f32(hidden)?;
-        let pos_buf = self.scalar_i32(pos0)?;
-        let mut outs = self.exec(
-            &format!("decode_pre_{tag}"),
-            &[
-                &h_buf,
-                &pos_buf,
-                self.layer_weight(layer, "attn_norm")?,
-                self.layer_weight(layer, "wq")?,
-                self.layer_weight(layer, "wk")?,
-                self.layer_weight(layer, "wv")?,
-            ],
-        )?;
-        let v = outs.pop().context("decode_pre v")?;
-        let k = outs.pop().context("decode_pre k")?;
-        let q = outs.pop().context("decode_pre q")?;
-        Ok((q, k, v))
+        let n = hidden.shape[0];
+        if pos.len() != n {
+            bail!("decode_pre: {} positions for {n} rows", pos.len());
+        }
+        // The AOT'd decode_pre artifacts take a scalar pos0 and derive
+        // pos0+i internally, so a consecutive run executes in one call.
+        // Non-consecutive per-row positions (a continuous-batching step
+        // stacking rows of different sessions) fall back to one single-row
+        // call per row against the `_step` artifact.
+        let consecutive = pos.windows(2).all(|w| w[1] == w[0] + 1);
+        if consecutive {
+            let tag = self.chunk_tag(n);
+            let h_buf = self.upload_f32(hidden)?;
+            let pos_buf = self.scalar_i32(pos[0])?;
+            let mut outs = self.exec(
+                &format!("decode_pre_{tag}"),
+                &[
+                    &h_buf,
+                    &pos_buf,
+                    self.layer_weight(layer, "attn_norm")?,
+                    self.layer_weight(layer, "wq")?,
+                    self.layer_weight(layer, "wk")?,
+                    self.layer_weight(layer, "wv")?,
+                ],
+            )?;
+            let v = outs.pop().context("decode_pre v")?;
+            let k = outs.pop().context("decode_pre k")?;
+            let q = outs.pop().context("decode_pre q")?;
+            return Ok((q, k, v));
+        }
+        let mut qs = Vec::with_capacity(n);
+        let mut ks = Vec::with_capacity(n);
+        let mut vs = Vec::with_capacity(n);
+        for i in 0..n {
+            let (q, k, v) =
+                self.decode_pre(layer, &hidden.slice_rows(i, i + 1), &pos[i..i + 1])?;
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
+        }
+        let cat = |ts: &[Tensor]| Tensor::concat_rows(&ts.iter().collect::<Vec<_>>());
+        Ok((cat(&qs), cat(&ks), cat(&vs)))
     }
 
     fn decode_attn(

@@ -541,15 +541,17 @@ impl ExecBackend for SimEngine {
         &self,
         layer: usize,
         hidden: &Tensor,
-        pos0: i32,
+        pos: &[i32],
     ) -> Result<(Tensor, Tensor, Tensor)> {
         let lw = &self.layers[layer];
         let n = hidden.shape[0];
+        if pos.len() != n {
+            bail!("decode_pre: {} positions for {n} rows", pos.len());
+        }
         let (q, k, v) = self.project_qkv(lw, hidden);
-        let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
         Ok((
-            rope(&q, &positions, self.model.rope_theta),
-            rope(&k, &positions, self.model.rope_theta),
+            rope(&q, pos, self.model.rope_theta),
+            rope(&k, pos, self.model.rope_theta),
             v,
         ))
     }
@@ -571,6 +573,30 @@ impl ExecBackend for SimEngine {
             };
             kj < visible_len
         }))
+    }
+
+    /// Fused batched decode attention: all sessions' rows in one pass, each
+    /// row masked to its own cache's valid prefix. Numerically identical to
+    /// the per-row default (the dense attention is row-independent), but a
+    /// single engine invocation — the sim twin of a batched decode kernel.
+    fn decode_attn_batch(
+        &self,
+        q: &Tensor,
+        caches: &[super::KvView<'_>],
+    ) -> Result<(Tensor, Tensor)> {
+        let (b, h, hd) = (q.shape[0], q.shape[1], q.shape[2]);
+        if caches.len() != b {
+            bail!("decode_attn_batch: {} rows, {} caches", b, caches.len());
+        }
+        let mut out = Tensor::zeros(vec![b, h, hd]);
+        let mut lse = Tensor::zeros(vec![b, h]);
+        for (i, c) in caches.iter().enumerate() {
+            let (o, l) =
+                masked_attention(&q.slice_rows(i, i + 1), c.k, c.v, |_, kj| kj < c.len);
+            out.write_rows(i, &o);
+            lse.write_rows(i, &l);
+        }
+        Ok((out, lse))
     }
 
     fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor> {
@@ -599,9 +625,60 @@ mod tests {
         assert_eq!(a.embed.data, b.embed.data);
         assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
         let h = a.embed(&[1, 2, 3]).unwrap();
-        let (qa, ..) = a.decode_pre(0, &h, 5).unwrap();
-        let (qb, ..) = b.decode_pre(0, &h, 5).unwrap();
+        let (qa, ..) = a.decode_pre(0, &h, &[5, 6, 7]).unwrap();
+        let (qb, ..) = b.decode_pre(0, &h, &[5, 6, 7]).unwrap();
         assert_eq!(qa, qb);
+    }
+
+    #[test]
+    fn decode_pre_per_row_positions_match_consecutive() {
+        // Non-consecutive per-row positions (a continuous-batching step)
+        // must equal the same rows roped individually at those positions.
+        let e = engine();
+        let h = e.embed(&[3, 9]).unwrap();
+        let (q, k, _v) = e.decode_pre(0, &h, &[40, 17]).unwrap();
+        let (q0, k0, _) = e.decode_pre(0, &h.slice_rows(0, 1), &[40]).unwrap();
+        let (q1, k1, _) = e.decode_pre(0, &h.slice_rows(1, 2), &[17]).unwrap();
+        assert_eq!(q.slice_rows(0, 1), q0);
+        assert_eq!(q.slice_rows(1, 2), q1);
+        assert_eq!(k.slice_rows(0, 1), k0);
+        assert_eq!(k.slice_rows(1, 2), k1);
+        assert!(e.decode_pre(0, &h, &[1]).is_err(), "position/row count mismatch");
+    }
+
+    #[test]
+    fn decode_attn_batch_matches_per_row() {
+        use crate::runtime::{ExecBackend, KvView};
+        let e = engine();
+        let (h, kh, hd) = (e.model.n_heads, e.model.n_kv_heads, e.model.head_dim());
+        let mut rng = Rng::new(21);
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let q = rand(&mut rng, vec![3, h, hd]);
+        // Three "sessions" with caches of different valid lengths.
+        let k1 = rand(&mut rng, vec![8, kh, hd]);
+        let v1 = rand(&mut rng, vec![8, kh, hd]);
+        let k2 = rand(&mut rng, vec![8, kh, hd]);
+        let v2 = rand(&mut rng, vec![8, kh, hd]);
+        let views = [
+            KvView { k: &k1, v: &v1, len: 5 },
+            KvView { k: &k2, v: &v2, len: 2 },
+            KvView { k: &k1, v: &v1, len: 0 }, // empty cache row
+        ];
+        let (out, lse) = e.decode_attn_batch(&q, &views).unwrap();
+        assert_eq!(out.shape, vec![3, h, hd]);
+        assert_eq!(lse.shape, vec![3, h]);
+        for (i, view) in views.iter().enumerate() {
+            let (o, l) = e
+                .decode_attn(&q.slice_rows(i, i + 1), view.k, view.v, view.len, false)
+                .unwrap();
+            assert_eq!(out.slice_rows(i, i + 1), o, "row {i} out");
+            assert_eq!(lse.slice_rows(i, i + 1), l, "row {i} lse");
+        }
+        // Empty-cache row follows the -inf LSE convention for the merge.
+        assert!(lse.slice_rows(2, 3).data.iter().all(|&x| x == f32::NEG_INFINITY));
     }
 
     #[test]

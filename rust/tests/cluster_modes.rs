@@ -85,15 +85,15 @@ fn retention_recall_trained_beats_random() {
             continue;
         }
         used += 1;
+        // Retention-recall experiments opt in to the retained-index record.
+        let recorded = ApbOptions { record_retained: true, ..Default::default() };
         cluster.clear().unwrap();
-        let rep = cluster
-            .prefill(&inst.doc, &inst.query, &ApbOptions::default())
-            .unwrap();
+        let rep = cluster.prefill(&inst.doc, &inst.query, &recorded).unwrap();
         r_trained += rep.retention_recall(&cfg, &positions);
         cluster.clear().unwrap();
         let rep = cluster
             .prefill(&inst.doc, &inst.query,
-                     &ApbOptions { retaining_compressor: false, ..Default::default() })
+                     &ApbOptions { retaining_compressor: false, ..recorded })
             .unwrap();
         r_random += rep.retention_recall(&cfg, &positions);
     }
@@ -121,7 +121,7 @@ fn rd_seed_changes_random_selection_deterministically() {
     let run = |seed: u64| {
         cluster.clear().unwrap();
         let o = ApbOptions { retaining_compressor: false, rd_seed: seed,
-                             ..Default::default() };
+                             record_retained: true, ..Default::default() };
         let rep = cluster.prefill(&inst.doc, &inst.query, &o).unwrap();
         rep.retained.clone()
     };
@@ -130,6 +130,36 @@ fn rd_seed_changes_random_selection_deterministically() {
     let c = run(2);
     assert_eq!(a, b, "same rd_seed must reproduce the selection");
     assert_ne!(a, c, "different rd_seed must change the selection");
+}
+
+#[test]
+fn retained_indices_are_opt_in() {
+    // Serving requests must not drag O(layers × kv_heads × l_p) of retained
+    // index sets through their lifetime unless a recall experiment asks.
+    let (cfg, cluster) = cluster();
+    let mut rng = Rng::new(23);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let rep = cluster
+        .prefill(&inst.doc, &inst.query, &ApbOptions::default())
+        .unwrap();
+    assert!(rep.retained.iter().all(|h| h.is_empty()),
+            "retained must be empty without record_retained");
+    assert_eq!(rep.retention_recall(&cfg, &[cfg.apb.block_len + 1]), 0.0);
+
+    cluster.clear().unwrap();
+    let rep = cluster
+        .prefill(&inst.doc, &inst.query,
+                 &ApbOptions { record_retained: true, ..Default::default() })
+        .unwrap();
+    for h in &rep.retained {
+        assert_eq!(h.len(), cfg.model.n_layers);
+        for layer in h {
+            assert_eq!(layer.len(), cfg.model.n_kv_heads);
+            for head in layer {
+                assert_eq!(head.len(), cfg.apb.passing_len);
+            }
+        }
+    }
 }
 
 #[test]

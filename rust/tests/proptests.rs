@@ -2,6 +2,7 @@
 //! the in-tree RNG with many seeded cases per property).
 
 use apb::cluster::collectives::{Collective, CommMeter};
+use apb::kvcache::{KvPool, SessionId};
 use apb::util::json::Json;
 use apb::util::rng::Rng;
 use apb::util::stats::{percentile, summarize};
@@ -188,6 +189,74 @@ fn prop_collective_rank_order_under_random_scheduling() {
         }
         for h in handles {
             h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_kv_pool_accounting_under_random_alloc_free() {
+    // Serving invariants of the session-slot pool under arbitrary
+    // alloc/append/free interleavings:
+    //  * resident count never exceeds the slot count;
+    //  * alloc succeeds iff a slot is free (or the session is resident);
+    //  * bytes_used always equals the sum over resident sessions of their
+    //    appended rows (model-checked against a shadow map);
+    //  * a failed alloc (exhaustion) changes nothing.
+    let (kh, hd) = (2usize, 4usize);
+    let row_bytes = 2 * kh * hd * 4; // K and V, f32
+    let mk_rows = |n: usize| {
+        Tensor::new(vec![n, kh, hd], vec![0.5; n * kh * hd]).unwrap()
+    };
+    let mut rng = Rng::new(0x55);
+    for _ in 0..40 {
+        let slots = 1 + rng.below(4) as usize;
+        let cache_max = 4 + rng.below(8) as usize;
+        let mut pool = KvPool::new(slots, 1, cache_max, kh, hd);
+        let mut shadow: std::collections::BTreeMap<SessionId, usize> =
+            Default::default();
+        for _ in 0..200 {
+            let sid = rng.below(6);
+            match rng.below(3) {
+                0 => {
+                    let was_resident = shadow.contains_key(&sid);
+                    match pool.alloc(sid) {
+                        Ok(_) => {
+                            assert!(was_resident || shadow.len() < slots,
+                                    "alloc must fail when full");
+                            shadow.insert(sid, 0); // alloc resets the cache
+                        }
+                        Err(e) => {
+                            assert!(!was_resident && shadow.len() == slots,
+                                    "spurious exhaustion: {e:#}");
+                        }
+                    }
+                }
+                1 => {
+                    if let Some(rows) = shadow.get_mut(&sid) {
+                        let n = 1 + rng.below(3) as usize;
+                        let r = mk_rows(n);
+                        if *rows + n <= cache_max {
+                            pool.get_mut(sid).unwrap().append(0, &r, &r).unwrap();
+                            *rows += n;
+                        } else {
+                            assert!(pool.get_mut(sid).unwrap().append(0, &r, &r)
+                                        .is_err());
+                        }
+                    } else {
+                        assert!(pool.get_mut(sid).is_err());
+                    }
+                }
+                _ => {
+                    assert_eq!(pool.free(sid), shadow.remove(&sid).is_some());
+                }
+            }
+            assert_eq!(pool.resident(), shadow.len());
+            assert!(pool.resident() <= pool.n_slots());
+            let want_bytes: usize = shadow.values().map(|r| r * row_bytes).sum();
+            assert_eq!(pool.bytes_used(), want_bytes);
+            let mut sids = pool.resident_sids();
+            sids.sort_unstable();
+            assert_eq!(sids, shadow.keys().copied().collect::<Vec<_>>());
         }
     }
 }

@@ -1,11 +1,14 @@
-//! Scheduler + serving-path integration. Runs on the native SimEngine by
-//! default (non-skipping); uses PJRT artifacts when present + enabled.
+//! Scheduler + serving-path integration: continuous batching over session
+//! slots. Runs on the native SimEngine by default (non-skipping); uses
+//! PJRT artifacts when present + enabled.
 
+use apb::cluster::Fabric;
 use apb::config::ApbOptions;
 use apb::coordinator::scheduler::{Request, Scheduler};
-use apb::coordinator::Cluster;
+use apb::coordinator::{Cluster, SessionId};
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
 
 fn cluster() -> (apb::config::Config, Cluster) {
     let cfg = apb::load_config_or_sim("tiny").expect("config");
@@ -20,6 +23,38 @@ fn request(cfg: &apb::config::Config, id: u64, rng: &mut Rng) -> Request {
               opts: ApbOptions::default() }
 }
 
+/// Residency-overlap assertions need >= `n` KV slots. Sim configs ship 4,
+/// but a PJRT artifact manifest may pin `max_resident` to the paper's 1 —
+/// those skip (announced, for the CI skip audit) rather than fail.
+fn has_slots(cfg: &apb::config::Config, n: usize, test: &str) -> bool {
+    if cfg.apb.max_resident < n {
+        println!("APB-SKIP {test}: config '{}' has max_resident {} < {n}",
+                 cfg.name, cfg.apb.max_resident);
+        return false;
+    }
+    true
+}
+
+/// Greedy generation for one resident session through the session API —
+/// the session-level twin of `Cluster::generate` (query-chunk pass, then
+/// one batched step per token).
+fn gen_session(cluster: &Cluster, sid: SessionId, query: &[i32], max_new: usize)
+               -> Vec<i32> {
+    let vocab = cluster.cfg.model.vocab_size;
+    let chunk = cluster.decode_query_chunk(sid, query).expect("chunk");
+    let mut token = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let mut tokens = Vec::with_capacity(max_new);
+    for step in 0..max_new {
+        tokens.push(token);
+        if step + 1 == max_new {
+            break;
+        }
+        let rep = cluster.decode_step_batch(&[(sid, token)]).expect("step");
+        token = Tensor::argmax_row(&rep.logits[0].1) as i32;
+    }
+    tokens
+}
+
 #[test]
 fn fifo_order_and_complete_metrics() {
     let (cfg, cluster) = cluster();
@@ -31,6 +66,7 @@ fn fifo_order_and_complete_metrics() {
     let done = sched.run_all().unwrap();
     assert_eq!(done, 3);
     assert_eq!(sched.queued(), 0);
+    assert_eq!(sched.resident(), 0, "all sessions retired");
     // FIFO completion order.
     let ids: Vec<u64> = sched.completed.iter().map(|r| r.id).collect();
     assert_eq!(ids, vec![0, 1, 2]);
@@ -38,11 +74,18 @@ fn fifo_order_and_complete_metrics() {
         assert_eq!(r.tokens.len(), 2);
         assert!(r.speed_tok_per_s > 0.0);
         assert!(r.e2e_s >= r.prefill.wall_seconds);
+        assert!(r.ttft_s >= r.queue_wait_s, "TTFT includes queue wait");
+        assert!(r.decode_comm_bytes > 0,
+                "decode AllGather traffic must be metered per request");
     }
     let m = sched.metrics();
     assert_eq!(m.n_requests, 3);
     assert_eq!(m.total_tokens, 6);
     assert!(m.prefill.p50 > 0.0 && m.e2e.p99 >= m.e2e.p50);
+    assert!(m.ttft.p50 > 0.0 && m.decode_comm_bytes > 0);
+    if cfg.apb.max_resident >= 2 {
+        assert!(m.peak_resident >= 2, "requests must share the cluster");
+    }
 }
 
 #[test]
@@ -78,4 +121,156 @@ fn per_request_isolation() {
     sched.run_all().unwrap();
     assert_eq!(sched.completed[0].tokens, sched.completed[2].tokens,
                "same request must decode identically regardless of history");
+}
+
+#[test]
+fn overlapping_sessions_match_sequential() {
+    // The session-slot acceptance test: with >=2 sessions resident on the
+    // cluster at once (the second admitted and prefilled BEFORE the first
+    // finished decoding) and their decode steps interleaved in shared
+    // batched passes, every request's tokens must be bit-identical to the
+    // same requests run one-at-a-time on a fresh cluster.
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
+    println!("APB-RUN scheduler_serving backend={}", cfg.backend.name());
+    if !has_slots(&cfg, 2, "overlapping_sessions_match_sequential") {
+        return;
+    }
+    let max_new = 4;
+    let mut rng = Rng::new(41);
+    let reqs: Vec<Request> = (0..3)
+        .map(|id| {
+            let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+            Request { id, doc: inst.doc, query: inst.query, max_new,
+                      opts: ApbOptions::default() }
+        })
+        .collect();
+
+    // Reference: run-to-completion on a fresh cluster, one at a time.
+    let sequential: Vec<Vec<i32>> = {
+        let c = Cluster::start(&cfg).expect("reference cluster");
+        reqs.iter()
+            .map(|r| {
+                c.clear().unwrap();
+                c.prefill(&r.doc, &r.query, &r.opts).unwrap();
+                c.generate(&r.query, r.max_new).unwrap().tokens
+            })
+            .collect()
+    };
+
+    // Continuous batching on a fresh cluster.
+    let c = Cluster::start(&cfg).expect("serving cluster");
+    let mut sched = Scheduler::new(&c, 8);
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let done = sched.run_all().unwrap();
+    assert_eq!(done, reqs.len());
+    assert!(sched.peak_resident >= 2,
+            "continuous batching must hold >= 2 sessions resident, saw {}",
+            sched.peak_resident);
+    for r in &sched.completed {
+        assert_eq!(r.tokens, sequential[r.id as usize],
+                   "request {} diverged between interleaved and sequential", r.id);
+    }
+}
+
+#[test]
+fn batched_decode_is_one_backend_pass_per_layer() {
+    // One continuous-batching step over S sessions must cost exactly ONE
+    // stacked decode pass per layer — observable as n_hosts × n_layers
+    // attention-AllGather contributions, independent of S (a per-session
+    // loop would contribute S× that).
+    let (cfg, cluster) = cluster();
+    if !has_slots(&cfg, 2, "batched_decode_is_one_backend_pass_per_layer") {
+        return;
+    }
+    let mut rng = Rng::new(43);
+    let a = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let b = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    cluster.prefill_session(1, &a.doc, &a.query, &ApbOptions::default()).unwrap();
+    cluster.prefill_session(2, &b.doc, &b.query, &ApbOptions::default()).unwrap();
+    let c1 = cluster.decode_query_chunk(1, &a.query).unwrap();
+    let c2 = cluster.decode_query_chunk(2, &b.query).unwrap();
+    assert!(c1.comm_bytes > 0, "chunk decode comm must be metered");
+    let vocab = cfg.model.vocab_size;
+    let t1 = Tensor::argmax_row(&c1.logits[c1.logits.len() - vocab..]) as i32;
+    let t2 = Tensor::argmax_row(&c2.logits[c2.logits.len() - vocab..]) as i32;
+
+    let per_step = (cfg.apb.n_hosts * cfg.model.n_layers) as u64;
+    let r0 = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL);
+    let rep = cluster.decode_step_batch(&[(1, t1), (2, t2)]).unwrap();
+    let dr = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL) - r0;
+    assert_eq!(dr, per_step,
+               "2-session batched step took {dr} att rounds, expected {per_step}");
+    assert_eq!(rep.logits.len(), 2);
+    assert_eq!(rep.logits[0].0, 1);
+    assert_eq!(rep.logits[1].0, 2);
+    assert!(rep.comm_bytes > 0, "batched decode comm must be metered");
+
+    // And a single-session step costs the same number of rounds: the batch
+    // dimension rides the same collectives rather than multiplying them.
+    let r1 = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL);
+    cluster.decode_step_batch(&[(1, t1)]).unwrap();
+    assert_eq!(cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL) - r1, per_step);
+}
+
+#[test]
+fn kv_pool_exhaustion_is_backpressure_not_corruption() {
+    // Prefilling more sessions than the pool has slots must fail with a
+    // backpressure error — and leave every resident session's KV intact
+    // (identical tokens to an uncontended run).
+    let (cfg, cluster) = cluster();
+    let slots = cfg.apb.max_resident;
+    let mut rng = Rng::new(47);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let max_new = 3;
+
+    // Uncontended reference on a fresh cluster.
+    let want = {
+        let c = Cluster::start(&cfg).expect("reference cluster");
+        c.prefill(&inst.doc, &inst.query, &ApbOptions::default()).unwrap();
+        c.generate(&inst.query, max_new).unwrap().tokens
+    };
+
+    for sid in 1..=slots as u64 {
+        cluster
+            .prefill_session(sid, &inst.doc, &inst.query, &ApbOptions::default())
+            .unwrap();
+    }
+    let err = cluster
+        .prefill_session(slots as u64 + 1, &inst.doc, &inst.query,
+                         &ApbOptions::default())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("backpressure"),
+            "exhaustion must surface as backpressure, got: {err:#}");
+
+    // Every resident session still decodes exactly the reference tokens.
+    for sid in 1..=slots as u64 {
+        assert_eq!(gen_session(&cluster, sid, &inst.query, max_new), want,
+                   "session {sid} corrupted by the rejected admission");
+    }
+
+    // Freeing a slot re-opens admission.
+    cluster.clear_session(1).unwrap();
+    cluster
+        .prefill_session(slots as u64 + 1, &inst.doc, &inst.query,
+                         &ApbOptions::default())
+        .unwrap();
+    assert_eq!(gen_session(&cluster, slots as u64 + 1, &inst.query, max_new), want);
+}
+
+#[test]
+fn legacy_generate_reports_decode_comm() {
+    // Satellite: decode-path AllGather traffic must not vanish from the
+    // legacy GenReport either.
+    let (cfg, cluster) = cluster();
+    let mut rng = Rng::new(53);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    cluster.prefill(&inst.doc, &inst.query, &ApbOptions::default()).unwrap();
+    let gen = cluster.generate(&inst.query, 3).unwrap();
+    assert!(gen.comm_bytes > 0, "GenReport.comm_bytes must meter decode traffic");
+    // Prefill comm (compressed KV) and decode comm (attention partials)
+    // are metered under separate labels.
+    assert!(cluster.fabric.meter.bytes_for(Fabric::KV_LABEL) > 0);
+    assert!(cluster.fabric.meter.bytes_for(Fabric::ATT_LABEL) >= gen.comm_bytes);
 }
