@@ -5,7 +5,7 @@
 //! iteration log in EXPERIMENTS.md tracks.
 
 use apb::bench_harness::{default_bencher, Table};
-use apb::config::ApbOptions;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::Cluster;
 use apb::report;
 use apb::util::json::{self, Json};
@@ -34,8 +34,8 @@ fn main() {
         cluster.prefill(&doc, &query, &opts).unwrap();
     });
 
-    // Star-mode prefill (no communication) for the comm-cost delta.
-    let star_opts = ApbOptions { use_passing: false, ..opts };
+    // StarAttn prefill (no communication) for the comm-cost delta.
+    let star_opts = ApbOptions { method: AttnMethod::StarAttn, ..opts };
     let s_star = b.report("prefill (no passing = Star-mode)", || {
         cluster.clear().unwrap();
         cluster.prefill(&doc, &query, &star_opts).unwrap();

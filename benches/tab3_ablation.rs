@@ -7,7 +7,7 @@
 //! distance to the full-APB baseline + compressor retention recall).
 
 use apb::bench_harness::Table;
-use apb::config::ApbOptions;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::Cluster;
 use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
 use apb::report;
@@ -32,7 +32,12 @@ const ROWS: [(usize, bool, bool, bool, bool); 9] = [
 fn opts_for(row: (usize, bool, bool, bool, bool)) -> ApbOptions {
     ApbOptions {
         use_anchor: row.1,
-        use_passing: row.2,
+        // The "P" ablation bit is the Apb-vs-StarAttn method choice.
+        method: if row.2 {
+            AttnMethod::Apb
+        } else {
+            AttnMethod::StarAttn
+        },
         retaining_compressor: row.3,
         embed_query: row.4,
         // The measured section reads retention_recall per row.

@@ -6,7 +6,7 @@
 //!     cargo run --release --example ablation -- --max-new 4
 
 use apb::bench_harness::Table;
-use apb::config::ApbOptions;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::cli::Args;
@@ -40,7 +40,12 @@ fn main() -> anyhow::Result<()> {
     for bits in 0..16u32 {
         let o = ApbOptions {
             use_anchor: bits & 8 != 0,
-            use_passing: bits & 4 != 0,
+            // "P" bit: passing on = APB, passing off = StarAttn.
+            method: if bits & 4 != 0 {
+                AttnMethod::Apb
+            } else {
+                AttnMethod::StarAttn
+            },
             retaining_compressor: bits & 2 != 0,
             embed_query: bits & 1 != 0,
             record_retained: true,
@@ -58,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         let yn = |b: bool| if b { "Y" } else { "x" };
         table.row(vec![
             yn(o.use_anchor).into(),
-            yn(o.use_passing).into(),
+            yn(o.method.passes_compressed_blocks()).into(),
             if o.retaining_compressor { "R" } else { "Rd." }.into(),
             yn(o.embed_query).into(),
             (gen.tokens == base.tokens).to_string(),

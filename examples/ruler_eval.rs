@@ -71,8 +71,14 @@ fn main() -> anyhow::Result<()> {
             d_rd = d_rd.max(linf(&g_rd, &base));
             // No passing (Star-mode).
             cluster.clear()?;
-            cluster.prefill(&inst.doc, &inst.query,
-                            &ApbOptions { use_passing: false, ..Default::default() })?;
+            cluster.prefill(
+                &inst.doc,
+                &inst.query,
+                &ApbOptions {
+                    method: apb::config::AttnMethod::StarAttn,
+                    ..Default::default()
+                },
+            )?;
             let g_np = cluster.generate(&inst.query, 1)?.query_logits;
             d_nopass = d_nopass.max(linf(&g_np, &base));
             // No anchor.

@@ -10,7 +10,7 @@
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use apb::bench_harness::Table;
-use apb::config::ApbOptions;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
@@ -20,13 +20,23 @@ use apb::util::stats::{fmt_duration, fmt_rate};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["star-mode", "smoke"])?;
-    args.check_known(&["requests", "config", "max-new", "queue", "seed"])?;
+    args.check_known(&["requests", "config", "max-new", "queue", "seed", "method"])?;
     let n_requests = args.usize_or("requests", 6)?;
     let max_new = args.usize_or("max-new", 6)?;
     let config = args.str_or("config", "tiny");
     let seed = args.usize_or("seed", 7)? as u64;
+    let method = if args.has("star-mode") {
+        // Deprecated alias; same conflict rule as `apb serve`.
+        eprintln!("[serve_cluster] --star-mode is deprecated; use --method star");
+        if args.get("method").is_some() {
+            anyhow::bail!("--star-mode conflicts with --method");
+        }
+        AttnMethod::StarAttn
+    } else {
+        AttnMethod::parse(&args.str_or("method", "apb"))?
+    };
 
-    let cfg = apb::load_config_or_sim(&config)?;
+    let cfg = apb::load_config_or_sim(&config)?.with_method(method);
     println!(
         "serving on {} hosts ({} backend) — model d={} L={} vocab={}, doc {} \
          tokens/request, up to {} sessions resident",
@@ -47,11 +57,7 @@ fn main() -> anyhow::Result<()> {
         TaskKind::Aggregation,
     ];
     let mut rng = Rng::new(seed);
-    let opts = if args.has("star-mode") {
-        ApbOptions { use_passing: false, ..Default::default() }
-    } else {
-        ApbOptions::default()
-    };
+    let opts = ApbOptions { method, ..Default::default() };
     for id in 0..n_requests {
         let inst = gen_instance(&cfg, kinds[id % kinds.len()], &mut rng);
         scheduler.submit(Request {

@@ -6,6 +6,14 @@
 //! model prices each component as max(compute, memory) roofline time on
 //! one device plus α–β collective costs, using the instrumented FLOPs
 //! counters from `flops.rs`.
+//!
+//! Four of these methods also run as *executable* cluster modes
+//! (`config::AttnMethod` routed through `coordinator`), so their comm
+//! volumes and exactness are measured, not just modelled —
+//! `impl From<AttnMethod> for Method` is the bridge, and
+//! [`Method::exact_attention`] must agree with
+//! `AttnMethod::exact_attention` (tested below). See `docs/architecture.md`
+//! ("Method matrix") for the modelled × executable inventory.
 
 use super::flops::{self, ComponentFlops, Hyper};
 use super::hardware::Hardware;
@@ -49,6 +57,21 @@ impl Method {
 
     pub fn exact_attention(&self) -> bool {
         matches!(self, Method::FlashAttn | Method::Ulysses | Method::RingAttn)
+    }
+}
+
+/// Map an executable cluster mode onto its analytic twin. `Dense` — the
+/// whole sequence with plain causal attention on one device — is exactly
+/// what the `FlashAttn` row of the tables models.
+impl From<crate::config::AttnMethod> for Method {
+    fn from(m: crate::config::AttnMethod) -> Method {
+        use crate::config::AttnMethod as A;
+        match m {
+            A::Apb => Method::Apb,
+            A::StarAttn => Method::StarAttn,
+            A::RingAttn => Method::RingAttn,
+            A::Dense => Method::FlashAttn,
+        }
     }
 }
 
@@ -233,6 +256,24 @@ mod tests {
     fn est(method: Method, n: f64) -> Estimate {
         let hy = Hyper::paper_schedule(n, 8.0);
         estimate(method, &LLAMA31_8B, n, 8.0, &hy, &A800, 64.0)
+    }
+
+    #[test]
+    fn executable_methods_agree_with_analytic_exactness() {
+        // The modelled Method and the executable AttnMethod must never
+        // disagree about which modes are exact — otherwise the accuracy
+        // tables would claim exactness the cluster doesn't deliver.
+        use crate::config::AttnMethod;
+        for m in AttnMethod::ALL {
+            assert_eq!(
+                m.exact_attention(),
+                Method::from(m).exact_attention(),
+                "exactness mismatch for {}",
+                m.name()
+            );
+        }
+        assert_eq!(Method::from(AttnMethod::Dense), Method::FlashAttn);
+        assert_eq!(Method::from(AttnMethod::Apb), Method::Apb);
     }
 
     #[test]

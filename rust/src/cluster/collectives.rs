@@ -1,11 +1,22 @@
 //! Rendezvous collectives over threads (Mutex + Condvar), with payload
 //! metering for the interconnect cost model.
 //!
+//! Two primitives back the executable cluster modes (see
+//! `docs/architecture.md`, "Method matrix"):
+//!
+//! * [`Collective`] — N-rank AllGather (APB's compressed-block pass, label
+//!   `kv`; the decode partial-attention merge, label `att`);
+//! * [`RingExchange`] — neighbor send/recv (RingAttn's KV-block rotation,
+//!   label `ring`): each rank sends to its successor and receives from its
+//!   predecessor, so N-1 consecutive exchanges deliver every rank's
+//!   original payload to every other rank exactly once (property-tested).
+//!
 //! Correctness argument for `all_gather` (also property-tested): a round
 //! completes only after all N ranks contribute; the completed result is
 //! only replaced when all N ranks of the *next* round have contributed,
 //! and a rank cannot contribute to round r+1 before returning from round
-//! r — so every rank reads an intact result.
+//! r — so every rank reads an intact result. `RingExchange` inherits the
+//! same argument with per-rank `Option` result slots taken exactly once.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -179,6 +190,90 @@ impl<T: Clone + Meterable> Collective<T> {
     }
 }
 
+struct RingState<T> {
+    items: Vec<Option<T>>,
+    count: usize,
+    generation: u64,
+    /// Round tag agreed by the first contributor (see `check_round_tag`).
+    tag: u64,
+    /// Per-rank delivery slots, taken exactly once per round.
+    result: Vec<Option<T>>,
+}
+
+/// N-rank neighbor exchange: rank r sends one `T` to rank `(r+1) % N` and
+/// receives the `T` sent by rank `(r-1+N) % N` — the NCCL send/recv pair of
+/// Ring Attention's KV rotation, as one rendezvous. Repeating the exchange
+/// N-1 times walks every payload all the way around the ring.
+///
+/// Unlike [`Collective::all_gather`] the received value is moved out (no
+/// `Clone` bound): each rank owns exactly one incoming payload per round.
+pub struct RingExchange<T> {
+    n: usize,
+    label: &'static str,
+    state: Mutex<RingState<T>>,
+    cv: Condvar,
+    meter: Arc<CommMeter>,
+}
+
+impl<T: Meterable> RingExchange<T> {
+    pub fn labeled(n: usize, label: &'static str, meter: Arc<CommMeter>) -> Self {
+        RingExchange {
+            n,
+            label,
+            state: Mutex::new(RingState {
+                items: (0..n).map(|_| None).collect(),
+                count: 0,
+                generation: 0,
+                tag: 0,
+                result: (0..n).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+            meter,
+        }
+    }
+
+    pub fn exchange(&self, rank: usize, item: T) -> T {
+        self.exchange_tagged(rank, 0, item)
+    }
+
+    /// Exchange with a per-round tag (session id): all ranks of a round
+    /// must present the same tag — a mismatch means hosts desynchronized
+    /// across sessions and would rotate KV blocks of *different* requests,
+    /// so it panics (same tripwire as [`Collective::all_gather_tagged`]).
+    pub fn exchange_tagged(&self, rank: usize, tag: u64, item: T) -> T {
+        assert!(rank < self.n, "rank {rank} out of {}", self.n);
+        // Each rank pushes its payload over one link per round.
+        self.meter.add(self.label, item.wire_bytes());
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        assert!(st.items[rank].is_none(), "rank {rank} double contribution");
+        if st.count == 0 {
+            st.tag = tag;
+        } else {
+            check_round_tag(self.label, st.tag, tag, rank);
+        }
+        st.items[rank] = Some(item);
+        st.count += 1;
+        if st.count == self.n {
+            // Round complete: deliver each contribution to its successor.
+            let n = self.n;
+            let mut sent: Vec<Option<T>> = st.items.iter_mut().map(Option::take).collect();
+            for (r, slot) in st.result.iter_mut().enumerate() {
+                debug_assert!(slot.is_none(), "rank {r} never took its last delivery");
+                *slot = sent[(r + n - 1) % n].take();
+            }
+            st.count = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+        } else {
+            while st.generation == my_gen {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        st.result[rank].take().expect("ring delivery already taken")
+    }
+}
+
 /// The per-round tag tripwire: a rank joining an open round must present
 /// the tag the round was opened with. A mismatch means hosts desynchronized
 /// across sessions — merging attention partials of *different* requests —
@@ -299,6 +394,43 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn ring_exchange_single_rank_returns_own_item() {
+        let m = Arc::new(CommMeter::default());
+        let r = RingExchange::labeled(1, "ring", Arc::clone(&m));
+        let got = r.exchange(0, t(3.0));
+        assert_eq!(got.data[0], 3.0);
+        assert_eq!(m.bytes_for("ring"), 4);
+    }
+
+    #[test]
+    fn ring_exchange_rotates_from_predecessor() {
+        let n = 4;
+        let m = Arc::new(CommMeter::default());
+        let r = Arc::new(RingExchange::labeled(n, "ring", Arc::clone(&m)));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let r = Arc::clone(&r);
+            handles.push(thread::spawn(move || {
+                // Two rounds: payload forwarded onward each round, so after
+                // round s a rank holds the item of origin (rank - s) mod n.
+                let mut held = t(rank as f32);
+                for s in 1..=2usize {
+                    held = r.exchange_tagged(rank, 9, held);
+                    let origin = (rank + n - s) % n;
+                    assert_eq!(held.data[0] as usize, origin,
+                               "rank {rank} step {s}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // n ranks x 2 rounds, 4 bytes each.
+        assert_eq!(m.bytes_for("ring"), (n * 2 * 4) as u64);
+        assert_eq!(m.rounds_for("ring"), (n * 2) as u64);
     }
 
     #[test]

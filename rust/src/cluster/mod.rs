@@ -1,14 +1,25 @@
 //! Multi-host cluster fabric: the stand-in for the paper's 8×A800 node.
 //!
-//! One OS thread per host; collectives (AllGather / Gather / Broadcast /
-//! Barrier) implemented with Mutex+Condvar rendezvous, mirroring NCCL
-//! semantics at the API level (§3.5 "we apply an AllGather communication
-//! on the compressed KV cache across all the hosts"). Payload volumes are
-//! metered so the interconnect cost model (attnsim) can price each round.
+//! One OS thread per host; collectives implemented with Mutex+Condvar
+//! rendezvous, mirroring NCCL semantics at the API level (§3.5 "we apply
+//! an AllGather communication on the compressed KV cache across all the
+//! hosts"). Payload volumes are metered per label so the interconnect cost
+//! model (`attnsim::walltime`) can price each round and so the executable
+//! cluster modes report *measured* communication:
+//!
+//! | label | collective | used by |
+//! |---|---|---|
+//! | `kv` | [`Collective`] AllGather of compressed (K_c, V_c) | APB prefill (Alg. 2 line "AllGather") |
+//! | `att` | [`Collective`] AllGather of (out, lse) partials | decode merge (Alg. 3), all distributed methods |
+//! | `ring` | [`RingExchange`] neighbor send/recv of full KV blocks | RingAttn prefill rotation |
+//!
+//! StarAttn charges no prefill label (its blocks never move) and Dense
+//! charges nothing at all. The full method × label matrix lives in
+//! `docs/architecture.md`.
 
 pub mod collectives;
 
-pub use collectives::{Collective, CommMeter};
+pub use collectives::{Collective, CommMeter, RingExchange};
 
 use std::sync::Arc;
 
@@ -21,7 +32,9 @@ pub struct Fabric {
     pub kv_gather: Collective<TensorPair>,
     /// AllGather used during decode for (partial out, lse) pairs.
     pub att_gather: Collective<TensorPair>,
-    /// Bytes-on-the-wire meter shared by both collectives.
+    /// Neighbor send/recv used by RingAttn prefill to rotate (K, V) blocks.
+    pub ring_pass: RingExchange<TensorPair>,
+    /// Bytes-on-the-wire meter shared by all collectives.
     pub meter: Arc<CommMeter>,
 }
 
@@ -32,6 +45,8 @@ impl Fabric {
             n_hosts,
             kv_gather: Collective::labeled(n_hosts, Fabric::KV_LABEL, Arc::clone(&meter)),
             att_gather: Collective::labeled(n_hosts, Fabric::ATT_LABEL, Arc::clone(&meter)),
+            ring_pass: RingExchange::labeled(n_hosts, Fabric::RING_LABEL,
+                                             Arc::clone(&meter)),
             meter,
         })
     }
@@ -42,6 +57,8 @@ impl Fabric {
     pub const KV_LABEL: &'static str = "kv";
     /// Meter label of the decode partial-attention AllGather.
     pub const ATT_LABEL: &'static str = "att";
+    /// Meter label of the RingAttn KV-block rotation.
+    pub const RING_LABEL: &'static str = "ring";
 }
 
 #[cfg(test)]
@@ -70,6 +87,26 @@ mod tests {
             assert_eq!(h.join().unwrap(), vec![0, 1, 2, 3]);
         }
         assert!(fabric.meter.bytes_total() > 0);
+    }
+
+    #[test]
+    fn fabric_ring_pass_rotates_and_meters_separately() {
+        let n = 3;
+        let fabric = Fabric::new(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let f = Arc::clone(&fabric);
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![1], vec![rank as f32]).unwrap();
+                let got = f.ring_pass.exchange(rank, (t.clone(), t));
+                got.0.data[0] as usize
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), (rank + n - 1) % n, "from predecessor");
+        }
+        assert_eq!(fabric.meter.bytes_for(Fabric::RING_LABEL), (n * 2 * 4) as u64);
+        assert_eq!(fabric.meter.bytes_for(Fabric::KV_LABEL), 0);
     }
 
     #[test]

@@ -66,6 +66,107 @@ impl ApbParams {
     pub fn cache_max(&self) -> usize {
         self.block_len + self.query_len + self.max_new_tokens
     }
+
+    /// Per-slot KV rows a host's pool must reserve to serve `method`.
+    /// The distributed modes (APB/Star/Ring) cap at [`ApbParams::cache_max`]
+    /// — a host holds at most its local block (+ query prefix on ring host
+    /// 0) plus the re-fed query chunk and decode tail. `Dense` concentrates
+    /// the whole `[query | document]` sequence on host 0, so its slot must
+    /// hold everything.
+    pub fn cache_rows(&self, method: AttnMethod) -> usize {
+        match method {
+            AttnMethod::Dense => {
+                2 * self.query_len + self.doc_len() + self.max_new_tokens
+            }
+            _ => self.cache_max(),
+        }
+    }
+}
+
+/// Which attention method the executable cluster runs — the paper's
+/// comparison set as *measured* cluster modes, not just analytic models.
+///
+/// Every mode executes end-to-end on [`crate::coordinator::Cluster`]
+/// (prefill + decode on either backend), so comparisons report measured
+/// communication rounds/bytes and exactness against the dense oracle. The
+/// analytic twin is `attnsim::Method` (`impl From<AttnMethod>` in
+/// `attnsim::walltime`); the two must agree on
+/// [`AttnMethod::exact_attention`], which is asserted in tests. See
+/// `docs/architecture.md` ("Method matrix") and
+/// `docs/ADR-001-attn-methods.md` for the design rationale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnMethod {
+    /// The paper's method (Alg. 2 prefill): anchor block + compressed
+    /// passing blocks AllGathered across hosts (`kv` comm label).
+    Apb,
+    /// Star Attention (Acharya et al. 2024): anchor block, no passing —
+    /// zero prefill communication. Formerly the `use_passing: false`
+    /// ablation toggle.
+    StarAttn,
+    /// Ring Attention / Context Parallelism (Yang et al. 2024): hosts
+    /// rotate their full KV blocks around a ring (`ring` comm label) and
+    /// merge partial attentions with the online-softmax identity — exact.
+    RingAttn,
+    /// Whole sequence on host 0 with plain causal attention: the exactness
+    /// anchor every exact method must match. No communication.
+    Dense,
+}
+
+impl AttnMethod {
+    pub const ALL: [AttnMethod; 4] =
+        [AttnMethod::Apb, AttnMethod::StarAttn, AttnMethod::RingAttn, AttnMethod::Dense];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnMethod::Apb => "APB",
+            AttnMethod::StarAttn => "StarAttn",
+            AttnMethod::RingAttn => "RingAttn",
+            AttnMethod::Dense => "Dense",
+        }
+    }
+
+    /// Parse a CLI spelling (`--method apb|star|ring|dense`).
+    pub fn parse(s: &str) -> Result<AttnMethod> {
+        match s.to_ascii_lowercase().as_str() {
+            "apb" => Ok(AttnMethod::Apb),
+            "star" | "starattn" => Ok(AttnMethod::StarAttn),
+            "ring" | "ringattn" => Ok(AttnMethod::RingAttn),
+            "dense" | "full" | "flash" => Ok(AttnMethod::Dense),
+            other => bail!("unknown attention method '{other}' \
+                            (expected apb|star|ring|dense)"),
+        }
+    }
+
+    /// Does this method compute *exact* full causal attention? Exact
+    /// methods must produce logits matching [`AttnMethod::Dense`] within
+    /// float tolerance; the analytic `attnsim::Method::exact_attention`
+    /// must agree (tested).
+    pub fn exact_attention(&self) -> bool {
+        matches!(self, AttnMethod::RingAttn | AttnMethod::Dense)
+    }
+
+    /// Does prefill AllGather compressed (K_c, V_c) passing blocks
+    /// (the paper's §3.5 step, `kv` meter label)? Only APB does.
+    pub fn passes_compressed_blocks(&self) -> bool {
+        matches!(self, AttnMethod::Apb)
+    }
+
+    /// Does decode run the distributed per-host partial-attention +
+    /// online-softmax-merge path (`att` meter label)? All methods except
+    /// `Dense`, which decodes entirely on host 0.
+    pub fn distributed_decode(&self) -> bool {
+        !matches!(self, AttnMethod::Dense)
+    }
+
+    /// Meter labels this method's *prefill* can charge (see
+    /// `cluster::Fabric` label constants).
+    pub fn prefill_comm_labels(&self) -> &'static [&'static str] {
+        match self {
+            AttnMethod::Apb => &["kv"],
+            AttnMethod::RingAttn => &["ring"],
+            AttnMethod::StarAttn | AttnMethod::Dense => &[],
+        }
+    }
 }
 
 /// Which execution backend a config is bound to (see `runtime`).
@@ -93,6 +194,12 @@ pub struct Config {
     pub seed: u64,
     pub model: ModelConfig,
     pub apb: ApbParams,
+    /// Cluster-level attention method: sizes each host's KV pool
+    /// (`ApbParams::cache_rows`) and is the default for sessions that start
+    /// decoding without a prefill. Per-request overrides ride on
+    /// [`ApbOptions::method`]; a request may only pick a method whose cache
+    /// footprint fits the pool this config sized (checked at prefill).
+    pub method: AttnMethod,
     /// Execution backend this config is bound to.
     pub backend: BackendKind,
     /// Artifact directory this config was loaded from (unused for `Sim`).
@@ -187,6 +294,7 @@ impl Config {
             seed,
             model,
             apb,
+            method: AttnMethod::Apb,
             backend: BackendKind::Pjrt,
             dir: dir.to_path_buf(),
             manifest,
@@ -200,10 +308,21 @@ impl Config {
             seed,
             model,
             apb,
+            method: AttnMethod::Apb,
             backend: BackendKind::Sim,
             dir: PathBuf::new(),
             manifest: Json::Null,
         }
+    }
+
+    /// Rebind the cluster to another attention method (pool sizing + the
+    /// default method of prefill-less sessions). Weights depend only on
+    /// `seed`, so two clusters differing only in method are numerically
+    /// comparable — that is how the exactness tests pit RingAttn against
+    /// Dense.
+    pub fn with_method(mut self, method: AttnMethod) -> Config {
+        self.method = method;
+        self
     }
 
     /// The default self-contained tiny config: small enough that a full
@@ -238,11 +357,23 @@ impl Config {
     }
 }
 
-/// Ablation toggles — rust mirror of `model.ApbOptions` (paper Table 3).
+/// Per-request options: the attention method plus the APB ablation toggles
+/// — rust mirror of `model.ApbOptions` (paper Table 3), with the former
+/// `use_passing: bool` promoted to the full [`AttnMethod`] enum
+/// (`use_passing: false` is now `method: AttnMethod::StarAttn`; deprecated
+/// shims below keep the old spelling compiling).
+///
+/// The ablation toggles (`use_anchor`, `retaining_compressor`,
+/// `embed_query`) only apply to the anchor/compressor methods
+/// (`Apb`/`StarAttn`); the exact baselines (`RingAttn`/`Dense`) run plain
+/// causal attention and ignore them.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ApbOptions {
+    /// Which cluster mode serves this request (paper "A"+"P" structure:
+    /// `Apb` = anchor+passing, `StarAttn` = anchor only, plus the exact
+    /// baselines).
+    pub method: AttnMethod,
     pub use_anchor: bool,
-    pub use_passing: bool,
     pub retaining_compressor: bool, // false => random selector "Rd."
     pub embed_query: bool,
     pub rd_seed: u64,
@@ -257,13 +388,33 @@ pub struct ApbOptions {
 impl Default for ApbOptions {
     fn default() -> Self {
         ApbOptions {
+            method: AttnMethod::Apb,
             use_anchor: true,
-            use_passing: true,
             retaining_compressor: true,
             embed_query: true,
             rd_seed: 1234,
             record_retained: false,
         }
+    }
+}
+
+impl ApbOptions {
+    /// Shim for the pre-`AttnMethod` ablation toggle: `true` maps to
+    /// [`AttnMethod::Apb`], `false` to [`AttnMethod::StarAttn`].
+    #[deprecated(note = "set `method: AttnMethod::StarAttn` (or `Apb`) instead")]
+    pub fn with_use_passing(mut self, use_passing: bool) -> ApbOptions {
+        self.method = if use_passing {
+            AttnMethod::Apb
+        } else {
+            AttnMethod::StarAttn
+        };
+        self
+    }
+
+    /// Shim for the pre-`AttnMethod` ablation toggle's getter.
+    #[deprecated(note = "use `method.passes_compressed_blocks()` instead")]
+    pub fn use_passing(&self) -> bool {
+        self.method.passes_compressed_blocks()
     }
 }
 
@@ -299,6 +450,63 @@ mod tests {
         assert!(c.apb.passing_len <= c.apb.block_len);
         assert!(c.apb.anchor_len + c.apb.query_len <= c.apb.block_len);
         assert_eq!(c.apb.doc_len(), c.apb.n_hosts * c.apb.block_len);
+    }
+
+    #[test]
+    fn attn_method_parse_and_properties() {
+        assert_eq!(AttnMethod::parse("apb").unwrap(), AttnMethod::Apb);
+        assert_eq!(AttnMethod::parse("Star").unwrap(), AttnMethod::StarAttn);
+        assert_eq!(AttnMethod::parse("ringattn").unwrap(), AttnMethod::RingAttn);
+        assert_eq!(AttnMethod::parse("dense").unwrap(), AttnMethod::Dense);
+        assert!(AttnMethod::parse("ulysses").is_err());
+        // Exactness/communication structure of the four modes.
+        assert!(AttnMethod::Dense.exact_attention());
+        assert!(AttnMethod::RingAttn.exact_attention());
+        assert!(!AttnMethod::Apb.exact_attention());
+        assert!(!AttnMethod::StarAttn.exact_attention());
+        assert!(AttnMethod::Apb.passes_compressed_blocks());
+        assert!(!AttnMethod::StarAttn.passes_compressed_blocks());
+        assert!(!AttnMethod::Dense.distributed_decode());
+        for m in AttnMethod::ALL {
+            if m != AttnMethod::Dense {
+                assert!(m.distributed_decode(), "{} decodes distributed", m.name());
+            }
+        }
+        assert_eq!(AttnMethod::Apb.prefill_comm_labels(), ["kv"]);
+        assert_eq!(AttnMethod::RingAttn.prefill_comm_labels(), ["ring"]);
+        assert!(AttnMethod::StarAttn.prefill_comm_labels().is_empty());
+    }
+
+    #[test]
+    fn cache_rows_per_method() {
+        let c = Config::sim_tiny();
+        let a = &c.apb;
+        for m in [AttnMethod::Apb, AttnMethod::StarAttn, AttnMethod::RingAttn] {
+            assert_eq!(a.cache_rows(m), a.cache_max());
+            // Ring host 0 holds [query | block 0] — must fit the slot.
+            assert!(a.query_len + a.block_len <= a.cache_rows(m));
+        }
+        // Dense host 0 holds the whole sequence + re-fed chunk + decode tail.
+        assert_eq!(
+            a.cache_rows(AttnMethod::Dense),
+            2 * a.query_len + a.doc_len() + a.max_new_tokens
+        );
+        assert!(a.cache_rows(AttnMethod::Dense) > a.cache_max());
+        // with_method rebinds without touching the model.
+        let d = c.clone().with_method(AttnMethod::Dense);
+        assert_eq!(d.method, AttnMethod::Dense);
+        assert_eq!(d.seed, c.seed);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn use_passing_shim_maps_to_method() {
+        let star = ApbOptions::default().with_use_passing(false);
+        assert_eq!(star.method, AttnMethod::StarAttn);
+        assert!(!star.use_passing());
+        let apb = star.with_use_passing(true);
+        assert_eq!(apb.method, AttnMethod::Apb);
+        assert!(apb.use_passing());
     }
 
     #[test]

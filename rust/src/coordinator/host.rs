@@ -1,16 +1,18 @@
 //! Host worker: one simulated GPU. Owns an execution backend (SimEngine or
 //! PJRT, per `Config::backend`), a KV pool with one slot per resident
 //! session, and per-session position bookkeeping; executes the per-layer
-//! APB stages and participates in fabric collectives.
+//! stages of the session's `AttnMethod` (Algorithm 2 prefill + Algorithm 3
+//! decode for APB/StarAttn, the ring rotation for RingAttn, single-host
+//! causal for Dense) and participates in fabric collectives.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cluster::Fabric;
-use crate::config::{ApbOptions, Config};
+use crate::config::{ApbOptions, ApbParams, AttnMethod, Config};
 use crate::kvcache::{KvPool, SessionId};
 use crate::runtime::{create_backend, ExecBackend, KvView};
 use crate::util::rng::random_score;
@@ -39,12 +41,30 @@ pub fn run_host(
 }
 
 /// Per-session decode bookkeeping owned by the worker: the global position
-/// of the next token row this session will decode. Set to
-/// `query_len + doc_len` by prefill (the first re-fed query-chunk row) and
-/// advanced by every decode pass — the session twin of the `pos0`
-/// arithmetic that used to be hardcoded per command.
+/// of the next token row this session will decode (set to
+/// `query_len + doc_len` by prefill — the first re-fed query-chunk row —
+/// and advanced by every decode pass), plus the attention method the
+/// session was prefilled under, which routes its decode passes (Dense
+/// sessions decode entirely on host 0; everything else runs the
+/// distributed Algorithm-3 merge). Registered on EVERY host, including the
+/// idle ranks of a Dense session, so decode commands can be routed without
+/// the leader re-sending options.
 struct SessionState {
     next_pos: i32,
+    method: AttnMethod,
+}
+
+/// Global positions of host `rank`'s rows under the exact-method layout
+/// `[query | doc]` (RingAttn): host 0 owns the query prefix + block 0
+/// starting at position 0, host r > 0 owns block r starting at
+/// `l_q + r·l_b`. Must mirror `super::host_tokens_for`.
+fn ring_positions(a: &ApbParams, rank: usize) -> Vec<i32> {
+    let (start, len) = if rank == 0 {
+        (0usize, a.query_len + a.block_len)
+    } else {
+        (a.query_len + rank * a.block_len, a.block_len)
+    };
+    (start as i32..(start + len) as i32).collect()
 }
 
 /// Collective round tag for a decode batch: order-sensitive digest of the
@@ -71,10 +91,15 @@ impl HostWorker {
     fn new(rank: usize, cfg: Config, fabric: Arc<Fabric>) -> Result<Self> {
         let backend = create_backend(&cfg)
             .with_context(|| format!("host {rank}: creating {} backend", cfg.backend.name()))?;
+        // Slot capacity follows the cluster's method: distributed modes
+        // hold at most a local block + decode tail per session, Dense
+        // concentrates the whole sequence on host 0 (every host's pool is
+        // sized alike — rank-0-only sizing would save little sim memory and
+        // complicate the symmetric capacity check).
         let pool = KvPool::new(
             cfg.apb.max_resident,
             cfg.model.n_layers,
-            cfg.apb.cache_max(),
+            cfg.apb.cache_rows(cfg.method),
             cfg.model.n_kv_heads,
             cfg.model.head_dim(),
         );
@@ -129,14 +154,16 @@ impl HostWorker {
     }
 
     /// Session lookup for decode, creating state on demand: a session that
-    /// never prefilled (degenerate empty-cache decode) gets a fresh slot
-    /// and starts at the post-prefill position.
-    fn ensure_session(&mut self, sid: SessionId) -> Result<()> {
-        if !self.sessions.contains_key(&sid) {
-            self.pool.alloc(sid)?;
-            self.sessions.insert(sid, SessionState { next_pos: self.decode_pos0() });
+    /// never prefilled (degenerate empty-cache decode) gets a fresh slot,
+    /// the cluster-default method (`Config::method`) and the post-prefill
+    /// position. Returns the session's method for decode routing.
+    fn ensure_session(&mut self, sid: SessionId) -> Result<AttnMethod> {
+        if let Some(s) = self.sessions.get(&sid) {
+            return Ok(s.method);
         }
-        Ok(())
+        let method = self.cfg.method;
+        self.claim_slot(sid, method)?;
+        Ok(method)
     }
 
     /// Per-kv-head gather of compressed KV rows: k/v are the local slices
@@ -162,20 +189,69 @@ impl HostWorker {
         (kc, vc)
     }
 
-    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout
-    /// into session `sid`'s pool slot. The KV slot is claimed (or reset)
-    /// BEFORE any collective, so pool exhaustion fails identically on every
-    /// host — backpressure, never a deadlocked half-round.
-    /// Returns timing + the per-layer/per-head retained indices (empty
-    /// unless `opts.record_retained`).
+    /// Prefill dispatch on the request's [`AttnMethod`]: the anchored
+    /// Algorithm-2 path for APB/StarAttn, the ring rotation for RingAttn,
+    /// single-host causal for Dense. In every mode the KV slot is claimed
+    /// (or reset) BEFORE any collective, so pool exhaustion fails
+    /// identically on every host — backpressure, never a deadlocked
+    /// half-round. Returns timing + the per-layer/per-head retained
+    /// indices (empty unless `opts.record_retained`; always empty for the
+    /// exact methods, which have no compressor).
     fn prefill(
         &mut self,
         sid: SessionId,
         tokens: &[i32],
         opts: &ApbOptions,
     ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
+        match opts.method {
+            AttnMethod::Apb | AttnMethod::StarAttn => self.prefill_apb(sid, tokens, opts),
+            AttnMethod::RingAttn => {
+                self.prefill_ring(sid, tokens).map(|tm| (tm, Vec::new()))
+            }
+            AttnMethod::Dense => self.prefill_dense(sid, tokens).map(|tm| (tm, Vec::new())),
+        }
+    }
+
+    /// Capacity check for a per-request method against the pool this
+    /// cluster was sized for. Deliberately computed from the config alone
+    /// (the pool's slot size IS `cache_rows(cfg.method)`), so every rank —
+    /// including the idle ranks of a Dense prefill — reaches the same
+    /// verdict before touching any state or collective.
+    fn check_method_fits(&self, method: AttnMethod) -> Result<()> {
+        let needed = self.cfg.apb.cache_rows(method);
+        let have = self.cfg.apb.cache_rows(self.cfg.method);
+        if needed > have {
+            bail!(
+                "method {} needs {needed} KV rows per slot but the pool was sized \
+                 for {have} (cluster method {}); start the cluster from \
+                 Config::with_method",
+                method.name(),
+                self.cfg.method.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Claim (or reset) `sid`'s pool slot and register its session state,
+    /// erroring — before any collective, identically on every host — when
+    /// the pool was not sized for `method`.
+    fn claim_slot(&mut self, sid: SessionId, method: AttnMethod) -> Result<()> {
+        self.check_method_fits(method)?;
         self.pool.alloc(sid)?;
-        self.sessions.insert(sid, SessionState { next_pos: self.decode_pos0() });
+        self.sessions.insert(sid, SessionState { next_pos: self.decode_pos0(), method });
+        Ok(())
+    }
+
+    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout
+    /// into session `sid`'s pool slot (StarAttn = same path with the
+    /// passing step skipped: zero prefill communication).
+    fn prefill_apb(
+        &mut self,
+        sid: SessionId,
+        tokens: &[i32],
+        opts: &ApbOptions,
+    ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
+        self.claim_slot(sid, opts.method)?;
         let cfg = &self.cfg;
         let (a, m) = (&cfg.apb, &cfg.model);
         let backend = self.backend.as_ref();
@@ -189,7 +265,8 @@ impl HostWorker {
 
         let pos_offset = (a.query_len + self.rank * a.block_len) as i32;
         let n_anchor = super::n_anchor_for(cfg, self.rank, opts);
-        let pass_len: i32 = if opts.use_passing {
+        let passing = opts.method.passes_compressed_blocks();
+        let pass_len: i32 = if passing {
             (self.rank * a.passing_len) as i32
         } else {
             0
@@ -228,7 +305,7 @@ impl HostWorker {
             tm.topk_s += sw.lap();
 
             // --- AllGather of compressed blocks (§3.5), session-tagged ----
-            let blocks: Vec<(Tensor, Tensor)> = if opts.use_passing {
+            let blocks: Vec<(Tensor, Tensor)> = if passing {
                 self.fabric.kv_gather.all_gather_tagged(self.rank, sid, (k_c, v_c))
             } else {
                 Vec::new()
@@ -258,14 +335,130 @@ impl HostWorker {
         Ok((tm, retained))
     }
 
+    /// RingAttn prefill (Ring Attention / Context Parallelism): this host's
+    /// rows of the exact `[query | doc]` layout are processed with plain
+    /// causal attention against ALL hosts' KV, obtained by rotating full
+    /// (K, V) blocks around the ring (`Fabric::ring_pass`, `ring` meter
+    /// label) — N-1 exchange rounds per layer, partials merged with the
+    /// online-softmax identity. Exact: must match [`AttnMethod::Dense`]
+    /// within float tolerance (tested in `cluster_modes`).
+    fn prefill_ring(&mut self, sid: SessionId, tokens: &[i32]) -> Result<PrefillTiming> {
+        self.claim_slot(sid, AttnMethod::RingAttn)?;
+        let cfg = &self.cfg;
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let positions = ring_positions(a, self.rank);
+        if tokens.len() != positions.len() {
+            bail!("ring prefill: host {} wants {} rows, got {}", self.rank,
+                  positions.len(), tokens.len());
+        }
+        let n_hosts = a.n_hosts;
+        let backend = self.backend.as_ref();
+        let mut tm = PrefillTiming::default();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let mut hidden = backend.embed(tokens)?;
+        tm.embed_s += sw.lap();
+
+        for li in 0..m.n_layers {
+            // QKV + RoPE at the rows' true global positions (no anchors,
+            // no retaining heads — this is the exact baseline).
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
+            tm.layer_pre_s += sw.lap();
+
+            // Local causal partial, then one partial per block received off
+            // the ring. Blocks from later hosts are entirely in this host's
+            // future — skip the (fully masked) attention but still forward
+            // them so every rank runs the same number of exchange rounds.
+            let mut outs: Vec<Tensor> = Vec::with_capacity(n_hosts);
+            let mut lses: Vec<Tensor> = Vec::with_capacity(n_hosts);
+            let (o, l) = backend.attn_partial(&q, &k, &v, &positions, &positions)?;
+            outs.push(o);
+            lses.push(l);
+            tm.layer_post_s += sw.lap();
+
+            let mut block = (k.clone(), v.clone());
+            for step in 1..n_hosts {
+                block = self.fabric.ring_pass.exchange_tagged(self.rank, sid, block);
+                tm.comm_s += sw.lap();
+                let origin = (self.rank + n_hosts - step) % n_hosts;
+                if origin < self.rank {
+                    let k_pos = ring_positions(a, origin);
+                    let (o, l) =
+                        backend.attn_partial(&q, &block.0, &block.1, &positions, &k_pos)?;
+                    outs.push(o);
+                    lses.push(l);
+                }
+                tm.layer_post_s += sw.lap();
+            }
+            let att = merge_partials(&outs, &lses);
+            hidden = backend.decode_post(li, &hidden, &att)?;
+            tm.layer_post_s += sw.lap();
+
+            // Cache this host's own rows (computed locally before the
+            // rotation; the block still held after N-1 exchanges originated
+            // at the successor rank and is simply dropped).
+            self.pool.get_mut(sid)?.append(li, &k, &v)?;
+            tm.cache_s += sw.lap();
+        }
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok(tm)
+    }
+
+    /// Dense prefill — the exactness anchor: host 0 runs the entire
+    /// `[query | doc]` sequence through plain causal attention
+    /// (`attn_partial` over its own rows) with zero communication; every
+    /// other host claims the session's (empty, already-preallocated) slot
+    /// and registers it, so session AND pool maps stay identical across
+    /// ranks — both the capacity and the slot-exhaustion verdicts are
+    /// reached symmetrically, and a rejected Dense request leaves NO rank
+    /// with session state.
+    fn prefill_dense(&mut self, sid: SessionId, tokens: &[i32]) -> Result<PrefillTiming> {
+        let mut tm = PrefillTiming::default();
+        self.claim_slot(sid, AttnMethod::Dense)?;
+        if self.rank != 0 {
+            return Ok(tm);
+        }
+        let cfg = &self.cfg;
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let n = a.query_len + a.doc_len();
+        if tokens.len() != n {
+            bail!("dense prefill: host 0 wants {n} rows, got {}", tokens.len());
+        }
+        let positions: Vec<i32> = (0..n as i32).collect();
+        let backend = self.backend.as_ref();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let mut hidden = backend.embed(tokens)?;
+        tm.embed_s += sw.lap();
+        for li in 0..m.n_layers {
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
+            tm.layer_pre_s += sw.lap();
+            // Full causal attention in one partial (every row sees itself,
+            // so no merge is needed: a single partial IS the softmax).
+            let (att, _lse) = backend.attn_partial(&q, &k, &v, &positions, &positions)?;
+            hidden = backend.decode_post(li, &hidden, &att)?;
+            tm.layer_post_s += sw.lap();
+            self.pool.get_mut(sid)?.append(li, &k, &v)?;
+            tm.cache_s += sw.lap();
+        }
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok(tm)
+    }
+
     /// Algorithm 3 — one decode pass over a single session's chunk (the
-    /// re-fed query). Returns logits on the last host only.
+    /// re-fed query). Distributed methods return logits on the last host;
+    /// Dense sessions are forwarded to [`HostWorker::decode_pass_dense`].
     fn decode_pass(
         &mut self,
         sid: SessionId,
         tokens: &[i32],
     ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
-        self.ensure_session(sid)?;
+        let method = self.ensure_session(sid)?;
+        if !method.distributed_decode() {
+            return self.decode_pass_dense(sid, tokens);
+        }
         let n = tokens.len();
         let pos0 = self.sessions[&sid].next_pos;
         let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
@@ -323,6 +516,108 @@ impl HostWorker {
         Ok((logits, tm))
     }
 
+    /// Dense decode: host 0's cache holds every key, so the chunk attends
+    /// it self-causally in one pass — no collective, no merge, logits on
+    /// host 0. Idle ranks only advance the session's position bookkeeping
+    /// (kept in lockstep so a later method switch cannot desync positions).
+    fn decode_pass_dense(
+        &mut self,
+        sid: SessionId,
+        tokens: &[i32],
+    ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+        let n = tokens.len();
+        let mut tm = DecodeTiming::default();
+        if self.rank != 0 {
+            self.sessions.get_mut(&sid).unwrap().next_pos += n as i32;
+            return Ok((None, tm));
+        }
+        let pos0 = self.sessions[&sid].next_pos;
+        let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
+        let n_layers = self.cfg.model.n_layers;
+        let backend = self.backend.as_ref();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let mut hidden = backend.embed(tokens)?;
+        tm.pre_s += sw.lap();
+        for li in 0..n_layers {
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
+            tm.pre_s += sw.lap();
+            // Append first, then attend self-causally (row i of the chunk
+            // sees the prior cache plus chunk rows 0..=i) — the same rule
+            // as the distributed last host's local partial.
+            self.pool.get_mut(sid)?.append(li, &k, &v)?;
+            let lc = &self.pool.get(sid)?.layers[li];
+            let (att, _lse) = backend.decode_attn(&q, &lc.k, &lc.v, lc.len, true)?;
+            tm.attn_s += sw.lap();
+            hidden = backend.decode_post(li, &hidden, &att)?;
+            tm.post_s += sw.lap();
+        }
+        self.sessions.get_mut(&sid).unwrap().next_pos += n as i32;
+        let logits = backend.lm_head(&hidden)?;
+        tm.lm_head_s += sw.lap();
+        tm.total_s = total0.elapsed().as_secs_f64();
+        Ok((Some(logits.data), tm))
+    }
+
+    /// Dense twin of [`HostWorker::decode_batch`]: all rows on host 0, one
+    /// stacked pass per layer against the sessions' own caches, still zero
+    /// communication.
+    fn decode_batch_dense(
+        &mut self,
+        entries: &[(SessionId, i32)],
+    ) -> Result<(Option<Vec<Vec<f32>>>, DecodeTiming)> {
+        let mut tm = DecodeTiming::default();
+        if self.rank != 0 {
+            for &(sid, _) in entries {
+                self.sessions.get_mut(&sid).unwrap().next_pos += 1;
+            }
+            return Ok((None, tm));
+        }
+        let tokens: Vec<i32> = entries.iter().map(|&(_, t)| t).collect();
+        let positions: Vec<i32> =
+            entries.iter().map(|&(sid, _)| self.sessions[&sid].next_pos).collect();
+        let (n_layers, vocab) = (self.cfg.model.n_layers, self.cfg.model.vocab_size);
+        let backend = self.backend.as_ref();
+        let mut sw = Stopwatch::start();
+        let total0 = std::time::Instant::now();
+
+        let mut hidden = backend.embed(&tokens)?;
+        tm.pre_s += sw.lap();
+        for li in 0..n_layers {
+            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
+            tm.pre_s += sw.lap();
+            for (i, &(sid, _)) in entries.iter().enumerate() {
+                self.pool.get_mut(sid)?.append(
+                    li,
+                    &k.slice_rows(i, i + 1),
+                    &v.slice_rows(i, i + 1),
+                )?;
+            }
+            let views: Vec<KvView<'_>> = entries
+                .iter()
+                .map(|&(sid, _)| {
+                    let lc = &self.pool.get(sid)?.layers[li];
+                    Ok(KvView { k: &lc.k, v: &lc.v, len: lc.len })
+                })
+                .collect::<Result<_>>()?;
+            let (att, _lse) = backend.decode_attn_batch(&q, &views)?;
+            tm.attn_s += sw.lap();
+            hidden = backend.decode_post(li, &hidden, &att)?;
+            tm.post_s += sw.lap();
+        }
+        for &(sid, _) in entries {
+            self.sessions.get_mut(&sid).unwrap().next_pos += 1;
+        }
+        let l = backend.lm_head(&hidden)?;
+        tm.lm_head_s += sw.lap();
+        tm.total_s = total0.elapsed().as_secs_f64();
+        let rows = (0..entries.len())
+            .map(|i| l.data[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+        Ok((Some(rows), tm))
+    }
+
     /// Continuous-batching decode step: one single-token row PER SESSION,
     /// stacked into ONE backend pass per layer (decode_pre with per-row
     /// positions + decode_attn_batch against per-row caches + one merge +
@@ -341,6 +636,24 @@ impl HostWorker {
             if !self.sessions.contains_key(&sid) {
                 anyhow::bail!("session {sid} not resident: cannot decode-batch");
             }
+        }
+        // Decode routing must be uniform across the batch: Dense sessions
+        // never join collectives, so mixing them with distributed sessions
+        // would desync the att_gather rounds. The scheduler groups by
+        // decode path; this is the tripwire (identical on every host,
+        // checked before any collective).
+        let distributed = self.sessions[&entries[0].0].method.distributed_decode();
+        for &(sid, _) in entries {
+            if self.sessions[&sid].method.distributed_decode() != distributed {
+                anyhow::bail!(
+                    "decode batch mixes Dense and distributed sessions \
+                     (session {sid} disagrees with session {})",
+                    entries[0].0
+                );
+            }
+        }
+        if !distributed {
+            return self.decode_batch_dense(entries);
         }
         let tag = batch_tag(entries);
         let tokens: Vec<i32> = entries.iter().map(|&(_, t)| t).collect();

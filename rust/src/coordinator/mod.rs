@@ -1,14 +1,27 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! The `Cluster` owns one worker thread per host (each with its own PJRT
-//! engine + KV pool) and drives the APB inference procedure:
+//! The `Cluster` owns one worker thread per host (each with its own
+//! execution backend + KV pool) and drives the inference procedure of the
+//! request's `config::AttnMethod` (the paper's comparison set as
+//! executable modes — full matrix in `docs/architecture.md`, rationale in
+//! `docs/ADR-001-attn-methods.md`):
 //!
-//!   prefill (Algorithm 2, per layer):
-//!     layer_pre → top-l_p selection → AllGather(B^C) → passing-block
-//!     assembly → layer_post → cache append
+//!   APB / StarAttn prefill (Algorithm 2, per layer):
+//!     layer_pre → top-l_p selection → AllGather(B^C) (APB only; StarAttn
+//!     skips passing entirely) → passing-block assembly → layer_post →
+//!     cache append
+//!   RingAttn prefill (exact baseline, per layer):
+//!     decode_pre at global positions → local causal `attn_partial` →
+//!     N-1 ring exchanges of the full (K, V) block, one `attn_partial`
+//!     per received block → online-softmax merge → decode_post →
+//!     cache append
+//!   Dense prefill (exactness anchor): the whole [query | document]
+//!     sequence on host 0, plain causal attention, no communication.
 //!   decode (Algorithm 3, per layer):
 //!     decode_pre → per-host decode_attn(+LSE) → Gather → online-softmax
-//!     merge → decode_post; greedy next-token on the last host.
+//!     merge → decode_post; greedy next-token on the last host. Dense
+//!     sessions instead decode entirely on host 0 (its cache holds every
+//!     key) with no collective.
 //!
 //! Requests are first-class **sessions**: every command carries a
 //! [`SessionId`], each host worker keeps one KV-pool slot plus position
@@ -29,7 +42,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::Fabric;
-use crate::config::{ApbOptions, Config};
+use crate::config::{ApbOptions, AttnMethod, Config};
 use crate::util::tensor::Tensor;
 
 pub use crate::kvcache::SessionId;
@@ -172,6 +185,43 @@ pub struct StepBatchReport {
     pub comm_bytes: u64,
 }
 
+/// Token layout a host receives for one prefill, per attention method:
+///
+/// * `Apb` / `StarAttn` — the paper's `[anchor (l_aq) | local block]`
+///   layout ([`host_tokens`]);
+/// * `RingAttn` — the exact `[query | doc]` split: host 0 owns the query
+///   prefix plus block 0, host r > 0 owns block r (global positions; no
+///   anchor duplication);
+/// * `Dense` — host 0 receives the entire `[query | doc]` sequence, every
+///   other host receives nothing.
+pub fn host_tokens_for(cfg: &Config, doc: &[i32], query: &[i32], rank: usize,
+                       opts: &ApbOptions) -> Vec<i32> {
+    let a = &cfg.apb;
+    match opts.method {
+        AttnMethod::Apb | AttnMethod::StarAttn => host_tokens(cfg, doc, query, rank, opts),
+        AttnMethod::RingAttn => {
+            if rank == 0 {
+                let mut out = Vec::with_capacity(a.query_len + a.block_len);
+                out.extend_from_slice(query);
+                out.extend_from_slice(&doc[..a.block_len]);
+                out
+            } else {
+                doc[rank * a.block_len..(rank + 1) * a.block_len].to_vec()
+            }
+        }
+        AttnMethod::Dense => {
+            if rank == 0 {
+                let mut out = Vec::with_capacity(a.query_len + a.doc_len());
+                out.extend_from_slice(query);
+                out.extend_from_slice(doc);
+                out
+            } else {
+                Vec::new()
+            }
+        }
+    }
+}
+
 /// Mirror of `model.host_tokens`: [anchor (l_aq) | local block] layout for
 /// host `rank`. Host 0 carries no anchor (zero-filled, masked out).
 pub fn host_tokens(cfg: &Config, doc: &[i32], query: &[i32], rank: usize,
@@ -276,7 +326,7 @@ impl Cluster {
         let bytes0 = self.fabric.meter.bytes_total();
         let t0 = std::time::Instant::now();
         for (rank, h) in self.hosts.iter().enumerate() {
-            let tokens = Arc::new(host_tokens(&self.cfg, doc, query, rank, opts));
+            let tokens = Arc::new(host_tokens_for(&self.cfg, doc, query, rank, opts));
             h.cmd_tx
                 .send(Cmd::Prefill { sid, tokens, opts: *opts })
                 .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
@@ -503,6 +553,36 @@ mod tests {
         let t1 = host_tokens(&cfg, &doc, &query, 1, &no_a);
         assert!(t1[..cfg.apb.l_aq()].iter().all(|&t| t == 0));
         assert_eq!(n_anchor_for(&cfg, 1, &no_a), 0);
+    }
+
+    #[test]
+    fn host_tokens_for_exact_methods() {
+        let cfg = fake_cfg(); // 3 hosts, l_b 8, l_a 4, l_q 2
+        let doc: Vec<i32> = (100..124).collect();
+        let query = vec![7, 8];
+        let ring = ApbOptions { method: AttnMethod::RingAttn, ..Default::default() };
+        // Ring host 0 owns [query | block 0] at global positions 0..l_q+l_b.
+        let t0 = host_tokens_for(&cfg, &doc, &query, 0, &ring);
+        assert_eq!(t0.len(), cfg.apb.query_len + cfg.apb.block_len);
+        assert_eq!(&t0[..2], &[7, 8]);
+        assert_eq!(&t0[2..], &doc[..8]);
+        // Ring host r > 0 owns exactly its block, no anchor duplication.
+        let t2 = host_tokens_for(&cfg, &doc, &query, 2, &ring);
+        assert_eq!(&t2[..], &doc[16..24]);
+        // Dense: everything on host 0, nothing elsewhere.
+        let dense = ApbOptions { method: AttnMethod::Dense, ..Default::default() };
+        let d0 = host_tokens_for(&cfg, &doc, &query, 0, &dense);
+        assert_eq!(d0.len(), cfg.apb.query_len + cfg.apb.doc_len());
+        assert_eq!(&d0[..2], &[7, 8]);
+        assert_eq!(&d0[2..], &doc[..]);
+        assert!(host_tokens_for(&cfg, &doc, &query, 1, &dense).is_empty());
+        // APB/Star fall through to the paper's anchored layout.
+        let apb = ApbOptions::default();
+        assert_eq!(host_tokens_for(&cfg, &doc, &query, 1, &apb),
+                   host_tokens(&cfg, &doc, &query, 1, &apb));
+        let star = ApbOptions { method: AttnMethod::StarAttn, ..Default::default() };
+        assert_eq!(host_tokens_for(&cfg, &doc, &query, 1, &star),
+                   host_tokens(&cfg, &doc, &query, 1, &star));
     }
 
     #[test]

@@ -91,6 +91,9 @@ impl AdmissionQueue {
 /// One admitted request holding a session slot on the cluster.
 struct ActiveSession {
     sid: SessionId,
+    /// Attention method the request was prefilled under — decides which
+    /// decode group (distributed merge vs. Dense host-0) its ticks join.
+    method: crate::config::AttnMethod,
     req_id: u64,
     enqueued: Instant,
     queue_wait_s: f64,
@@ -173,6 +176,7 @@ impl<'a> Scheduler<'a> {
             let tokens = if req.max_new == 0 { Vec::new() } else { vec![first] };
             self.active.push(ActiveSession {
                 sid,
+                method: req.opts.method,
                 req_id: req.id,
                 enqueued,
                 queue_wait_s,
@@ -192,18 +196,30 @@ impl<'a> Scheduler<'a> {
 
     /// One batched decode step across every active session that still owes
     /// tokens: each forwards its previously sampled token, all in one
-    /// backend pass per layer.
+    /// backend pass per layer. Sessions are grouped by decode path
+    /// (distributed merge vs. Dense host-0 local) because Dense sessions
+    /// never join the `att` collective — one sub-batch per non-empty group,
+    /// in a fixed order so every host sees the same round sequence.
     fn decode_tick(&mut self) -> Result<()> {
-        let entries: Vec<(SessionId, i32)> = self
-            .active
-            .iter()
-            .filter(|s| !s.finished())
-            .map(|s| (s.sid, *s.tokens.last().expect("chunk seeded one token")))
-            .collect();
+        let group = |want_distributed: bool| -> Vec<(SessionId, i32)> {
+            self.active
+                .iter()
+                .filter(|s| !s.finished() && s.method.distributed_decode() == want_distributed)
+                .map(|s| (s.sid, *s.tokens.last().expect("chunk seeded one token")))
+                .collect()
+        };
+        for entries in [group(true), group(false)] {
+            self.decode_group(&entries)?;
+        }
+        Ok(())
+    }
+
+    /// Advance one decode group (possibly empty) by one batched step.
+    fn decode_group(&mut self, entries: &[(SessionId, i32)]) -> Result<()> {
         if entries.is_empty() {
             return Ok(());
         }
-        let rep = self.cluster.decode_step_batch(&entries)?;
+        let rep = self.cluster.decode_step_batch(entries)?;
         // Exact attribution: spread the step's comm volume over the riders,
         // handing the division remainder to the first few so no bytes are
         // dropped from the per-request totals.

@@ -9,6 +9,13 @@
 //! residency: a fixed set of `KvCache` slots keyed by [`SessionId`], with
 //! byte-accounted alloc/free and an explicit exhaustion error so slot
 //! pressure surfaces as scheduler backpressure, never as corruption.
+//!
+//! Slot capacity depends on the cluster's attention method
+//! (`config::ApbParams::cache_rows`): the distributed modes (APB /
+//! StarAttn / RingAttn) hold at most a local block plus the decode tail
+//! per session, while `AttnMethod::Dense` concentrates the whole
+//! `[query | document]` sequence in host 0's slot. The host worker sizes
+//! every pool from `Config::method` accordingly.
 
 use anyhow::{bail, Result};
 

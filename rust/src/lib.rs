@@ -39,6 +39,15 @@
 //! self-contained [`config::Config::sim_tiny`] so examples and benches run
 //! everywhere.
 //!
+//! ## Attention methods
+//!
+//! The paper's comparison set runs as executable cluster modes behind
+//! [`config::AttnMethod`] (`Apb`, `StarAttn`, `RingAttn`, `Dense`), routed
+//! through the whole [`coordinator`] stack, so comm volumes and exactness
+//! are *measured*, not just modelled by [`attnsim`]. See
+//! `docs/architecture.md` for the method matrix and
+//! `docs/ADR-001-attn-methods.md` for the rationale.
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
 pub mod attnsim;

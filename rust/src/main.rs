@@ -12,7 +12,8 @@ use anyhow::{bail, Result};
 
 use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B};
 use apb::bench_harness::Table;
-use apb::config::ApbOptions;
+use apb::cluster::Fabric;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::Cluster;
 use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
@@ -23,11 +24,41 @@ use apb::util::rng::Rng;
 
 const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
   info                              list artifacts and config
-  run      --config tiny --max-new 8
-  serve    --config tiny --requests 4 --max-new 4
+  run      --config tiny --max-new 8 --method apb|star|ring|dense
+  serve    --config tiny --requests 4 --max-new 4 --method apb|star|ring|dense
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
+
+/// Resolve the attention method from `--method` (with the legacy
+/// `--star-mode` boolean as a deprecated alias for `--method star`).
+fn method_from(args: &Args) -> Result<AttnMethod> {
+    if args.has("star-mode") {
+        eprintln!("[apb] --star-mode is deprecated; use --method star");
+        if args.get("method").is_some() {
+            bail!("--star-mode conflicts with --method");
+        }
+        return Ok(AttnMethod::StarAttn);
+    }
+    match args.get("method") {
+        Some(s) => AttnMethod::parse(s),
+        None => Ok(AttnMethod::Apb),
+    }
+}
+
+/// Print the per-label measured communication of one cluster run.
+fn print_comm(cluster: &Cluster) {
+    let m = &cluster.fabric.meter;
+    println!(
+        "comm: kv {} B / {} rounds | ring {} B / {} rounds | att {} B / {} rounds",
+        m.bytes_for(Fabric::KV_LABEL),
+        m.rounds_for(Fabric::KV_LABEL),
+        m.bytes_for(Fabric::RING_LABEL),
+        m.rounds_for(Fabric::RING_LABEL),
+        m.bytes_for(Fabric::ATT_LABEL),
+        m.rounds_for(Fabric::ATT_LABEL),
+    );
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["star-mode", "help"])?;
@@ -77,24 +108,24 @@ fn default_request(cfg: &apb::config::Config, seed: u64) -> (Vec<i32>, Vec<i32>)
 }
 
 fn run(args: &Args) -> Result<()> {
-    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
+    let method = method_from(args)?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
     let cluster = Cluster::start(&cfg)?;
     let (doc, query) = default_request(&cfg, args.usize_or("seed", 1)? as u64);
-    let opts = if args.has("star-mode") {
-        ApbOptions { use_passing: false, ..Default::default() }
-    } else {
-        ApbOptions::default()
-    };
+    let opts = ApbOptions { method, ..Default::default() };
     let rep = cluster.prefill(&doc, &query, &opts)?;
     let gen = cluster.generate(&query, args.usize_or("max-new", 8)?)?;
+    println!("method {} (exact attention: {})", method.name(), method.exact_attention());
     println!("tokens: {:?}", gen.tokens);
-    println!("prefill {:.1} ms | decode {:.1} ms | comm {} B",
+    println!("prefill {:.1} ms | decode {:.1} ms | prefill comm {} B",
              rep.wall_seconds * 1e3, gen.wall_seconds * 1e3, rep.comm_bytes);
+    print_comm(&cluster);
     Ok(())
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?;
+    let method = method_from(args)?;
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
     let cluster = Cluster::start(&cfg)?;
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;
@@ -106,7 +137,7 @@ fn serve(args: &Args) -> Result<()> {
             doc: inst.doc,
             query: inst.query,
             max_new: args.usize_or("max-new", 4)?,
-            opts: ApbOptions::default(),
+            opts: ApbOptions { method, ..Default::default() },
         })?;
     }
     sched.run_all()?;

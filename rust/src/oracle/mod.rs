@@ -32,6 +32,22 @@ pub enum AccMethod {
     Apb(ApbQuality),
 }
 
+impl AccMethod {
+    /// Accuracy model for an executable request (`config::AttnMethod` +
+    /// ablation toggles). The exact methods (RingAttn / Dense) compute full
+    /// causal attention — the cluster proves their logits match the dense
+    /// oracle — so they must score as [`AccMethod::Full`], NOT as an
+    /// anchored approximation; the anchored methods (APB / StarAttn) map
+    /// onto the APB mechanism model via [`ApbQuality::from_options`].
+    pub fn for_options(opts: &ApbOptions, l_a: f64, l_p: f64, l_b: f64) -> AccMethod {
+        if opts.method.exact_attention() {
+            AccMethod::Full
+        } else {
+            AccMethod::Apb(ApbQuality::from_options(opts, l_a, l_p, l_b))
+        }
+    }
+}
+
 /// APB mechanism knobs derived from hyperparameters + ablation toggles.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ApbQuality {
@@ -69,12 +85,16 @@ pub fn anchor_coverage(l_a: f64) -> f64 {
 }
 
 impl ApbQuality {
+    /// Mechanism knobs for the ANCHORED methods (APB, or StarAttn as the
+    /// `passing = false` ablation). An exact-method request does not fit
+    /// this model — route those through [`AccMethod::for_options`], which
+    /// maps them to [`AccMethod::Full`].
     pub fn from_options(opts: &ApbOptions, l_a: f64, l_p: f64, l_b: f64) -> ApbQuality {
         ApbQuality {
             recall: compressor_recall(opts.retaining_compressor, opts.embed_query, l_p,
                                       l_b),
             anchor: opts.use_anchor,
-            passing: opts.use_passing,
+            passing: opts.method.passes_compressed_blocks(),
             anchor_cov: anchor_coverage(l_a),
         }
     }
@@ -252,6 +272,30 @@ mod tests {
     }
 
     #[test]
+    fn exact_methods_score_as_full_attention() {
+        // The accuracy oracle must agree with the executable exactness
+        // invariant: a RingAttn/Dense request computes full attention, so
+        // it scores exactly as Full — never as an anchored approximation.
+        use crate::config::AttnMethod;
+        let c = ctx();
+        let (l_a, l_p, l_b) = (4096.0, 2048.0, 16384.0);
+        let t = infbench_tasks().into_iter().find(|t| t.id == "E.MC").unwrap();
+        let full = expected_score(&t, AccMethod::Full, &c);
+        for m in [AttnMethod::RingAttn, AttnMethod::Dense] {
+            let opts = ApbOptions { method: m, ..Default::default() };
+            let acc = AccMethod::for_options(&opts, l_a, l_p, l_b);
+            assert_eq!(acc, AccMethod::Full);
+            assert_eq!(expected_score(&t, acc, &c), full);
+        }
+        // Anchored methods keep the mechanism model (Star = no passing).
+        let star_opts = ApbOptions { method: AttnMethod::StarAttn, ..Default::default() };
+        let star = AccMethod::for_options(&star_opts, l_a, l_p, l_b);
+        assert!(matches!(star, AccMethod::Apb(q) if !q.passing && q.anchor));
+        let apb = AccMethod::for_options(&ApbOptions::default(), l_a, l_p, l_b);
+        assert!(matches!(apb, AccMethod::Apb(q) if q.passing));
+    }
+
+    #[test]
     fn ablation_ordering_matches_table3() {
         // Table 3 on E.MC: full APB > no-query > random-C > no-passing >
         // no-anchor (collapse towards chance).
@@ -268,7 +312,13 @@ mod tests {
             &t, q(ApbOptions { retaining_compressor: false, ..Default::default() }),
             &c);
         let s_nop = expected_score(
-            &t, q(ApbOptions { use_passing: false, ..Default::default() }), &c);
+            &t,
+            q(ApbOptions {
+                method: crate::config::AttnMethod::StarAttn,
+                ..Default::default()
+            }),
+            &c,
+        );
         let s_noa = expected_score(
             &t, q(ApbOptions { use_anchor: false, ..Default::default() }), &c);
         assert!(s_full > s_noq, "{s_full} !> {s_noq}");

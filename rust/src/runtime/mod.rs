@@ -144,6 +144,37 @@ pub trait ExecBackend {
         Ok((Tensor::concat_rows(&out_refs), Tensor::concat_rows(&lse_refs)))
     }
 
+    /// Position-causal partial attention for the exact baseline modes
+    /// (`AttnMethod::RingAttn` rotated blocks, `AttnMethod::Dense` single
+    /// host): query row `i` (global position `q_pos[i]`) attends key `j`
+    /// iff `k_pos[j] <= q_pos[i]`. Returns `(out [n, h, hd], lse [n, h])`,
+    /// merge-able across blocks with `util::tensor::merge_partials` — the
+    /// online-softmax identity makes the merged result exactly dense causal
+    /// attention over the union of key blocks. Rows with no visible key
+    /// follow the zero-output / `-inf`-LSE convention.
+    ///
+    /// The default implementation computes dense masked attention on the
+    /// host via `sim::masked_attention` — for `SimEngine` that IS the
+    /// native kernel, and for PJRT (whose AOT artifact set predates the
+    /// ring path) it acts as the host-side fallback. Ring merging therefore
+    /// lives at this trait boundary rather than in the coordinator: a
+    /// backend with a fused ring kernel overrides this one method without
+    /// touching the rotation logic.
+    fn attn_partial(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+    ) -> Result<(Tensor, Tensor)> {
+        anyhow::ensure!(q.shape[0] == q_pos.len(),
+                        "attn_partial: {} q rows, {} positions", q.shape[0], q_pos.len());
+        anyhow::ensure!(k.shape[0] == k_pos.len(),
+                        "attn_partial: {} k rows, {} positions", k.shape[0], k_pos.len());
+        Ok(sim::masked_attention(q, k, v, |qi, kj| k_pos[kj] <= q_pos[qi]))
+    }
+
     /// Decode stage 3: merged attention -> O-proj + residual + FFN.
     fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor>;
 

@@ -599,6 +599,11 @@ impl ExecBackend for SimEngine {
         Ok((out, lse))
     }
 
+    // `attn_partial` deliberately uses the trait default: that default IS
+    // this engine's native kernel (`masked_attention` with the
+    // position-causal rule), so an override would only duplicate it. For
+    // PJRT the same default acts as the host-side fallback.
+
     fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor> {
         Ok(self.attn_tail(&self.layers[layer], hidden, att))
     }
@@ -827,6 +832,50 @@ mod tests {
         let (out0, lse0) = e.decode_attn(&q, &kc, &vc, 0, false).unwrap();
         assert!(out0.data.iter().all(|&x| x == 0.0));
         assert!(lse0.data.iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn attn_partial_blocks_merge_to_full_causal() {
+        // Splitting the key set into "ring blocks" and merging the partials
+        // must reproduce the single-pass causal attention — the numeric
+        // core of the RingAttn == Dense invariant.
+        use crate::runtime::ExecBackend;
+        use crate::util::tensor::merge_partials;
+        let e = engine();
+        let (h, kh, hd) = (e.model.n_heads, e.model.n_kv_heads, e.model.head_dim());
+        let mut rng = Rng::new(31);
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let (nq, nk) = (5usize, 9usize);
+        let q = rand(&mut rng, vec![nq, h, hd]);
+        let k = rand(&mut rng, vec![nk, kh, hd]);
+        let v = rand(&mut rng, vec![nk, kh, hd]);
+        // Queries sit at the tail of the sequence; keys cover 0..nk.
+        let q_pos: Vec<i32> = (0..nq as i32).map(|i| (nk as i32 - nq as i32) + i).collect();
+        let k_pos: Vec<i32> = (0..nk as i32).collect();
+        let (full, _) = e.attn_partial(&q, &k, &v, &q_pos, &k_pos).unwrap();
+        // Two uneven blocks, as two hosts of a ring would hold them.
+        let split = 4usize;
+        let (o1, l1) = e
+            .attn_partial(&q, &k.slice_rows(0, split), &v.slice_rows(0, split),
+                          &q_pos, &k_pos[..split])
+            .unwrap();
+        let (o2, l2) = e
+            .attn_partial(&q, &k.slice_rows(split, nk), &v.slice_rows(split, nk),
+                          &q_pos, &k_pos[split..])
+            .unwrap();
+        let merged = merge_partials(&[o1, o2], &[l1, l2]);
+        assert!(merged.max_abs_diff(&full) < 1e-5);
+        // A block entirely in the future yields the -inf convention.
+        let future_pos = vec![100i32; nk];
+        let (of, lf) = e.attn_partial(&q, &k, &v, &[0; 5], &future_pos).unwrap();
+        assert!(of.data.iter().all(|&x| x == 0.0));
+        assert!(lf.data.iter().all(|&x| x == f32::NEG_INFINITY));
+        // Row/position count mismatches are rejected.
+        assert!(e.attn_partial(&q, &k, &v, &q_pos[..2], &k_pos).is_err());
+        assert!(e.attn_partial(&q, &k, &v, &q_pos, &k_pos[..2]).is_err());
     }
 
     #[test]

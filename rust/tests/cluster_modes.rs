@@ -1,10 +1,14 @@
-//! Cluster behaviour across method modes and failure conditions.
+//! Cluster behaviour across the executable `AttnMethod` modes (APB /
+//! StarAttn / RingAttn / Dense) and failure conditions, including the
+//! exactness invariant: the exact methods must agree with the Dense oracle
+//! within float tolerance, the approximate ones must not.
 //!
 //! Runs on the native SimEngine backend by default (no artifacts needed, so
 //! these are non-skipping tier-1 tests); with `--features pjrt` and
 //! `make artifacts` the same assertions run against the PJRT cluster.
 
-use apb::config::ApbOptions;
+use apb::cluster::Fabric;
+use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::rng::Rng;
@@ -44,7 +48,7 @@ fn star_mode_moves_zero_bytes_and_differs() {
     assert!(apb_rep.comm_bytes > 0);
 
     cluster.clear().unwrap();
-    let star = ApbOptions { use_passing: false, ..Default::default() };
+    let star = ApbOptions { method: AttnMethod::StarAttn, ..Default::default() };
     let star_rep = cluster.prefill(&inst.doc, &inst.query, &star).unwrap();
     let star_gen = cluster.generate(&inst.query, 2).unwrap();
     assert_eq!(star_rep.comm_bytes, 0, "Star-mode must not communicate");
@@ -160,6 +164,122 @@ fn retained_indices_are_opt_in() {
             }
         }
     }
+}
+
+/// One full request (prefill + query-chunk + 2 decode steps) on a fresh
+/// cluster bound to `method`; returns the chunk logits plus the measured
+/// per-label comm. The request is identical across methods (same seed,
+/// same model weights via `Config::seed`), so logits are comparable.
+fn run_method(method: AttnMethod) -> (Vec<f32>, u64, u64, u64) {
+    let cfg = Config::sim_tiny().with_method(method);
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+    let mut rng = Rng::new(77);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let opts = ApbOptions { method, ..Default::default() };
+    cluster.prefill(&inst.doc, &inst.query, &opts).expect("prefill");
+    let gen = cluster.generate(&inst.query, 2).expect("generate");
+    assert!(gen.query_logits.iter().all(|x| x.is_finite()),
+            "{} produced non-finite logits", method.name());
+    let m = &cluster.fabric.meter;
+    (
+        gen.query_logits,
+        m.bytes_for(Fabric::KV_LABEL),
+        m.bytes_for(Fabric::RING_LABEL),
+        m.bytes_total(),
+    )
+}
+
+fn linf(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn ring_matches_dense_oracle_within_1e5() {
+    // The tentpole exactness invariant: RingAttn (distributed, rotated KV
+    // blocks + online-softmax merge) and Dense (everything on host 0) are
+    // the same mathematical function; the cluster must reproduce that.
+    println!("APB-RUN exact_methods backend=sim");
+    let (dense, _, _, dense_total) = run_method(AttnMethod::Dense);
+    let (ring, ring_kv, ring_ring, _) = run_method(AttnMethod::RingAttn);
+    assert_eq!(dense_total, 0, "Dense must not communicate at all");
+    assert_eq!(ring_kv, 0, "RingAttn never passes compressed blocks");
+    assert!(ring_ring > 0, "RingAttn must rotate KV over the ring");
+    let d = linf(&ring, &dense);
+    assert!(d < 1e-5, "RingAttn vs Dense logits Linf {d} >= 1e-5");
+}
+
+#[test]
+fn approximate_methods_differ_from_dense() {
+    // The other half of `AttnMethod::exact_attention`: the anchor/passing
+    // approximations must NOT match the oracle (if they did, the paper's
+    // accuracy/compute trade-off would be vacuous on this cluster).
+    let (dense, ..) = run_method(AttnMethod::Dense);
+    for method in [AttnMethod::Apb, AttnMethod::StarAttn] {
+        let (logits, ..) = run_method(method);
+        let d = linf(&logits, &dense);
+        assert!(!method.exact_attention());
+        assert!(d > 1e-6, "{} unexpectedly matched the dense oracle", method.name());
+    }
+}
+
+#[test]
+fn ring_rotation_moves_full_kv_blocks() {
+    // Measured comm volume: the ring rotates every host's full (K, V)
+    // block to every other host — H-1 exchange rounds per layer, each
+    // moving all H blocks once — while APB AllGathers only l_p compressed
+    // rows per host per layer. Both are exactly predictable.
+    let cfg = Config::sim_tiny().with_method(AttnMethod::RingAttn);
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+    let mut rng = Rng::new(78);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let ring_opts = ApbOptions { method: AttnMethod::RingAttn, ..Default::default() };
+    cluster.prefill(&inst.doc, &inst.query, &ring_opts).unwrap();
+    let (a, m) = (&cfg.apb, &cfg.model);
+    let row_bytes = 2 * m.n_kv_heads * m.head_dim() * 4; // K and V, f32
+    let total_rows = a.query_len + a.doc_len(); // [query | doc] split
+    let want_ring = (m.n_layers * (a.n_hosts - 1) * total_rows * row_bytes) as u64;
+    let meter = &cluster.fabric.meter;
+    assert_eq!(meter.bytes_for(Fabric::RING_LABEL), want_ring);
+    assert_eq!(
+        meter.rounds_for(Fabric::RING_LABEL),
+        (m.n_layers * a.n_hosts * (a.n_hosts - 1)) as u64,
+        "every rank contributes to every exchange round"
+    );
+    assert_eq!(meter.bytes_for(Fabric::KV_LABEL), 0);
+
+    // APB's compressed passing on the same request, for the ratio claim.
+    let apb_cluster = Cluster::start(&Config::sim_tiny()).expect("cluster start");
+    apb_cluster.prefill(&inst.doc, &inst.query, &ApbOptions::default()).unwrap();
+    let want_kv = (m.n_layers * a.n_hosts * 2 * a.passing_len * m.n_kv_heads
+        * m.head_dim() * 4) as u64;
+    let kv = apb_cluster.fabric.meter.bytes_for(Fabric::KV_LABEL);
+    assert_eq!(kv, want_kv);
+    assert!(want_ring > kv,
+            "ring must move more bytes than APB's compressed blocks \
+             ({want_ring} vs {kv})");
+}
+
+#[test]
+fn dense_request_needs_dense_sized_pool() {
+    // A Dense request on a cluster whose pool was sized for the
+    // distributed modes must be rejected cleanly — identically on every
+    // host, before any collective — and the cluster must keep serving.
+    let (cfg, cluster) = cluster();
+    let mut rng = Rng::new(79);
+    let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    let dense = ApbOptions { method: AttnMethod::Dense, ..Default::default() };
+    let err = cluster.prefill(&inst.doc, &inst.query, &dense).unwrap_err();
+    assert!(format!("{err:#}").contains("KV rows"), "unexpected error: {err:#}");
+    // RingAttn fits the standard pool (host 0 holds [query | block 0]).
+    let ring = ApbOptions { method: AttnMethod::RingAttn, ..Default::default() };
+    cluster.prefill(&inst.doc, &inst.query, &ring).expect("ring on standard pool");
+    cluster.clear().unwrap();
+    cluster
+        .prefill(&inst.doc, &inst.query, &ApbOptions::default())
+        .expect("APB still serves after the rejected request");
+    let gen = cluster.generate(&inst.query, 2).expect("generate");
+    assert_eq!(gen.tokens.len(), 2);
 }
 
 #[test]

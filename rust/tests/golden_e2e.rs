@@ -10,7 +10,7 @@
 //!   — same tokens, same logits. Skips print an explicit `APB-SKIP` marker
 //!   that CI greps for.
 
-use apb::config::{ApbOptions, Config};
+use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::Cluster;
 use apb::runtime::load_golden;
 
@@ -28,7 +28,7 @@ fn tiny_config() -> Option<apb::config::Config> {
 /// the computation without breaking it, and no-passing must not communicate.
 fn assert_ablations_change_generation(cluster: &Cluster, doc: &[i32], query: &[i32]) {
     let variants = [
-        ApbOptions { use_passing: false, ..Default::default() },
+        ApbOptions { method: AttnMethod::StarAttn, ..Default::default() },
         ApbOptions { use_anchor: false, ..Default::default() },
         ApbOptions { retaining_compressor: false, ..Default::default() },
         ApbOptions { embed_query: false, ..Default::default() },
@@ -41,7 +41,7 @@ fn assert_ablations_change_generation(cluster: &Cluster, doc: &[i32], query: &[i
     for (i, opts) in variants.iter().enumerate() {
         cluster.clear().unwrap();
         let rep = cluster.prefill(doc, query, opts).unwrap();
-        if !opts.use_passing {
+        if !opts.method.passes_compressed_blocks() {
             assert_eq!(rep.comm_bytes, 0, "no-passing must not communicate");
         }
         let gen = cluster.generate(query, 2).unwrap();

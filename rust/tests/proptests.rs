@@ -1,7 +1,7 @@
 //! Randomized property tests (proptest is unavailable offline; these use
 //! the in-tree RNG with many seeded cases per property).
 
-use apb::cluster::collectives::{Collective, CommMeter};
+use apb::cluster::collectives::{Collective, CommMeter, RingExchange};
 use apb::kvcache::{KvPool, SessionId};
 use apb::util::json::Json;
 use apb::util::rng::Rng;
@@ -190,6 +190,94 @@ fn prop_collective_rank_order_under_random_scheduling() {
         for h in handles {
             h.join().unwrap();
         }
+    }
+}
+
+#[test]
+fn prop_ring_all_pass_rotation_covers_every_pair_once() {
+    // The RingAttn rotation invariant: forwarding the received block for
+    // N-1 exchange rounds delivers every origin's block to every other
+    // rank EXACTLY once, under arbitrary host counts and thread timing.
+    // (One "round" here = the full N-1-step all-pass rotation, as one
+    // prefill layer runs it.)
+    let mut seed_rng = Rng::new(0x66);
+    for case in 0..6usize {
+        let n = 2 + seed_rng.below(5) as usize;
+        let meter = std::sync::Arc::new(CommMeter::default());
+        let ring = std::sync::Arc::new(RingExchange::labeled(
+            n,
+            "ring",
+            std::sync::Arc::clone(&meter),
+        ));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let ring = std::sync::Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new((case * 31 + rank) as u64 + 5);
+                // Payload carries its origin rank; receivers log every
+                // (origin, receiver) delivery.
+                let mut held = Tensor::new(vec![1], vec![rank as f32]).unwrap();
+                let mut seen: Vec<(usize, usize)> = Vec::new();
+                for _ in 1..n {
+                    if rng.below(2) == 0 {
+                        std::thread::yield_now();
+                    }
+                    held = ring.exchange(rank, held);
+                    seen.push((held.data[0] as usize, rank));
+                }
+                seen
+            }));
+        }
+        let mut all: Vec<(usize, usize)> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        // Exactly the (src, dst) pairs with src != dst, each once.
+        let mut want: Vec<(usize, usize)> = Vec::new();
+        for src in 0..n {
+            for dst in 0..n {
+                if src != dst {
+                    want.push((src, dst));
+                }
+            }
+        }
+        assert_eq!(all, want, "case {case} n={n}");
+        // Each rank sends once per exchange step.
+        assert_eq!(meter.rounds_for("ring"), (n * (n - 1)) as u64);
+    }
+}
+
+#[test]
+fn prop_comm_meter_label_totals_are_additive() {
+    // bytes_total/rounds_total must equal the sum over labels for any
+    // interleaving of contributions on the kv/att/ring labels — the
+    // invariant the per-method comm tables rely on when splitting one
+    // fabric meter into per-collective columns.
+    const LABELS: [&str; 3] = ["kv", "att", "ring"];
+    let mut rng = Rng::new(0x77);
+    for _ in 0..40 {
+        let meter = std::sync::Arc::new(CommMeter::default());
+        let mut shadow = std::collections::BTreeMap::<&str, (u64, u64)>::new();
+        for _ in 0..rng.below(60) {
+            let label = LABELS[rng.below(3) as usize];
+            let bytes = rng.below(1 << 16);
+            meter.add(label, bytes);
+            let e = shadow.entry(label).or_insert((0, 0));
+            e.0 += bytes;
+            e.1 += 1;
+        }
+        let sum_bytes: u64 = LABELS.iter().map(|l| meter.bytes_for(l)).sum();
+        let sum_rounds: u64 = LABELS.iter().map(|l| meter.rounds_for(l)).sum();
+        assert_eq!(meter.bytes_total(), sum_bytes);
+        assert_eq!(meter.rounds_total(), sum_rounds);
+        for (label, (b, r)) in shadow {
+            assert_eq!(meter.bytes_for(label), b);
+            assert_eq!(meter.rounds_for(label), r);
+        }
+        meter.reset();
+        assert_eq!(meter.bytes_total(), 0);
+        assert_eq!(meter.rounds_total(), 0);
     }
 }
 

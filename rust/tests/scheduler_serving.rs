@@ -3,7 +3,7 @@
 //! PJRT artifacts when present + enabled.
 
 use apb::cluster::Fabric;
-use apb::config::ApbOptions;
+use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, SessionId};
 use apb::ruler::{gen_instance, TaskKind};
@@ -85,6 +85,45 @@ fn fifo_order_and_complete_metrics() {
     assert!(m.ttft.p50 > 0.0 && m.decode_comm_bytes > 0);
     if cfg.apb.max_resident >= 2 {
         assert!(m.peak_resident >= 2, "requests must share the cluster");
+    }
+}
+
+#[test]
+fn mixed_method_traffic_is_grouped_per_decode_path() {
+    // One request per AttnMethod, served concurrently: the scheduler must
+    // split each decode tick into the distributed group (APB/Star/Ring —
+    // one shared att AllGather batch) and the Dense group (host-0 local),
+    // because Dense sessions never join collectives. A Dense-sized pool
+    // accepts every method.
+    let cfg = apb::load_config_or_sim("tiny").expect("config").with_method(AttnMethod::Dense);
+    println!("APB-RUN mixed_methods backend={}", cfg.backend.name());
+    let cluster = Cluster::start(&cfg).expect("cluster start");
+    let mut sched = Scheduler::new(&cluster, 16);
+    let mut rng = Rng::new(9);
+    for (id, method) in AttnMethod::ALL.into_iter().enumerate() {
+        let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+        sched
+            .submit(Request {
+                id: id as u64,
+                doc: inst.doc,
+                query: inst.query,
+                max_new: 3,
+                opts: ApbOptions { method, ..Default::default() },
+            })
+            .unwrap();
+    }
+    let done = sched.run_all().unwrap();
+    assert_eq!(done, AttnMethod::ALL.len());
+    for r in &sched.completed {
+        assert_eq!(r.tokens.len(), 3);
+        let method = AttnMethod::ALL[r.id as usize];
+        if method.distributed_decode() {
+            assert!(r.decode_comm_bytes > 0,
+                    "{} decode must use the att AllGather", method.name());
+        } else {
+            assert_eq!(r.decode_comm_bytes, 0,
+                       "Dense decode must not communicate");
+        }
     }
 }
 
