@@ -88,7 +88,7 @@ fn main() {
         Json::Arr(vec![report::row(vec![
             ("prefill_mean_s", json::num(s_prefill.mean)),
             ("prefill_p50_s", json::num(s_prefill.p50)),
-            ("star_mode_prefill_s", json::num(s_star.mean)),
+            ("star_prefill_s", json::num(s_star.mean)),
             ("decode_per_token_s", json::num(per_tok)),
             ("speed_tok_per_s", json::num(speed)),
             ("coordinator_share", json::num(share)),

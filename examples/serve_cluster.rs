@@ -19,24 +19,18 @@ use apb::util::rng::Rng;
 use apb::util::stats::{fmt_duration, fmt_rate};
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["star-mode", "smoke"])?;
-    args.check_known(&["requests", "config", "max-new", "queue", "seed", "method"])?;
+    let args = Args::parse(std::env::args().skip(1), &["smoke"])?;
+    args.check_known(&[
+        "requests", "config", "max-new", "queue", "seed", "method", "chunk-tokens",
+    ])?;
     let n_requests = args.usize_or("requests", 6)?;
     let max_new = args.usize_or("max-new", 6)?;
     let config = args.str_or("config", "tiny");
     let seed = args.usize_or("seed", 7)? as u64;
-    let method = if args.has("star-mode") {
-        // Deprecated alias; same conflict rule as `apb serve`.
-        eprintln!("[serve_cluster] --star-mode is deprecated; use --method star");
-        if args.get("method").is_some() {
-            anyhow::bail!("--star-mode conflicts with --method");
-        }
-        AttnMethod::StarAttn
-    } else {
-        AttnMethod::parse(&args.str_or("method", "apb"))?
-    };
+    let method = AttnMethod::parse(&args.str_or("method", "apb"))?;
 
-    let cfg = apb::load_config_or_sim(&config)?.with_method(method);
+    let mut cfg = apb::load_config_or_sim(&config)?.with_method(method);
+    cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
     println!(
         "serving on {} hosts ({} backend) — model d={} L={} vocab={}, doc {} \
          tokens/request, up to {} sessions resident",
@@ -83,6 +77,8 @@ fn main() -> anyhow::Result<()> {
     table.row(vec!["token throughput (in+out)".into(), fmt_rate(
         (done * (cfg.apb.doc_len() + cfg.apb.query_len + max_new)) as f64 / wall)]);
     table.row(vec!["peak resident sessions".into(), m.peak_resident.to_string()]);
+    table.row(vec!["prefill chunk steps (mean)".into(),
+                   format!("{:.0}", m.prefill_chunks.mean)]);
     table.row(vec!["prefill p50 / p99".into(),
                    format!("{} / {}", fmt_duration(m.prefill.p50),
                            fmt_duration(m.prefill.p99))]);

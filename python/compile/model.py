@@ -281,12 +281,24 @@ def random_scores(seed: int, layer: int, host: int, n: int, kh: int):
 
 @dataclasses.dataclass
 class ApbOptions:
-    """Ablation toggles (paper Table 3)."""
+    """Ablation toggles (paper Table 3).
+
+    `method` mirrors the rust `AttnMethod` spellings for the anchored
+    prefill family this python pipeline simulates: "apb" (anchor +
+    compressed passing blocks) or "star" (anchor only, no passing — the
+    former `use_passing=False`). The exact baselines (ring/dense) live in
+    the rust cluster and the numpy mirror tests, not here.
+    """
+    method: str = "apb"           # "P": apb | star
     use_anchor: bool = True       # "A"
-    use_passing: bool = True      # "P"
     compressor: str = "retaining"  # "C": retaining | random
     embed_query: bool = True      # "Q"
     rd_seed: int = 1234
+
+    def __post_init__(self):
+        if self.method not in ("apb", "star"):
+            raise ValueError(f"unknown method {self.method!r} "
+                             "(expected 'apb' or 'star')")
 
 
 def host_tokens(cfg: Config, doc: np.ndarray, query: np.ndarray, host: int,
@@ -341,7 +353,7 @@ def run_apb_prefill(params, cfg: Config, doc, query, opts=ApbOptions(),
         # AllGather of compressed blocks; host h keeps blocks from hosts < h.
         for h in range(H):
             q, k, v, _, _ = pre[h]
-            n_pass = h * a.passing_len if opts.use_passing else 0
+            n_pass = h * a.passing_len if opts.method == "apb" else 0
             k_pass = jnp.zeros((a.pass_max, cfg.model.n_kv_heads,
                                 cfg.model.head_dim), jnp.float32)
             v_pass = jnp.zeros_like(k_pass)

@@ -1,0 +1,403 @@
+"""Python mirror of the chunked-prefill state machines in
+rust/src/coordinator/prefill.rs, verifying the BIT-IDENTITY invariant of
+docs/ADR-002-chunked-prefill.md independently of the Rust toolchain:
+for any chunk partition, the chunked execution order must reproduce the
+monolithic prefill — same hidden states, same KV caches, same logits.
+
+Mirrors the three machine shapes exactly as the Rust plans execute them:
+
+* APB (layer-major): per layer, anchor + local chunks through
+  projection/RoPE/scores (`ApbPre`), then top-l_p select + passing-block
+  exchange (`ApbGather`), then per-chunk modified-mask attention at the
+  chunk's absolute row offset (`ApbPost`);
+* Ring (layer-major, pipelined rotation): per-chunk partials of the own
+  block, then of each received block in rotation order, merged per chunk;
+* Dense (chunk-major): each chunk of `[query | doc]` rows through every
+  layer against the running KV cache.
+
+f64 throughout — this checks the ALGORITHM (chunk row offsets, anchor
+handling, selection over assembled scores, partial ordering), not f32
+rounding; the Rust proptest `chunked_prefill.rs` pins exact f32 equality.
+
+Runs standalone (`python3 test_chunked_prefill_mirror.py`, numpy only) or
+under pytest alongside the jax-based suite."""
+import math
+import random
+
+import numpy as np
+
+from test_ring_dense_mirror import (
+    DOC_LEN, H, HD, HOSTS, KH, L, LA, LB, LP, LQ, VOCAB,
+    attn_partial, attn_tail, build_weights, dense_run, lm_head,
+    masked_attention, merge_partials, project_qkv, ring_positions,
+    ring_run, rope,
+)
+
+LAQ = LQ + LA
+PASS_MAX = (HOSTS - 1) * LP
+SCALE = 1.0 / math.sqrt(HD)
+
+
+def gelu(x):
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def chunk_ranges(rows, ct, n_chunks):
+    return [(min(c * ct, rows), min((c + 1) * ct, rows)) for c in range(n_chunks)]
+
+
+def apb_host_tokens(doc, query, rank):
+    anchor = [0] * LAQ
+    if rank > 0:
+        anchor[:LQ] = query
+        anchor[LQ:] = doc[:LA]
+    return anchor + doc[rank * LB:(rank + 1) * LB]
+
+
+def apb_positions(rank):
+    pos_offset = LQ + rank * LB
+    return list(range(LAQ)) + [pos_offset + i for i in range(LB)]
+
+
+def retaining_scores(q_nr_query, q_nr_rows, k_nr_rows):
+    """The crafted sim compressor (runtime/sim.rs): hidden unit 0 reads the
+    sim_max feature shifted by +3 into gelu's monotone region, the output
+    reads hidden 0 — score(i, j) = gelu(smax(i, j) + 3)."""
+    w = q_nr_query.shape[0]
+    qq = q_nr_query.reshape(w, KH, H // KH, HD).mean(axis=2)  # group mean
+    n = q_nr_rows.shape[0]
+    scores = np.zeros((n, KH))
+    for i in range(n):
+        for j in range(KH):
+            smax = max(float(qq[wi, j] @ k_nr_rows[i, j]) * SCALE
+                       for wi in range(w))
+            scores[i, j] = gelu(smax + 3.0)
+    return scores
+
+
+def top_lp(scores):
+    """Per-head top-LP, ties broken toward lower index, ascending output."""
+    n = scores.shape[0]
+    out = []
+    for j in range(KH):
+        order = sorted(range(n), key=lambda i: (-scores[i, j], i))
+        out.append(sorted(order[:LP]))
+    return out
+
+
+def gather_compressed(k_local, v_local, idx):
+    kc = np.zeros((LP, KH, HD))
+    vc = np.zeros((LP, KH, HD))
+    for j in range(KH):
+        for t, i in enumerate(idx[j]):
+            kc[t, j] = k_local[i, j]
+            vc[t, j] = v_local[i, j]
+    return kc, vc
+
+
+def apb_visible(n_anchor, pass_len, qi, kj):
+    if qi < LAQ:
+        return kj < LAQ and kj <= qi
+    if kj < LAQ:
+        return kj < n_anchor
+    if kj < LAQ + PASS_MAX:
+        return kj - LAQ < pass_len
+    return kj - LAQ - PASS_MAX <= qi - LAQ
+
+
+def apb_layer_exchange(layer_pre_out):
+    """Per-layer select + AllGather + assembly, shared by both shapes.
+    layer_pre_out[r] = (q, k, v, scores) for host r's full layout rows."""
+    compressed = []
+    for r in range(HOSTS):
+        _, k, v, scores = layer_pre_out[r]
+        idx = top_lp(scores)
+        compressed.append(gather_compressed(k[LAQ:], v[LAQ:], idx))
+    passes = []
+    for r in range(HOSTS):
+        k_pass = np.zeros((PASS_MAX, KH, HD))
+        v_pass = np.zeros((PASS_MAX, KH, HD))
+        for g in range(r):
+            k_pass[g * LP:(g + 1) * LP] = compressed[g][0]
+            v_pass[g * LP:(g + 1) * LP] = compressed[g][1]
+        passes.append((k_pass, v_pass, r * LP))
+    return passes
+
+
+def apb_run_monolithic(embed, lm_head_w, layers, doc, query):
+    """The pre-chunking host.rs prefill_apb order: full-layout layer_pre,
+    select+gather, full-layout layer_post, per layer."""
+    hiddens = [embed[apb_host_tokens(doc, query, r)] for r in range(HOSTS)]
+    positions = [apb_positions(r) for r in range(HOSTS)]
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        pre = []
+        for r in range(HOSTS):
+            q_nr, k_nr, v = project_qkv(lw, hiddens[r])
+            scores = retaining_scores(q_nr[:LQ], q_nr[LAQ:], k_nr[LAQ:])
+            q = rope(q_nr, positions[r])
+            k = rope(k_nr, positions[r])
+            pre.append((q, k, v, scores))
+        passes = apb_layer_exchange(pre)
+        for r in range(HOSTS):
+            q, k, v, _ = pre[r]
+            k_pass, v_pass, pass_len = passes[r]
+            n_anchor = LAQ if r > 0 else 0
+            k_attn = np.concatenate([k[:LAQ], k_pass, k[LAQ:]])
+            v_attn = np.concatenate([v[:LAQ], v_pass, v[LAQ:]])
+            att, _ = masked_attention(
+                q, k_attn, v_attn,
+                lambda qi, kj: apb_visible(n_anchor, pass_len, qi, kj))
+            hiddens[r] = attn_tail(lw, hiddens[r], att)
+            caches[r].append([k[LAQ:], v[LAQ:]])
+    return hiddens, caches
+
+
+def apb_run_chunked(embed, lm_head_w, layers, doc, query, ct):
+    """The PrefillMachine order: per layer, ApbPre×C (anchor rows at chunk
+    0, per-chunk projection/scores), ApbGather, ApbPost×C (row-offset
+    attention + per-chunk cache append)."""
+    n_chunks = -(-LB // ct)  # ceil
+    chunks = chunk_ranges(LB, ct, n_chunks)
+    hiddens = [embed[apb_host_tokens(doc, query, r)] for r in range(HOSTS)]
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        pre = []
+        for r in range(HOSTS):
+            pos_offset = LQ + r * LB
+            q = np.zeros((LAQ + LB, H, HD))
+            k = np.zeros((LAQ + LB, KH, HD))
+            v = np.zeros((LAQ + LB, KH, HD))
+            scores = np.zeros((LB, KH))
+            for ci, (c0, c1) in enumerate(chunks):
+                if ci == 0:  # anchor rows ride chunk 0 (Op::ApbPre c == 0)
+                    qa, ka, va = project_qkv(lw, hiddens[r][:LAQ])
+                    q[:LAQ] = rope(qa, list(range(LAQ)))
+                    k[:LAQ] = rope(ka, list(range(LAQ)))
+                    v[:LAQ] = va
+                # layer_pre_chunk: anchor-query projection + chunk rows
+                q_nr_query, _, _ = project_qkv(lw, hiddens[r][:LQ])
+                q_nr, k_nr, vc = project_qkv(lw, hiddens[r][LAQ + c0:LAQ + c1])
+                scores[c0:c1] = retaining_scores(q_nr_query, q_nr, k_nr)
+                pos = [pos_offset + i for i in range(c0, c1)]
+                q[LAQ + c0:LAQ + c1] = rope(q_nr, pos)
+                k[LAQ + c0:LAQ + c1] = rope(k_nr, pos)
+                v[LAQ + c0:LAQ + c1] = vc
+            pre.append((q, k, v, scores))
+        passes = apb_layer_exchange(pre)
+        for r in range(HOSTS):
+            q, k, v, _ = pre[r]
+            k_pass, v_pass, pass_len = passes[r]
+            n_anchor = LAQ if r > 0 else 0
+            k_attn = np.concatenate([k[:LAQ], k_pass, k[LAQ:]])
+            v_attn = np.concatenate([v[:LAQ], v_pass, v[LAQ:]])
+            layer_k, layer_v = [], []
+            for ci, (c0, c1) in enumerate(chunks):
+                row0, row1 = (0, LAQ + c1) if ci == 0 else (LAQ + c0, LAQ + c1)
+                att, _ = masked_attention(
+                    q[row0:row1], k_attn, v_attn,
+                    lambda qi, kj: apb_visible(n_anchor, pass_len, qi + row0, kj))
+                hiddens[r][row0:row1] = attn_tail(lw, hiddens[r][row0:row1], att)
+                layer_k.append(k[LAQ + c0:LAQ + c1])
+                layer_v.append(v[LAQ + c0:LAQ + c1])
+            caches[r].append([np.concatenate(layer_k), np.concatenate(layer_v)])
+    return hiddens, caches
+
+
+def apb_chunk_decode(layers, lm_head_w, embed, caches, query):
+    """Distributed query-chunk decode over the prefilled caches (same for
+    both shapes; mirrors the ring mirror's decode)."""
+    pos0 = LQ + DOC_LEN
+    cpos = list(range(pos0, pos0 + LQ))
+    hc = [embed[query] for _ in range(HOSTS)]
+    last = HOSTS - 1
+    nch = len(cpos)
+    for li, lw in enumerate(layers):
+        partials = []
+        for r in range(HOSTS):
+            q, k, v = project_qkv(lw, hc[r])
+            q = rope(q, cpos)
+            k = rope(k, cpos)
+            if r == last:
+                caches[r][li][0] = np.concatenate([caches[r][li][0], k])
+                caches[r][li][1] = np.concatenate([caches[r][li][1], v])
+                clen = caches[r][li][0].shape[0]
+                o, l = masked_attention(
+                    q, caches[r][li][0], caches[r][li][1],
+                    lambda qi, kj: kj < clen - (nch - 1 - qi))
+            else:
+                clen = caches[r][li][0].shape[0]
+                o, l = masked_attention(
+                    q, caches[r][li][0], caches[r][li][1],
+                    lambda qi, kj: kj < clen)
+            partials.append((o, l))
+        att = merge_partials([p[0] for p in partials], [p[1] for p in partials])
+        for r in range(HOSTS):
+            hc[r] = attn_tail(lw, hc[r], att)
+    return lm_head(lm_head_w, hc[last])
+
+
+def ring_run_chunked(embed, lm_head_w, layers, doc, query, ct):
+    """The RingMachine order: per layer, RingPre×C, then partials of the
+    own block ×C, then each received block in rotation order ×C (the
+    pipelined exchange only reorders communication, not arithmetic), then
+    per-chunk merge + attn_tail (RingTail), then append."""
+    tokens = [query + doc[:LB]] + \
+             [doc[r * LB:(r + 1) * LB] for r in range(1, HOSTS)]
+    hiddens = [embed[t] for t in tokens]
+    positions = [ring_positions(r) for r in range(HOSTS)]
+    max_rows = LQ + LB
+    n_chunks = -(-max_rows // ct)
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        qkv = []
+        for r in range(HOSTS):
+            rows = len(positions[r])
+            chunks = chunk_ranges(rows, ct, n_chunks)
+            q = np.zeros((rows, H, HD))
+            k = np.zeros((rows, KH, HD))
+            v = np.zeros((rows, KH, HD))
+            for c0, c1 in chunks:
+                if c0 == c1:
+                    continue
+                qc, kc, vc = project_qkv(lw, hiddens[r][c0:c1])
+                q[c0:c1] = rope(qc, positions[r][c0:c1])
+                k[c0:c1] = rope(kc, positions[r][c0:c1])
+                v[c0:c1] = vc
+            qkv.append((q, k, v))
+        for r in range(HOSTS):
+            rows = len(positions[r])
+            chunks = chunk_ranges(rows, ct, n_chunks)
+            q, k, v = qkv[r]
+            outs, lses = [], []
+            # RingPartial s = 0..H-1 in plan order, chunked q rows.
+            for s in range(HOSTS):
+                origin = (r + HOSTS - s) % HOSTS
+                if s > 0 and origin >= r:
+                    continue
+                o = np.zeros((rows, H, HD))
+                l = np.zeros((rows, H))
+                ko, vo = (k, v) if s == 0 else (qkv[origin][1], qkv[origin][2])
+                kpos = positions[r] if s == 0 else positions[origin]
+                for c0, c1 in chunks:
+                    if c0 == c1:
+                        continue
+                    oc, lc = attn_partial(lw, q[c0:c1], ko, vo,
+                                          positions[r][c0:c1], kpos)
+                    o[c0:c1] = oc
+                    l[c0:c1] = lc
+                outs.append(o)
+                lses.append(l)
+            # RingTail: merge + decode_post per chunk.
+            for c0, c1 in chunks:
+                if c0 == c1:
+                    continue
+                att = merge_partials([o[c0:c1] for o in outs],
+                                     [l[c0:c1] for l in lses])
+                hiddens[r][c0:c1] = attn_tail(lw, hiddens[r][c0:c1], att)
+            caches[r].append([k, v])
+    return apb_chunk_decode(layers, lm_head_w, embed, caches, query)
+
+
+def dense_run_chunked(embed, lm_head_w, layers, doc, query, ct):
+    """The DenseMachine order: chunk-major — each chunk of [query | doc]
+    rows through every layer against the running KV (concat cache prefix +
+    own rows, position-causal)."""
+    tokens = query + doc
+    rows = len(tokens)
+    n_chunks = -(-rows // ct)
+    caches = [[np.zeros((0, KH, HD)), np.zeros((0, KH, HD))] for _ in range(L)]
+    for c0, c1 in chunk_ranges(rows, ct, n_chunks):
+        hidden = embed[tokens[c0:c1]]
+        pos_chunk = list(range(c0, c1))
+        for li, lw in enumerate(layers):
+            q, k, v = project_qkv(lw, hidden)
+            q = rope(q, pos_chunk)
+            k = rope(k, pos_chunk)
+            k_vis = np.concatenate([caches[li][0], k])
+            v_vis = np.concatenate([caches[li][1], v])
+            att, _ = attn_partial(lw, q, k_vis, v_vis,
+                                  pos_chunk, list(range(c1)))
+            hidden = attn_tail(lw, hidden, att)
+            caches[li][0] = k_vis
+            caches[li][1] = v_vis
+    # Dense query-chunk decode on "host 0" (append then self-causal).
+    pos0 = LQ + DOC_LEN
+    cpos = list(range(pos0, pos0 + LQ))
+    hc = embed[query]
+    nch = len(cpos)
+    for li, lw in enumerate(layers):
+        q, k, v = project_qkv(lw, hc)
+        q = rope(q, cpos)
+        k = rope(k, cpos)
+        ck = np.concatenate([caches[li][0], k])
+        cv = np.concatenate([caches[li][1], v])
+        clen = ck.shape[0]
+        att, _ = masked_attention(
+            q, ck, cv, lambda qi, kj: kj < clen - (nch - 1 - qi))
+        hc = attn_tail(lw, hc, att)
+    return lm_head(lm_head_w, hc)
+
+
+TOL = 1e-9
+CHUNK_SIZES = [1, 5, LB, LB + 7, DOC_LEN + 1]
+
+
+def _request(seed=23):
+    random.seed(seed)
+    doc = [random.randrange(1, VOCAB) for _ in range(DOC_LEN)]
+    query = [random.randrange(1, VOCAB) for _ in range(LQ)]
+    return doc, query
+
+
+def test_apb_chunked_matches_monolithic():
+    doc, query = _request()
+    embed, lmw, layers = build_weights()
+    h_ref, c_ref = apb_run_monolithic(embed, lmw, layers, doc, query)
+    logits_ref = apb_chunk_decode(
+        layers, lmw, embed, [[list(kv) for kv in c] for c in c_ref], query)
+    assert logits_ref.max() - logits_ref.min() > 0.5, "degenerate pipeline"
+    for ct in CHUNK_SIZES:
+        h, c = apb_run_chunked(embed, lmw, layers, doc, query, ct)
+        for r in range(HOSTS):
+            dh = max(np.abs(h[r] - h_ref[r]).max(), 0.0)
+            assert dh < TOL, f"ct={ct} host {r}: hidden Linf {dh:.3e}"
+            for li in range(L):
+                dk = np.abs(c[r][li][0] - c_ref[r][li][0]).max()
+                dv = np.abs(c[r][li][1] - c_ref[r][li][1]).max()
+                assert max(dk, dv) < TOL, f"ct={ct} host {r} layer {li}: KV diff"
+        logits = apb_chunk_decode(
+            layers, lmw, embed, [[list(kv) for kv in cc] for cc in c], query)
+        d = np.abs(logits - logits_ref).max()
+        print(f"APB ct={ct}: logits Linf {d:.3e}")
+        assert d < TOL
+
+
+def test_ring_chunked_matches_monolithic():
+    doc, query = _request(29)
+    embed, lmw, layers = build_weights()
+    logits_ref = ring_run(embed, lmw, layers, doc, query)
+    for ct in CHUNK_SIZES:
+        logits = ring_run_chunked(embed, lmw, layers, doc, query, ct)
+        d = np.abs(logits - logits_ref).max()
+        print(f"Ring ct={ct}: logits Linf {d:.3e}")
+        assert d < TOL
+
+
+def test_dense_chunked_matches_monolithic():
+    doc, query = _request(31)
+    embed, lmw, layers = build_weights()
+    logits_ref = dense_run(embed, lmw, layers, doc, query)
+    for ct in CHUNK_SIZES:
+        logits = dense_run_chunked(embed, lmw, layers, doc, query, ct)
+        d = np.abs(logits - logits_ref).max()
+        print(f"Dense ct={ct}: logits Linf {d:.3e}")
+        assert d < TOL
+
+
+if __name__ == "__main__":
+    test_apb_chunked_matches_monolithic()
+    test_ring_chunked_matches_monolithic()
+    test_dense_chunked_matches_monolithic()
+    print("OK: chunked prefill mirrors are bit-identical to monolithic")

@@ -108,13 +108,25 @@ def test_passing_ablation_changes_outputs(test_cfg, test_params, io):
     doc, query = io
     base, _ = M.run_apb_prefill(test_params, test_cfg, doc, query)
     no_pass, _ = M.run_apb_prefill(test_params, test_cfg, doc, query,
-                                   M.ApbOptions(use_passing=False))
+                                   M.ApbOptions(method="star"))
     # Host 0 never receives passing blocks -> unchanged.
     np.testing.assert_allclose(np.asarray(base[0][-1][0]),
                                np.asarray(no_pass[0][-1][0]), atol=1e-6)
     d = np.abs(np.asarray(base[-1][-1][0]) -
                np.asarray(no_pass[-1][-1][0])).max()
     assert d > 1e-4
+
+
+def test_method_string_is_validated():
+    # The python mirror speaks the rust AttnMethod spellings; the exact
+    # baselines (ring/dense) are rust-cluster-only and must be rejected
+    # here rather than silently treated as "no passing".
+    assert M.ApbOptions().method == "apb"
+    assert M.ApbOptions(method="star").method == "star"
+    with pytest.raises(ValueError):
+        M.ApbOptions(method="ring")
+    with pytest.raises(ValueError):
+        M.ApbOptions(method="use_passing")
 
 
 def test_random_compressor_differs_from_retaining(test_cfg, test_params, io):

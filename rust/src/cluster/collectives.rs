@@ -11,12 +11,25 @@
 //!   predecessor, so N-1 consecutive exchanges deliver every rank's
 //!   original payload to every other rank exactly once (property-tested).
 //!
+//! Both primitives are built from split **`post` / `complete` halves** (the
+//! NCCL-style async boundary): `post_tagged` contributes this rank's
+//! payload without blocking and returns a [`Receipt`]; `complete` blocks
+//! until the round has every rank's contribution and delivers the result.
+//! The fused `all_gather_tagged` / `exchange_tagged` wrappers are
+//! `post + complete` back to back. The chunked-prefill state machine
+//! (`coordinator::prefill`) exploits the split to overlap communication
+//! with compute: the RingAttn rotation posts the outgoing KV block, runs
+//! the attention partials of the *previous* block, and only then completes
+//! the receive — the executable twin of the `max(comm, compute)` overlap
+//! model in `attnsim::walltime`.
+//!
 //! Correctness argument for `all_gather` (also property-tested): a round
 //! completes only after all N ranks contribute; the completed result is
 //! only replaced when all N ranks of the *next* round have contributed,
-//! and a rank cannot contribute to round r+1 before returning from round
-//! r — so every rank reads an intact result. `RingExchange` inherits the
-//! same argument with per-rank `Option` result slots taken exactly once.
+//! and a rank must `complete` round r before it may `post` round r+1 (the
+//! `outstanding` flag) — so every rank reads an intact result.
+//! `RingExchange` inherits the same argument with per-rank `Option` result
+//! slots taken exactly once.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -101,6 +114,16 @@ impl<T: Meterable> Meterable for Vec<T> {
     }
 }
 
+/// Proof of a `post`: records the generation the round was posted under so
+/// the matching `complete` knows when the round it joined has finished.
+/// Receipts are collective-specific and single-use; holding one means the
+/// rank has an outstanding round it must `complete` before posting again.
+#[derive(Debug)]
+#[must_use = "a posted round must be completed or the collective deadlocks"]
+pub struct Receipt {
+    gen: u64,
+}
+
 struct GatherState<T> {
     items: Vec<Option<T>>,
     count: usize,
@@ -108,6 +131,10 @@ struct GatherState<T> {
     /// Session/round tag agreed by the round's first contributor; every
     /// other rank must present the same tag (serving-desync tripwire).
     tag: u64,
+    /// Per-rank "posted but not yet completed" flags: a rank may have at
+    /// most one round in flight, which is what keeps a completed result
+    /// alive until every rank has read it (see module docs).
+    outstanding: Vec<bool>,
     result: Vec<T>,
 }
 
@@ -135,6 +162,7 @@ impl<T: Clone + Meterable> Collective<T> {
                 count: 0,
                 generation: 0,
                 tag: 0,
+                outstanding: vec![false; n],
                 result: Vec::new(),
             }),
             cv: Condvar::new(),
@@ -150,13 +178,28 @@ impl<T: Clone + Meterable> Collective<T> {
     /// decode batch). All ranks of a round must contribute the same tag —
     /// a mismatch means the hosts desynchronized across sessions, which
     /// would silently merge attention partials of *different* requests, so
-    /// it is asserted rather than reported.
+    /// it is asserted rather than reported. Fused `post` + `complete`.
     pub fn all_gather_tagged(&self, rank: usize, tag: u64, item: T) -> Vec<T> {
+        let receipt = self.post_tagged(rank, tag, item);
+        self.complete(rank, receipt)
+    }
+
+    /// Non-blocking half: contribute this rank's payload to the open round
+    /// (metering it as sent) and return a [`Receipt`] for [`Collective::complete`].
+    /// Panics if this rank still has an uncompleted round outstanding — one
+    /// round in flight per rank is the invariant the result-buffer safety
+    /// argument rests on.
+    pub fn post_tagged(&self, rank: usize, tag: u64, item: T) -> Receipt {
         assert!(rank < self.n, "rank {rank} out of {}", self.n);
         // Ring AllGather moves (N-1)/N of the total payload through each
         // link; meter the aggregate volume every rank sends once.
         self.meter.add(self.label, item.wire_bytes());
         let mut st = self.state.lock().unwrap();
+        assert!(
+            !st.outstanding[rank],
+            "collective '{}': rank {rank} posted again before completing",
+            self.label
+        );
         let my_gen = st.generation;
         assert!(st.items[rank].is_none(), "rank {rank} double contribution");
         if st.count == 0 {
@@ -166,6 +209,7 @@ impl<T: Clone + Meterable> Collective<T> {
         }
         st.items[rank] = Some(item);
         st.count += 1;
+        st.outstanding[rank] = true;
         if st.count == self.n {
             // Round complete: snapshot result, clear contribution slots so
             // the next round can start immediately.
@@ -173,11 +217,19 @@ impl<T: Clone + Meterable> Collective<T> {
             st.count = 0;
             st.generation += 1;
             self.cv.notify_all();
-        } else {
-            while st.generation == my_gen {
-                st = self.cv.wait(st).unwrap();
-            }
         }
+        Receipt { gen: my_gen }
+    }
+
+    /// Blocking half: wait until the posted round has all N contributions
+    /// and return them in rank order.
+    pub fn complete(&self, rank: usize, receipt: Receipt) -> Vec<T> {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.outstanding[rank], "complete without a post");
+        while st.generation == receipt.gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.outstanding[rank] = false;
         st.result.clone()
     }
 
@@ -196,6 +248,9 @@ struct RingState<T> {
     generation: u64,
     /// Round tag agreed by the first contributor (see `check_round_tag`).
     tag: u64,
+    /// Per-rank "posted but not yet completed" flags (same invariant as
+    /// [`GatherState::outstanding`]).
+    outstanding: Vec<bool>,
     /// Per-rank delivery slots, taken exactly once per round.
     result: Vec<Option<T>>,
 }
@@ -225,6 +280,7 @@ impl<T: Meterable> RingExchange<T> {
                 count: 0,
                 generation: 0,
                 tag: 0,
+                outstanding: vec![false; n],
                 result: (0..n).map(|_| None).collect(),
             }),
             cv: Condvar::new(),
@@ -240,11 +296,28 @@ impl<T: Meterable> RingExchange<T> {
     /// must present the same tag — a mismatch means hosts desynchronized
     /// across sessions and would rotate KV blocks of *different* requests,
     /// so it panics (same tripwire as [`Collective::all_gather_tagged`]).
+    /// Fused `post` + `complete`.
     pub fn exchange_tagged(&self, rank: usize, tag: u64, item: T) -> T {
+        let receipt = self.post_tagged(rank, tag, item);
+        self.complete(rank, receipt)
+    }
+
+    /// Non-blocking half: send this rank's payload towards its successor
+    /// (metered) and return a [`Receipt`] for [`RingExchange::complete`].
+    /// The chunked RingAttn prefill posts the outgoing block, computes the
+    /// attention partials of the previously received block, and only then
+    /// completes — communication/compute overlap at an explicit step
+    /// boundary. Panics on a double post (one round in flight per rank).
+    pub fn post_tagged(&self, rank: usize, tag: u64, item: T) -> Receipt {
         assert!(rank < self.n, "rank {rank} out of {}", self.n);
         // Each rank pushes its payload over one link per round.
         self.meter.add(self.label, item.wire_bytes());
         let mut st = self.state.lock().unwrap();
+        assert!(
+            !st.outstanding[rank],
+            "ring '{}': rank {rank} posted again before completing",
+            self.label
+        );
         let my_gen = st.generation;
         assert!(st.items[rank].is_none(), "rank {rank} double contribution");
         if st.count == 0 {
@@ -254,6 +327,7 @@ impl<T: Meterable> RingExchange<T> {
         }
         st.items[rank] = Some(item);
         st.count += 1;
+        st.outstanding[rank] = true;
         if st.count == self.n {
             // Round complete: deliver each contribution to its successor.
             let n = self.n;
@@ -265,11 +339,20 @@ impl<T: Meterable> RingExchange<T> {
             st.count = 0;
             st.generation += 1;
             self.cv.notify_all();
-        } else {
-            while st.generation == my_gen {
-                st = self.cv.wait(st).unwrap();
-            }
         }
+        Receipt { gen: my_gen }
+    }
+
+    /// Blocking half: wait for the posted round to finish and take the
+    /// payload delivered from this rank's predecessor (moved out — no
+    /// `Clone` bound; each delivery is taken exactly once).
+    pub fn complete(&self, rank: usize, receipt: Receipt) -> T {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.outstanding[rank], "complete without a post");
+        while st.generation == receipt.gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.outstanding[rank] = false;
         st.result[rank].take().expect("ring delivery already taken")
     }
 }
@@ -431,6 +514,69 @@ mod tests {
         // n ranks x 2 rounds, 4 bytes each.
         assert_eq!(m.bytes_for("ring"), (n * 2 * 4) as u64);
         assert_eq!(m.rounds_for("ring"), (n * 2) as u64);
+    }
+
+    #[test]
+    fn split_post_complete_matches_fused_allgather() {
+        let n = 3;
+        let m = Arc::new(CommMeter::default());
+        let c = Arc::new(Collective::labeled(n, "kv", Arc::clone(&m)));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let c = Arc::clone(&c);
+            handles.push(thread::spawn(move || {
+                // post → (compute window) → complete, twice; results must be
+                // full rank-ordered rounds exactly like the fused call.
+                for round in 0..2 {
+                    let receipt = c.post_tagged(rank, 7, t((round * 10 + rank) as f32));
+                    std::hint::black_box((0..500u64).sum::<u64>()); // "compute"
+                    let all = c.complete(rank, receipt);
+                    for (r, item) in all.iter().enumerate() {
+                        assert_eq!(item.data[0] as usize, round * 10 + r);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Metered at post time: n ranks × 2 rounds × 4 bytes.
+        assert_eq!(m.bytes_for("kv"), (n * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn split_ring_pipeline_overlaps_rounds() {
+        // The chunked-prefill rotation pattern: post the held block, compute
+        // on the previously received one, then complete — blocks still walk
+        // the ring in origin order.
+        let n = 4;
+        let r = Arc::new(RingExchange::labeled(n, "ring", Arc::new(CommMeter::default())));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let r = Arc::clone(&r);
+            handles.push(thread::spawn(move || {
+                let mut held = t(rank as f32);
+                for s in 1..n {
+                    let receipt = r.post_tagged(rank, 3, held);
+                    std::hint::black_box((0..500u64).sum::<u64>()); // "compute"
+                    held = r.complete(rank, receipt);
+                    let origin = (rank + n - s) % n;
+                    assert_eq!(held.data[0] as usize, origin, "rank {rank} step {s}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "posted again before completing")]
+    fn double_post_without_complete_panics() {
+        let c = Collective::labeled(2, "att", Arc::new(CommMeter::default()));
+        let r1 = c.post_tagged(0, 0, t(1.0));
+        let _r2 = c.post_tagged(0, 0, t(2.0)); // must panic
+        let _ = c.complete(0, r1);
     }
 
     #[test]

@@ -44,6 +44,16 @@ pub struct ApbParams {
     /// may hold their caches on the cluster simultaneously (continuous
     /// batching). 1 reproduces the paper's one-request-at-a-time setting.
     pub max_resident: usize,
+    /// Chunked-prefill granularity: how many document tokens one
+    /// `Cmd::PrefillChunk` step advances (per host, per layer phase). The
+    /// scheduler interleaves resident sessions' decode ticks between chunk
+    /// steps, so this bounds the head-of-line blocking a newly admitted
+    /// long request can inflict (Medha-style stall-free serving). Chunking
+    /// is bit-identical to one-shot prefill by construction (see
+    /// `docs/ADR-002-chunked-prefill.md`); values `>= block_len` degenerate
+    /// to one chunk per phase. Per-request override:
+    /// [`ApbOptions::chunk_tokens`]. Must be >= 1.
+    pub chunk_tokens: usize,
 }
 
 impl ApbParams {
@@ -80,6 +90,13 @@ impl ApbParams {
             }
             _ => self.cache_max(),
         }
+    }
+
+    /// Effective chunked-prefill granularity for one request: the
+    /// per-request override when present, else the cluster default —
+    /// clamped to >= 1 so a degenerate 0 can never stall the state machine.
+    pub fn chunk_tokens_for(&self, opts: &ApbOptions) -> usize {
+        opts.chunk_tokens.unwrap_or(self.chunk_tokens).max(1)
     }
 }
 
@@ -256,9 +273,21 @@ impl Config {
                 Some(v) => v.as_usize().context("field 'max_resident' not a usize")?,
                 None => 1,
             },
+            // Older manifests predate chunked prefill; defaulting to the
+            // LARGEST per-host row count of any method (Dense host 0's
+            // whole [query | doc] sequence) makes every machine degenerate
+            // to one chunk per phase — the exact pre-chunking call
+            // sequence, which is all the PJRT artifact set supports.
+            chunk_tokens: match a.get("chunk_tokens") {
+                Some(v) => v.as_usize().context("field 'chunk_tokens' not a usize")?,
+                None => u(a, "query_len")? + u(a, "n_hosts")? * u(a, "block_len")?,
+            },
         };
         if apb.max_resident == 0 {
             bail!("max_resident must be >= 1");
+        }
+        if apb.chunk_tokens == 0 {
+            bail!("chunk_tokens must be >= 1");
         }
         if model.d_model % model.n_heads != 0 {
             bail!("d_model {} not divisible by n_heads {}", model.d_model, model.n_heads);
@@ -351,6 +380,9 @@ impl Config {
                 passing_len: 8,
                 max_new_tokens: 8,
                 max_resident: 4,
+                // Half a block per chunk step: the default sim config
+                // exercises the chunked machine (C = 2) in every test.
+                chunk_tokens: 16,
             },
             1234,
         )
@@ -358,10 +390,10 @@ impl Config {
 }
 
 /// Per-request options: the attention method plus the APB ablation toggles
-/// — rust mirror of `model.ApbOptions` (paper Table 3), with the former
-/// `use_passing: bool` promoted to the full [`AttnMethod`] enum
-/// (`use_passing: false` is now `method: AttnMethod::StarAttn`; deprecated
-/// shims below keep the old spelling compiling).
+/// — rust mirror of `model.ApbOptions` (paper Table 3). The pre-`AttnMethod`
+/// `use_passing: bool` spelling (and its deprecated shims) is gone:
+/// `use_passing: false` is `method: AttnMethod::StarAttn`, and the python
+/// mirror speaks the same method strings.
 ///
 /// The ablation toggles (`use_anchor`, `retaining_compressor`,
 /// `embed_query`) only apply to the anchor/compressor methods
@@ -383,6 +415,11 @@ pub struct ApbOptions {
     /// O(layers × kv_heads × l_p) of dead weight alive per completed
     /// request.
     pub record_retained: bool,
+    /// Per-request chunked-prefill granularity override (`None` = the
+    /// cluster's [`ApbParams::chunk_tokens`]). Any value yields bit-identical
+    /// logits/KV/comm — it only changes how finely the prefill state machine
+    /// is sliced between scheduler ticks.
+    pub chunk_tokens: Option<usize>,
 }
 
 impl Default for ApbOptions {
@@ -394,27 +431,8 @@ impl Default for ApbOptions {
             embed_query: true,
             rd_seed: 1234,
             record_retained: false,
+            chunk_tokens: None,
         }
-    }
-}
-
-impl ApbOptions {
-    /// Shim for the pre-`AttnMethod` ablation toggle: `true` maps to
-    /// [`AttnMethod::Apb`], `false` to [`AttnMethod::StarAttn`].
-    #[deprecated(note = "set `method: AttnMethod::StarAttn` (or `Apb`) instead")]
-    pub fn with_use_passing(mut self, use_passing: bool) -> ApbOptions {
-        self.method = if use_passing {
-            AttnMethod::Apb
-        } else {
-            AttnMethod::StarAttn
-        };
-        self
-    }
-
-    /// Shim for the pre-`AttnMethod` ablation toggle's getter.
-    #[deprecated(note = "use `method.passes_compressed_blocks()` instead")]
-    pub fn use_passing(&self) -> bool {
-        self.method.passes_compressed_blocks()
     }
 }
 
@@ -432,12 +450,31 @@ mod tests {
             passing_len: 32,
             max_new_tokens: 64,
             max_resident: 2,
+            chunk_tokens: 64,
         };
         assert_eq!(a.l_aq(), 48);
         assert_eq!(a.n_tot(), 304);
         assert_eq!(a.pass_max(), 96);
         assert_eq!(a.doc_len(), 1024);
         assert_eq!(a.cache_max(), 336);
+    }
+
+    #[test]
+    fn chunk_tokens_resolution() {
+        let c = Config::sim_tiny();
+        let a = &c.apb;
+        assert!(a.chunk_tokens >= 1 && a.chunk_tokens < a.block_len,
+                "sim-tiny must exercise the chunked machine by default");
+        // No override: the cluster default wins.
+        assert_eq!(a.chunk_tokens_for(&ApbOptions::default()), a.chunk_tokens);
+        // Per-request override wins, clamped to >= 1.
+        let o = ApbOptions { chunk_tokens: Some(5), ..Default::default() };
+        assert_eq!(a.chunk_tokens_for(&o), 5);
+        let zero = ApbOptions { chunk_tokens: Some(0), ..Default::default() };
+        assert_eq!(a.chunk_tokens_for(&zero), 1, "0 clamps to 1, never stalls");
+        // Oversized chunks are fine: they degenerate to one chunk per phase.
+        let big = ApbOptions { chunk_tokens: Some(10 * a.doc_len()), ..Default::default() };
+        assert_eq!(a.chunk_tokens_for(&big), 10 * a.doc_len());
     }
 
     #[test]
@@ -496,17 +533,6 @@ mod tests {
         let d = c.clone().with_method(AttnMethod::Dense);
         assert_eq!(d.method, AttnMethod::Dense);
         assert_eq!(d.seed, c.seed);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn use_passing_shim_maps_to_method() {
-        let star = ApbOptions::default().with_use_passing(false);
-        assert_eq!(star.method, AttnMethod::StarAttn);
-        assert!(!star.use_passing());
-        let apb = star.with_use_passing(true);
-        assert_eq!(apb.method, AttnMethod::Apb);
-        assert!(apb.use_passing());
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! stages of the session's `AttnMethod` (Algorithm 2 prefill + Algorithm 3
 //! decode for APB/StarAttn, the ring rotation for RingAttn, single-host
 //! causal for Dense) and participates in fabric collectives.
+//!
+//! Prefill is **resumable**: `Cmd::PrefillBegin` claims the KV slot and
+//! builds a `PrefillMachine`; each `Cmd::PrefillChunk` advances it one
+//! bounded step (the scheduler interleaves decode ticks in between), and
+//! the final step retires the machine and reports timing — see
+//! `coordinator::prefill` and `docs/ADR-002-chunked-prefill.md`.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -12,12 +18,12 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::Fabric;
-use crate::config::{ApbOptions, ApbParams, AttnMethod, Config};
+use crate::config::{ApbOptions, AttnMethod, Config};
 use crate::kvcache::{KvPool, SessionId};
 use crate::runtime::{create_backend, ExecBackend, KvView};
-use crate::util::rng::random_score;
-use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
+use crate::util::tensor::{merge_partials, Tensor};
 
+use super::prefill::{PrefillMachine, StepCtx, StepOutcome};
 use super::timing::{DecodeTiming, PrefillTiming, Stopwatch};
 use super::{Cmd, Resp};
 
@@ -54,18 +60,10 @@ struct SessionState {
     method: AttnMethod,
 }
 
-/// Global positions of host `rank`'s rows under the exact-method layout
-/// `[query | doc]` (RingAttn): host 0 owns the query prefix + block 0
-/// starting at position 0, host r > 0 owns block r starting at
-/// `l_q + r·l_b`. Must mirror `super::host_tokens_for`.
-fn ring_positions(a: &ApbParams, rank: usize) -> Vec<i32> {
-    let (start, len) = if rank == 0 {
-        (0usize, a.query_len + a.block_len)
-    } else {
-        (a.query_len + rank * a.block_len, a.block_len)
-    };
-    (start as i32..(start + len) as i32).collect()
-}
+/// Payload of `Resp::PrefillDone`: accumulated prefill timing plus the
+/// per-layer/per-kv-head retained index sets (empty unless the request set
+/// `ApbOptions::record_retained`).
+type PrefillOutcome = (PrefillTiming, Vec<Vec<Vec<u32>>>);
 
 /// Collective round tag for a decode batch: order-sensitive digest of the
 /// session ids, so desynchronized batch composition across hosts trips the
@@ -85,6 +83,11 @@ struct HostWorker {
     backend: Box<dyn ExecBackend>,
     pool: KvPool,
     sessions: HashMap<SessionId, SessionState>,
+    /// In-flight resumable prefills, one machine per session being
+    /// prefilled (`Cmd::PrefillBegin` creates it, the final
+    /// `Cmd::PrefillChunk` retires it). A session with a live machine has a
+    /// partially filled KV slot and must not decode yet (tripwired below).
+    machines: HashMap<SessionId, PrefillMachine>,
 }
 
 impl HostWorker {
@@ -103,7 +106,15 @@ impl HostWorker {
             cfg.model.n_kv_heads,
             cfg.model.head_dim(),
         );
-        Ok(HostWorker { rank, cfg, fabric, backend, pool, sessions: HashMap::new() })
+        Ok(HostWorker {
+            rank,
+            cfg,
+            fabric,
+            backend,
+            pool,
+            sessions: HashMap::new(),
+            machines: HashMap::new(),
+        })
     }
 
     fn serve(&mut self, cmd_rx: Receiver<Cmd>, resp_tx: Sender<Resp>) {
@@ -113,21 +124,41 @@ impl HostWorker {
                 Cmd::Clear { sid } => {
                     self.pool.free(sid);
                     self.sessions.remove(&sid);
+                    // An in-flight machine is cancelled, not just dropped:
+                    // abort() drains any posted ring round so the fabric
+                    // stays clean for the next session.
+                    if let Some(m) = self.machines.remove(&sid) {
+                        m.abort(self.rank, &self.fabric);
+                    }
                     Resp::Cleared { host: self.rank }
                 }
                 Cmd::ClearAll => {
                     self.pool.clear_all();
                     self.sessions.clear();
+                    for (_, m) in self.machines.drain() {
+                        m.abort(self.rank, &self.fabric);
+                    }
                     Resp::Cleared { host: self.rank }
                 }
-                Cmd::Prefill { sid, tokens, opts } => {
-                    match self.prefill(sid, &tokens, &opts) {
-                        Ok((timing, retained)) => {
+                Cmd::PrefillBegin { sid, tokens, opts } => {
+                    match self.prefill_begin(sid, &tokens, &opts) {
+                        Ok(steps) => Resp::PrefillBegun { host: self.rank, sid, steps },
+                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                    }
+                }
+                Cmd::PrefillChunk { sid, chunk_idx } => {
+                    match self.prefill_chunk(sid, chunk_idx) {
+                        Ok(None) => Resp::PrefillStep { host: self.rank, sid },
+                        Ok(Some((timing, retained))) => {
                             Resp::PrefillDone { host: self.rank, sid, timing, retained }
                         }
                         Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
                     }
                 }
+                Cmd::PoolStats => Resp::PoolStats {
+                    host: self.rank,
+                    stats: self.pool.stats(),
+                },
                 Cmd::QueryChunk { sid, tokens } => match self.decode_pass(sid, &tokens) {
                     Ok((logits, timing)) => {
                         Resp::StepDone { host: self.rank, sid, logits, timing }
@@ -166,49 +197,62 @@ impl HostWorker {
         Ok(method)
     }
 
-    /// Per-kv-head gather of compressed KV rows: k/v are the local slices
-    /// [l_b, kh, hd]; idx[j] lists ascending positions for head j.
-    fn gather_compressed(
-        &self,
-        k: &Tensor,
-        v: &Tensor,
-        idx: &[Vec<usize>],
-    ) -> (Tensor, Tensor) {
-        let (kh, hd) = (k.shape[1], k.shape[2]);
-        let l_p = idx[0].len();
-        let mut kc = Tensor::zeros(vec![l_p, kh, hd]);
-        let mut vc = Tensor::zeros(vec![l_p, kh, hd]);
-        for j in 0..kh {
-            for (t, &i) in idx[j].iter().enumerate() {
-                let src = (i * kh + j) * hd;
-                let dst = (t * kh + j) * hd;
-                kc.data[dst..dst + hd].copy_from_slice(&k.data[src..src + hd]);
-                vc.data[dst..dst + hd].copy_from_slice(&v.data[src..src + hd]);
-            }
-        }
-        (kc, vc)
-    }
-
-    /// Prefill dispatch on the request's [`AttnMethod`]: the anchored
-    /// Algorithm-2 path for APB/StarAttn, the ring rotation for RingAttn,
-    /// single-host causal for Dense. In every mode the KV slot is claimed
-    /// (or reset) BEFORE any collective, so pool exhaustion fails
-    /// identically on every host — backpressure, never a deadlocked
-    /// half-round. Returns timing + the per-layer/per-head retained
-    /// indices (empty unless `opts.record_retained`; always empty for the
-    /// exact methods, which have no compressor).
-    fn prefill(
+    /// Start a resumable prefill: claim (or reset) the session's KV slot —
+    /// BEFORE building any machine state, so pool exhaustion fails
+    /// identically on every host as backpressure, never a deadlocked
+    /// half-round — then construct the method's [`PrefillMachine`] and
+    /// return its plan length (rank-uniform by construction).
+    fn prefill_begin(
         &mut self,
         sid: SessionId,
         tokens: &[i32],
         opts: &ApbOptions,
-    ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
-        match opts.method {
-            AttnMethod::Apb | AttnMethod::StarAttn => self.prefill_apb(sid, tokens, opts),
-            AttnMethod::RingAttn => {
-                self.prefill_ring(sid, tokens).map(|tm| (tm, Vec::new()))
+    ) -> Result<usize> {
+        self.claim_slot(sid, opts.method)?;
+        let (machine, steps) = PrefillMachine::new(
+            self.rank, &self.cfg, sid, tokens, opts, self.backend.as_ref(),
+        )?;
+        self.machines.insert(sid, machine);
+        Ok(steps)
+    }
+
+    /// Advance session `sid`'s prefill machine by one step. Returns the
+    /// accumulated timing + retained indices when the plan is exhausted
+    /// (the machine is retired), `None` while steps remain. A step error
+    /// cancels THIS host's machine (draining any posted ring round); other
+    /// hosts may still hold theirs, so the session cannot be resumed —
+    /// only cleared (the leader keeps its in-flight marker held until
+    /// then).
+    fn prefill_chunk(
+        &mut self,
+        sid: SessionId,
+        chunk_idx: usize,
+    ) -> Result<Option<PrefillOutcome>> {
+        let Some(machine) = self.machines.get_mut(&sid) else {
+            bail!("session {sid} has no prefill in flight");
+        };
+        let cache = self.pool.get_mut(sid)?;
+        let mut ctx = StepCtx {
+            rank: self.rank,
+            cfg: &self.cfg,
+            fabric: &*self.fabric,
+            backend: self.backend.as_ref(),
+            cache,
+        };
+        match machine.step(&mut ctx, chunk_idx) {
+            Ok(StepOutcome::Progress) => Ok(None),
+            Ok(StepOutcome::Done(timing, retained)) => {
+                self.machines.remove(&sid);
+                Ok(Some((timing, retained)))
             }
-            AttnMethod::Dense => self.prefill_dense(sid, tokens).map(|tm| (tm, Vec::new())),
+            Err(e) => {
+                // Same cancellation as Cmd::Clear: drain any posted ring
+                // round before discarding the machine.
+                if let Some(m) = self.machines.remove(&sid) {
+                    m.abort(self.rank, &self.fabric);
+                }
+                Err(e)
+            }
         }
     }
 
@@ -242,211 +286,6 @@ impl HostWorker {
         Ok(())
     }
 
-    /// Algorithm 2 — APB prefill over this host's [anchor | local] layout
-    /// into session `sid`'s pool slot (StarAttn = same path with the
-    /// passing step skipped: zero prefill communication).
-    fn prefill_apb(
-        &mut self,
-        sid: SessionId,
-        tokens: &[i32],
-        opts: &ApbOptions,
-    ) -> Result<(PrefillTiming, Vec<Vec<Vec<u32>>>)> {
-        self.claim_slot(sid, opts.method)?;
-        let cfg = &self.cfg;
-        let (a, m) = (&cfg.apb, &cfg.model);
-        let backend = self.backend.as_ref();
-        let mut tm = PrefillTiming::default();
-        let mut retained: Vec<Vec<Vec<u32>>> = Vec::new();
-        let mut sw = Stopwatch::start();
-        let total0 = std::time::Instant::now();
-
-        let mut hidden = backend.embed(tokens)?;
-        tm.embed_s += sw.lap();
-
-        let pos_offset = (a.query_len + self.rank * a.block_len) as i32;
-        let n_anchor = super::n_anchor_for(cfg, self.rank, opts);
-        let passing = opts.method.passes_compressed_blocks();
-        let pass_len: i32 = if passing {
-            (self.rank * a.passing_len) as i32
-        } else {
-            0
-        };
-
-        for li in 0..m.n_layers {
-            // --- layer_pre: QKV + RoPE + retaining scores ----------------
-            let (q, k, v, scores) = backend.layer_pre(li, &hidden, pos_offset)?;
-            tm.layer_pre_s += sw.lap();
-
-            // --- Top-l_p selection (coordinator side, §3.4) ---------------
-            let k_local = k.slice_rows(a.l_aq(), a.n_tot());
-            let v_local = v.slice_rows(a.l_aq(), a.n_tot());
-            let scores_used = if opts.retaining_compressor {
-                scores
-            } else {
-                let mut rd = Tensor::zeros(vec![a.block_len, m.n_kv_heads]);
-                for i in 0..a.block_len {
-                    for j in 0..m.n_kv_heads {
-                        rd.data[i * m.n_kv_heads + j] = random_score(
-                            opts.rd_seed, li as u64, self.rank as u64, j as u64, i as u64,
-                        );
-                    }
-                }
-                rd
-            };
-            let idx = top_lp_indices(&scores_used, a.passing_len);
-            if opts.record_retained {
-                retained.push(
-                    idx.iter()
-                        .map(|head| head.iter().map(|&i| i as u32).collect())
-                        .collect(),
-                );
-            }
-            let (k_c, v_c) = self.gather_compressed(&k_local, &v_local, &idx);
-            tm.topk_s += sw.lap();
-
-            // --- AllGather of compressed blocks (§3.5), session-tagged ----
-            let blocks: Vec<(Tensor, Tensor)> = if passing {
-                self.fabric.kv_gather.all_gather_tagged(self.rank, sid, (k_c, v_c))
-            } else {
-                Vec::new()
-            };
-            tm.comm_s += sw.lap();
-
-            // --- Passing-block assembly: ranks < mine, rank order ---------
-            let mut k_pass =
-                Tensor::zeros(vec![a.pass_max(), m.n_kv_heads, m.head_dim()]);
-            let mut v_pass = k_pass.clone();
-            for r in 0..self.rank.min(blocks.len()) {
-                k_pass.write_rows(r * a.passing_len, &blocks[r].0);
-                v_pass.write_rows(r * a.passing_len, &blocks[r].1);
-            }
-
-            // --- layer_post: APB attention + FFN (§3.6) -------------------
-            hidden = backend.layer_post(
-                li, &hidden, &q, &k, &v, &k_pass, &v_pass, pass_len, n_anchor,
-            )?;
-            tm.layer_post_s += sw.lap();
-
-            // --- cache append: local block KV only (anchor discarded) -----
-            self.pool.get_mut(sid)?.append(li, &k_local, &v_local)?;
-            tm.cache_s += sw.lap();
-        }
-        tm.total_s = total0.elapsed().as_secs_f64();
-        Ok((tm, retained))
-    }
-
-    /// RingAttn prefill (Ring Attention / Context Parallelism): this host's
-    /// rows of the exact `[query | doc]` layout are processed with plain
-    /// causal attention against ALL hosts' KV, obtained by rotating full
-    /// (K, V) blocks around the ring (`Fabric::ring_pass`, `ring` meter
-    /// label) — N-1 exchange rounds per layer, partials merged with the
-    /// online-softmax identity. Exact: must match [`AttnMethod::Dense`]
-    /// within float tolerance (tested in `cluster_modes`).
-    fn prefill_ring(&mut self, sid: SessionId, tokens: &[i32]) -> Result<PrefillTiming> {
-        self.claim_slot(sid, AttnMethod::RingAttn)?;
-        let cfg = &self.cfg;
-        let (a, m) = (&cfg.apb, &cfg.model);
-        let positions = ring_positions(a, self.rank);
-        if tokens.len() != positions.len() {
-            bail!("ring prefill: host {} wants {} rows, got {}", self.rank,
-                  positions.len(), tokens.len());
-        }
-        let n_hosts = a.n_hosts;
-        let backend = self.backend.as_ref();
-        let mut tm = PrefillTiming::default();
-        let mut sw = Stopwatch::start();
-        let total0 = std::time::Instant::now();
-
-        let mut hidden = backend.embed(tokens)?;
-        tm.embed_s += sw.lap();
-
-        for li in 0..m.n_layers {
-            // QKV + RoPE at the rows' true global positions (no anchors,
-            // no retaining heads — this is the exact baseline).
-            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
-            tm.layer_pre_s += sw.lap();
-
-            // Local causal partial, then one partial per block received off
-            // the ring. Blocks from later hosts are entirely in this host's
-            // future — skip the (fully masked) attention but still forward
-            // them so every rank runs the same number of exchange rounds.
-            let mut outs: Vec<Tensor> = Vec::with_capacity(n_hosts);
-            let mut lses: Vec<Tensor> = Vec::with_capacity(n_hosts);
-            let (o, l) = backend.attn_partial(&q, &k, &v, &positions, &positions)?;
-            outs.push(o);
-            lses.push(l);
-            tm.layer_post_s += sw.lap();
-
-            let mut block = (k.clone(), v.clone());
-            for step in 1..n_hosts {
-                block = self.fabric.ring_pass.exchange_tagged(self.rank, sid, block);
-                tm.comm_s += sw.lap();
-                let origin = (self.rank + n_hosts - step) % n_hosts;
-                if origin < self.rank {
-                    let k_pos = ring_positions(a, origin);
-                    let (o, l) =
-                        backend.attn_partial(&q, &block.0, &block.1, &positions, &k_pos)?;
-                    outs.push(o);
-                    lses.push(l);
-                }
-                tm.layer_post_s += sw.lap();
-            }
-            let att = merge_partials(&outs, &lses);
-            hidden = backend.decode_post(li, &hidden, &att)?;
-            tm.layer_post_s += sw.lap();
-
-            // Cache this host's own rows (computed locally before the
-            // rotation; the block still held after N-1 exchanges originated
-            // at the successor rank and is simply dropped).
-            self.pool.get_mut(sid)?.append(li, &k, &v)?;
-            tm.cache_s += sw.lap();
-        }
-        tm.total_s = total0.elapsed().as_secs_f64();
-        Ok(tm)
-    }
-
-    /// Dense prefill — the exactness anchor: host 0 runs the entire
-    /// `[query | doc]` sequence through plain causal attention
-    /// (`attn_partial` over its own rows) with zero communication; every
-    /// other host claims the session's (empty, already-preallocated) slot
-    /// and registers it, so session AND pool maps stay identical across
-    /// ranks — both the capacity and the slot-exhaustion verdicts are
-    /// reached symmetrically, and a rejected Dense request leaves NO rank
-    /// with session state.
-    fn prefill_dense(&mut self, sid: SessionId, tokens: &[i32]) -> Result<PrefillTiming> {
-        let mut tm = PrefillTiming::default();
-        self.claim_slot(sid, AttnMethod::Dense)?;
-        if self.rank != 0 {
-            return Ok(tm);
-        }
-        let cfg = &self.cfg;
-        let (a, m) = (&cfg.apb, &cfg.model);
-        let n = a.query_len + a.doc_len();
-        if tokens.len() != n {
-            bail!("dense prefill: host 0 wants {n} rows, got {}", tokens.len());
-        }
-        let positions: Vec<i32> = (0..n as i32).collect();
-        let backend = self.backend.as_ref();
-        let mut sw = Stopwatch::start();
-        let total0 = std::time::Instant::now();
-
-        let mut hidden = backend.embed(tokens)?;
-        tm.embed_s += sw.lap();
-        for li in 0..m.n_layers {
-            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
-            tm.layer_pre_s += sw.lap();
-            // Full causal attention in one partial (every row sees itself,
-            // so no merge is needed: a single partial IS the softmax).
-            let (att, _lse) = backend.attn_partial(&q, &k, &v, &positions, &positions)?;
-            hidden = backend.decode_post(li, &hidden, &att)?;
-            tm.layer_post_s += sw.lap();
-            self.pool.get_mut(sid)?.append(li, &k, &v)?;
-            tm.cache_s += sw.lap();
-        }
-        tm.total_s = total0.elapsed().as_secs_f64();
-        Ok(tm)
-    }
-
     /// Algorithm 3 — one decode pass over a single session's chunk (the
     /// re-fed query). Distributed methods return logits on the last host;
     /// Dense sessions are forwarded to [`HostWorker::decode_pass_dense`].
@@ -455,6 +294,12 @@ impl HostWorker {
         sid: SessionId,
         tokens: &[i32],
     ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+        // A session mid-prefill has a partially filled KV slot; decoding it
+        // would produce plausible-but-wrong logits. Checked before any
+        // collective (machine maps are identical on every host).
+        if self.machines.contains_key(&sid) {
+            bail!("session {sid} has a prefill in flight: cannot decode yet");
+        }
         let method = self.ensure_session(sid)?;
         if !method.distributed_decode() {
             return self.decode_pass_dense(sid, tokens);
@@ -635,6 +480,11 @@ impl HostWorker {
         for &(sid, _) in entries {
             if !self.sessions.contains_key(&sid) {
                 anyhow::bail!("session {sid} not resident: cannot decode-batch");
+            }
+            if self.machines.contains_key(&sid) {
+                anyhow::bail!(
+                    "session {sid} has a prefill in flight: cannot decode-batch"
+                );
             }
         }
         // Decode routing must be uniform across the batch: Dense sessions

@@ -31,11 +31,21 @@
 //! prefill path — it only routes commands; all compute + collectives happen
 //! inside host workers, exactly like the paper's one-process-per-GPU
 //! deployment.
+//!
+//! Prefill is **chunked and resumable** (`Cmd::PrefillBegin` +
+//! `Cmd::PrefillChunk`, driven through [`Cluster::prefill_begin`] /
+//! [`Cluster::prefill_step`]): each host advances a per-session
+//! `prefill::PrefillMachine` one bounded step per command, bit-identical
+//! to one-shot prefill for any chunk size, so the scheduler can interleave
+//! resident sessions' decode ticks between a long admission's chunks
+//! instead of stalling them — see `docs/ADR-002-chunked-prefill.md`.
 
 pub mod host;
+mod prefill;
 pub mod scheduler;
 pub mod timing;
 
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -45,7 +55,7 @@ use crate::cluster::Fabric;
 use crate::config::{ApbOptions, AttnMethod, Config};
 use crate::util::tensor::Tensor;
 
-pub use crate::kvcache::SessionId;
+pub use crate::kvcache::{PoolStats, SessionId};
 pub use timing::{DecodeTiming, PrefillTiming};
 
 /// Session id used by the legacy single-request helpers
@@ -57,9 +67,18 @@ pub const LEGACY_SESSION: SessionId = 0;
 /// names its session.
 #[derive(Clone)]
 pub enum Cmd {
-    /// Run the APB prefill over this host's token layout into the
-    /// session's KV-pool slot.
-    Prefill { sid: SessionId, tokens: Arc<Vec<i32>>, opts: ApbOptions },
+    /// Claim the session's KV-pool slot and build its resumable
+    /// `prefill::PrefillMachine` over this host's token layout. Answered
+    /// by `Resp::PrefillBegun` with the (rank-uniform) plan length.
+    PrefillBegin { sid: SessionId, tokens: Arc<Vec<i32>>, opts: ApbOptions },
+    /// Advance the session's prefill machine by exactly one step.
+    /// `chunk_idx` is the step index the leader believes it is driving —
+    /// hosts verify it against their machine's progress (desync tripwire).
+    /// The final step answers `Resp::PrefillDone`, earlier ones
+    /// `Resp::PrefillStep`.
+    PrefillChunk { sid: SessionId, chunk_idx: usize },
+    /// Report this host's KV-pool accounting (`Resp::PoolStats`).
+    PoolStats,
     /// Process the re-fed query chunk (decode path, n = l_q).
     QueryChunk { sid: SessionId, tokens: Arc<Vec<i32>> },
     /// One continuous-batching decode step: one (session, previous token)
@@ -75,6 +94,14 @@ pub enum Cmd {
 
 /// Worker responses to the leader.
 pub enum Resp {
+    /// Prefill machine built; `steps` is the total number of
+    /// `Cmd::PrefillChunk` steps the leader must drive (identical on every
+    /// host — asserted by the leader).
+    PrefillBegun { host: usize, sid: SessionId, steps: usize },
+    /// One intermediate prefill step finished on this host.
+    PrefillStep { host: usize, sid: SessionId },
+    /// This host's KV-pool accounting snapshot.
+    PoolStats { host: usize, stats: PoolStats },
     PrefillDone {
         host: usize,
         sid: SessionId,
@@ -104,6 +131,44 @@ pub struct Cluster {
     pub fabric: Arc<Fabric>,
     hosts: Vec<HostHandle>,
     resp_rx: Receiver<Resp>,
+    /// At most ONE prefill may be in flight per cluster: the ring machine
+    /// keeps posted-but-incomplete fabric rounds across chunk steps, so a
+    /// second interleaved prefill would join those rounds with a different
+    /// session tag and trip the desync panic. `prefill_begin` records the
+    /// session here; the final `prefill_step` or clearing that session
+    /// releases it. A step ERROR keeps it held — ranks that did not error
+    /// still hold machines — until `clear_session` cancels them. (A `Cell`
+    /// suffices: the leader is single-threaded — `Cluster` is `!Sync`
+    /// through its mpsc endpoints.)
+    prefill_inflight: Cell<Option<SessionId>>,
+}
+
+/// Leader-side handle to one in-flight resumable prefill: how many chunk
+/// steps remain, plus the accumulators (`wall_seconds` counts only time
+/// spent inside `prefill_begin`/`prefill_step` calls — the interleaved
+/// decode ticks of OTHER sessions are not charged to this request; the
+/// comm delta per call is all this prefill's, because the leader is
+/// single-threaded).
+pub struct PrefillProgress {
+    pub sid: SessionId,
+    n_steps: usize,
+    next: usize,
+    wall_seconds: f64,
+    comm_bytes: u64,
+    per_host: Vec<PrefillTiming>,
+    retained: Vec<Vec<Vec<Vec<u32>>>>,
+}
+
+impl PrefillProgress {
+    /// Total `Cmd::PrefillChunk` steps this prefill takes.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Steps already driven.
+    pub fn steps_done(&self) -> usize {
+        self.next
+    }
 }
 
 /// Leader-side report for one prefill.
@@ -275,7 +340,21 @@ impl Cluster {
                 .recv()
                 .context("host died during startup")??;
         }
-        Ok(Cluster { cfg: cfg.clone(), fabric, hosts, resp_rx })
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            fabric,
+            hosts,
+            resp_rx,
+            prefill_inflight: Cell::new(None),
+        })
+    }
+
+    /// Release the in-flight marker (unconditionally, or only if it names
+    /// `sid`).
+    fn release_prefill(&self, sid: Option<SessionId>) {
+        if sid.is_none() || self.prefill_inflight.get() == sid {
+            self.prefill_inflight.set(None);
+        }
     }
 
     fn broadcast(&self, cmd: Cmd) -> Result<()> {
@@ -305,17 +384,20 @@ impl Cluster {
         Ok(())
     }
 
-    /// APB prefill of a document + query (Algorithm 1 lines 1–12) into
-    /// session `sid`'s KV slot. The session stays resident — holding its
-    /// caches on every host — until [`Cluster::clear_session`]. Fails with
-    /// a backpressure error when every KV-pool slot is occupied.
-    pub fn prefill_session(
+    /// Start a resumable prefill of a document + query into session `sid`'s
+    /// KV slot: every host claims the slot and builds its
+    /// `prefill::PrefillMachine`; drive the returned [`PrefillProgress`]
+    /// with [`Cluster::prefill_step`] until it yields the report. Fails
+    /// with a backpressure error when every KV-pool slot is occupied, and
+    /// when another prefill is already in flight (one at a time — the ring
+    /// pipeline holds open fabric rounds across steps).
+    pub fn prefill_begin(
         &self,
         sid: SessionId,
         doc: &[i32],
         query: &[i32],
         opts: &ApbOptions,
-    ) -> Result<PrefillReport> {
+    ) -> Result<PrefillProgress> {
         let a = &self.cfg.apb;
         if doc.len() != a.doc_len() {
             bail!("doc length {} != configured {}", doc.len(), a.doc_len());
@@ -323,31 +405,155 @@ impl Cluster {
         if query.len() != a.query_len {
             bail!("query length {} != configured {}", query.len(), a.query_len);
         }
-        let bytes0 = self.fabric.meter.bytes_total();
+        if let Some(other) = self.prefill_inflight.get() {
+            bail!(
+                "a prefill (session {other}) is already in flight on this \
+                 cluster; drive it to completion (or clear that session) before \
+                 beginning another — one resumable prefill at a time"
+            );
+        }
+        self.prefill_inflight.set(Some(sid));
+        match self.prefill_begin_inner(sid, doc, query, opts) {
+            Ok(p) => Ok(p),
+            Err(e) => {
+                self.release_prefill(Some(sid));
+                Err(e)
+            }
+        }
+    }
+
+    /// Fallible body of [`Cluster::prefill_begin`]; the caller owns the
+    /// in-flight flag.
+    fn prefill_begin_inner(
+        &self,
+        sid: SessionId,
+        doc: &[i32],
+        query: &[i32],
+        opts: &ApbOptions,
+    ) -> Result<PrefillProgress> {
         let t0 = std::time::Instant::now();
         for (rank, h) in self.hosts.iter().enumerate() {
             let tokens = Arc::new(host_tokens_for(&self.cfg, doc, query, rank, opts));
             h.cmd_tx
-                .send(Cmd::Prefill { sid, tokens, opts: *opts })
+                .send(Cmd::PrefillBegin { sid, tokens, opts: *opts })
                 .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
         }
-        let mut per_host = vec![PrefillTiming::default(); self.hosts.len()];
-        let mut retained = vec![Vec::new(); self.hosts.len()];
+        let mut steps: Vec<usize> = Vec::with_capacity(self.hosts.len());
         self.collect(self.hosts.len(), |r| {
-            if let Resp::PrefillDone { host, sid: rsid, timing, retained: ret } = r {
+            if let Resp::PrefillBegun { steps: s, sid: rsid, .. } = r {
                 debug_assert_eq!(rsid, sid);
-                per_host[host] = timing;
-                retained[host] = ret;
+                steps.push(s);
             }
             Ok(())
         })?;
-        Ok(PrefillReport {
+        let n_steps = steps[0];
+        if steps.iter().any(|&s| s != n_steps) {
+            bail!("hosts disagree on the prefill plan length: {steps:?}");
+        }
+        Ok(PrefillProgress {
             sid,
-            per_host,
-            retained,
+            n_steps,
+            next: 0,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            comm_bytes: self.fabric.meter.bytes_total() - bytes0,
+            comm_bytes: 0,
+            per_host: vec![PrefillTiming::default(); self.hosts.len()],
+            retained: vec![Vec::new(); self.hosts.len()],
         })
+    }
+
+    /// Drive one `Cmd::PrefillChunk` step on every host. Returns the
+    /// finished [`PrefillReport`] after the final step, `None` before.
+    /// Between calls the cluster is free for other work — this is the seam
+    /// the stall-free scheduler interleaves decode ticks into.
+    pub fn prefill_step(&self, p: &mut PrefillProgress) -> Result<Option<PrefillReport>> {
+        if p.next >= p.n_steps {
+            bail!("prefill for session {} already finished", p.sid);
+        }
+        let t0 = std::time::Instant::now();
+        let bytes0 = self.fabric.meter.bytes_total();
+        let last = p.next + 1 == p.n_steps;
+        if let Err(e) = self.prefill_step_inner(p, last) {
+            // Only the ranks that themselves errored dropped their
+            // machines; surviving ranks may still hold machines (and, for
+            // ring, posted rounds). The in-flight marker therefore STAYS
+            // held: recovery is `clear_session(sid)`, which aborts the
+            // machines on every host (draining posted rounds) and releases
+            // the marker — a fresh prefill before that clear would wedge
+            // the fabric.
+            return Err(e);
+        }
+        p.next += 1;
+        p.wall_seconds += t0.elapsed().as_secs_f64();
+        p.comm_bytes += self.fabric.meter.bytes_total() - bytes0;
+        if !last {
+            return Ok(None);
+        }
+        self.release_prefill(Some(p.sid));
+        Ok(Some(PrefillReport {
+            sid: p.sid,
+            per_host: std::mem::take(&mut p.per_host),
+            retained: std::mem::take(&mut p.retained),
+            wall_seconds: p.wall_seconds,
+            comm_bytes: p.comm_bytes,
+        }))
+    }
+
+    /// Fallible body of [`Cluster::prefill_step`]: broadcast one
+    /// `PrefillChunk` and collect every host's step response (harvesting
+    /// timing + retained indices on the final step).
+    fn prefill_step_inner(&self, p: &mut PrefillProgress, last: bool) -> Result<()> {
+        self.broadcast(Cmd::PrefillChunk { sid: p.sid, chunk_idx: p.next })?;
+        let per_host = &mut p.per_host;
+        let retained = &mut p.retained;
+        self.collect(self.hosts.len(), |r| match r {
+            Resp::PrefillStep { .. } => {
+                debug_assert!(!last, "host finished early");
+                Ok(())
+            }
+            Resp::PrefillDone { host, timing, retained: ret, .. } => {
+                debug_assert!(last, "host finished late");
+                per_host[host] = timing;
+                retained[host] = ret;
+                Ok(())
+            }
+            _ => Ok(()),
+        })
+    }
+
+    /// One-shot prefill (Algorithm 1 lines 1–12): begin, then drain every
+    /// chunk step back to back. Bit-identical to any other chunk partition
+    /// (see `docs/ADR-002-chunked-prefill.md`); the session stays resident
+    /// until [`Cluster::clear_session`].
+    pub fn prefill_session(
+        &self,
+        sid: SessionId,
+        doc: &[i32],
+        query: &[i32],
+        opts: &ApbOptions,
+    ) -> Result<PrefillReport> {
+        let mut progress = self.prefill_begin(sid, doc, query, opts)?;
+        loop {
+            if let Some(report) = self.prefill_step(&mut progress)? {
+                return Ok(report);
+            }
+        }
+    }
+
+    /// Per-host KV-pool accounting (indexed by rank) — the observable the
+    /// chunk-split invariance tests compare and ops dashboards poll.
+    pub fn pool_stats(&self) -> Result<Vec<PoolStats>> {
+        self.broadcast(Cmd::PoolStats)?;
+        let mut stats = vec![
+            PoolStats { resident: 0, bytes_used: 0, bytes_reserved: 0 };
+            self.hosts.len()
+        ];
+        self.collect(self.hosts.len(), |r| {
+            if let Resp::PoolStats { host, stats: s } = r {
+                stats[host] = s;
+            }
+            Ok(())
+        })?;
+        Ok(stats)
     }
 
     /// Re-feed a session's query chunk with exact distributed attention
@@ -418,17 +624,27 @@ impl Cluster {
         })
     }
 
-    /// Drop one session's state (KV slot + position bookkeeping) on every
-    /// host, freeing its residency slot.
+    /// Drop one session's state (KV slot + position bookkeeping + any
+    /// in-flight prefill machine) on every host, freeing its residency
+    /// slot. Clearing the session whose prefill is in flight cancels it
+    /// cleanly: every host drains any posted-but-incomplete ring round
+    /// (see `PrefillMachine::abort`) and the one-prefill-at-a-time marker
+    /// is released, so the cluster keeps serving.
     pub fn clear_session(&self, sid: SessionId) -> Result<()> {
         self.broadcast(Cmd::Clear { sid })?;
-        self.collect(self.hosts.len(), |_| Ok(()))
+        self.collect(self.hosts.len(), |_| Ok(()))?;
+        self.release_prefill(Some(sid));
+        Ok(())
     }
 
-    /// Drop every session's state on every host.
+    /// Drop every session's state on every host, including any in-flight
+    /// prefill machines (cancelled cleanly — posted ring rounds are
+    /// drained — and the in-flight marker is released).
     pub fn clear(&self) -> Result<()> {
         self.broadcast(Cmd::ClearAll)?;
-        self.collect(self.hosts.len(), |_| Ok(()))
+        self.collect(self.hosts.len(), |_| Ok(()))?;
+        self.release_prefill(None);
+        Ok(())
     }
 
     /// Legacy single-request prefill: runs as [`LEGACY_SESSION`], resetting
@@ -515,6 +731,7 @@ mod tests {
                 passing_len: 2,
                 max_new_tokens: 4,
                 max_resident: 2,
+                chunk_tokens: 4,
             },
             0,
         )

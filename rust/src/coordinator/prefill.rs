@@ -1,0 +1,749 @@
+//! Resumable per-(chunk, layer) prefill state machines — the tentpole of
+//! stall-free serving (`docs/ADR-002-chunked-prefill.md`).
+//!
+//! A [`PrefillMachine`] holds one session's in-flight prefill on one host.
+//! The leader drives it with `Cmd::PrefillChunk { sid, chunk_idx }`, one
+//! bounded step at a time, so the scheduler can interleave resident
+//! sessions' decode ticks between steps (Medha-style "no request left
+//! behind"). Every machine advances through a *precomputed plan* whose
+//! length and collective placement are identical on every rank — hosts
+//! stay in lockstep on the fabric without any extra coordination.
+//!
+//! **The hard invariant is bit-identity**: for ANY `chunk_tokens`, the
+//! machine produces exactly the same logits, KV-cache bytes and per-label
+//! comm meter totals as the one-shot prefill it replaced (property-tested
+//! in `rust/tests/chunked_prefill.rs`). It holds because
+//!
+//! * every backend stage underneath (RMSNorm, projection, RoPE, masked
+//!   attention, FFN, the score MLP, the online-softmax merge) is
+//!   **row-wise**, so slicing rows into chunks re-computes the same values;
+//! * the **collective sequence is untouched** — chunking never adds,
+//!   drops, reorders or resizes a fabric round.
+//!
+//! That second point dictates the shape of each machine:
+//!
+//! * **APB / StarAttn** are *layer-major*: the top-l_p selection needs the
+//!   whole block's scores and the passing AllGather happens once per
+//!   layer, so a layer runs `Pre×C → Select+Gather → Post×C` and only then
+//!   moves on. (Chunk-major chunking would need per-chunk gathers —
+//!   different comm.)
+//! * **RingAttn** is layer-major too (the rotation moves *full* KV blocks),
+//!   but the N-1 exchange rounds are software-pipelined through the split
+//!   [`post`/`complete`](crate::cluster::collectives) halves: each round's
+//!   block is posted *before* the previous block's attention partials are
+//!   computed, overlapping communication with compute — the executable
+//!   twin of the `max(comm, compute)` model in `attnsim::walltime`.
+//! * **Dense** has no collectives and plain causal attention, so it gets
+//!   the classic *chunk-major* chunked prefill: each step runs one chunk of
+//!   rows through every layer against the session's running KV cache.
+//!
+//! One prefill may be in flight per cluster at a time (the ring pipeline
+//! holds posted-but-incomplete fabric rounds across steps); the leader
+//! enforces this in [`super::Cluster::prefill_begin`].
+
+use anyhow::{bail, Result};
+
+use crate::cluster::Fabric;
+use crate::config::{ApbOptions, ApbParams, AttnMethod, Config};
+use crate::kvcache::{KvCache, SessionId};
+use crate::runtime::ExecBackend;
+use crate::util::rng::random_score;
+use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
+
+use super::timing::{PrefillTiming, Stopwatch};
+
+/// Everything a machine step may touch on its host, borrowed for the
+/// duration of one `Cmd::PrefillChunk`.
+pub(crate) struct StepCtx<'a> {
+    pub rank: usize,
+    pub cfg: &'a Config,
+    pub fabric: &'a Fabric,
+    pub backend: &'a dyn ExecBackend,
+    /// The session's KV-pool slot (claimed at `PrefillBegin`).
+    pub cache: &'a mut KvCache,
+}
+
+/// What one step produced.
+pub(crate) enum StepOutcome {
+    /// More steps remain.
+    Progress,
+    /// Plan exhausted: accumulated timing + retained indices (the payload
+    /// of `Resp::PrefillDone`).
+    Done(PrefillTiming, Vec<Vec<Vec<u32>>>),
+}
+
+/// Global positions of host `rank`'s rows under the exact-method layout
+/// `[query | doc]` (RingAttn): host 0 owns the query prefix + block 0
+/// starting at position 0, host r > 0 owns block r starting at
+/// `l_q + r·l_b`. Must mirror `super::host_tokens_for`.
+pub(crate) fn ring_positions(a: &ApbParams, rank: usize) -> Vec<i32> {
+    let (start, len) = if rank == 0 {
+        (0usize, a.query_len + a.block_len)
+    } else {
+        (a.query_len + rank * a.block_len, a.block_len)
+    };
+    (start as i32..(start + len) as i32).collect()
+}
+
+/// Split `rows` into `n_chunks` ranges of (up to) `ct` rows each. `n_chunks`
+/// is derived from the LARGEST per-host row count so every rank's plan has
+/// the same length; ranks with fewer rows get trailing empty ranges.
+fn chunk_ranges(rows: usize, ct: usize, n_chunks: usize) -> Vec<(usize, usize)> {
+    (0..n_chunks)
+        .map(|c| ((c * ct).min(rows), ((c + 1) * ct).min(rows)))
+        .collect()
+}
+
+/// Per-kv-head gather of compressed KV rows: k/v are the local slices
+/// `[l_b, kh, hd]`; `idx[j]` lists ascending positions for head j (§3.4).
+fn gather_compressed(k: &Tensor, v: &Tensor, idx: &[Vec<usize>]) -> (Tensor, Tensor) {
+    let (kh, hd) = (k.shape[1], k.shape[2]);
+    let l_p = idx[0].len();
+    let mut kc = Tensor::zeros(vec![l_p, kh, hd]);
+    let mut vc = Tensor::zeros(vec![l_p, kh, hd]);
+    for j in 0..kh {
+        for (t, &i) in idx[j].iter().enumerate() {
+            let src = (i * kh + j) * hd;
+            let dst = (t * kh + j) * hd;
+            kc.data[dst..dst + hd].copy_from_slice(&k.data[src..src + hd]);
+            vc.data[dst..dst + hd].copy_from_slice(&v.data[src..src + hd]);
+        }
+    }
+    (kc, vc)
+}
+
+// ---------------------------------------------------------------------------
+// Plans
+// ---------------------------------------------------------------------------
+
+/// One bounded unit of prefill work. Ops touching the fabric (`ApbGather`,
+/// `RingPost`, `RingForward`, `RingComplete`) sit at the same plan indices
+/// on every rank — that is the lockstep invariant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    // --- APB / StarAttn (layer-major) ---------------------------------
+    /// C == 1 fast path: the classic full-layout `layer_pre` (also the only
+    /// pre op PJRT artifacts support).
+    ApbPreFull { li: usize },
+    /// Chunked pre: anchor rows (at c == 0) + one local chunk through
+    /// projection/RoPE/scores.
+    ApbPre { li: usize, c: usize },
+    /// Top-l_p select (+ retained record) and, for APB, the per-layer
+    /// AllGather of compressed blocks (split post/complete).
+    ApbGather { li: usize },
+    /// Modified-mask attention + FFN for one chunk, then its cache append.
+    ApbPost { li: usize, c: usize },
+    // --- RingAttn (layer-major, pipelined rotation) --------------------
+    RingPre { li: usize, c: usize },
+    /// Post this host's own (K, V) block into exchange round 1.
+    RingPost { li: usize },
+    /// Complete the previous exchange and immediately post the received
+    /// block onward (the forwarding step of the rotation pipeline).
+    RingForward { li: usize },
+    /// Complete the final exchange of the layer.
+    RingComplete { li: usize },
+    /// Attention partial of block `s` (0 = own block) for one chunk of
+    /// query rows — for s >= 1 this runs while the NEXT exchange is in
+    /// flight (comm/compute overlap).
+    RingPartial { li: usize, s: usize, c: usize },
+    /// Online-softmax merge + decode_post for one chunk of rows.
+    RingTail { li: usize, c: usize },
+    /// Append this host's own block KV to the session slot.
+    RingAppend { li: usize },
+    // --- Dense (chunk-major) -------------------------------------------
+    /// One chunk of `[query | doc]` rows through EVERY layer against the
+    /// running KV cache (host 0 only; other ranks no-op in lockstep).
+    DenseChunk { c: usize },
+}
+
+fn apb_plan(n_layers: usize, n_chunks: usize) -> Vec<Op> {
+    let mut plan = Vec::with_capacity(n_layers * (2 * n_chunks + 1));
+    for li in 0..n_layers {
+        if n_chunks == 1 {
+            plan.push(Op::ApbPreFull { li });
+        } else {
+            plan.extend((0..n_chunks).map(|c| Op::ApbPre { li, c }));
+        }
+        plan.push(Op::ApbGather { li });
+        plan.extend((0..n_chunks).map(|c| Op::ApbPost { li, c }));
+    }
+    plan
+}
+
+fn ring_plan(n_layers: usize, n_hosts: usize, n_chunks: usize) -> Vec<Op> {
+    let mut plan = Vec::new();
+    for li in 0..n_layers {
+        plan.extend((0..n_chunks).map(|c| Op::RingPre { li, c }));
+        if n_hosts > 1 {
+            plan.push(Op::RingPost { li });
+        }
+        plan.extend((0..n_chunks).map(|c| Op::RingPartial { li, s: 0, c }));
+        for s in 1..n_hosts.saturating_sub(1) {
+            plan.push(Op::RingForward { li });
+            plan.extend((0..n_chunks).map(|c| Op::RingPartial { li, s, c }));
+        }
+        if n_hosts > 1 {
+            plan.push(Op::RingComplete { li });
+            plan.extend((0..n_chunks).map(|c| Op::RingPartial { li, s: n_hosts - 1, c }));
+        }
+        plan.extend((0..n_chunks).map(|c| Op::RingTail { li, c }));
+        plan.push(Op::RingAppend { li });
+    }
+    plan
+}
+
+fn dense_plan(n_chunks: usize) -> Vec<Op> {
+    (0..n_chunks).map(|c| Op::DenseChunk { c }).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The machine
+// ---------------------------------------------------------------------------
+
+/// One session's resumable prefill on one host: a precomputed [`Op`] plan
+/// plus the per-layer carry state the ops thread across step boundaries
+/// (layer-input hidden, the layer's q/k/v and scores, ring partial
+/// accumulators, outstanding collective receipts, the running KV in the
+/// pool slot).
+pub(crate) struct PrefillMachine {
+    sid: SessionId,
+    opts: ApbOptions,
+    plan: Vec<Op>,
+    next: usize,
+    tm: PrefillTiming,
+    retained: Vec<Vec<Vec<u32>>>,
+    /// Chunk row ranges. APB: over the local block. Ring: over this host's
+    /// `[query? | block]` rows. Dense: over host 0's whole sequence.
+    chunks: Vec<(usize, usize)>,
+    /// Layer-input hidden states, updated in place as post/tail chunks
+    /// complete. APB: `[n_tot, d]`. Ring: `[rows, d]`. Dense: unused (the
+    /// chunk-major walk embeds per chunk).
+    hidden: Tensor,
+    /// Dense keeps the raw tokens (embedded chunk by chunk).
+    tokens: Vec<i32>,
+    /// Current layer's projected q/k/v (assembled chunk by chunk) and
+    /// compressor scores (APB).
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    scores: Tensor,
+    /// APB: assembled passing blocks of the current layer.
+    k_pass: Tensor,
+    v_pass: Tensor,
+    pass_len: i32,
+    n_anchor: i32,
+    pos_offset: i32,
+    /// Ring: global positions of this host's rows.
+    positions: Vec<i32>,
+    /// Ring: every origin's position vector, precomputed once (the partial
+    /// ops consume one per received block, every chunk of every layer).
+    origin_positions: Vec<Vec<i32>>,
+    /// Ring: accumulated attention partials of the current layer, in the
+    /// same order the monolithic loop pushed them (own block first, then
+    /// each received block with origin < rank).
+    outs: Vec<Tensor>,
+    lses: Vec<Tensor>,
+    /// Ring: the block received by the last completed exchange.
+    held: Option<(Tensor, Tensor)>,
+    /// Ring: receipt of the posted-but-not-yet-completed exchange round.
+    pending: Option<crate::cluster::collectives::Receipt>,
+}
+
+impl PrefillMachine {
+    /// Build the machine for `sid` and return it with its plan length
+    /// (identical on every rank for a given request). Embeds the host's
+    /// rows up front for the layer-major methods; Dense embeds per chunk.
+    pub(crate) fn new(
+        rank: usize,
+        cfg: &Config,
+        sid: SessionId,
+        tokens: &[i32],
+        opts: &ApbOptions,
+        backend: &dyn ExecBackend,
+    ) -> Result<(PrefillMachine, usize)> {
+        let (a, m) = (&cfg.apb, &cfg.model);
+        let ct = a.chunk_tokens_for(opts);
+        let t0 = std::time::Instant::now();
+        let mut sw = Stopwatch::start();
+        let mut tm = PrefillTiming::default();
+
+        let (plan, chunks, hidden, positions, kept_tokens) = match opts.method {
+            AttnMethod::Apb | AttnMethod::StarAttn => {
+                if tokens.len() != a.n_tot() {
+                    bail!("apb prefill: host {rank} wants {} rows, got {}",
+                          a.n_tot(), tokens.len());
+                }
+                let n_chunks = a.block_len.div_ceil(ct);
+                let chunks = chunk_ranges(a.block_len, ct, n_chunks);
+                let hidden = backend.embed(tokens)?;
+                tm.embed_s += sw.lap();
+                (apb_plan(m.n_layers, n_chunks), chunks, hidden, Vec::new(), Vec::new())
+            }
+            AttnMethod::RingAttn => {
+                let positions = ring_positions(a, rank);
+                if tokens.len() != positions.len() {
+                    bail!("ring prefill: host {rank} wants {} rows, got {}",
+                          positions.len(), tokens.len());
+                }
+                // Host 0 owns the most rows; its count fixes the (rank-
+                // uniform) chunk count, trailing ranges on other ranks are
+                // empty.
+                let max_rows = a.query_len + a.block_len;
+                let n_chunks = max_rows.div_ceil(ct);
+                let chunks = chunk_ranges(positions.len(), ct, n_chunks);
+                let hidden = backend.embed(tokens)?;
+                tm.embed_s += sw.lap();
+                (ring_plan(m.n_layers, a.n_hosts, n_chunks), chunks, hidden, positions,
+                 Vec::new())
+            }
+            AttnMethod::Dense => {
+                let rows = a.query_len + a.doc_len();
+                if rank == 0 && tokens.len() != rows {
+                    bail!("dense prefill: host 0 wants {rows} rows, got {}", tokens.len());
+                }
+                let n_chunks = rows.div_ceil(ct);
+                let chunks = chunk_ranges(if rank == 0 { rows } else { 0 }, ct, n_chunks);
+                (dense_plan(n_chunks), chunks, Tensor::zeros(vec![0, 0]), Vec::new(),
+                 tokens.to_vec())
+            }
+        };
+        let _ = sw.lap();
+        tm.total_s += t0.elapsed().as_secs_f64();
+
+        let machine = PrefillMachine {
+            sid,
+            opts: *opts,
+            plan,
+            next: 0,
+            tm,
+            retained: Vec::new(),
+            chunks,
+            hidden,
+            tokens: kept_tokens,
+            q: Tensor::zeros(vec![0, 0]),
+            k: Tensor::zeros(vec![0, 0]),
+            v: Tensor::zeros(vec![0, 0]),
+            scores: Tensor::zeros(vec![0, 0]),
+            k_pass: Tensor::zeros(vec![0, 0]),
+            v_pass: Tensor::zeros(vec![0, 0]),
+            pass_len: 0,
+            n_anchor: super::n_anchor_for(cfg, rank, opts),
+            pos_offset: (a.query_len + rank * a.block_len) as i32,
+            origin_positions: if positions.is_empty() {
+                Vec::new()
+            } else {
+                (0..a.n_hosts).map(|r| ring_positions(a, r)).collect()
+            },
+            positions,
+            outs: Vec::new(),
+            lses: Vec::new(),
+            held: None,
+            pending: None,
+        };
+        let steps = machine.plan.len();
+        Ok((machine, steps))
+    }
+
+    /// Cancel the machine, draining any posted-but-incomplete ring round.
+    /// Safe and non-blocking under the leader's lockstep: a receipt can
+    /// only be pending for a round EVERY rank posted during the same
+    /// broadcast step (the leader collected all responses before moving
+    /// on), so the round is already complete — `complete` returns the
+    /// payload immediately, which is discarded, and the collective's
+    /// per-rank delivery/outstanding state is left pristine for the next
+    /// session. Every rank runs this from the same `Cmd::Clear`/`ClearAll`.
+    pub(crate) fn abort(mut self, rank: usize, fabric: &Fabric) {
+        if let Some(receipt) = self.pending.take() {
+            let _ = fabric.ring_pass.complete(rank, receipt);
+        }
+    }
+
+    /// Advance by exactly one plan op. `chunk_idx` must equal the number of
+    /// steps already taken — a mismatch means the leader and this host
+    /// disagree about the machine's progress (desync tripwire).
+    pub(crate) fn step(&mut self, ctx: &mut StepCtx<'_>, chunk_idx: usize)
+                       -> Result<StepOutcome> {
+        if chunk_idx != self.next {
+            bail!(
+                "prefill chunk desync for session {}: leader drives step {chunk_idx}, \
+                 host {} expects {}",
+                self.sid, ctx.rank, self.next
+            );
+        }
+        let Some(&op) = self.plan.get(self.next) else {
+            bail!("prefill for session {} already finished", self.sid);
+        };
+        let t0 = std::time::Instant::now();
+        match op {
+            Op::ApbPreFull { li } => self.apb_pre_full(ctx, li)?,
+            Op::ApbPre { li, c } => self.apb_pre(ctx, li, c)?,
+            Op::ApbGather { li } => self.apb_gather(ctx, li)?,
+            Op::ApbPost { li, c } => self.apb_post(ctx, li, c)?,
+            Op::RingPre { li, c } => self.ring_pre(ctx, li, c)?,
+            Op::RingPost { li } => self.ring_post(ctx, li)?,
+            Op::RingForward { li } => self.ring_forward(ctx, li)?,
+            Op::RingComplete { li } => self.ring_complete(ctx, li)?,
+            Op::RingPartial { li, s, c } => self.ring_partial(ctx, li, s, c)?,
+            Op::RingTail { li, c } => self.ring_tail(ctx, li, c)?,
+            Op::RingAppend { li } => self.ring_append(ctx, li)?,
+            Op::DenseChunk { c } => self.dense_chunk(ctx, c)?,
+        }
+        self.tm.total_s += t0.elapsed().as_secs_f64();
+        self.next += 1;
+        if self.next == self.plan.len() {
+            Ok(StepOutcome::Done(self.tm, std::mem::take(&mut self.retained)))
+        } else {
+            Ok(StepOutcome::Progress)
+        }
+    }
+
+    // -- APB / StarAttn ------------------------------------------------------
+
+    fn apb_pre_full(&mut self, ctx: &mut StepCtx<'_>, li: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        let (q, k, v, scores) = ctx.backend.layer_pre(li, &self.hidden, self.pos_offset)?;
+        (self.q, self.k, self.v, self.scores) = (q, k, v, scores);
+        self.tm.layer_pre_s += sw.lap();
+        Ok(())
+    }
+
+    fn apb_pre(&mut self, ctx: &mut StepCtx<'_>, li: usize, c: usize) -> Result<()> {
+        let (a, m) = (&ctx.cfg.apb, &ctx.cfg.model);
+        let mut sw = Stopwatch::start();
+        let (c0, c1) = self.chunks[c];
+        if c == 0 {
+            // Fresh per-layer scratch + the anchor rows' projections (the
+            // anchor is layer state shared by every chunk).
+            self.q = Tensor::zeros(vec![a.n_tot(), m.n_heads, m.head_dim()]);
+            self.k = Tensor::zeros(vec![a.n_tot(), m.n_kv_heads, m.head_dim()]);
+            self.v = Tensor::zeros(vec![a.n_tot(), m.n_kv_heads, m.head_dim()]);
+            self.scores = Tensor::zeros(vec![a.block_len, m.n_kv_heads]);
+            let anchor_pos: Vec<i32> = (0..a.l_aq() as i32).collect();
+            let (qa, ka, va) = ctx.backend.decode_pre(
+                li, &self.hidden.slice_rows(0, a.l_aq()), &anchor_pos)?;
+            self.q.write_rows(0, &qa);
+            self.k.write_rows(0, &ka);
+            self.v.write_rows(0, &va);
+        }
+        let anchor = self.hidden.slice_rows(0, a.l_aq());
+        let rows = self.hidden.slice_rows(a.l_aq() + c0, a.l_aq() + c1);
+        let pos: Vec<i32> = (c0 as i32..c1 as i32).map(|i| self.pos_offset + i).collect();
+        let (qc, kc, vc, sc) = ctx.backend.layer_pre_chunk(li, &anchor, &rows, &pos)?;
+        self.q.write_rows(a.l_aq() + c0, &qc);
+        self.k.write_rows(a.l_aq() + c0, &kc);
+        self.v.write_rows(a.l_aq() + c0, &vc);
+        self.scores.write_rows(c0, &sc);
+        self.tm.layer_pre_s += sw.lap();
+        Ok(())
+    }
+
+    fn apb_gather(&mut self, ctx: &mut StepCtx<'_>, li: usize) -> Result<()> {
+        let (a, m) = (&ctx.cfg.apb, &ctx.cfg.model);
+        let mut sw = Stopwatch::start();
+        let n_tot = a.n_tot();
+        let k_local = self.k.slice_rows(a.l_aq(), n_tot);
+        let v_local = self.v.slice_rows(a.l_aq(), n_tot);
+        // Top-l_p selection (coordinator side, §3.4).
+        let scores_used = if self.opts.retaining_compressor {
+            self.scores.clone()
+        } else {
+            let mut rd = Tensor::zeros(vec![a.block_len, m.n_kv_heads]);
+            for i in 0..a.block_len {
+                for j in 0..m.n_kv_heads {
+                    rd.data[i * m.n_kv_heads + j] = random_score(
+                        self.opts.rd_seed, li as u64, ctx.rank as u64, j as u64, i as u64,
+                    );
+                }
+            }
+            rd
+        };
+        let idx = top_lp_indices(&scores_used, a.passing_len);
+        if self.opts.record_retained {
+            self.retained.push(
+                idx.iter()
+                    .map(|head| head.iter().map(|&i| i as u32).collect())
+                    .collect(),
+            );
+        }
+        let (k_c, v_c) = gather_compressed(&k_local, &v_local, &idx);
+        self.tm.topk_s += sw.lap();
+
+        // AllGather of compressed blocks (§3.5), session-tagged — the fused
+        // post+complete (nothing to overlap: assembly and layer_post both
+        // need every block; the split halves earn their keep in the ring
+        // rotation). StarAttn skips passing entirely: zero prefill
+        // communication.
+        let passing = self.opts.method.passes_compressed_blocks();
+        self.pass_len = if passing { (ctx.rank * a.passing_len) as i32 } else { 0 };
+        let blocks: Vec<(Tensor, Tensor)> = if passing {
+            ctx.fabric.kv_gather.all_gather_tagged(ctx.rank, self.sid, (k_c, v_c))
+        } else {
+            Vec::new()
+        };
+        self.tm.comm_s += sw.lap();
+
+        // Passing-block assembly: ranks < mine, rank order.
+        self.k_pass = Tensor::zeros(vec![a.pass_max(), m.n_kv_heads, m.head_dim()]);
+        self.v_pass = self.k_pass.clone();
+        for r in 0..ctx.rank.min(blocks.len()) {
+            self.k_pass.write_rows(r * a.passing_len, &blocks[r].0);
+            self.v_pass.write_rows(r * a.passing_len, &blocks[r].1);
+        }
+        self.tm.layer_post_s += sw.lap();
+        Ok(())
+    }
+
+    fn apb_post(&mut self, ctx: &mut StepCtx<'_>, li: usize, c: usize) -> Result<()> {
+        let a = &ctx.cfg.apb;
+        let mut sw = Stopwatch::start();
+        let (c0, c1) = self.chunks[c];
+        // Chunk 0 carries the anchor rows (they attend + feed forward too).
+        let (row0, row1) = if c == 0 { (0, a.l_aq() + c1) } else {
+            (a.l_aq() + c0, a.l_aq() + c1)
+        };
+        let h_rows = self.hidden.slice_rows(row0, row1);
+        let q_rows = self.q.slice_rows(row0, row1);
+        let new_rows = ctx.backend.layer_post_rows(
+            li, &h_rows, &q_rows, row0, &self.k, &self.v, &self.k_pass, &self.v_pass,
+            self.pass_len, self.n_anchor,
+        )?;
+        self.hidden.write_rows(row0, &new_rows);
+        self.tm.layer_post_s += sw.lap();
+
+        // Cache append: this chunk's LOCAL rows only (anchor discarded).
+        ctx.cache.append(
+            li,
+            &self.k.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
+            &self.v.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
+        )?;
+        self.tm.cache_s += sw.lap();
+        Ok(())
+    }
+
+    // -- RingAttn ------------------------------------------------------------
+
+    fn ring_pre(&mut self, ctx: &mut StepCtx<'_>, li: usize, c: usize) -> Result<()> {
+        let m = &ctx.cfg.model;
+        let mut sw = Stopwatch::start();
+        let rows = self.positions.len();
+        if c == 0 {
+            self.q = Tensor::zeros(vec![rows, m.n_heads, m.head_dim()]);
+            self.k = Tensor::zeros(vec![rows, m.n_kv_heads, m.head_dim()]);
+            self.v = Tensor::zeros(vec![rows, m.n_kv_heads, m.head_dim()]);
+            self.outs.clear();
+            self.lses.clear();
+        }
+        let (c0, c1) = self.chunks[c];
+        if c0 < c1 {
+            // QKV + RoPE at the rows' true global positions (no anchors, no
+            // retaining heads — this is the exact baseline).
+            let (q, k, v) = ctx.backend.decode_pre(
+                li, &self.hidden.slice_rows(c0, c1), &self.positions[c0..c1])?;
+            self.q.write_rows(c0, &q);
+            self.k.write_rows(c0, &k);
+            self.v.write_rows(c0, &v);
+        }
+        self.tm.layer_pre_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_post(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        // Send the own block into round 1; partials of the own block run
+        // while the exchange is in flight.
+        let receipt = ctx.fabric.ring_pass.post_tagged(
+            ctx.rank, self.sid, (self.k.clone(), self.v.clone()));
+        self.pending = Some(receipt);
+        self.tm.comm_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_forward(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        let receipt = self.pending.take().expect("ring forward without a posted round");
+        let block = ctx.fabric.ring_pass.complete(ctx.rank, receipt);
+        // Forward the received block onward, keep a copy to attend to while
+        // the next exchange is in flight.
+        let receipt = ctx.fabric.ring_pass.post_tagged(
+            ctx.rank, self.sid, (block.0.clone(), block.1.clone()));
+        self.pending = Some(receipt);
+        self.held = Some(block);
+        self.tm.comm_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_complete(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        let receipt = self.pending.take().expect("ring complete without a posted round");
+        self.held = Some(ctx.fabric.ring_pass.complete(ctx.rank, receipt));
+        self.tm.comm_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_partial(&mut self, ctx: &mut StepCtx<'_>, _li: usize, s: usize, c: usize)
+                    -> Result<()> {
+        let a = &ctx.cfg.apb;
+        let m = &ctx.cfg.model;
+        let mut sw = Stopwatch::start();
+        let origin = (ctx.rank + a.n_hosts - s) % a.n_hosts;
+        // Blocks from later hosts are entirely in this host's future — skip
+        // the (fully masked) attention; the block was still forwarded so
+        // every rank runs the same number of exchange rounds.
+        if s > 0 && origin >= ctx.rank {
+            return Ok(());
+        }
+        if c == 0 {
+            let rows = self.positions.len();
+            self.outs.push(Tensor::zeros(vec![rows, m.n_heads, m.head_dim()]));
+            self.lses.push(Tensor::zeros(vec![rows, m.n_heads]));
+        }
+        let (c0, c1) = self.chunks[c];
+        if c0 < c1 {
+            let (k_blk, v_blk, k_pos): (_, _, &[i32]) = if s == 0 {
+                (&self.k, &self.v, &self.positions[..])
+            } else {
+                let held = self.held.as_ref().expect("ring partial without a held block");
+                (&held.0, &held.1, &self.origin_positions[origin][..])
+            };
+            let (o, l) = ctx.backend.attn_partial(
+                &self.q.slice_rows(c0, c1), k_blk, v_blk,
+                &self.positions[c0..c1], k_pos,
+            )?;
+            let slot = self.outs.len() - 1;
+            self.outs[slot].write_rows(c0, &o);
+            self.lses[slot].write_rows(c0, &l);
+        }
+        self.tm.layer_post_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_tail(&mut self, ctx: &mut StepCtx<'_>, li: usize, c: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        let (c0, c1) = self.chunks[c];
+        if c0 < c1 {
+            // Merge this chunk's rows across all accumulated partials with
+            // the online-softmax identity, then O-proj + FFN.
+            let outs: Vec<Tensor> =
+                self.outs.iter().map(|o| o.slice_rows(c0, c1)).collect();
+            let lses: Vec<Tensor> =
+                self.lses.iter().map(|l| l.slice_rows(c0, c1)).collect();
+            let att = merge_partials(&outs, &lses);
+            let new_rows = ctx.backend.decode_post(
+                li, &self.hidden.slice_rows(c0, c1), &att)?;
+            self.hidden.write_rows(c0, &new_rows);
+        }
+        self.tm.layer_post_s += sw.lap();
+        Ok(())
+    }
+
+    fn ring_append(&mut self, ctx: &mut StepCtx<'_>, li: usize) -> Result<()> {
+        let mut sw = Stopwatch::start();
+        // Cache this host's own rows (computed locally before the rotation;
+        // the block still held after N-1 exchanges originated at the
+        // successor rank and is simply dropped).
+        self.held = None;
+        ctx.cache.append(li, &self.k, &self.v)?;
+        self.tm.cache_s += sw.lap();
+        Ok(())
+    }
+
+    // -- Dense ---------------------------------------------------------------
+
+    fn dense_chunk(&mut self, ctx: &mut StepCtx<'_>, c: usize) -> Result<()> {
+        if ctx.rank != 0 {
+            return Ok(()); // lockstep no-op: the whole sequence lives on host 0
+        }
+        let m = &ctx.cfg.model;
+        let mut sw = Stopwatch::start();
+        let (c0, c1) = self.chunks[c];
+        if c0 == c1 {
+            return Ok(());
+        }
+        let mut hidden = ctx.backend.embed(&self.tokens[c0..c1])?;
+        self.tm.embed_s += sw.lap();
+        let pos_chunk: Vec<i32> = (c0 as i32..c1 as i32).collect();
+        for li in 0..m.n_layers {
+            let (q, k, v) = ctx.backend.decode_pre(li, &hidden, &pos_chunk)?;
+            self.tm.layer_pre_s += sw.lap();
+            // Plain causal attention of the chunk against everything before
+            // it (the running KV — carry state of the chunk-major walk)
+            // plus itself. One partial IS the full softmax: every row sees
+            // at least itself, so no merge is needed.
+            let lc = &ctx.cache.layers[li];
+            let k_vis = Tensor::concat_rows(&[&lc.k.slice_rows(0, lc.len), &k]);
+            let v_vis = Tensor::concat_rows(&[&lc.v.slice_rows(0, lc.len), &v]);
+            let pos_vis: Vec<i32> = (0..c1 as i32).collect();
+            let (att, _lse) =
+                ctx.backend.attn_partial(&q, &k_vis, &v_vis, &pos_chunk, &pos_vis)?;
+            hidden = ctx.backend.decode_post(li, &hidden, &att)?;
+            self.tm.layer_post_s += sw.lap();
+            ctx.cache.append(li, &k, &v)?;
+            self.tm.cache_s += sw.lap();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_rank_uniform_and_place_collectives_identically() {
+        // The lockstep invariant: for every method and chunk count, each
+        // rank derives the same plan (length AND op sequence) from the
+        // config alone.
+        for n_chunks in [1usize, 2, 5] {
+            let apb = apb_plan(3, n_chunks);
+            assert_eq!(apb.len(), 3 * (2 * n_chunks + 1));
+            for n_hosts in [1usize, 2, 4] {
+                let ring = ring_plan(2, n_hosts, n_chunks);
+                // Per layer: C pre + N collective-touching ops (1 post,
+                // N-2 forwards, 1 complete; none when N == 1) + N*C
+                // partial ops + C tails + 1 append.
+                let coll = if n_hosts > 1 { n_hosts } else { 0 };
+                let per_layer =
+                    n_chunks + coll + n_hosts * n_chunks + n_chunks + 1;
+                assert_eq!(ring.len(), 2 * per_layer, "ring N={n_hosts} C={n_chunks}");
+            }
+            assert_eq!(dense_plan(n_chunks).len(), n_chunks);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_partition_and_pad() {
+        // Even split.
+        assert_eq!(chunk_ranges(8, 4, 2), vec![(0, 4), (4, 8)]);
+        // Ragged tail.
+        assert_eq!(chunk_ranges(7, 3, 3), vec![(0, 3), (3, 6), (6, 7)]);
+        // Rank with fewer rows than the global chunk count: empty tails.
+        assert_eq!(chunk_ranges(3, 3, 3), vec![(0, 3), (3, 3), (3, 3)]);
+        // Chunk larger than the row count: one real chunk.
+        assert_eq!(chunk_ranges(5, 100, 1), vec![(0, 5)]);
+        // Every range is contiguous and covers the rows exactly once.
+        let rs = chunk_ranges(11, 2, 6);
+        let mut at = 0;
+        for (lo, hi) in rs {
+            assert_eq!(lo, at.min(11));
+            at = hi;
+        }
+        assert_eq!(at, 11);
+    }
+
+    #[test]
+    fn ring_positions_match_layout() {
+        let a = ApbParams {
+            n_hosts: 3,
+            block_len: 8,
+            anchor_len: 4,
+            query_len: 2,
+            passing_len: 2,
+            max_new_tokens: 4,
+            max_resident: 2,
+            chunk_tokens: 4,
+        };
+        assert_eq!(ring_positions(&a, 0), (0..10).collect::<Vec<i32>>());
+        assert_eq!(ring_positions(&a, 1), (10..18).collect::<Vec<i32>>());
+        assert_eq!(ring_positions(&a, 2), (18..26).collect::<Vec<i32>>());
+    }
+}

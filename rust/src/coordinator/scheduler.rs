@@ -1,4 +1,5 @@
-//! Request scheduler: continuous batching over session slots.
+//! Request scheduler: continuous batching over session slots, with
+//! **stall-free chunked admission**.
 //!
 //! The pre-session scheduler drained a FIFO run-to-completion — one request
 //! occupied all H hosts from prefill to last token, with a full cluster
@@ -6,11 +7,20 @@
 //! and "Context Parallelism for Scalable Million-Token Inference") needs
 //! requests to be first-class instead: [`AdmissionQueue`] applies
 //! backpressure at the door, the scheduler keeps up to
-//! `ApbParams::max_resident` sessions' KV resident on the cluster at once —
-//! prefilling the next queued request while earlier sessions still hold
-//! their caches — and every decode tick advances ALL active sessions in one
-//! batched backend pass per layer (`Cluster::decode_step_batch`).
-//! Per-request TTFT/TPOT land in [`ServingMetrics`].
+//! `ApbParams::max_resident` sessions' KV resident on the cluster at once,
+//! and every decode tick advances ALL active sessions in one batched
+//! backend pass per layer (`Cluster::decode_step_batch`).
+//!
+//! Admission is where head-of-line blocking used to live: a one-shot
+//! prefill of a long request froze every resident session for its whole
+//! duration. Each [`Scheduler::step`] now advances the admitting session's
+//! resumable prefill by AT MOST ONE chunk (`Cluster::prefill_step`,
+//! bounded by `chunk_tokens`) and *then* runs the batched decode tick, so
+//! no resident session ever stalls longer than one chunk — Medha's "no
+//! request left behind", executable. Per-request TTFT/TPOT (whose
+//! definitions chunking does NOT change: TTFT is still enqueue → first
+//! query-chunk logit) and the per-session `prefill_chunks` count land in
+//! [`ServingMetrics`].
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -20,7 +30,7 @@ use anyhow::{bail, Result};
 use crate::config::ApbOptions;
 use crate::util::stats::{summarize, Summary};
 
-use super::{Cluster, PrefillReport, SessionId};
+use super::{Cluster, PrefillProgress, PrefillReport, SessionId};
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -50,6 +60,10 @@ pub struct Response {
     /// Decode-path communication attributed to this request (query-chunk
     /// pass + its share of each batched step's AllGather traffic).
     pub decode_comm_bytes: u64,
+    /// How many resumable-prefill steps (`Cmd::PrefillChunk`) admission
+    /// drove for this request — the fairness knob's observable: more chunks
+    /// = finer interleaving with resident sessions' decode ticks.
+    pub prefill_chunks: usize,
 }
 
 /// Cluster-independent admission control: a bounded FIFO that rejects
@@ -98,6 +112,7 @@ struct ActiveSession {
     enqueued: Instant,
     queue_wait_s: f64,
     prefill: PrefillReport,
+    prefill_chunks: usize,
     max_new: usize,
     n_in: usize,
     tokens: Vec<i32>,
@@ -113,16 +128,32 @@ impl ActiveSession {
     }
 }
 
+/// The one request whose resumable prefill admission is currently driving,
+/// chunk by chunk. It already holds a KV-pool slot on every host (claimed
+/// at `prefill_begin`), so it counts toward residency.
+struct Admitting {
+    req: Request,
+    sid: SessionId,
+    enqueued: Instant,
+    /// Queue wait freezes when the request is popped for admission — the
+    /// chunks that follow are service time, not queueing.
+    queue_wait_s: f64,
+    progress: PrefillProgress,
+}
+
 pub struct Scheduler<'a> {
     cluster: &'a Cluster,
     pub admission: AdmissionQueue,
     /// Residency bound: how many sessions may hold KV simultaneously
     /// (defaults to the config's `max_resident`, i.e. the KV-pool size —
-    /// admitting more would be rejected by the hosts anyway).
+    /// admitting more would be rejected by the hosts anyway). The
+    /// admitting session's slot counts.
     pub max_resident: usize,
     active: Vec<ActiveSession>,
+    admitting: Option<Admitting>,
     next_sid: SessionId,
-    /// High-water mark of simultaneously resident sessions.
+    /// High-water mark of simultaneously resident sessions (decoding +
+    /// admitting).
     pub peak_resident: usize,
     pub completed: Vec<Response>,
 }
@@ -134,6 +165,7 @@ impl<'a> Scheduler<'a> {
             admission: AdmissionQueue::new(max_queue),
             max_resident: cluster.cfg.apb.max_resident,
             active: Vec::new(),
+            admitting: None,
             next_sid: super::LEGACY_SESSION + 1,
             peak_resident: 0,
             completed: Vec::new(),
@@ -148,49 +180,89 @@ impl<'a> Scheduler<'a> {
         self.admission.len()
     }
 
-    /// Sessions currently resident on the cluster.
+    /// Sessions currently resident on the cluster (decoding + the one being
+    /// prefilled, which already holds its KV slot).
     pub fn resident(&self) -> usize {
-        self.active.len()
+        self.active.len() + usize::from(self.admitting.is_some())
     }
 
-    /// Admit queued requests into free session slots: prefill + query-chunk
-    /// pass (first token, TTFT) while earlier sessions keep their KV.
-    fn admit(&mut self) -> Result<()> {
-        while self.active.len() < self.max_resident {
-            let Some((req, enqueued)) = self.admission.pop() else { break };
+    /// The admission in flight, if any: (request id, chunk steps driven,
+    /// total chunk steps). Test/ops observability for the stall-free
+    /// guarantee.
+    pub fn prefill_in_flight(&self) -> Option<(u64, usize, usize)> {
+        self.admitting
+            .as_ref()
+            .map(|a| (a.req.id, a.progress.steps_done(), a.progress.n_steps()))
+    }
+
+    /// Tokens emitted so far per active (decoding) session, as
+    /// (request id, count) pairs — lets tests assert decode progress
+    /// BETWEEN an admission's prefill chunks.
+    pub fn active_token_counts(&self) -> Vec<(u64, usize)> {
+        self.active.iter().map(|s| (s.req_id, s.tokens.len())).collect()
+    }
+
+    /// Advance admission by AT MOST one prefill chunk: pop the next queued
+    /// request into a free slot if no admission is in flight, then drive
+    /// one `PrefillChunk` step. When the plan finishes, run the query-chunk
+    /// pass (first token, TTFT) and move the session into the decode set.
+    /// Everything here is bounded by one chunk of work — the stall-free
+    /// invariant.
+    fn admit_step(&mut self) -> Result<()> {
+        if self.admitting.is_none() {
+            // The admitting session claims a KV slot on every host, so it
+            // must fit the residency bound alongside the decoding sessions.
+            if self.active.len() + 1 > self.max_resident {
+                return Ok(());
+            }
+            let Some((req, enqueued)) = self.admission.pop() else {
+                return Ok(());
+            };
             let sid = self.next_sid;
             self.next_sid += 1;
             let queue_wait_s = enqueued.elapsed().as_secs_f64();
-            let prefill =
-                self.cluster.prefill_session(sid, &req.doc, &req.query, &req.opts)?;
-            let gen_started = Instant::now();
-            let chunk = self.cluster.decode_query_chunk(sid, &req.query)?;
-            let vocab = self.cluster.cfg.model.vocab_size;
-            let first =
-                crate::util::tensor::Tensor::argmax_row(
-                    &chunk.logits[chunk.logits.len() - vocab..],
-                ) as i32;
-            // A zero-budget request still prefills + runs the chunk (the
-            // pre-session scheduler did the same via generate(query, 0))
-            // but emits no tokens; it retires on the next tick.
-            let tokens = if req.max_new == 0 { Vec::new() } else { vec![first] };
-            self.active.push(ActiveSession {
-                sid,
-                method: req.opts.method,
-                req_id: req.id,
-                enqueued,
-                queue_wait_s,
-                prefill,
-                max_new: req.max_new,
-                n_in: req.doc.len() + req.query.len(),
-                tokens,
-                ttft_s: enqueued.elapsed().as_secs_f64(),
-                gen_started,
-                step_seconds: Vec::new(),
-                decode_comm_bytes: chunk.comm_bytes,
-            });
-            self.peak_resident = self.peak_resident.max(self.active.len());
+            let progress =
+                self.cluster.prefill_begin(sid, &req.doc, &req.query, &req.opts)?;
+            self.admitting = Some(Admitting { req, sid, enqueued, queue_wait_s, progress });
+            self.peak_resident = self.peak_resident.max(self.active.len() + 1);
         }
+        let Some(a) = self.admitting.as_mut() else { return Ok(()) };
+        let cluster = self.cluster;
+        let Some(prefill) = cluster.prefill_step(&mut a.progress)? else {
+            return Ok(()); // more chunks to go; decode ticks run in between
+        };
+        let Admitting { req, sid, enqueued, queue_wait_s, progress } =
+            self.admitting.take().expect("admitting session vanished");
+        let prefill_chunks = progress.n_steps();
+        let gen_started = Instant::now();
+        let chunk = cluster.decode_query_chunk(sid, &req.query)?;
+        let vocab = cluster.cfg.model.vocab_size;
+        let first = crate::util::tensor::Tensor::argmax_row(
+            &chunk.logits[chunk.logits.len() - vocab..],
+        ) as i32;
+        // A zero-budget request still prefills + runs the chunk (the
+        // pre-session scheduler did the same via generate(query, 0))
+        // but emits no tokens; it retires on the next tick.
+        let tokens = if req.max_new == 0 { Vec::new() } else { vec![first] };
+        self.active.push(ActiveSession {
+            sid,
+            method: req.opts.method,
+            req_id: req.id,
+            enqueued,
+            queue_wait_s,
+            prefill,
+            prefill_chunks,
+            max_new: req.max_new,
+            n_in: req.doc.len() + req.query.len(),
+            tokens,
+            // TTFT's definition is UNCHANGED by chunking: submission →
+            // first query-chunk logit (it now naturally includes the decode
+            // ticks interleaved between this request's prefill chunks).
+            ttft_s: enqueued.elapsed().as_secs_f64(),
+            gen_started,
+            step_seconds: Vec::new(),
+            decode_comm_bytes: chunk.comm_bytes,
+        });
         Ok(())
     }
 
@@ -269,22 +341,26 @@ impl<'a> Scheduler<'a> {
                 ttft_s: s.ttft_s,
                 tpot_s,
                 decode_comm_bytes: s.decode_comm_bytes,
+                prefill_chunks: s.prefill_chunks,
             });
         }
         Ok(())
     }
 
-    /// One scheduling tick: admit into free slots, advance every active
-    /// session one token, retire finished sessions. Returns false when
-    /// fully idle (nothing queued, nothing resident).
+    /// One scheduling tick: advance admission by AT MOST one prefill chunk,
+    /// then advance every active session one token, then retire finished
+    /// sessions — so a newly admitted long request can never freeze
+    /// resident decoders for more than one chunk of work. Returns false
+    /// when fully idle (nothing queued, nothing admitting, nothing
+    /// resident).
     pub fn step(&mut self) -> Result<bool> {
         if self.max_resident == 0 {
             bail!("max_resident must be >= 1 (nothing could ever be admitted)");
         }
-        if self.admission.is_empty() && self.active.is_empty() {
+        if self.admission.is_empty() && self.active.is_empty() && self.admitting.is_none() {
             return Ok(false);
         }
-        self.admit()?;
+        self.admit_step()?;
         self.decode_tick()?;
         self.retire()?;
         Ok(true)
@@ -315,6 +391,10 @@ pub struct ServingMetrics {
     pub speed_tok_per_s: Summary,
     pub ttft: Summary,
     pub tpot: Summary,
+    /// Resumable-prefill steps driven per request: the chunked-admission
+    /// fairness observable (1 step per layer phase minimum; grows as
+    /// `chunk_tokens` shrinks).
+    pub prefill_chunks: Summary,
     pub total_tokens: usize,
     pub decode_comm_bytes: u64,
     /// High-water mark of sessions resident at once (0 when built from
@@ -337,6 +417,7 @@ impl ServingMetrics {
             speed_tok_per_s: col(&|r| r.speed_tok_per_s),
             ttft: col(&|r| r.ttft_s),
             tpot: col(&|r| r.tpot_s),
+            prefill_chunks: col(&|r| r.prefill_chunks as f64),
             total_tokens: rs.iter().map(|r| r.tokens.len()).sum(),
             decode_comm_bytes: rs.iter().map(|r| r.decode_comm_bytes).sum(),
             peak_resident: 0,

@@ -5,6 +5,13 @@
 //! prefill (the local block only; anchor and passing KV are discarded) and
 //! what Algorithm 3 reads and (on the last host) extends during decode.
 //!
+//! [`KvCache::append`] is deliberately incremental — the **chunk-append
+//! API**: chunked prefill (`coordinator::prefill`) grows a session's KV a
+//! few rows per `PrefillChunk` step, and the final contents are
+//! byte-identical to a one-shot prefill's because appends are ordered and
+//! the padded capacity is fixed up front. [`KvPool::stats`] exposes the
+//! accounting the chunk-split invariance tests compare.
+//!
 //! [`KvPool`] turns that single implicit request into multi-request
 //! residency: a fixed set of `KvCache` slots keyed by [`SessionId`], with
 //! byte-accounted alloc/free and an explicit exhaustion error so slot
@@ -23,6 +30,19 @@ use crate::util::tensor::Tensor;
 
 /// Identity of one serving session (request) resident on the cluster.
 pub type SessionId = u64;
+
+/// Point-in-time byte accounting of one host's pool — the observable the
+/// chunk-split invariance proptest compares across chunk partitions, and
+/// what `apb serve` ops dashboards read (`Cluster::pool_stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Sessions currently holding a slot.
+    pub resident: usize,
+    /// Bytes resident across occupied slots (valid KV rows only).
+    pub bytes_used: usize,
+    /// Bytes reserved by the whole pool (padded capacity of every slot).
+    pub bytes_reserved: usize,
+}
 
 #[derive(Debug, Clone)]
 pub struct LayerCache {
@@ -218,6 +238,15 @@ impl KvPool {
     pub fn bytes_reserved(&self) -> usize {
         self.slots.iter().map(|s| s.cache.bytes_reserved()).sum()
     }
+
+    /// Snapshot of this pool's residency/byte accounting.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            resident: self.resident(),
+            bytes_used: self.bytes_used(),
+            bytes_reserved: self.bytes_reserved(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +328,18 @@ mod tests {
         // Fresh prefill of the same session id starts from an empty cache.
         assert_eq!(p.alloc(3).unwrap().len(0), 0);
         assert_eq!(p.resident(), 1);
+    }
+
+    #[test]
+    fn pool_stats_snapshot() {
+        let mut p = KvPool::new(2, 1, 4, 1, 2);
+        assert_eq!(p.stats(),
+                   PoolStats { resident: 0, bytes_used: 0,
+                               bytes_reserved: 2 * (2 * 4 * 1 * 2 * 4) });
+        p.alloc(1).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
+        let s = p.stats();
+        assert_eq!(s.resident, 1);
+        assert_eq!(s.bytes_used, p.bytes_used());
     }
 
     #[test]

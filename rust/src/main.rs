@@ -26,20 +26,15 @@ const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
   info                              list artifacts and config
   run      --config tiny --max-new 8 --method apb|star|ring|dense
   serve    --config tiny --requests 4 --max-new 4 --method apb|star|ring|dense
+           --chunk-tokens N (prefill chunk size; smaller = finer decode
+           interleaving) --smoke (CI gate: assert stall-free serving)
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
 
-/// Resolve the attention method from `--method` (with the legacy
-/// `--star-mode` boolean as a deprecated alias for `--method star`).
+/// Resolve the attention method from `--method`. (The pre-`AttnMethod`
+/// `--star-mode` alias is gone; spell it `--method star`.)
 fn method_from(args: &Args) -> Result<AttnMethod> {
-    if args.has("star-mode") {
-        eprintln!("[apb] --star-mode is deprecated; use --method star");
-        if args.get("method").is_some() {
-            bail!("--star-mode conflicts with --method");
-        }
-        return Ok(AttnMethod::StarAttn);
-    }
     match args.get("method") {
         Some(s) => AttnMethod::parse(s),
         None => Ok(AttnMethod::Apb),
@@ -61,7 +56,7 @@ fn print_comm(cluster: &Cluster) {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["star-mode", "help"])?;
+    let args = Args::parse(std::env::args().skip(1), &["smoke", "help"])?;
     if args.has("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -83,10 +78,11 @@ fn info(args: &Args) -> Result<()> {
     println!("  model: d={} L={} heads={}/{} ffn={} vocab={}",
              cfg.model.d_model, cfg.model.n_layers, cfg.model.n_heads,
              cfg.model.n_kv_heads, cfg.model.d_ff, cfg.model.vocab_size);
-    println!("  apb:   H={} l_b={} l_a={} l_q={} l_p={} (pass_max={}, cache_max={})",
+    println!("  apb:   H={} l_b={} l_a={} l_q={} l_p={} (pass_max={}, cache_max={}, \
+              chunk_tokens={})",
              cfg.apb.n_hosts, cfg.apb.block_len, cfg.apb.anchor_len,
              cfg.apb.query_len, cfg.apb.passing_len, cfg.apb.pass_max(),
-             cfg.apb.cache_max());
+             cfg.apb.cache_max(), cfg.apb.chunk_tokens);
     match cfg.manifest.get("artifacts").and_then(|a| a.as_obj()) {
         Some(arts) => {
             println!("  artifacts ({}):", arts.len());
@@ -125,7 +121,11 @@ fn run(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let method = method_from(args)?;
-    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
+    let mut cfg =
+        apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
+    // Cluster-wide chunked-prefill granularity (per-request overrides ride
+    // on ApbOptions::chunk_tokens).
+    cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
     let cluster = Cluster::start(&cfg)?;
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;
@@ -143,10 +143,26 @@ fn serve(args: &Args) -> Result<()> {
     sched.run_all()?;
     let m = sched.metrics();
     println!("served {} requests ({} sessions resident at peak) | prefill p50 \
-              {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | e2e p50 {:.1} ms \
-              | speed mean {:.0} tok/s",
-             m.n_requests, m.peak_resident, m.prefill.p50 * 1e3, m.ttft.p50 * 1e3,
-             m.tpot.p50 * 1e3, m.e2e.p50 * 1e3, m.speed_tok_per_s.mean);
+              {:.1} ms over {:.0} chunk steps | ttft p50 {:.1} ms | tpot p50 \
+              {:.2} ms | e2e p50 {:.1} ms | speed mean {:.0} tok/s",
+             m.n_requests, m.peak_resident, m.prefill.p50 * 1e3,
+             m.prefill_chunks.mean, m.ttft.p50 * 1e3, m.tpot.p50 * 1e3,
+             m.e2e.p50 * 1e3, m.speed_tok_per_s.mean);
+    if args.has("smoke") {
+        // CI gate for stall-free serving: every request completed, each was
+        // admitted through the resumable chunk driver, and (when slots
+        // allow) sessions actually overlapped on the cluster.
+        anyhow::ensure!(m.n_requests == n, "smoke: {} of {n} requests completed",
+                        m.n_requests);
+        anyhow::ensure!(m.prefill_chunks.min >= 1.0,
+                        "smoke: a request bypassed chunked admission");
+        if n >= 2 && cfg.apb.max_resident >= 2 {
+            anyhow::ensure!(m.peak_resident >= 2,
+                            "smoke: expected >= 2 resident sessions, saw {}",
+                            m.peak_resident);
+        }
+        println!("apb serve --smoke OK (chunk_tokens {})", cfg.apb.chunk_tokens);
+    }
     Ok(())
 }
 

@@ -103,6 +103,7 @@ mod tests {
                 passing_len: 8,
                 max_new_tokens: 8,
                 max_resident: 2,
+                chunk_tokens: 16,
             },
             0,
         )

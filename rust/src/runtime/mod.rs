@@ -90,6 +90,75 @@ pub trait ExecBackend {
         n_anchor: i32,
     ) -> Result<Tensor>;
 
+    /// Chunked twin of [`ExecBackend::layer_pre`] for the resumable prefill
+    /// state machine (`coordinator::prefill`): QKV projection + RoPE +
+    /// retaining-head scores for ONE chunk of local-block rows.
+    ///
+    /// * `hidden_anchor`: the `[l_aq, d]` anchor rows (query slot + anchor
+    ///   head) at this layer's input — the compressor's query-similarity
+    ///   features read the embedded-query rows out of it;
+    /// * `hidden_chunk`: the `[n, d]` local rows of this chunk;
+    /// * `pos_chunk`: the global position of each chunk row.
+    ///
+    /// Returns `(q, k, v, scores)` for the chunk rows only. Because every
+    /// stage underneath (RMSNorm, projection, RoPE, the score MLP) is
+    /// row-wise, chunked calls are bit-identical to the full-layout
+    /// `layer_pre` — the invariant `rust/tests/chunked_prefill.rs` enforces.
+    ///
+    /// The default implementation refuses: a backend must opt in (SimEngine
+    /// computes it natively; the PJRT artifact set predates chunked prefill,
+    /// so PJRT clusters must keep `chunk_tokens >= block_len`, where the
+    /// machine takes the one-chunk fast path through the classic
+    /// `layer_pre`).
+    fn layer_pre_chunk(
+        &self,
+        layer: usize,
+        hidden_anchor: &Tensor,
+        hidden_chunk: &Tensor,
+        pos_chunk: &[i32],
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let _ = (layer, hidden_anchor, hidden_chunk, pos_chunk);
+        anyhow::bail!(
+            "this backend has no chunked prefill stage (layer_pre_chunk); \
+             use chunk_tokens >= block_len so prefill runs one chunk per phase"
+        )
+    }
+
+    /// Chunked twin of [`ExecBackend::layer_post`]: APB modified-mask
+    /// attention + O-proj/FFN for the layout rows starting at absolute row
+    /// `row0` (`hidden_rows`/`q_rows` carry only those rows; `k`/`v` are the
+    /// full `[anchor | local]` keys of the layer). The mask is evaluated at
+    /// the absolute row index `row0 + i`, so a chunked pass sees exactly the
+    /// keys the monolithic pass shows that row.
+    ///
+    /// Default: delegates to [`ExecBackend::layer_post`] when the chunk IS
+    /// the full layout (`row0 == 0`, same row count as `k`) — the one-chunk
+    /// fast path every backend already supports — and refuses otherwise.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_post_rows(
+        &self,
+        layer: usize,
+        hidden_rows: &Tensor,
+        q_rows: &Tensor,
+        row0: usize,
+        k: &Tensor,
+        v: &Tensor,
+        k_pass: &Tensor,
+        v_pass: &Tensor,
+        pass_len: i32,
+        n_anchor: i32,
+    ) -> Result<Tensor> {
+        if row0 == 0 && hidden_rows.shape[0] == k.shape[0] {
+            return self.layer_post(
+                layer, hidden_rows, q_rows, k, v, k_pass, v_pass, pass_len, n_anchor,
+            );
+        }
+        anyhow::bail!(
+            "this backend has no row-offset prefill attention (layer_post_rows); \
+             use chunk_tokens >= block_len so prefill runs one chunk per phase"
+        )
+    }
+
     /// Decode stage 1 (Algorithm 3): project + RoPE the new-token chunk at
     /// per-row positions `pos` (`pos.len() == hidden rows`). A single
     /// session's chunk passes consecutive positions; a continuous-batching

@@ -388,49 +388,61 @@ impl SimEngine {
         h
     }
 
-    /// `build_features` + retaining-head MLP over the local block
-    /// (pre-RoPE projections, per `kernels.build_features`): features are
-    /// `[mean-of-group(Q), K, V, sim_max, sim_mean]`, scored by the gelu MLP.
-    fn retaining_scores(
-        &self,
-        lw: &LayerWeights,
-        q_nr: &Tensor,
-        k_nr: &Tensor,
-        v: &Tensor,
-    ) -> Tensor {
+    /// Group-mean (over each GQA group) of the embedded-query rows'
+    /// pre-RoPE Q — the compressor feature every local row's score shares
+    /// (`kernels.build_features`). `q_nr_query` holds exactly the query
+    /// rows; returns `[w * kh * hd]` flattened.
+    fn query_mean(&self, q_nr_query: &Tensor) -> Vec<f64> {
         let m = &self.model;
         let (hd, kh, g) = (m.head_dim(), m.n_kv_heads, m.gqa_groups());
-        let l_b = self.block_len;
-        let w = self.query_len;
-        let feat_dim = 3 * hd + 2;
-        let scale = 1.0 / (hd as f64).sqrt();
-        // Group-mean of the anchor's embedded-query rows (pre-RoPE).
+        let w = q_nr_query.shape[0];
         let mut qq = vec![0f64; w * kh * hd];
         for wi in 0..w {
             for j in 0..kh {
                 for d in 0..hd {
                     let mut s = 0f64;
                     for t in 0..g {
-                        s += q_nr.data[(wi * m.n_heads + j * g + t) * hd + d] as f64;
+                        s += q_nr_query.data[(wi * m.n_heads + j * g + t) * hd + d] as f64;
                     }
                     qq[(wi * kh + j) * hd + d] = s / g as f64;
                 }
             }
         }
-        let mut scores = Tensor::zeros(vec![l_b, kh]);
+        qq
+    }
+
+    /// Retaining-head MLP over an arbitrary run of local rows (pre-RoPE
+    /// `q_nr`/`k_nr`/`v` carry only those rows; `qq` comes from
+    /// [`SimEngine::query_mean`]). Row-wise by construction, so scoring a
+    /// block in chunks is bit-identical to scoring it whole — the property
+    /// chunked prefill rests on.
+    fn score_rows(
+        &self,
+        lw: &LayerWeights,
+        qq: &[f64],
+        q_nr: &Tensor,
+        k_nr: &Tensor,
+        v: &Tensor,
+    ) -> Tensor {
+        let m = &self.model;
+        let (hd, kh, g) = (m.head_dim(), m.n_kv_heads, m.gqa_groups());
+        let n = q_nr.shape[0];
+        let w = qq.len() / (kh * hd);
+        let feat_dim = 3 * hd + 2;
+        let scale = 1.0 / (hd as f64).sqrt();
+        let mut scores = Tensor::zeros(vec![n, kh]);
         let mut feat = vec![0f64; feat_dim];
-        for i in 0..l_b {
-            let row = self.l_aq + i; // local rows sit after the anchor
+        for i in 0..n {
             for j in 0..kh {
                 // Q component: mean over the GQA group.
                 for d in 0..hd {
                     let mut s = 0f64;
                     for t in 0..g {
-                        s += q_nr.data[(row * m.n_heads + j * g + t) * hd + d] as f64;
+                        s += q_nr.data[(i * m.n_heads + j * g + t) * hd + d] as f64;
                     }
                     feat[d] = s / g as f64;
                 }
-                let kb = (row * kh + j) * hd;
+                let kb = (i * kh + j) * hd;
                 for d in 0..hd {
                     feat[hd + d] = k_nr.data[kb + d] as f64;
                     feat[2 * hd + d] = v.data[kb + d] as f64;
@@ -463,6 +475,28 @@ impl SimEngine {
             }
         }
         scores
+    }
+
+    /// `build_features` + retaining-head MLP over the whole local block of
+    /// the `[anchor | local]` layout — the full-layout wrapper over
+    /// [`SimEngine::query_mean`] + [`SimEngine::score_rows`] (one code path
+    /// with the chunked `layer_pre_chunk`, so the two are bit-identical).
+    fn retaining_scores(
+        &self,
+        lw: &LayerWeights,
+        q_nr: &Tensor,
+        k_nr: &Tensor,
+        v: &Tensor,
+    ) -> Tensor {
+        let n = q_nr.shape[0];
+        let qq = self.query_mean(&q_nr.slice_rows(0, self.query_len));
+        self.score_rows(
+            lw,
+            &qq,
+            &q_nr.slice_rows(self.l_aq, n),
+            &k_nr.slice_rows(self.l_aq, n),
+            &v.slice_rows(self.l_aq, n),
+        )
     }
 }
 
@@ -521,6 +555,57 @@ impl ExecBackend for SimEngine {
         pass_len: i32,
         n_anchor: i32,
     ) -> Result<Tensor> {
+        // The full layout is the row0 == 0 chunk: one code path with the
+        // chunked machine, so chunked == one-shot bit-for-bit.
+        self.layer_post_rows(layer, hidden, q, 0, k, v, k_pass, v_pass, pass_len, n_anchor)
+    }
+
+    fn layer_pre_chunk(
+        &self,
+        layer: usize,
+        hidden_anchor: &Tensor,
+        hidden_chunk: &Tensor,
+        pos_chunk: &[i32],
+    ) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+        let lw = &self.layers[layer];
+        if hidden_anchor.shape[0] != self.l_aq {
+            bail!("layer_pre_chunk wants {} anchor rows, got {}", self.l_aq,
+                  hidden_anchor.shape[0]);
+        }
+        if pos_chunk.len() != hidden_chunk.shape[0] {
+            bail!("layer_pre_chunk: {} positions for {} rows", pos_chunk.len(),
+                  hidden_chunk.shape[0]);
+        }
+        // The compressor reads the embedded-query rows pre-RoPE; projecting
+        // just those rows equals projecting the whole anchor and slicing
+        // (RMSNorm + matmul are row-wise). They are re-projected per chunk
+        // — l_q rows against a chunk's worth of work — to keep the trait
+        // stateless across chunk steps; a fused production kernel would
+        // carry the query features in its per-layer state instead
+        // (docs/ADR-002-chunked-prefill.md, "Consequences").
+        let (q_nr_query, _, _) =
+            self.project_qkv(lw, &hidden_anchor.slice_rows(0, self.query_len));
+        let qq = self.query_mean(&q_nr_query);
+        let (q_nr, k_nr, v) = self.project_qkv(lw, hidden_chunk);
+        let scores = self.score_rows(lw, &qq, &q_nr, &k_nr, &v);
+        let q = rope(&q_nr, pos_chunk, self.model.rope_theta);
+        let k = rope(&k_nr, pos_chunk, self.model.rope_theta);
+        Ok((q, k, v, scores))
+    }
+
+    fn layer_post_rows(
+        &self,
+        layer: usize,
+        hidden_rows: &Tensor,
+        q_rows: &Tensor,
+        row0: usize,
+        k: &Tensor,
+        v: &Tensor,
+        k_pass: &Tensor,
+        v_pass: &Tensor,
+        pass_len: i32,
+        n_anchor: i32,
+    ) -> Result<Tensor> {
         let lw = &self.layers[layer];
         let l_aq = self.l_aq;
         let (pass_len, n_anchor) = (pass_len.max(0) as usize, n_anchor.max(0) as usize);
@@ -531,10 +616,12 @@ impl ExecBackend for SimEngine {
         let k_attn = Tensor::concat_rows(&[&k_anchor, k_pass, &k_local]);
         let v_attn = Tensor::concat_rows(&[&v_anchor, v_pass, &v_local]);
         let pass_max = self.pass_max;
-        let (att, _lse) = masked_attention(q, &k_attn, &v_attn, |qi, kj| {
-            apb_visible(l_aq, pass_max, n_anchor, pass_len, qi, kj)
+        // The mask is a function of the ABSOLUTE layout row, so a chunk
+        // starting at row0 sees exactly what the monolithic pass shows it.
+        let (att, _lse) = masked_attention(q_rows, &k_attn, &v_attn, |qi, kj| {
+            apb_visible(l_aq, pass_max, n_anchor, pass_len, qi + row0, kj)
         });
-        Ok(self.attn_tail(lw, hidden, &att))
+        Ok(self.attn_tail(lw, hidden_rows, &att))
     }
 
     fn decode_pre(
@@ -876,6 +963,74 @@ mod tests {
         // Row/position count mismatches are rejected.
         assert!(e.attn_partial(&q, &k, &v, &q_pos[..2], &k_pos).is_err());
         assert!(e.attn_partial(&q, &k, &v, &q_pos, &k_pos[..2]).is_err());
+    }
+
+    #[test]
+    fn layer_pre_chunk_bitwise_matches_full_layer_pre() {
+        // The chunked-prefill invariant at stage level: projecting/roping/
+        // scoring an arbitrary run of local rows equals the matching rows of
+        // the monolithic layer_pre, bit for bit.
+        let e = engine();
+        let cfg = Config::sim_tiny();
+        let a = &cfg.apb;
+        let mut rng = Rng::new(77);
+        let tokens: Vec<i32> = (0..a.n_tot())
+            .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+            .collect();
+        let hidden = e.embed(&tokens).unwrap();
+        let pos_offset = (a.query_len + 2 * a.block_len) as i32; // host 2
+        let (q, k, v, scores) = e.layer_pre(0, &hidden, pos_offset).unwrap();
+        let anchor = hidden.slice_rows(0, a.l_aq());
+        // Uneven partition of the local block, including a 1-row chunk.
+        for pair in [0usize, 1, 7, a.block_len].windows(2) {
+            let (c0, c1) = (pair[0], pair[1]);
+            let rows = hidden.slice_rows(a.l_aq() + c0, a.l_aq() + c1);
+            let pos: Vec<i32> = (c0 as i32..c1 as i32).map(|i| pos_offset + i).collect();
+            let (qc, kc, vc, sc) = e.layer_pre_chunk(0, &anchor, &rows, &pos).unwrap();
+            assert_eq!(qc, q.slice_rows(a.l_aq() + c0, a.l_aq() + c1), "q {c0}..{c1}");
+            assert_eq!(kc, k.slice_rows(a.l_aq() + c0, a.l_aq() + c1), "k {c0}..{c1}");
+            assert_eq!(vc, v.slice_rows(a.l_aq() + c0, a.l_aq() + c1), "v {c0}..{c1}");
+            assert_eq!(sc, scores.slice_rows(c0, c1), "scores {c0}..{c1}");
+        }
+        // Wrong anchor row count is rejected.
+        assert!(e
+            .layer_pre_chunk(0, &hidden.slice_rows(0, 1), &anchor, &[0])
+            .is_err());
+    }
+
+    #[test]
+    fn layer_post_rows_bitwise_matches_full_layer_post() {
+        let e = engine();
+        let cfg = Config::sim_tiny();
+        let a = &cfg.apb;
+        let mut rng = Rng::new(78);
+        let tokens: Vec<i32> = (0..a.n_tot())
+            .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+            .collect();
+        let hidden = e.embed(&tokens).unwrap();
+        let (q, k, v, _s) = e.layer_pre(0, &hidden, a.query_len as i32).unwrap();
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let k_pass = rand(&mut rng, vec![a.pass_max(), cfg.model.n_kv_heads,
+                                         cfg.model.head_dim()]);
+        let v_pass = rand(&mut rng, vec![a.pass_max(), cfg.model.n_kv_heads,
+                                         cfg.model.head_dim()]);
+        let (pass_len, n_anchor) = (a.passing_len as i32, a.l_aq() as i32);
+        let full = e
+            .layer_post(0, &hidden, &q, &k, &v, &k_pass, &v_pass, pass_len, n_anchor)
+            .unwrap();
+        // Anchor+first-local-chunk, then the rest: both must equal the
+        // matching rows of the monolithic pass.
+        let cut = a.l_aq() + 5;
+        for (r0, r1) in [(0usize, cut), (cut, a.n_tot())] {
+            let out = e
+                .layer_post_rows(0, &hidden.slice_rows(r0, r1), &q.slice_rows(r0, r1),
+                                 r0, &k, &v, &k_pass, &v_pass, pass_len, n_anchor)
+                .unwrap();
+            assert_eq!(out, full.slice_rows(r0, r1), "rows {r0}..{r1}");
+        }
     }
 
     #[test]

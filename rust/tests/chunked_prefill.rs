@@ -1,0 +1,228 @@
+//! Chunk-split invariance — the acceptance gate of the resumable-prefill
+//! refactor (docs/ADR-002-chunked-prefill.md): for EVERY `AttnMethod` and
+//! ANY chunk partition of the document (chunk size 1, ragged sizes, larger
+//! than the doc), chunked prefill must be **bit-identical** to one-shot
+//! prefill in
+//!
+//! * the query-chunk logits,
+//! * the per-label CommMeter bytes AND rounds (chunking may never add,
+//!   drop or resize a collective),
+//! * the per-host KV-pool slot bytes.
+//!
+//! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
+
+use apb::cluster::Fabric;
+use apb::config::{ApbOptions, AttnMethod, Config};
+use apb::coordinator::Cluster;
+use apb::util::rng::Rng;
+
+const LABELS: [&str; 3] = [Fabric::KV_LABEL, Fabric::ATT_LABEL, Fabric::RING_LABEL];
+
+/// Everything the invariance compares, captured from one fresh cluster.
+#[derive(Debug, PartialEq)]
+struct RunFingerprint {
+    /// Query-chunk logits (compared EXACTLY — bit-identity, not tolerance).
+    logits: Vec<f32>,
+    /// (bytes, rounds) per meter label after prefill only.
+    prefill_comm: Vec<(u64, u64)>,
+    /// Per-host KV-pool bytes resident after prefill.
+    pool_bytes: Vec<usize>,
+    /// Leader-visible prefill comm total.
+    report_comm: u64,
+}
+
+fn run(method: AttnMethod, doc: &[i32], query: &[i32], ct: usize) -> RunFingerprint {
+    let cfg = Config::sim_tiny().with_method(method);
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let opts = ApbOptions { method, chunk_tokens: Some(ct), ..Default::default() };
+    let rep = cluster.prefill_session(1, doc, query, &opts).expect("prefill");
+    let m = &cluster.fabric.meter;
+    let prefill_comm = LABELS.iter().map(|l| (m.bytes_for(l), m.rounds_for(l))).collect();
+    let pool_bytes = cluster
+        .pool_stats()
+        .expect("pool stats")
+        .iter()
+        .map(|s| s.bytes_used)
+        .collect();
+    let chunk = cluster.decode_query_chunk(1, query).expect("query chunk");
+    RunFingerprint {
+        logits: chunk.logits,
+        prefill_comm,
+        pool_bytes,
+        report_comm: rep.comm_bytes,
+    }
+}
+
+#[test]
+fn prop_chunk_partition_is_bit_identical_for_all_methods() {
+    println!("APB-RUN chunked_prefill backend=sim");
+    let cfg = Config::sim_tiny();
+    let mut rng = Rng::new(0x5EED);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+
+    for method in AttnMethod::ALL {
+        // Reference: one chunk per phase (chunk larger than the whole doc).
+        let oneshot = run(method, &doc, &query, 10 * cfg.apb.doc_len());
+        assert!(oneshot.logits.iter().all(|x| x.is_finite()),
+                "{}: non-finite reference logits", method.name());
+        assert!(oneshot.pool_bytes.iter().sum::<usize>() > 0,
+                "{}: prefill must leave KV resident", method.name());
+
+        // Boundary partitions: single-token chunks, ragged, just past the
+        // block boundary, beyond the doc — plus randomized sizes.
+        let mut cts =
+            vec![1usize, 5, cfg.apb.block_len, cfg.apb.block_len + 1, cfg.apb.doc_len() + 1];
+        for _ in 0..2 {
+            cts.push(1 + rng.below(2 * cfg.apb.block_len as u64) as usize);
+        }
+        for ct in cts {
+            let got = run(method, &doc, &query, ct);
+            assert_eq!(got, oneshot,
+                       "{} chunk_tokens={ct}: chunked prefill diverged from one-shot",
+                       method.name());
+        }
+    }
+}
+
+#[test]
+fn comm_structure_is_chunk_invariant_per_method() {
+    // Spot-check the absolute comm structure stays the method's own under
+    // aggressive chunking: APB only moves `kv`, Ring only `ring`, Star and
+    // Dense nothing — with the exact same round counts as one-shot.
+    let cfg = Config::sim_tiny();
+    let mut rng = Rng::new(0xC0DE);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let (a, m) = (&cfg.apb, &cfg.model);
+
+    let apb = run(AttnMethod::Apb, &doc, &query, 3);
+    assert!(apb.prefill_comm[0].0 > 0, "APB must move compressed blocks");
+    assert_eq!(apb.prefill_comm[0].1, (m.n_layers * a.n_hosts) as u64,
+               "one kv AllGather per layer regardless of chunking");
+    assert_eq!(apb.prefill_comm[2], (0, 0), "APB never rides the ring");
+
+    let ring = run(AttnMethod::RingAttn, &doc, &query, 3);
+    assert_eq!(ring.prefill_comm[0], (0, 0));
+    assert_eq!(ring.prefill_comm[2].1,
+               (m.n_layers * a.n_hosts * (a.n_hosts - 1)) as u64,
+               "N-1 exchange rounds per layer regardless of chunking");
+
+    for method in [AttnMethod::StarAttn, AttnMethod::Dense] {
+        let fp = run(method, &doc, &query, 3);
+        assert_eq!(fp.report_comm, 0, "{} prefill must not communicate", method.name());
+    }
+}
+
+#[test]
+fn prefill_in_flight_guards_decode_and_second_prefill() {
+    println!("APB-RUN chunked_prefill_guards backend=sim");
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let mut rng = Rng::new(0xFACE);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let opts = ApbOptions::default();
+
+    let mut progress = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+    assert!(progress.n_steps() > 1, "sim-tiny default must be chunked");
+    assert_eq!(progress.steps_done(), 0);
+
+    // A second prefill may not start while this one is in flight (the ring
+    // pipeline holds open fabric rounds between steps).
+    let err = cluster.prefill_begin(2, &doc, &query, &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("already in flight"), "got: {err:#}");
+
+    // Decoding the half-prefilled session is refused on every host.
+    cluster.prefill_step(&mut progress).expect("step");
+    assert_eq!(progress.steps_done(), 1);
+    let err = cluster.decode_query_chunk(1, &query).unwrap_err();
+    assert!(format!("{err:#}").contains("prefill in flight"), "got: {err:#}");
+
+    // Driving to completion unblocks everything.
+    let report = loop {
+        if let Some(r) = cluster.prefill_step(&mut progress).expect("step") {
+            break r;
+        }
+    };
+    assert!(report.comm_bytes > 0, "APB prefill must have communicated");
+    let chunk = cluster.decode_query_chunk(1, &query).expect("decode after prefill");
+    assert!(chunk.logits.iter().all(|x| x.is_finite()));
+    cluster.prefill_session(2, &doc, &query, &opts).expect("next prefill runs");
+}
+
+#[test]
+fn clearing_the_inflight_session_cancels_its_prefill() {
+    // Cancelling an admission by clearing its session must release the
+    // one-prefill-at-a-time marker (not wedge the cluster) and leave the
+    // cluster fully serviceable.
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let mut rng = Rng::new(0xCAFE);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let opts = ApbOptions::default();
+
+    let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+    cluster.prefill_step(&mut p).expect("one chunk");
+    cluster.clear_session(1).expect("cancel the admission");
+
+    // The stale handle is dead: hosts no longer hold a machine for it.
+    let err = cluster.prefill_step(&mut p).unwrap_err();
+    assert!(format!("{err:#}").contains("no prefill in flight"), "got: {err:#}");
+
+    // And a fresh prefill proceeds — the marker was released.
+    cluster.prefill_session(2, &doc, &query, &opts).expect("fresh prefill");
+    let chunk = cluster.decode_query_chunk(2, &query).expect("decode");
+    assert!(chunk.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn cancelling_a_ring_prefill_mid_rotation_does_not_wedge_the_fabric() {
+    // The hard cancellation case: a RingAttn machine killed between a
+    // posted and a completed exchange. abort() must drain the posted round
+    // on every host (non-blocking under leader lockstep), or the next ring
+    // prefill's post would panic with "posted again before completing".
+    let cfg = Config::sim_tiny(); // ring fits the standard pool
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let mut rng = Rng::new(0xD00D);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let ring = ApbOptions { method: AttnMethod::RingAttn, ..Default::default() };
+
+    // Drive past the layer's RingPost (plan per layer: Pre×C, RingPost,
+    // ...) so a ring round is posted but not yet completed, then cancel.
+    let n_chunks = (cfg.apb.query_len + cfg.apb.block_len).div_ceil(cfg.apb.chunk_tokens);
+    let mut p = cluster.prefill_begin(1, &doc, &query, &ring).expect("begin");
+    for _ in 0..n_chunks + 1 {
+        assert!(cluster.prefill_step(&mut p).expect("step").is_none());
+    }
+    cluster.clear_session(1).expect("cancel mid-rotation");
+
+    // The ring collective must be pristine: a full fresh ring prefill +
+    // decode runs (it re-posts the very rounds a wedged fabric would
+    // panic on).
+    cluster.prefill_session(2, &doc, &query, &ring).expect("ring prefill after cancel");
+    let chunk = cluster.decode_query_chunk(2, &query).expect("decode");
+    assert!(chunk.logits.iter().all(|x| x.is_finite()));
+}

@@ -60,32 +60,121 @@ fn fifo_order_and_complete_metrics() {
     let (cfg, cluster) = cluster();
     let mut sched = Scheduler::new(&cluster, 16);
     let mut rng = Rng::new(1);
+    // Enough decode budget that a session is still decoding while the next
+    // request's chunked admission runs — the overlap the peak_resident
+    // assertion below measures.
+    let max_new = 4;
     for id in 0..3 {
-        sched.submit(request(&cfg, id, &mut rng)).unwrap();
+        sched
+            .submit(Request { max_new, ..request(&cfg, id, &mut rng) })
+            .unwrap();
     }
     let done = sched.run_all().unwrap();
     assert_eq!(done, 3);
     assert_eq!(sched.queued(), 0);
     assert_eq!(sched.resident(), 0, "all sessions retired");
+    assert!(sched.prefill_in_flight().is_none(), "no admission left behind");
     // FIFO completion order.
     let ids: Vec<u64> = sched.completed.iter().map(|r| r.id).collect();
     assert_eq!(ids, vec![0, 1, 2]);
     for r in &sched.completed {
-        assert_eq!(r.tokens.len(), 2);
+        assert_eq!(r.tokens.len(), max_new);
         assert!(r.speed_tok_per_s > 0.0);
         assert!(r.e2e_s >= r.prefill.wall_seconds);
         assert!(r.ttft_s >= r.queue_wait_s, "TTFT includes queue wait");
         assert!(r.decode_comm_bytes > 0,
                 "decode AllGather traffic must be metered per request");
+        assert!(r.prefill_chunks >= 1,
+                "every request is admitted through the chunk driver");
     }
     let m = sched.metrics();
     assert_eq!(m.n_requests, 3);
-    assert_eq!(m.total_tokens, 6);
+    assert_eq!(m.total_tokens, 3 * max_new);
     assert!(m.prefill.p50 > 0.0 && m.e2e.p99 >= m.e2e.p50);
     assert!(m.ttft.p50 > 0.0 && m.decode_comm_bytes > 0);
+    assert!(m.prefill_chunks.min >= 1.0);
     if cfg.apb.max_resident >= 2 {
         assert!(m.peak_resident >= 2, "requests must share the cluster");
     }
+}
+
+#[test]
+fn decode_ticks_proceed_between_prefill_chunks() {
+    // THE stall-free acceptance test: while a newly admitted long request's
+    // prefill is in flight, a resident session must emit one token on EVERY
+    // scheduler tick — no stall longer than one chunk.
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
+    println!("APB-RUN stall_free backend={}", cfg.backend.name());
+    if !has_slots(&cfg, 2, "decode_ticks_proceed_between_prefill_chunks") {
+        return;
+    }
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let mut sched = Scheduler::new(&cluster, 8);
+    let mut rng = Rng::new(61);
+
+    // Request A: the largest decode budget the sim-tiny KV slot can hold
+    // (cache_max reserves a `max_new_tokens` decode tail; the query-chunk
+    // pass seeds token 1 without appending, so max_new_tokens + 1 rows
+    // fit) — so A stays resident and decoding well into B's admission.
+    let a_budget = cfg.apb.max_new_tokens + 1;
+    let a = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    sched
+        .submit(Request { id: 0, doc: a.doc, query: a.query, max_new: a_budget,
+                          opts: ApbOptions::default() })
+        .unwrap();
+    // Drive until A is decoding (its own admission finished).
+    while sched.prefill_in_flight().is_some() || sched.active_token_counts().is_empty() {
+        assert!(sched.step().unwrap());
+    }
+
+    // Request B: small chunks -> its admission spans many ticks.
+    let b = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+    sched
+        .submit(Request {
+            id: 1,
+            doc: b.doc,
+            query: b.query,
+            max_new: 2,
+            opts: ApbOptions { chunk_tokens: Some(4), ..Default::default() },
+        })
+        .unwrap();
+
+    let a_tokens = |s: &Scheduler<'_>| {
+        s.active_token_counts().iter().find(|&&(id, _)| id == 0).map(|&(_, n)| n)
+    };
+    let mut asserted_ticks = 0;
+    loop {
+        let before = a_tokens(&sched);
+        assert!(sched.step().unwrap());
+        let inflight = sched.prefill_in_flight();
+        if let (Some(nb), Some((rid, done, total))) = (before, inflight) {
+            assert_eq!(rid, 1);
+            assert!(done >= 1 && done <= total);
+            if let Some(na) = a_tokens(&sched) {
+                assert_eq!(na, nb + 1,
+                           "resident session stalled during admission chunk \
+                            {done}/{total}");
+                asserted_ticks += 1;
+            }
+        }
+        if inflight.is_none() {
+            break;
+        }
+    }
+    // A emits one token per tick from 2 up to its budget while B admits
+    // (34 chunk steps at ct=4), so every tick of A's remaining lifetime is
+    // asserted above.
+    assert!(asserted_ticks >= 4,
+            "B's chunked admission must interleave with A's decode over multiple \
+             ticks (saw {asserted_ticks})");
+
+    sched.run_all().unwrap();
+    assert_eq!(sched.completed.len(), 2);
+    let resp = |id: u64| sched.completed.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(resp(1).tokens.len(), 2);
+    assert!(resp(1).prefill_chunks > resp(0).prefill_chunks,
+            "smaller chunk_tokens must mean more admission steps ({} vs {})",
+            resp(1).prefill_chunks, resp(0).prefill_chunks);
 }
 
 #[test]
