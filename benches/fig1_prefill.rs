@@ -100,6 +100,24 @@ fn main() {
         let opts = ApbOptions { method, ..Default::default() };
         let rep = cluster.prefill(&doc, &query, &opts).expect("prefill");
         cluster.generate(&query, 2).expect("decode");
+        // Warm-vs-cold on a prefix-cache-enabled twin cluster: the same
+        // request prefilled twice — the first run freezes the document KV,
+        // the second attaches to it (zero comm, positive bytes saved).
+        let warm_cluster =
+            Cluster::start(&Config::sim_tiny().with_method(method).with_prefix_cache(true))
+                .expect("warm cluster");
+        let rep_cold = warm_cluster.prefill_session(1, &doc, &query, &opts)
+            .expect("cold prefill");
+        warm_cluster.clear_session(1).expect("clear cold session");
+        let rep_warm = warm_cluster.prefill_session(2, &doc, &query, &opts)
+            .expect("warm prefill");
+        assert!(!rep_cold.prefix_hit && rep_warm.prefix_hit,
+                "{}: second identical request must hit the prefix store",
+                method.name());
+        assert_eq!(rep_warm.comm_bytes, 0,
+                   "{}: a prefix hit must not communicate", method.name());
+        assert!(rep_warm.prefix_bytes_saved > 0,
+                "{}: a prefix hit must save KV bytes", method.name());
         // Modeled overlap win for this method's analytic twin @128K: per
         // layer step the collective hides under the attention compute
         // (max(comm, compute) instead of sum).
@@ -129,6 +147,14 @@ fn main() {
             ("overlap_fraction_model", json::num(ovl)),
             ("prefill_s_model_128k", json::num(est128.prefill_s)),
             ("prefill_overlapped_s_model_128k", json::num(est128.prefill_overlapped_s)),
+            // Warm-prefill record (prefix cache): measured cold/warm wall
+            // seconds of the same request on this tiny cluster, the KV
+            // bytes the hit skipped, and the analytic twin @128K.
+            ("prefill_cold_s_measured", json::num(rep_cold.wall_seconds)),
+            ("prefill_warm_s_measured", json::num(rep_warm.wall_seconds)),
+            ("prefix_bytes_saved", json::num(rep_warm.prefix_bytes_saved as f64)),
+            ("prefill_warm_s_model_128k", json::num(est128.prefill_warm_s)),
+            ("warm_speedup_model_128k", json::num(est128.warm_speedup())),
         ]);
         measured_rows.push(row.clone());
         bench_rows.push(row);
@@ -136,6 +162,8 @@ fn main() {
             assert!(ovl > 0.0,
                     "APB must show a nonzero modeled overlap fraction, got {ovl}");
         }
+        assert!(est128.prefill_warm_s > 0.0 && est128.prefill_warm_s < est128.prefill_s,
+                "{}: modeled warm prefill must sit inside (0, cold)", method.name());
     }
     measured.print();
 

@@ -7,6 +7,12 @@
 //!     cargo run --release --example serve_cluster -- --requests 6 \
 //!         --config tiny --max-new 6
 //!
+//! With `--prefix-cache` the workload becomes the multi-tenant
+//! shared-corpus pattern instead: every request queries ONE document, the
+//! first admission freezes its KV into the pool's shared-prefix store, and
+//! each later request attaches warm (no document pass at all) — the demo
+//! prints the cold-vs-warm TTFT split (`docs/ADR-003-prefix-caching.md`).
+//!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use apb::bench_harness::Table;
@@ -19,7 +25,7 @@ use apb::util::rng::Rng;
 use apb::util::stats::{fmt_duration, fmt_rate};
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["smoke"])?;
+    let args = Args::parse(std::env::args().skip(1), &["smoke", "prefix-cache"])?;
     args.check_known(&[
         "requests", "config", "max-new", "queue", "seed", "method", "chunk-tokens",
     ])?;
@@ -28,8 +34,11 @@ fn main() -> anyhow::Result<()> {
     let config = args.str_or("config", "tiny");
     let seed = args.usize_or("seed", 7)? as u64;
     let method = AttnMethod::parse(&args.str_or("method", "apb"))?;
+    let prefix_cache = args.has("prefix-cache");
 
-    let mut cfg = apb::load_config_or_sim(&config)?.with_method(method);
+    let mut cfg = apb::load_config_or_sim(&config)?
+        .with_method(method)
+        .with_prefix_cache(prefix_cache);
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
     println!(
         "serving on {} hosts ({} backend) — model d={} L={} vocab={}, doc {} \
@@ -42,30 +51,49 @@ fn main() -> anyhow::Result<()> {
     println!("cluster up in {:.1}s (compile + weight upload per host)",
              t_start.elapsed().as_secs_f64());
 
-    // Queue a mixed workload of retrieval-style long-context requests.
     let mut scheduler = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
-    let kinds = [
-        TaskKind::SingleNiah,
-        TaskKind::MultiKeyNiah { keys: 3 },
-        TaskKind::MultiValueNiah,
-        TaskKind::Aggregation,
-    ];
     let mut rng = Rng::new(seed);
     let opts = ApbOptions { method, ..Default::default() };
-    for id in 0..n_requests {
-        let inst = gen_instance(&cfg, kinds[id % kinds.len()], &mut rng);
-        scheduler.submit(Request {
-            id: id as u64,
-            doc: inst.doc,
-            query: inst.query,
-            max_new,
-            opts,
-        })?;
-    }
-    println!("queued {} requests", scheduler.queued());
-
     let t0 = std::time::Instant::now();
-    let done = scheduler.run_all()?;
+    let done = if prefix_cache {
+        // Shared-corpus workload: one document, many queriers. Sequential
+        // (submit + drain per request) so each warm TTFT measures service
+        // time, not queueing behind the cold miss's prefill.
+        let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+        println!("shared corpus: {} requests over one {}-token document",
+                 n_requests, inst.doc.len());
+        for id in 0..n_requests {
+            scheduler.submit(Request {
+                id: id as u64,
+                doc: inst.doc.clone(),
+                query: inst.query.clone(),
+                max_new,
+                opts,
+            })?;
+            scheduler.run_all()?;
+        }
+        scheduler.completed.len()
+    } else {
+        // Queue a mixed workload of retrieval-style long-context requests.
+        let kinds = [
+            TaskKind::SingleNiah,
+            TaskKind::MultiKeyNiah { keys: 3 },
+            TaskKind::MultiValueNiah,
+            TaskKind::Aggregation,
+        ];
+        for id in 0..n_requests {
+            let inst = gen_instance(&cfg, kinds[id % kinds.len()], &mut rng);
+            scheduler.submit(Request {
+                id: id as u64,
+                doc: inst.doc,
+                query: inst.query,
+                max_new,
+                opts,
+            })?;
+        }
+        println!("queued {} requests", scheduler.queued());
+        scheduler.run_all()?
+    };
     let wall = t0.elapsed().as_secs_f64();
     let m = scheduler.metrics();
 
@@ -98,20 +126,43 @@ fn main() -> anyhow::Result<()> {
     table.row(vec!["decode comm".into(), format!("{} B", m.decode_comm_bytes)]);
     table.row(vec!["paper speed metric (mean)".into(),
                    format!("{:.0} tok/s", m.speed_tok_per_s.mean)]);
+    if prefix_cache {
+        table.row(vec!["prefix hits".into(),
+                       format!("{} / {}", m.prefix_hits, m.n_requests)]);
+        table.row(vec!["prefix KV bytes saved".into(),
+                       format!("{} B", m.prefix_bytes_saved)]);
+        let fmt = |s: &Option<apb::util::stats::Summary>| {
+            s.as_ref().map_or("-".to_string(), |s| fmt_duration(s.p50))
+        };
+        table.row(vec!["ttft p50 cold / warm".into(),
+                       format!("{} / {}", fmt(&m.ttft_cold), fmt(&m.ttft_warm))]);
+    }
     table.print();
 
     for r in &scheduler.completed {
-        println!("  req {:>2}: tokens {:?}  ttft {}  speed {:.0} tok/s", r.id,
-                 r.tokens, fmt_duration(r.ttft_s), r.speed_tok_per_s);
+        println!("  req {:>2}: tokens {:?}  ttft {}{}  speed {:.0} tok/s", r.id,
+                 r.tokens, fmt_duration(r.ttft_s),
+                 if r.prefill.prefix_hit { " (warm)" } else { "" },
+                 r.speed_tok_per_s);
     }
     if args.has("smoke") {
         // CI gate: the continuous-batching path must actually overlap
         // sessions when more than one request is queued.
         assert_eq!(done, n_requests, "all requests must complete");
-        if n_requests >= 2 && cfg.apb.max_resident >= 2 {
+        if !prefix_cache && n_requests >= 2 && cfg.apb.max_resident >= 2 {
             assert!(m.peak_resident >= 2,
                     "smoke: expected >= 2 sessions resident, saw {}",
                     m.peak_resident);
+        }
+        if prefix_cache && n_requests >= 2 {
+            assert_eq!(m.prefix_hits, n_requests - 1,
+                       "every request after the cold miss must hit");
+            assert!(m.prefix_bytes_saved > 0, "hits must save KV bytes");
+            // Best warm sample vs the cold miss: robust to a one-off OS
+            // hiccup on a loaded runner (see `apb serve --smoke`).
+            let cold = m.ttft_cold.expect("cold sample").min;
+            let warm = m.ttft_warm.expect("warm samples").min;
+            assert!(warm < cold, "best warm TTFT must beat the cold miss");
         }
         println!("serve_cluster --smoke OK");
     }

@@ -1,0 +1,261 @@
+"""Python mirror of the shared-prefix KV reuse path
+(rust/src/kvcache + coordinator/host.rs, docs/ADR-003-prefix-caching.md),
+verifying the prefix-cache bit-identity invariant independently of the
+Rust toolchain, for all four attention methods:
+
+* a COLD run prefills the document KV and decodes over the contiguous
+  cache (the pre-PR-5 layout);
+* a WARM run attaches to the cold run's FROZEN document KV — reused
+  verbatim, never recomputed — and decodes over a ``[shared | private
+  tail]`` segmented view: the query-chunk rows are appended
+  copy-on-extend into per-session tail arrays while the shared arrays
+  stay immutable (asserted byte-identical before/after).
+
+The two decodes must agree to Linf <= 4e-15 (they are algebraically the
+same key sequence; the Rust suite `rust/tests/prefix_cache.rs` pins exact
+f32 equality on the real segmented kernel).
+
+Runs standalone (``python3 test_prefix_cache_mirror.py``, numpy only) or
+under pytest alongside the jax-based suite."""
+import random
+
+import numpy as np
+
+from test_chunked_prefill_mirror import (
+    LAQ, apb_host_tokens, apb_layer_exchange, apb_positions, apb_visible,
+    retaining_scores,
+)
+from test_ring_dense_mirror import (
+    DOC_LEN, HD, HOSTS, KH, LB, LQ, VOCAB,
+    attn_partial, attn_tail, build_weights, lm_head, masked_attention,
+    merge_partials, project_qkv, ring_positions, rope,
+)
+
+TOL = 4e-15
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> frozen document KV (what the rust pool's freeze_shared stores)
+# ---------------------------------------------------------------------------
+
+def apb_star_caches(embed, layers, doc, query, passing):
+    """APB (passing=True) / StarAttn (passing=False) prefill; returns the
+    per-host per-layer [k, v] document KV exactly as the slot holds it."""
+    hiddens = [embed[apb_host_tokens(doc, query, r)] for r in range(HOSTS)]
+    positions = [apb_positions(r) for r in range(HOSTS)]
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        pre = []
+        for r in range(HOSTS):
+            q_nr, k_nr, v = project_qkv(lw, hiddens[r])
+            scores = retaining_scores(q_nr[:LQ], q_nr[LAQ:], k_nr[LAQ:])
+            q = rope(q_nr, positions[r])
+            k = rope(k_nr, positions[r])
+            pre.append((q, k, v, scores))
+        passes = apb_layer_exchange(pre)
+        for r in range(HOSTS):
+            q, k, v, _ = pre[r]
+            if passing:
+                k_pass, v_pass, pass_len = passes[r]
+            else:  # StarAttn: blocks never move
+                k_pass, v_pass, pass_len = passes[r][0] * 0, passes[r][1] * 0, 0
+            n_anchor = LAQ if r > 0 else 0
+            k_attn = np.concatenate([k[:LAQ], k_pass, k[LAQ:]])
+            v_attn = np.concatenate([v[:LAQ], v_pass, v[LAQ:]])
+            att, _ = masked_attention(
+                q, k_attn, v_attn,
+                lambda qi, kj: apb_visible(n_anchor, pass_len, qi, kj))
+            hiddens[r] = attn_tail(lw, hiddens[r], att)
+            caches[r].append([k[LAQ:], v[LAQ:]])
+    return caches
+
+
+def ring_caches(embed, layers, doc, query):
+    """RingAttn prefill (rotation + merge); per-host per-layer [k, v]."""
+    tokens = [query + doc[:LB]] + \
+             [doc[r * LB:(r + 1) * LB] for r in range(1, HOSTS)]
+    hiddens = [embed[t] for t in tokens]
+    positions = [ring_positions(r) for r in range(HOSTS)]
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        qkv = []
+        for r in range(HOSTS):
+            q, k, v = project_qkv(lw, hiddens[r])
+            qkv.append((rope(q, positions[r]), rope(k, positions[r]), v))
+        for r in range(HOSTS):
+            q, k, v = qkv[r]
+            outs, lses = [], []
+            o, l = attn_partial(lw, q, k, v, positions[r], positions[r])
+            outs.append(o)
+            lses.append(l)
+            for s in range(1, HOSTS):
+                origin = (r + HOSTS - s) % HOSTS
+                if origin < r:
+                    o, l = attn_partial(lw, q, qkv[origin][1], qkv[origin][2],
+                                        positions[r], positions[origin])
+                    outs.append(o)
+                    lses.append(l)
+            att = merge_partials(outs, lses)
+            hiddens[r] = attn_tail(lw, hiddens[r], att)
+            caches[r].append([k, v])
+    return caches
+
+
+def dense_caches(embed, layers, doc, query):
+    """Dense prefill: whole [query | doc] on host 0, empty elsewhere."""
+    tokens = query + doc
+    positions = list(range(len(tokens)))
+    hidden = embed[tokens]
+    caches = [[] for _ in range(HOSTS)]
+    for lw in layers:
+        q, k, v = project_qkv(lw, hidden)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att, _ = attn_partial(lw, q, k, v, positions, positions)
+        hidden = attn_tail(lw, hidden, att)
+        caches[0].append([k, v])
+        for r in range(1, HOSTS):
+            caches[r].append([np.zeros((0, KH, HD)), np.zeros((0, KH, HD))])
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Decode: contiguous (cold) vs [shared | tail] segmented (warm attach)
+# ---------------------------------------------------------------------------
+
+def decode_contiguous(layers, lmw, embed, caches, query, dense):
+    """Cold decode: appended rows concatenate INTO the cache arrays (the
+    pre-prefix-cache layout). Mutates `caches` — pass a copy."""
+    pos0 = LQ + DOC_LEN
+    cpos = list(range(pos0, pos0 + LQ))
+    nch = len(cpos)
+    last = 0 if dense else HOSTS - 1
+    ranks = [0] if dense else range(HOSTS)
+    hc = {r: embed[query] for r in ranks}
+    for li, lw in enumerate(layers):
+        partials = []
+        for r in ranks:
+            q, k, v = project_qkv(lw, hc[r])
+            q = rope(q, cpos)
+            k = rope(k, cpos)
+            if r == last:
+                caches[r][li][0] = np.concatenate([caches[r][li][0], k])
+                caches[r][li][1] = np.concatenate([caches[r][li][1], v])
+                clen = caches[r][li][0].shape[0]
+                o, l = masked_attention(
+                    q, caches[r][li][0], caches[r][li][1],
+                    lambda qi, kj: kj < clen - (nch - 1 - qi))
+            else:
+                clen = caches[r][li][0].shape[0]
+                o, l = masked_attention(
+                    q, caches[r][li][0], caches[r][li][1],
+                    lambda qi, kj: kj < clen)
+            partials.append((o, l))
+        att = merge_partials([p[0] for p in partials],
+                             [p[1] for p in partials])
+        for r in ranks:
+            hc[r] = attn_tail(lw, hc[r], att)
+    return lm_head(lmw, hc[last])
+
+
+def decode_segmented(layers, lmw, embed, shared, query, dense):
+    """Warm decode over the ATTACHED shared prefix: `shared` holds the
+    frozen document KV (never touched); appended rows go to per-layer TAIL
+    arrays copy-on-extend, and attention walks the logical
+    [shared | tail] concatenation — the mirror of
+    runtime::sim::masked_attention_seg + KvCache::view."""
+    pos0 = LQ + DOC_LEN
+    cpos = list(range(pos0, pos0 + LQ))
+    nch = len(cpos)
+    last = 0 if dense else HOSTS - 1
+    ranks = [0] if dense else range(HOSTS)
+    hc = {r: embed[query] for r in ranks}
+    tails = {r: [[np.zeros((0, KH, HD)), np.zeros((0, KH, HD))]
+                 for _ in layers] for r in ranks}
+    for li, lw in enumerate(layers):
+        partials = []
+        for r in ranks:
+            q, k, v = project_qkv(lw, hc[r])
+            q = rope(q, cpos)
+            k = rope(k, cpos)
+            if r == last:  # copy-on-extend into the PRIVATE tail only
+                tails[r][li][0] = np.concatenate([tails[r][li][0], k])
+                tails[r][li][1] = np.concatenate([tails[r][li][1], v])
+            ck = np.concatenate([shared[r][li][0], tails[r][li][0]])
+            cv = np.concatenate([shared[r][li][1], tails[r][li][1]])
+            clen = ck.shape[0]
+            if r == last:
+                o, l = masked_attention(
+                    q, ck, cv, lambda qi, kj: kj < clen - (nch - 1 - qi))
+            else:
+                o, l = masked_attention(q, ck, cv, lambda qi, kj: kj < clen)
+            partials.append((o, l))
+        att = merge_partials([p[0] for p in partials],
+                             [p[1] for p in partials])
+        for r in ranks:
+            hc[r] = attn_tail(lw, hc[r], att)
+    return lm_head(lmw, hc[last])
+
+
+def deep_copy(caches):
+    return [[[kv[0].copy(), kv[1].copy()] for kv in host] for host in caches]
+
+
+def _request(seed):
+    random.seed(seed)
+    doc = [random.randrange(1, VOCAB) for _ in range(DOC_LEN)]
+    query = [random.randrange(1, VOCAB) for _ in range(LQ)]
+    return doc, query
+
+
+def _check_method(name, caches, lmw, embed, layers, query, dense=False):
+    frozen = deep_copy(caches)  # what freeze_shared stores
+    cold = decode_contiguous(layers, lmw, embed, deep_copy(caches), query, dense)
+    # Warm: attach to the FROZEN arrays — no prefill recomputation at all.
+    warm = decode_segmented(layers, lmw, embed, frozen, query, dense)
+    d = np.abs(warm - cold).max()
+    print(f"{name}: warm-vs-cold logits Linf {d:.3e}")
+    assert d <= TOL, f"{name}: segmented warm decode diverged ({d:.3e})"
+    assert cold.max() - cold.min() > 0.5, f"{name}: degenerate pipeline"
+    # Immutability: the shared entry is byte-identical after serving.
+    for r in range(len(frozen)):
+        for li in range(len(layers)):
+            for c in range(2):
+                assert np.array_equal(frozen[r][li][c], caches[r][li][c]), \
+                    f"{name}: shared prefix mutated at host {r} layer {li}"
+
+
+def test_apb_prefix_hit_matches_cold():
+    doc, query = _request(41)
+    embed, lmw, layers = build_weights()
+    caches = apb_star_caches(embed, layers, doc, query, passing=True)
+    _check_method("APB", caches, lmw, embed, layers, query)
+
+
+def test_star_prefix_hit_matches_cold():
+    doc, query = _request(43)
+    embed, lmw, layers = build_weights()
+    caches = apb_star_caches(embed, layers, doc, query, passing=False)
+    _check_method("StarAttn", caches, lmw, embed, layers, query)
+
+
+def test_ring_prefix_hit_matches_cold():
+    doc, query = _request(47)
+    embed, lmw, layers = build_weights()
+    caches = ring_caches(embed, layers, doc, query)
+    _check_method("RingAttn", caches, lmw, embed, layers, query)
+
+
+def test_dense_prefix_hit_matches_cold():
+    doc, query = _request(53)
+    embed, lmw, layers = build_weights()
+    caches = dense_caches(embed, layers, doc, query)
+    _check_method("Dense", caches, lmw, embed, layers, query, dense=True)
+
+
+if __name__ == "__main__":
+    test_apb_prefix_hit_matches_cold()
+    test_star_prefix_hit_matches_cold()
+    test_ring_prefix_hit_matches_cold()
+    test_dense_prefix_hit_matches_cold()
+    print("OK: prefix-hit (shared | tail) decode is bit-identical to cold")

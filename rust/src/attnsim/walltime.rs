@@ -135,6 +135,15 @@ pub struct Estimate {
     /// factor), i.e. the overlap estimate is the optimistic bound on top of
     /// the calibration.
     pub comm_hidden_s: f64,
+    /// Warm (prefix-cache hit) prefill time: the document KV already sits
+    /// in the pool's shared-prefix store, so the whole per-layer document
+    /// pass — compute AND collectives — is skipped
+    /// (`docs/ADR-003-prefix-caching.md`). What remains is wiring the
+    /// resident KV share into the session (one HBM stream over it) plus
+    /// the LM-head epilogue. The executable twin is the one-step
+    /// `PrefixAttach` machine; `fig1_prefill` emits this next to the
+    /// measured warm walltime in `BENCH_prefill.json`.
+    pub prefill_warm_s: f64,
     pub decode_per_token_s: f64,
     pub oom: bool,
     pub flops_total: f64,
@@ -152,6 +161,12 @@ impl Estimate {
             return 0.0;
         }
         self.comm_hidden_s / self.prefill.comm
+    }
+
+    /// Modeled cold/warm prefill ratio — the multi-tenant shared-corpus
+    /// win the prefix cache buys when a request's document digest hits.
+    pub fn warm_speedup(&self) -> f64 {
+        self.prefill_s / self.prefill_warm_s.max(f64::MIN_POSITIVE)
     }
 }
 
@@ -240,12 +255,20 @@ pub fn estimate(method: Method, m: &ModelProfile, n: f64, hosts: f64, hy: &Hyper
     // attention compute, so the hidden volume is min(comm, attention)
     // (uniform layers ⇒ per-step max == total - min).
     let comm_hidden_s = bd.comm.min(bd.attention);
+    // Warm (prefix-hit) prefill: skip the whole per-layer document pass;
+    // pay one HBM stream over the host's resident KV share (the attach)
+    // plus the LM-head epilogue. Single-device methods hold the full
+    // sequence's KV; SP methods hold 1/hosts of it.
+    let resident_tokens = if method.uses_sequence_parallelism() { n / hosts } else { n };
+    let prefill_warm_s = hw.t_mem(resident_tokens * m.kv_bytes_per_token(hw.elem_bytes))
+        + hw.t_gemm(2.0 * m.d * m.vocab);
     let decode = decode_per_token(method, m, n, hosts, hw);
     Estimate {
         prefill: bd,
         prefill_s: bd.total(),
         prefill_overlapped_s: bd.total() - comm_hidden_s,
         comm_hidden_s,
+        prefill_warm_s,
         decode_per_token_s: decode,
         oom,
         flops_total,
@@ -397,6 +420,31 @@ mod tests {
         assert!(apb.comm_hidden_s > 0.0);
         // Ring moves real volume: overlap must win something visible.
         assert!(est(Method::RingAttn, 131072.0).comm_hidden_s > 0.0);
+    }
+
+    #[test]
+    fn warm_prefill_model_bounds_and_ordering() {
+        // A prefix-cache hit skips the whole document pass: the modeled
+        // warm time must be positive (the attach still streams the cached
+        // KV) and far below even the overlapped cold time, for every
+        // method and length.
+        for method in Method::ALL {
+            for n in [32768.0, 131072.0, 524288.0] {
+                let e = est(method, n);
+                assert!(e.prefill_warm_s > 0.0, "{} @{n}", method.name());
+                assert!(e.prefill_warm_s < e.prefill_overlapped_s,
+                        "{} @{n}: warm {} !< overlapped {}", method.name(),
+                        e.prefill_warm_s, e.prefill_overlapped_s);
+                assert!(e.warm_speedup() > 1.0, "{} @{n}", method.name());
+            }
+        }
+        // SP methods split the resident KV across hosts, so their attach is
+        // cheaper than the single-device methods' full-sequence stream.
+        let e128 = |m| est(m, 131072.0).prefill_warm_s;
+        assert!(e128(Method::Apb) < e128(Method::FlashAttn));
+        // And the headline: APB's warm hit is at least an order of
+        // magnitude under its own cold prefill at 128K.
+        assert!(est(Method::Apb, 131072.0).warm_speedup() > 10.0);
     }
 
     #[test]

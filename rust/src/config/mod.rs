@@ -54,6 +54,16 @@ pub struct ApbParams {
     /// to one chunk per phase. Per-request override:
     /// [`ApbOptions::chunk_tokens`]. Must be >= 1.
     pub chunk_tokens: usize,
+    /// Shared-prefix KV reuse (`docs/ADR-003-prefix-caching.md`): when
+    /// `true`, every cold prefill freezes its document KV into the host
+    /// pool's refcounted prefix store (keyed by a rank-symmetric content
+    /// digest, see `kvcache::prefix_digest`), and a later request with the
+    /// same digest skips the per-layer document pass entirely — its session
+    /// attaches to the immutable `kvcache::SharedPrefix` entry and decodes
+    /// over a `[shared | private]` KV view, bit-identical to a cold
+    /// prefill. `false` (the default, and the pre-PR-5 behaviour) keeps
+    /// every prefill cold. CLI: `apb serve --prefix-cache`.
+    pub prefix_cache: bool,
 }
 
 impl ApbParams {
@@ -282,6 +292,12 @@ impl Config {
                 Some(v) => v.as_usize().context("field 'chunk_tokens' not a usize")?,
                 None => u(a, "query_len")? + u(a, "n_hosts")? * u(a, "block_len")?,
             },
+            // Older manifests predate the prefix store; cold-only prefill
+            // (the paper's setting) keeps them byte-for-byte compatible.
+            prefix_cache: match a.get("prefix_cache") {
+                Some(v) => v.as_bool().context("field 'prefix_cache' not a bool")?,
+                None => false,
+            },
         };
         if apb.max_resident == 0 {
             bail!("max_resident must be >= 1");
@@ -344,6 +360,15 @@ impl Config {
         }
     }
 
+    /// Toggle shared-prefix KV reuse ([`ApbParams::prefix_cache`]) on this
+    /// config. Enabling it never changes any request's logits, KV bytes or
+    /// decode comm — only whether a repeated document's prefill recomputes
+    /// (see `docs/ADR-003-prefix-caching.md`).
+    pub fn with_prefix_cache(mut self, on: bool) -> Config {
+        self.apb.prefix_cache = on;
+        self
+    }
+
     /// Rebind the cluster to another attention method (pool sizing + the
     /// default method of prefill-less sessions). Weights depend only on
     /// `seed`, so two clusters differing only in method are numerically
@@ -383,6 +408,10 @@ impl Config {
                 // Half a block per chunk step: the default sim config
                 // exercises the chunked machine (C = 2) in every test.
                 chunk_tokens: 16,
+                // Prefix caching is opt-in (Config::with_prefix_cache /
+                // `apb serve --prefix-cache`): the default keeps every
+                // tier-1 invariant test on the cold path it was written for.
+                prefix_cache: false,
             },
             1234,
         )
@@ -451,6 +480,7 @@ mod tests {
             max_new_tokens: 64,
             max_resident: 2,
             chunk_tokens: 64,
+            prefix_cache: false,
         };
         assert_eq!(a.l_aq(), 48);
         assert_eq!(a.n_tot(), 304);
@@ -475,6 +505,18 @@ mod tests {
         // Oversized chunks are fine: they degenerate to one chunk per phase.
         let big = ApbOptions { chunk_tokens: Some(10 * a.doc_len()), ..Default::default() };
         assert_eq!(a.chunk_tokens_for(&big), 10 * a.doc_len());
+    }
+
+    #[test]
+    fn prefix_cache_defaults_off_and_toggles() {
+        let c = Config::sim_tiny();
+        assert!(!c.apb.prefix_cache, "cold-only prefill is the seed default");
+        let warm = c.clone().with_prefix_cache(true);
+        assert!(warm.apb.prefix_cache);
+        // Toggling the cache must not disturb anything numeric.
+        assert_eq!(warm.seed, c.seed);
+        assert_eq!(warm.method, c.method);
+        assert!(!warm.with_prefix_cache(false).apb.prefix_cache);
     }
 
     #[test]

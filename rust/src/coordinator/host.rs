@@ -10,6 +10,12 @@
 //! bounded step (the scheduler interleaves decode ticks in between), and
 //! the final step retires the machine and reports timing — see
 //! `coordinator::prefill` and `docs/ADR-002-chunked-prefill.md`.
+//!
+//! With `ApbParams::prefix_cache` on, a digest-keyed `PrefillBegin` whose
+//! entry is resident in the pool's prefix store skips the document pass
+//! entirely (warm attach, one-step machine), and a cold completion freezes
+//! its document KV into the store; decode then runs over `[shared |
+//! private]` KV views either way — see `docs/ADR-003-prefix-caching.md`.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -60,10 +66,11 @@ struct SessionState {
     method: AttnMethod,
 }
 
-/// Payload of `Resp::PrefillDone`: accumulated prefill timing plus the
+/// Payload of `Resp::PrefillDone`: accumulated prefill timing, the
 /// per-layer/per-kv-head retained index sets (empty unless the request set
-/// `ApbOptions::record_retained`).
-type PrefillOutcome = (PrefillTiming, Vec<Vec<Vec<u32>>>);
+/// `ApbOptions::record_retained`), whether the prefill rode a prefix-cache
+/// hit, and the KV bytes that hit avoided recomputing on this host.
+type PrefillOutcome = (PrefillTiming, Vec<Vec<Vec<u32>>>, bool, u64);
 
 /// Collective round tag for a decode batch: order-sensitive digest of the
 /// session ids, so desynchronized batch composition across hosts trips the
@@ -99,13 +106,20 @@ impl HostWorker {
         // concentrates the whole sequence on host 0 (every host's pool is
         // sized alike — rank-0-only sizing would save little sim memory and
         // complicate the symmetric capacity check).
-        let pool = KvPool::new(
+        let mut pool = KvPool::new(
             cfg.apb.max_resident,
             cfg.model.n_layers,
             cfg.apb.cache_rows(cfg.method),
             cfg.model.n_kv_heads,
             cfg.model.head_dim(),
         );
+        // Shared-prefix store: one slot-equivalent per residency slot. The
+        // cap is an ENTRY count (rank-uniform) so LRU eviction decides
+        // identically on every host — per-rank entry BYTES differ (Dense
+        // stores everything on rank 0, nothing elsewhere).
+        if cfg.apb.prefix_cache {
+            pool.set_prefix_cap(cfg.apb.max_resident.max(1));
+        }
         Ok(HostWorker {
             rank,
             cfg,
@@ -140,17 +154,26 @@ impl HostWorker {
                     }
                     Resp::Cleared { host: self.rank }
                 }
-                Cmd::PrefillBegin { sid, tokens, opts } => {
-                    match self.prefill_begin(sid, &tokens, &opts) {
-                        Ok(steps) => Resp::PrefillBegun { host: self.rank, sid, steps },
+                Cmd::PrefillBegin { sid, tokens, opts, digest } => {
+                    match self.prefill_begin(sid, &tokens, &opts, digest) {
+                        Ok((steps, prefix_hit)) => {
+                            Resp::PrefillBegun { host: self.rank, sid, steps, prefix_hit }
+                        }
                         Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
                     }
                 }
                 Cmd::PrefillChunk { sid, chunk_idx } => {
                     match self.prefill_chunk(sid, chunk_idx) {
                         Ok(None) => Resp::PrefillStep { host: self.rank, sid },
-                        Ok(Some((timing, retained))) => {
-                            Resp::PrefillDone { host: self.rank, sid, timing, retained }
+                        Ok(Some((timing, retained, prefix_hit, prefix_bytes))) => {
+                            Resp::PrefillDone {
+                                host: self.rank,
+                                sid,
+                                timing,
+                                retained,
+                                prefix_hit,
+                                prefix_bytes,
+                            }
                         }
                         Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
                     }
@@ -201,19 +224,34 @@ impl HostWorker {
     /// BEFORE building any machine state, so pool exhaustion fails
     /// identically on every host as backpressure, never a deadlocked
     /// half-round — then construct the method's [`PrefillMachine`] and
-    /// return its plan length (rank-uniform by construction).
+    /// return its plan length plus the prefix-cache hit verdict (both
+    /// rank-uniform by construction; the leader asserts it).
+    ///
+    /// A digest whose entry is resident in the prefix store takes the warm
+    /// fast path: the session attaches to the immutable `SharedPrefix`
+    /// right here and the machine degenerates to one `PrefixAttach` step —
+    /// the per-layer document pass is skipped entirely.
     fn prefill_begin(
         &mut self,
         sid: SessionId,
         tokens: &[i32],
         opts: &ApbOptions,
-    ) -> Result<usize> {
+        digest: Option<u64>,
+    ) -> Result<(usize, bool)> {
         self.claim_slot(sid, opts.method)?;
+        if let Some(d) = digest {
+            if let Some(entry) = self.pool.prefix_lookup(d) {
+                self.pool.get_mut(sid)?.attach_shared(Arc::clone(&entry))?;
+                let (machine, steps) = PrefillMachine::new_warm(sid, opts, d, entry);
+                self.machines.insert(sid, machine);
+                return Ok((steps, true));
+            }
+        }
         let (machine, steps) = PrefillMachine::new(
-            self.rank, &self.cfg, sid, tokens, opts, self.backend.as_ref(),
+            self.rank, &self.cfg, sid, tokens, opts, self.backend.as_ref(), digest,
         )?;
         self.machines.insert(sid, machine);
-        Ok(steps)
+        Ok((steps, false))
     }
 
     /// Advance session `sid`'s prefill machine by one step. Returns the
@@ -242,8 +280,23 @@ impl HostWorker {
         match machine.step(&mut ctx, chunk_idx) {
             Ok(StepOutcome::Progress) => Ok(None),
             Ok(StepOutcome::Done(timing, retained)) => {
-                self.machines.remove(&sid);
-                Ok(Some((timing, retained)))
+                let machine = self.machines.remove(&sid).expect("machine vanished");
+                // Prefix-cache bookkeeping at retirement: a warm machine
+                // reports the bytes its hit avoided recomputing; a cold
+                // digest-keyed machine FREEZES its document KV into the
+                // store (moving the slot's rows into an immutable shared
+                // entry the session itself now rides — so cold and warm
+                // sessions decode through the identical [shared | private]
+                // path).
+                let (hit, bytes) = if let Some(entry) = machine.warm_entry() {
+                    (true, entry.bytes() as u64)
+                } else if let Some(d) = machine.digest() {
+                    self.pool.freeze_shared(sid, d, retained.clone())?;
+                    (false, 0)
+                } else {
+                    (false, 0)
+                };
+                Ok(Some((timing, retained, hit, bytes)))
             }
             Err(e) => {
                 // Same cancellation as Cmd::Clear: drain any posted ring
@@ -330,8 +383,12 @@ impl HostWorker {
             } else {
                 false
             };
-            let lc = &self.pool.get(sid)?.layers[li];
-            let (out, lse) = backend.decode_attn(&q, &lc.k, &lc.v, lc.len, self_causal)?;
+            // [shared | private] view: a prefix-hit session attends its
+            // shared document rows plus its own tail, bit-identical to a
+            // contiguous cold cache (one segmented kernel underneath).
+            let cache = self.pool.get(sid)?;
+            let view = cache.view(li);
+            let (out, lse) = backend.decode_attn_view(&q, &view, self_causal)?;
             tm.attn_s += sw.lap();
 
             // Gather all hosts' partials (line 9), session-tagged ...
@@ -392,8 +449,9 @@ impl HostWorker {
             // sees the prior cache plus chunk rows 0..=i) — the same rule
             // as the distributed last host's local partial.
             self.pool.get_mut(sid)?.append(li, &k, &v)?;
-            let lc = &self.pool.get(sid)?.layers[li];
-            let (att, _lse) = backend.decode_attn(&q, &lc.k, &lc.v, lc.len, true)?;
+            let cache = self.pool.get(sid)?;
+            let view = cache.view(li);
+            let (att, _lse) = backend.decode_attn_view(&q, &view, true)?;
             tm.attn_s += sw.lap();
             hidden = backend.decode_post(li, &hidden, &att)?;
             tm.post_s += sw.lap();
@@ -441,10 +499,7 @@ impl HostWorker {
             }
             let views: Vec<KvView<'_>> = entries
                 .iter()
-                .map(|&(sid, _)| {
-                    let lc = &self.pool.get(sid)?.layers[li];
-                    Ok(KvView { k: &lc.k, v: &lc.v, len: lc.len })
-                })
+                .map(|&(sid, _)| Ok(self.pool.get(sid)?.view(li)))
                 .collect::<Result<_>>()?;
             let (att, _lse) = backend.decode_attn_batch(&q, &views)?;
             tm.attn_s += sw.lap();
@@ -538,10 +593,7 @@ impl HostWorker {
             }
             let views: Vec<KvView<'_>> = entries
                 .iter()
-                .map(|&(sid, _)| {
-                    let lc = &self.pool.get(sid)?.layers[li];
-                    Ok(KvView { k: &lc.k, v: &lc.v, len: lc.len })
-                })
+                .map(|&(sid, _)| Ok(self.pool.get(sid)?.view(li)))
                 .collect::<Result<_>>()?;
             let (out, lse) = backend.decode_attn_batch(&q, &views)?;
             tm.attn_s += sw.lap();

@@ -39,6 +39,18 @@
 //! to one-shot prefill for any chunk size, so the scheduler can interleave
 //! resident sessions' decode ticks between a long admission's chunks
 //! instead of stalling them — see `docs/ADR-002-chunked-prefill.md`.
+//!
+//! With `config::ApbParams::prefix_cache` on, prefill also rides
+//! **shared-prefix KV reuse** (`docs/ADR-003-prefix-caching.md`): the
+//! leader ships a rank-symmetric `kvcache::prefix_digest` with every
+//! `Cmd::PrefillBegin`; a host whose prefix store holds the entry builds a
+//! one-step warm machine that ATTACHES the session to the immutable
+//! `kvcache::SharedPrefix` instead of recomputing (zero compute, zero
+//! comm), while a cold run freezes its document KV into the store at the
+//! final step. Hit/miss is asserted rank-uniform at begin (the
+//! digest-desync tripwire), and a warm session's logits, KV bytes and
+//! decode comm are bit-identical to a cold prefill of the same request
+//! (`rust/tests/prefix_cache.rs`).
 
 pub mod host;
 mod prefill;
@@ -70,7 +82,17 @@ pub enum Cmd {
     /// Claim the session's KV-pool slot and build its resumable
     /// `prefill::PrefillMachine` over this host's token layout. Answered
     /// by `Resp::PrefillBegun` with the (rank-uniform) plan length.
-    PrefillBegin { sid: SessionId, tokens: Arc<Vec<i32>>, opts: ApbOptions },
+    /// `digest` is the rank-symmetric prefix-cache key
+    /// (`kvcache::prefix_digest`) when the cluster runs with
+    /// `ApbParams::prefix_cache`, `None` otherwise: a digest-keyed begin
+    /// takes the warm fast path when the host's prefix store holds the
+    /// entry, and freezes its document KV into the store on a cold run.
+    PrefillBegin {
+        sid: SessionId,
+        tokens: Arc<Vec<i32>>,
+        opts: ApbOptions,
+        digest: Option<u64>,
+    },
     /// Advance the session's prefill machine by exactly one step.
     /// `chunk_idx` is the step index the leader believes it is driving —
     /// hosts verify it against their machine's progress (desync tripwire).
@@ -96,8 +118,12 @@ pub enum Cmd {
 pub enum Resp {
     /// Prefill machine built; `steps` is the total number of
     /// `Cmd::PrefillChunk` steps the leader must drive (identical on every
-    /// host — asserted by the leader).
-    PrefillBegun { host: usize, sid: SessionId, steps: usize },
+    /// host — asserted by the leader). `prefix_hit` reports whether this
+    /// host's prefix store answered the request's digest; the leader
+    /// asserts it is rank-uniform (the digest-desync tripwire — a split
+    /// verdict would run collectives on some ranks only and wedge the
+    /// fabric).
+    PrefillBegun { host: usize, sid: SessionId, steps: usize, prefix_hit: bool },
     /// One intermediate prefill step finished on this host.
     PrefillStep { host: usize, sid: SessionId },
     /// This host's KV-pool accounting snapshot.
@@ -109,7 +135,15 @@ pub enum Resp {
         /// Per-layer, per-kv-head local-block indices the compressor
         /// retained — recorded only when `ApbOptions::record_retained`
         /// (retention-recall experiments; paper §3.4), empty otherwise.
+        /// On a prefix-cache hit this is the frozen entry's record, served
+        /// verbatim (bit-identical to the cold run that froze it).
         retained: Vec<Vec<Vec<u32>>>,
+        /// Whether this prefill attached to a shared prefix instead of
+        /// computing (rank-uniform; see `Resp::PrefillBegun`).
+        prefix_hit: bool,
+        /// KV bytes this host did NOT recompute thanks to the hit (the
+        /// shared entry's bytes on this rank; 0 on a cold prefill).
+        prefix_bytes: u64,
     },
     /// Only the last host computes logits (all hosts hold identical hidden
     /// states after the merge, so one LM head suffices).
@@ -157,6 +191,8 @@ pub struct PrefillProgress {
     comm_bytes: u64,
     per_host: Vec<PrefillTiming>,
     retained: Vec<Vec<Vec<Vec<u32>>>>,
+    prefix_hit: bool,
+    prefix_bytes_saved: u64,
 }
 
 impl PrefillProgress {
@@ -168,6 +204,12 @@ impl PrefillProgress {
     /// Steps already driven.
     pub fn steps_done(&self) -> usize {
         self.next
+    }
+
+    /// Whether this prefill attached to a cached shared prefix (warm) —
+    /// known from `prefill_begin`, before any step is driven.
+    pub fn prefix_hit(&self) -> bool {
+        self.prefix_hit
     }
 }
 
@@ -182,6 +224,12 @@ pub struct PrefillReport {
     pub retained: Vec<Vec<Vec<Vec<u32>>>>,
     pub wall_seconds: f64,
     pub comm_bytes: u64,
+    /// Whether this request's prefill attached to a cached shared prefix
+    /// (`docs/ADR-003-prefix-caching.md`) instead of recomputing. Always
+    /// `false` when the cluster runs without `ApbParams::prefix_cache`.
+    pub prefix_hit: bool,
+    /// KV bytes the hit avoided recomputing, summed across hosts (0 cold).
+    pub prefix_bytes_saved: u64,
 }
 
 impl PrefillReport {
@@ -432,20 +480,41 @@ impl Cluster {
         opts: &ApbOptions,
     ) -> Result<PrefillProgress> {
         let t0 = std::time::Instant::now();
+        // Rank-symmetric prefix-cache key: computed once here from the FULL
+        // request (hosts only see their per-rank token layouts) and shipped
+        // with the begin, so every host looks up the same digest.
+        let digest = self
+            .cfg
+            .apb
+            .prefix_cache
+            .then(|| crate::kvcache::prefix_digest(&self.cfg, doc, query, opts));
         for (rank, h) in self.hosts.iter().enumerate() {
             let tokens = Arc::new(host_tokens_for(&self.cfg, doc, query, rank, opts));
             h.cmd_tx
-                .send(Cmd::PrefillBegin { sid, tokens, opts: *opts })
+                .send(Cmd::PrefillBegin { sid, tokens, opts: *opts, digest })
                 .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
         }
         let mut steps: Vec<usize> = Vec::with_capacity(self.hosts.len());
+        let mut hits: Vec<bool> = Vec::with_capacity(self.hosts.len());
         self.collect(self.hosts.len(), |r| {
-            if let Resp::PrefillBegun { steps: s, sid: rsid, .. } = r {
+            if let Resp::PrefillBegun { steps: s, sid: rsid, prefix_hit, .. } = r {
                 debug_assert_eq!(rsid, sid);
                 steps.push(s);
+                hits.push(prefix_hit);
             }
             Ok(())
         })?;
+        // Digest-desync tripwire: hit/miss must be rank-uniform (the stores
+        // evolve in leader lockstep, so a split verdict means a host's
+        // store diverged — running collectives on a subset of ranks would
+        // wedge the fabric).
+        let prefix_hit = hits[0];
+        if hits.iter().any(|&h| h != prefix_hit) {
+            bail!(
+                "prefix-cache digest desync for session {sid}: per-host \
+                 hit verdicts {hits:?} are not rank-uniform"
+            );
+        }
         let n_steps = steps[0];
         if steps.iter().any(|&s| s != n_steps) {
             bail!("hosts disagree on the prefill plan length: {steps:?}");
@@ -458,6 +527,8 @@ impl Cluster {
             comm_bytes: 0,
             per_host: vec![PrefillTiming::default(); self.hosts.len()],
             retained: vec![Vec::new(); self.hosts.len()],
+            prefix_hit,
+            prefix_bytes_saved: 0,
         })
     }
 
@@ -495,6 +566,8 @@ impl Cluster {
             retained: std::mem::take(&mut p.retained),
             wall_seconds: p.wall_seconds,
             comm_bytes: p.comm_bytes,
+            prefix_hit: p.prefix_hit,
+            prefix_bytes_saved: p.prefix_bytes_saved,
         }))
     }
 
@@ -505,15 +578,17 @@ impl Cluster {
         self.broadcast(Cmd::PrefillChunk { sid: p.sid, chunk_idx: p.next })?;
         let per_host = &mut p.per_host;
         let retained = &mut p.retained;
+        let saved = &mut p.prefix_bytes_saved;
         self.collect(self.hosts.len(), |r| match r {
             Resp::PrefillStep { .. } => {
                 debug_assert!(!last, "host finished early");
                 Ok(())
             }
-            Resp::PrefillDone { host, timing, retained: ret, .. } => {
+            Resp::PrefillDone { host, timing, retained: ret, prefix_bytes, .. } => {
                 debug_assert!(last, "host finished late");
                 per_host[host] = timing;
                 retained[host] = ret;
+                *saved += prefix_bytes;
                 Ok(())
             }
             _ => Ok(()),
@@ -544,7 +619,13 @@ impl Cluster {
     pub fn pool_stats(&self) -> Result<Vec<PoolStats>> {
         self.broadcast(Cmd::PoolStats)?;
         let mut stats = vec![
-            PoolStats { resident: 0, bytes_used: 0, bytes_reserved: 0 };
+            PoolStats {
+                resident: 0,
+                bytes_used: 0,
+                bytes_reserved: 0,
+                prefix_entries: 0,
+                prefix_bytes: 0,
+            };
             self.hosts.len()
         ];
         self.collect(self.hosts.len(), |r| {
@@ -732,6 +813,7 @@ mod tests {
                 max_new_tokens: 4,
                 max_resident: 2,
                 chunk_tokens: 4,
+                prefix_cache: false,
             },
             0,
         )

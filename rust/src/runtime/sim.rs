@@ -124,18 +124,62 @@ fn silu(x: f64) -> f64 {
 /// `i / (h/kh)`. `visible(qi, kj)` is the boolean mask. Returns
 /// `(out [nq, h, hd], lse [nq, h])`; rows with no visible keys get output 0
 /// and lse `-inf` (the convention the online-softmax merge relies on).
+///
+/// This IS [`masked_attention_seg`] over a single segment spanning every
+/// row of `k`/`v` — one kernel, two entry points, so attending a
+/// `[shared | private]` prefix-cache view is bit-identical to attending the
+/// contiguous cache it replaces (the invariant
+/// `docs/ADR-003-prefix-caching.md` rests on).
 pub fn masked_attention<F: Fn(usize, usize) -> bool>(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     visible: F,
 ) -> (Tensor, Tensor) {
+    let seg = super::KvSeg { k, v, len: k.shape[0] };
+    masked_attention_seg(q, &[seg], visible)
+}
+
+/// Segmented masked GQA attention: the logical key/value sequence is the
+/// in-order concatenation of `segs` (each contributing its first `len`
+/// rows), attended WITHOUT materializing the concatenation — the kernel the
+/// prefix cache's `[shared | private]` KV views decode through.
+///
+/// `visible(qi, kj)` masks over the *logical* key index `kj` (0-based
+/// across segments in order). The per-(row, head) f64 accumulation walks
+/// keys in logical order, so for equal row values the result is
+/// bit-identical to [`masked_attention`] over the contiguous equivalent.
+pub fn masked_attention_seg<F: Fn(usize, usize) -> bool>(
+    q: &Tensor,
+    segs: &[super::KvSeg<'_>],
+    visible: F,
+) -> (Tensor, Tensor) {
     assert_eq!(q.rank(), 3);
-    assert_eq!(k.rank(), 3);
-    assert_eq!(k.shape, v.shape);
     let (nq, h, hd) = (q.shape[0], q.shape[1], q.shape[2]);
-    let (nk, kh) = (k.shape[0], k.shape[1]);
-    assert_eq!(k.shape[2], hd);
+    let kh = segs.first().map_or(1, |s| s.k.shape[1]);
+    for s in segs {
+        assert_eq!(s.k.rank(), 3);
+        assert_eq!(s.k.shape, s.v.shape);
+        assert!(s.len <= s.k.shape[0], "segment len {} > rows {}", s.len, s.k.shape[0]);
+        assert_eq!(s.k.shape[1], kh, "segments disagree on kv heads");
+        assert_eq!(s.k.shape[2], hd, "segments disagree on head dim");
+    }
+    // Logical key kj -> (segment, local row). The single-segment case — the
+    // wrapper every pre-existing prefill/decode kernel goes through — is
+    // the identity map, kept allocation- and indirection-free so unifying
+    // the kernels costs the hot cold path nothing (the mapping never
+    // changes values, only where a row is fetched from).
+    let single = segs.len() == 1;
+    let mut src: Vec<(usize, usize)> = Vec::new();
+    if !single {
+        for (si, s) in segs.iter().enumerate() {
+            src.extend((0..s.len).map(|r| (si, r)));
+        }
+    }
+    let nk = if single { segs[0].len } else { src.len() };
+    let locate = |kj: usize| -> (usize, usize) {
+        if single { (0, kj) } else { src[kj] }
+    };
     assert_eq!(h % kh, 0, "GQA heads {h} not divisible by kv heads {kh}");
     let g = h / kh;
     let scale = 1.0 / (hd as f64).sqrt();
@@ -159,10 +203,12 @@ pub fn masked_attention<F: Fn(usize, usize) -> bool>(
             }
             let mut m = f64::NEG_INFINITY;
             for &kj in &vis_idx {
-                let kb = (kj * kh + j) * hd;
+                let (si, r) = locate(kj);
+                let kb = (r * kh + j) * hd;
+                let kd = &segs[si].k.data;
                 let mut dot = 0f64;
                 for d in 0..hd {
-                    dot += q.data[qb + d] as f64 * k.data[kb + d] as f64;
+                    dot += q.data[qb + d] as f64 * kd[kb + d] as f64;
                 }
                 let s = dot * scale;
                 scores[kj] = s;
@@ -175,8 +221,9 @@ pub fn masked_attention<F: Fn(usize, usize) -> bool>(
             for &kj in &vis_idx {
                 let w = (scores[kj] - m).exp();
                 denom += w;
-                let vb = (kj * kh + j) * hd;
-                for (slot, &vv) in acc.iter_mut().zip(&v.data[vb..vb + hd]) {
+                let (si, r) = locate(kj);
+                let vb = (r * kh + j) * hd;
+                for (slot, &vv) in acc.iter_mut().zip(&segs[si].v.data[vb..vb + hd]) {
                     *slot += w * vv as f64;
                 }
             }
@@ -663,9 +710,11 @@ impl ExecBackend for SimEngine {
     }
 
     /// Fused batched decode attention: all sessions' rows in one pass, each
-    /// row masked to its own cache's valid prefix. Numerically identical to
-    /// the per-row default (the dense attention is row-independent), but a
-    /// single engine invocation — the sim twin of a batched decode kernel.
+    /// row masked to its own cache's valid rows — a `[shared | private]`
+    /// prefix-cache view or a plain private tail alike. Numerically
+    /// identical to the per-row default (the dense attention is
+    /// row-independent), but a single engine invocation — the sim twin of a
+    /// batched decode kernel.
     fn decode_attn_batch(
         &self,
         q: &Tensor,
@@ -678,8 +727,9 @@ impl ExecBackend for SimEngine {
         let mut out = Tensor::zeros(vec![b, h, hd]);
         let mut lse = Tensor::zeros(vec![b, h]);
         for (i, c) in caches.iter().enumerate() {
+            let total = c.len();
             let (o, l) =
-                masked_attention(&q.slice_rows(i, i + 1), c.k, c.v, |_, kj| kj < c.len);
+                masked_attention_seg(&q.slice_rows(i, i + 1), &c.segs(), |_, kj| kj < total);
             out.write_rows(i, &o);
             lse.write_rows(i, &l);
         }
@@ -740,7 +790,7 @@ mod tests {
 
     #[test]
     fn decode_attn_batch_matches_per_row() {
-        use crate::runtime::{ExecBackend, KvView};
+        use crate::runtime::{ExecBackend, KvSeg, KvView};
         let e = engine();
         let (h, kh, hd) = (e.model.n_heads, e.model.n_kv_heads, e.model.head_dim());
         let mut rng = Rng::new(21);
@@ -754,23 +804,76 @@ mod tests {
         let v1 = rand(&mut rng, vec![8, kh, hd]);
         let k2 = rand(&mut rng, vec![8, kh, hd]);
         let v2 = rand(&mut rng, vec![8, kh, hd]);
+        let tail = |k, v, len| KvView { shared: None, tail: KvSeg { k, v, len } };
         let views = [
-            KvView { k: &k1, v: &v1, len: 5 },
-            KvView { k: &k2, v: &v2, len: 2 },
-            KvView { k: &k1, v: &v1, len: 0 }, // empty cache row
+            tail(&k1, &v1, 5),
+            tail(&k2, &v2, 2),
+            tail(&k1, &v1, 0), // empty cache row
         ];
         let (out, lse) = e.decode_attn_batch(&q, &views).unwrap();
         assert_eq!(out.shape, vec![3, h, hd]);
         assert_eq!(lse.shape, vec![3, h]);
         for (i, view) in views.iter().enumerate() {
             let (o, l) = e
-                .decode_attn(&q.slice_rows(i, i + 1), view.k, view.v, view.len, false)
+                .decode_attn(&q.slice_rows(i, i + 1), view.tail.k, view.tail.v,
+                             view.tail.len, false)
                 .unwrap();
             assert_eq!(out.slice_rows(i, i + 1), o, "row {i} out");
             assert_eq!(lse.slice_rows(i, i + 1), l, "row {i} lse");
         }
         // Empty-cache row follows the -inf LSE convention for the merge.
         assert!(lse.slice_rows(2, 3).data.iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn segmented_attention_bitwise_matches_contiguous() {
+        // THE prefix-cache numeric anchor: attending a [shared | tail] view
+        // must be BIT-identical (not merely close) to attending the
+        // contiguous concatenation, for every split point — same key order,
+        // same f64 accumulation order, one kernel.
+        use crate::runtime::{ExecBackend, KvSeg, KvView};
+        let e = engine();
+        let (h, kh, hd) = (e.model.n_heads, e.model.n_kv_heads, e.model.head_dim());
+        let mut rng = Rng::new(0x5E6);
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        let q = rand(&mut rng, vec![2, h, hd]);
+        let nk = 9usize;
+        let k = rand(&mut rng, vec![nk, kh, hd]);
+        let v = rand(&mut rng, vec![nk, kh, hd]);
+        for n_valid in [0usize, 1, 5, nk] {
+            let (full, full_lse) =
+                e.decode_attn(&q, &k, &v, n_valid, false).unwrap();
+            for split in 0..=n_valid {
+                let shared_k = k.slice_rows(0, split);
+                let shared_v = v.slice_rows(0, split);
+                let tail_k = k.slice_rows(split, nk); // padded past n_valid
+                let tail_v = v.slice_rows(split, nk);
+                let view = KvView {
+                    shared: Some(KvSeg { k: &shared_k, v: &shared_v, len: split }),
+                    tail: KvSeg { k: &tail_k, v: &tail_v, len: n_valid - split },
+                };
+                let (o, l) = e.decode_attn_view(&q, &view, false).unwrap();
+                assert_eq!(o, full, "valid {n_valid} split {split} out");
+                assert_eq!(l, full_lse, "valid {n_valid} split {split} lse");
+            }
+        }
+        // Self-causal rule over the combined length: row 0 of a 2-row chunk
+        // sees one key fewer than row 1, exactly as on a contiguous cache.
+        let (full, full_lse) = e.decode_attn(&q, &k, &v, 6, true).unwrap();
+        let sk = k.slice_rows(0, 4);
+        let sv = v.slice_rows(0, 4);
+        let tk = k.slice_rows(4, nk);
+        let tv = v.slice_rows(4, nk);
+        let view = KvView {
+            shared: Some(KvSeg { k: &sk, v: &sv, len: 4 }),
+            tail: KvSeg { k: &tk, v: &tv, len: 2 },
+        };
+        let (o, l) = e.decode_attn_view(&q, &view, true).unwrap();
+        assert_eq!(o, full, "self-causal out");
+        assert_eq!(l, full_lse, "self-causal lse");
     }
 
     #[test]
