@@ -18,7 +18,7 @@
 use apb::bench_harness::Table;
 use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
-use apb::coordinator::Cluster;
+use apb::coordinator::{Cluster, Driver};
 use apb::ruler::{gen_instance, TaskKind};
 use apb::util::cli::Args;
 use apb::util::rng::Rng;
@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["smoke", "prefix-cache"])?;
     args.check_known(&[
         "requests", "config", "max-new", "queue", "seed", "method", "chunk-tokens",
+        "driver",
     ])?;
     let n_requests = args.usize_or("requests", 6)?;
     let max_new = args.usize_or("max-new", 6)?;
@@ -35,6 +36,11 @@ fn main() -> anyhow::Result<()> {
     let seed = args.usize_or("seed", 7)? as u64;
     let method = AttnMethod::parse(&args.str_or("method", "apb"))?;
     let prefix_cache = args.has("prefix-cache");
+    let driver = match args.get("driver") {
+        Some(s) => Driver::parse(s).ok_or_else(|| anyhow::anyhow!(
+            "--driver={s} is not a driver (expected sequential|threaded)"))?,
+        None => Driver::from_env(),
+    };
 
     let mut cfg = apb::load_config_or_sim(&config)?
         .with_method(method)
@@ -47,9 +53,9 @@ fn main() -> anyhow::Result<()> {
         cfg.model.vocab_size, cfg.apb.doc_len(), cfg.apb.max_resident
     );
     let t_start = std::time::Instant::now();
-    let cluster = Cluster::start(&cfg)?;
-    println!("cluster up in {:.1}s (compile + weight upload per host)",
-             t_start.elapsed().as_secs_f64());
+    let cluster = Cluster::start_with(&cfg, driver)?;
+    println!("cluster up in {:.1}s (compile + weight upload per host, {} driver)",
+             t_start.elapsed().as_secs_f64(), cluster.driver().name());
 
     let mut scheduler = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let mut rng = Rng::new(seed);

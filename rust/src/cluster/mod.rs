@@ -16,17 +16,27 @@
 //! StarAttn charges no prefill label (its blocks never move) and Dense
 //! charges nothing at all. The full method × label matrix lives in
 //! `docs/architecture.md`.
+//!
+//! The two concrete primitives share the [`Fabric`] trait (post / complete
+//! / cancel with structured [`ClusterError`] timeouts), so the coordinator
+//! is generic over which collective a step rides; [`Interconnect`] is the
+//! bundle of all three labeled instances handed to every host worker.
 
 pub mod collectives;
 
-pub use collectives::{Collective, CommMeter, RingExchange};
+pub use collectives::{
+    complete_accounted, ClusterError, Collective, CommMeter, Fabric, Receipt, RingExchange,
+    RoundWindow, WireModel,
+};
 
 use std::sync::Arc;
+use std::time::Duration;
 
 type TensorPair = (crate::util::tensor::Tensor, crate::util::tensor::Tensor);
 
-/// Shared fabric handed to every host worker.
-pub struct Fabric {
+/// Shared interconnect handed to every host worker: the three labeled
+/// collectives plus their common byte meter.
+pub struct Interconnect {
     pub n_hosts: usize,
     /// AllGather used during prefill for compressed (K_c, V_c) blocks.
     pub kv_gather: Collective<TensorPair>,
@@ -38,21 +48,37 @@ pub struct Fabric {
     pub meter: Arc<CommMeter>,
 }
 
-impl Fabric {
-    pub fn new(n_hosts: usize) -> Arc<Fabric> {
+impl Interconnect {
+    pub fn new(n_hosts: usize) -> Arc<Interconnect> {
         let meter = Arc::new(CommMeter::default());
-        Arc::new(Fabric {
+        Arc::new(Interconnect {
             n_hosts,
-            kv_gather: Collective::labeled(n_hosts, Fabric::KV_LABEL, Arc::clone(&meter)),
-            att_gather: Collective::labeled(n_hosts, Fabric::ATT_LABEL, Arc::clone(&meter)),
-            ring_pass: RingExchange::labeled(n_hosts, Fabric::RING_LABEL,
+            kv_gather: Collective::labeled(n_hosts, Interconnect::KV_LABEL, Arc::clone(&meter)),
+            att_gather: Collective::labeled(n_hosts, Interconnect::ATT_LABEL, Arc::clone(&meter)),
+            ring_pass: RingExchange::labeled(n_hosts, Interconnect::RING_LABEL,
                                              Arc::clone(&meter)),
             meter,
         })
     }
+
+    /// Apply one [`WireModel`] to all three collectives (see
+    /// `benches/fig1_prefill`: a modeled wire gives compute a real window
+    /// to hide behind so overlap can be *measured*).
+    pub fn set_wire(&self, wire: WireModel) {
+        self.kv_gather.set_wire(wire);
+        self.att_gather.set_wire(wire);
+        self.ring_pass.set_wire(wire);
+    }
+
+    /// Apply one rendezvous timeout to all three collectives.
+    pub fn set_round_timeout(&self, timeout: Duration) {
+        self.kv_gather.set_timeout(timeout);
+        self.att_gather.set_timeout(timeout);
+        self.ring_pass.set_timeout(timeout);
+    }
 }
 
-impl Fabric {
+impl Interconnect {
     /// Meter label of the prefill compressed-KV AllGather.
     pub const KV_LABEL: &'static str = "kv";
     /// Meter label of the decode partial-attention AllGather.
@@ -70,7 +96,7 @@ mod tests {
     #[test]
     fn fabric_allgather_kv_roundtrip() {
         let n = 4;
-        let fabric = Fabric::new(n);
+        let fabric = Interconnect::new(n);
         let mut handles = Vec::new();
         for rank in 0..n {
             let f = Arc::clone(&fabric);
@@ -92,7 +118,7 @@ mod tests {
     #[test]
     fn fabric_ring_pass_rotates_and_meters_separately() {
         let n = 3;
-        let fabric = Fabric::new(n);
+        let fabric = Interconnect::new(n);
         let mut handles = Vec::new();
         for rank in 0..n {
             let f = Arc::clone(&fabric);
@@ -105,15 +131,15 @@ mod tests {
         for (rank, h) in handles.into_iter().enumerate() {
             assert_eq!(h.join().unwrap(), (rank + n - 1) % n, "from predecessor");
         }
-        assert_eq!(fabric.meter.bytes_for(Fabric::RING_LABEL), (n * 2 * 4) as u64);
-        assert_eq!(fabric.meter.bytes_for(Fabric::KV_LABEL), 0);
+        assert_eq!(fabric.meter.bytes_for(Interconnect::RING_LABEL), (n * 2 * 4) as u64);
+        assert_eq!(fabric.meter.bytes_for(Interconnect::KV_LABEL), 0);
     }
 
     #[test]
     fn fabric_repeated_rounds_do_not_cross() {
         let n = 3;
         let rounds = 25;
-        let fabric = Fabric::new(n);
+        let fabric = Interconnect::new(n);
         let mut handles = Vec::new();
         for rank in 0..n {
             let f = Arc::clone(&fabric);
@@ -131,5 +157,28 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn interconnect_wire_and_timeout_apply_to_all_collectives() {
+        // A wedged single-rank... not possible with n=1 (rounds complete at
+        // post), so use n=2 and check the timeout took effect on each
+        // collective by timing out with one lone poster.
+        let fabric = Interconnect::new(2);
+        fabric.set_round_timeout(Duration::from_millis(10));
+        fabric.set_wire(WireModel::Instant);
+        let t = || Tensor::new(vec![1], vec![1.0]).unwrap();
+
+        let r = fabric.kv_gather.post_tagged(0, 1, (t(), t()));
+        assert!(fabric.kv_gather.complete(0, &r).is_err());
+        fabric.kv_gather.cancel(0, r);
+
+        let r = fabric.att_gather.post_tagged(0, 1, (t(), t()));
+        assert!(fabric.att_gather.complete(0, &r).is_err());
+        fabric.att_gather.cancel(0, r);
+
+        let r = fabric.ring_pass.post_tagged(0, 1, (t(), t()));
+        assert!(fabric.ring_pass.complete(0, &r).is_err());
+        fabric.ring_pass.cancel(0, r);
     }
 }

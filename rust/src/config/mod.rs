@@ -186,7 +186,7 @@ impl AttnMethod {
     }
 
     /// Meter labels this method's *prefill* can charge (see
-    /// `cluster::Fabric` label constants).
+    /// `cluster::Interconnect` label constants).
     pub fn prefill_comm_labels(&self) -> &'static [&'static str] {
         match self {
             AttnMethod::Apb => &["kv"],

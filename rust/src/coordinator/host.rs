@@ -5,6 +5,18 @@
 //! decode for APB/StarAttn, the ring rotation for RingAttn, single-host
 //! causal for Dense) and participates in fabric collectives.
 //!
+//! The worker is **driver-agnostic** (`docs/ADR-004-threaded-hosts.md`):
+//! every [`Envelope`] is accepted by [`HostWorker::begin`], which either
+//! finishes immediately ([`Begun::Done`]) or returns a resumable
+//! [`DecodeJob`] whose [`HostWorker::job_step`] advances one bounded
+//! microstep — at most one fabric `post` or one `complete` per call, never
+//! both. Under the threaded driver each host's [`run_host`] loop spins the
+//! job to completion on its own OS thread (blocking on real rendezvous);
+//! under the sequential oracle the leader round-robins `job_step` across
+//! ranks in rank order, which by the microstep invariant never blocks:
+//! every rank posts a round at the same step index and completes it at a
+//! strictly later one.
+//!
 //! Prefill is **resumable**: `Cmd::PrefillBegin` claims the KV slot and
 //! builds a `PrefillMachine`; each `Cmd::PrefillChunk` advances it one
 //! bounded step (the scheduler interleaves decode ticks in between), and
@@ -23,7 +35,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::Fabric;
+use crate::cluster::{complete_accounted, Interconnect, Receipt};
 use crate::config::{ApbOptions, AttnMethod, Config};
 use crate::kvcache::{KvPool, SessionId};
 use crate::runtime::{create_backend, ExecBackend, KvView};
@@ -31,13 +43,15 @@ use crate::util::tensor::{merge_partials, Tensor};
 
 use super::prefill::{PrefillMachine, StepCtx, StepOutcome};
 use super::timing::{DecodeTiming, PrefillTiming, Stopwatch};
-use super::{Cmd, Resp};
+use super::{Cmd, Envelope, Resp};
 
+/// Threaded-driver entry point: construct the worker, signal readiness,
+/// then serve envelopes until `Cmd::Shutdown` or a hung-up channel.
 pub fn run_host(
     rank: usize,
     cfg: Config,
-    fabric: Arc<Fabric>,
-    cmd_rx: Receiver<Cmd>,
+    fabric: Arc<Interconnect>,
+    cmd_rx: Receiver<Envelope>,
     resp_tx: Sender<Resp>,
     ready_tx: Sender<Result<usize>>,
 ) {
@@ -72,21 +86,45 @@ struct SessionState {
 /// hit, and the KV bytes that hit avoided recomputing on this host.
 type PrefillOutcome = (PrefillTiming, Vec<Vec<Vec<u32>>>, bool, u64);
 
-/// Collective round tag for a decode batch: order-sensitive digest of the
-/// session ids, so desynchronized batch composition across hosts trips the
-/// fabric's tag assertion instead of silently merging the wrong partials.
-fn batch_tag(entries: &[(SessionId, i32)]) -> u64 {
-    entries
-        .iter()
-        .fold(0x517C_C1B7_2722_0A95u64, |acc, (sid, _)| {
-            acc.wrapping_mul(0x100_0000_01B3).wrapping_add(sid ^ 0x9E37_79B9_7F4A_7C15)
-        })
+/// What a distributed decode job is stepping over.
+enum JobKind {
+    /// One session's multi-row chunk (the re-fed query).
+    Chunk { sid: SessionId, n_rows: usize },
+    /// Continuous-batching step: one single-token row per session, leader
+    /// entry order fixed across hosts.
+    Batch { entries: Vec<(SessionId, i32)> },
 }
 
-struct HostWorker {
+/// A resumable distributed decode pass (Algorithm 3): per-layer carry
+/// state between [`HostWorker::job_step`] microsteps. `awaiting` holds the
+/// receipt of the layer's posted-but-incomplete partial-attention gather —
+/// its presence IS the job's phase bit (post half done, complete half
+/// pending).
+pub(crate) struct DecodeJob {
+    kind: JobKind,
+    /// Fabric round tag (session id for chunks, the leader's batch digest
+    /// for batches — shipped in the [`Envelope`]).
+    tag: u64,
+    hidden: Tensor,
+    positions: Vec<i32>,
+    /// Next layer to run (== n_layers when only the finish step remains).
+    li: usize,
+    awaiting: Option<Receipt>,
+    tm: DecodeTiming,
+    t0: std::time::Instant,
+}
+
+/// Outcome of [`HostWorker::begin`]: either the envelope finished in one
+/// call, or it opened a [`DecodeJob`] the driver must step to completion.
+pub(crate) enum Begun {
+    Done(Resp),
+    Job(DecodeJob),
+}
+
+pub(crate) struct HostWorker {
     rank: usize,
     cfg: Config,
-    fabric: Arc<Fabric>,
+    fabric: Arc<Interconnect>,
     backend: Box<dyn ExecBackend>,
     pool: KvPool,
     sessions: HashMap<SessionId, SessionState>,
@@ -98,7 +136,7 @@ struct HostWorker {
 }
 
 impl HostWorker {
-    fn new(rank: usize, cfg: Config, fabric: Arc<Fabric>) -> Result<Self> {
+    pub(crate) fn new(rank: usize, cfg: Config, fabric: Arc<Interconnect>) -> Result<Self> {
         let backend = create_backend(&cfg)
             .with_context(|| format!("host {rank}: creating {} backend", cfg.backend.name()))?;
         // Slot capacity follows the cluster's method: distributed modes
@@ -131,74 +169,225 @@ impl HostWorker {
         })
     }
 
-    fn serve(&mut self, cmd_rx: Receiver<Cmd>, resp_tx: Sender<Resp>) {
-        while let Ok(cmd) = cmd_rx.recv() {
-            let resp = match cmd {
-                Cmd::Shutdown => break,
-                Cmd::Clear { sid } => {
-                    self.pool.free(sid);
-                    self.sessions.remove(&sid);
-                    // An in-flight machine is cancelled, not just dropped:
-                    // abort() drains any posted ring round so the fabric
-                    // stays clean for the next session.
-                    if let Some(m) = self.machines.remove(&sid) {
-                        m.abort(self.rank, &self.fabric);
+    /// Threaded serve loop: one envelope in, one response out. A job spins
+    /// inline — this thread owns the host, so blocking in `complete` is
+    /// exactly the real-cluster behavior (bounded by the round timeout).
+    fn serve(&mut self, cmd_rx: Receiver<Envelope>, resp_tx: Sender<Resp>) {
+        while let Ok(env) = cmd_rx.recv() {
+            if matches!(env.body, Cmd::Shutdown) {
+                break;
+            }
+            let resp = match self.begin(env) {
+                Begun::Done(resp) => resp,
+                Begun::Job(mut job) => loop {
+                    if let Some(resp) = self.job_step(&mut job) {
+                        break resp;
                     }
-                    Resp::Cleared { host: self.rank }
-                }
-                Cmd::ClearAll => {
-                    self.pool.clear_all();
-                    self.sessions.clear();
-                    for (_, m) in self.machines.drain() {
-                        m.abort(self.rank, &self.fabric);
-                    }
-                    Resp::Cleared { host: self.rank }
-                }
-                Cmd::PrefillBegin { sid, tokens, opts, digest } => {
-                    match self.prefill_begin(sid, &tokens, &opts, digest) {
-                        Ok((steps, prefix_hit)) => {
-                            Resp::PrefillBegun { host: self.rank, sid, steps, prefix_hit }
-                        }
-                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-                    }
-                }
-                Cmd::PrefillChunk { sid, chunk_idx } => {
-                    match self.prefill_chunk(sid, chunk_idx) {
-                        Ok(None) => Resp::PrefillStep { host: self.rank, sid },
-                        Ok(Some((timing, retained, prefix_hit, prefix_bytes))) => {
-                            Resp::PrefillDone {
-                                host: self.rank,
-                                sid,
-                                timing,
-                                retained,
-                                prefix_hit,
-                                prefix_bytes,
-                            }
-                        }
-                        Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-                    }
-                }
-                Cmd::PoolStats => Resp::PoolStats {
-                    host: self.rank,
-                    stats: self.pool.stats(),
-                },
-                Cmd::QueryChunk { sid, tokens } => match self.decode_pass(sid, &tokens) {
-                    Ok((logits, timing)) => {
-                        Resp::StepDone { host: self.rank, sid, logits, timing }
-                    }
-                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-                },
-                Cmd::DecodeBatch { entries } => match self.decode_batch(&entries) {
-                    Ok((logits, timing)) => {
-                        Resp::BatchDone { host: self.rank, logits, timing }
-                    }
-                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
                 },
             };
             if resp_tx.send(resp).is_err() {
                 break; // leader gone
             }
         }
+    }
+
+    /// Accept one envelope. All validation and every immediate (collective-
+    /// free) command finishes here; distributed decodes return a
+    /// [`DecodeJob`] for the driver to step. Errors are folded into
+    /// `Resp::Error` — `begin` itself is infallible so both drivers share
+    /// one dispatch surface.
+    pub(crate) fn begin(&mut self, env: Envelope) -> Begun {
+        let Envelope { sid, tag, body } = env;
+        let resp = match body {
+            // The threaded serve loop intercepts Shutdown before begin and
+            // the sequential driver never dispatches it.
+            Cmd::Shutdown => unreachable!("Shutdown is intercepted by the serve loop"),
+            Cmd::Clear => {
+                self.pool.free(sid);
+                self.sessions.remove(&sid);
+                // An in-flight machine is cancelled, not just dropped:
+                // abort() drains any posted fabric round so the collectives
+                // stay clean for the next session.
+                if let Some(m) = self.machines.remove(&sid) {
+                    m.abort(self.rank, &self.fabric);
+                }
+                Resp::Cleared { host: self.rank }
+            }
+            Cmd::ClearAll => {
+                self.pool.clear_all();
+                self.sessions.clear();
+                for (_, m) in self.machines.drain() {
+                    m.abort(self.rank, &self.fabric);
+                }
+                Resp::Cleared { host: self.rank }
+            }
+            Cmd::PrefillBegin { tokens, opts, digest } => {
+                match self.prefill_begin(sid, &tokens, &opts, digest) {
+                    Ok((steps, prefix_hit)) => {
+                        Resp::PrefillBegun { host: self.rank, sid, steps, prefix_hit }
+                    }
+                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                }
+            }
+            Cmd::PrefillChunk { chunk_idx } => match self.prefill_chunk(sid, chunk_idx) {
+                Ok(None) => Resp::PrefillStep { host: self.rank, sid },
+                Ok(Some((timing, retained, prefix_hit, prefix_bytes))) => Resp::PrefillDone {
+                    host: self.rank,
+                    sid,
+                    timing,
+                    retained,
+                    prefix_hit,
+                    prefix_bytes,
+                },
+                Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+            },
+            Cmd::PoolStats => Resp::PoolStats { host: self.rank, stats: self.pool.stats() },
+            Cmd::QueryChunk { tokens } => match self.decode_begin(sid, tag, &tokens) {
+                Ok(begun) => return begun,
+                Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+            },
+            Cmd::DecodeBatch { entries } => match self.decode_batch_begin(tag, entries.to_vec()) {
+                Ok(begun) => return begun,
+                Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+            },
+        };
+        Begun::Done(resp)
+    }
+
+    /// Advance a decode job by one microstep (at most one fabric post OR
+    /// one complete). `Some(resp)` when the job retired. Errors fold into
+    /// `Resp::Error` like `begin`.
+    pub(crate) fn job_step(&mut self, job: &mut DecodeJob) -> Option<Resp> {
+        match self.job_step_inner(job) {
+            Ok(done) => done,
+            Err(e) => Some(Resp::Error { host: self.rank, msg: format!("{e:#}") }),
+        }
+    }
+
+    fn job_step_inner(&mut self, job: &mut DecodeJob) -> Result<Option<Resp>> {
+        // Complete half: the layer's gather was posted by the previous
+        // microstep; finish it, merge, run decode_post.
+        if let Some(receipt) = job.awaiting.take() {
+            let all = match complete_accounted(
+                &self.fabric.att_gather,
+                self.rank,
+                &receipt,
+                &mut job.tm.comm_s,
+                &mut job.tm.comm_window_s,
+                &mut job.tm.comm_hidden_s,
+            ) {
+                Ok(all) => all,
+                Err(e) => {
+                    // Decode jobs have no resume path — drain the round so
+                    // the fabric survives this job's death.
+                    self.fabric.att_gather.cancel(self.rank, receipt);
+                    return Err(e.into());
+                }
+            };
+            let mut sw = Stopwatch::start();
+            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
+            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
+            let att = merge_partials(&outs_v, &lses_v);
+            job.tm.merge_s += sw.lap();
+            job.hidden = self.backend.decode_post(job.li, &job.hidden, &att)?;
+            job.tm.post_s += sw.lap();
+            job.li += 1;
+            return Ok(None);
+        }
+        if job.li == self.cfg.model.n_layers {
+            return self.job_finish(job).map(Some);
+        }
+        // Post half of layer `li`: project, append (last host), attend the
+        // local partial, post the gather. The complete half runs next
+        // microstep — after every rank posted, by the lockstep invariant.
+        let li = job.li;
+        let last = self.rank == self.cfg.apb.n_hosts - 1;
+        let mut sw = Stopwatch::start();
+        let (q, k, v) = self.backend.decode_pre(li, &job.hidden, &job.positions)?;
+        job.tm.pre_s += sw.lap();
+        let (out, lse) = match &job.kind {
+            JobKind::Chunk { sid, .. } => {
+                // Last host appends the chunk's KV before attending (Alg. 3
+                // line 7); its rows then see themselves self-causally.
+                let self_causal = if last {
+                    self.pool.get_mut(*sid)?.append(li, &k, &v)?;
+                    true
+                } else {
+                    false
+                };
+                // [shared | private] view: a prefix-hit session attends its
+                // shared document rows plus its own tail, bit-identical to
+                // a contiguous cold cache (one segmented kernel).
+                let cache = self.pool.get(*sid)?;
+                let view = cache.view(li);
+                self.backend.decode_attn_view(&q, &view, self_causal)?
+            }
+            JobKind::Batch { entries } => {
+                // Last host appends each session's new row to ITS cache
+                // before attending; each row then sees exactly its own
+                // cache's valid prefix (the n=1 self-causal rule).
+                if last {
+                    for (i, &(sid, _)) in entries.iter().enumerate() {
+                        self.pool.get_mut(sid)?.append(
+                            li,
+                            &k.slice_rows(i, i + 1),
+                            &v.slice_rows(i, i + 1),
+                        )?;
+                    }
+                }
+                let views: Vec<KvView<'_>> = entries
+                    .iter()
+                    .map(|&(sid, _)| Ok(self.pool.get(sid)?.view(li)))
+                    .collect::<Result<_>>()?;
+                self.backend.decode_attn_batch(&q, &views)?
+            }
+        };
+        job.tm.attn_s += sw.lap();
+        // Gather all hosts' partials (line 9), round-tagged.
+        job.awaiting =
+            Some(self.fabric.att_gather.post_tagged(self.rank, job.tag, (out, lse)));
+        Ok(None)
+    }
+
+    /// Retire a finished decode job: advance position bookkeeping, produce
+    /// logits on the last host, stamp the total.
+    fn job_finish(&mut self, job: &mut DecodeJob) -> Result<Resp> {
+        let last = self.rank == self.cfg.apb.n_hosts - 1;
+        let mut sw = Stopwatch::start();
+        let resp = match &job.kind {
+            JobKind::Chunk { sid, n_rows } => {
+                self.sessions.get_mut(sid).unwrap().next_pos += *n_rows as i32;
+                let logits = if last {
+                    let l = self.backend.lm_head(&job.hidden)?;
+                    job.tm.lm_head_s += sw.lap();
+                    Some(l.data)
+                } else {
+                    None
+                };
+                job.tm.total_s = job.t0.elapsed().as_secs_f64();
+                Resp::StepDone { host: self.rank, sid: *sid, logits, timing: job.tm }
+            }
+            JobKind::Batch { entries } => {
+                for &(sid, _) in entries.iter() {
+                    self.sessions.get_mut(&sid).unwrap().next_pos += 1;
+                }
+                let logits = if last {
+                    let l = self.backend.lm_head(&job.hidden)?;
+                    job.tm.lm_head_s += sw.lap();
+                    let vocab = self.cfg.model.vocab_size;
+                    Some(
+                        (0..entries.len())
+                            .map(|i| l.data[i * vocab..(i + 1) * vocab].to_vec())
+                            .collect(),
+                    )
+                } else {
+                    None
+                };
+                job.tm.total_s = job.t0.elapsed().as_secs_f64();
+                Resp::BatchDone { host: self.rank, logits, timing: job.tm }
+            }
+        };
+        Ok(resp)
     }
 
     /// Position of the first re-fed query-chunk row (end of the global
@@ -257,9 +446,9 @@ impl HostWorker {
     /// Advance session `sid`'s prefill machine by one step. Returns the
     /// accumulated timing + retained indices when the plan is exhausted
     /// (the machine is retired), `None` while steps remain. A step error
-    /// cancels THIS host's machine (draining any posted ring round); other
-    /// hosts may still hold theirs, so the session cannot be resumed —
-    /// only cleared (the leader keeps its in-flight marker held until
+    /// cancels THIS host's machine (draining any posted fabric round);
+    /// other hosts may still hold theirs, so the session cannot be resumed
+    /// — only cleared (the leader keeps its in-flight permit held until
     /// then).
     fn prefill_chunk(
         &mut self,
@@ -299,7 +488,7 @@ impl HostWorker {
                 Ok(Some((timing, retained, hit, bytes)))
             }
             Err(e) => {
-                // Same cancellation as Cmd::Clear: drain any posted ring
+                // Same cancellation as Cmd::Clear: drain any posted fabric
                 // round before discarding the machine.
                 if let Some(m) = self.machines.remove(&sid) {
                     m.abort(self.rank, &self.fabric);
@@ -339,14 +528,11 @@ impl HostWorker {
         Ok(())
     }
 
-    /// Algorithm 3 — one decode pass over a single session's chunk (the
-    /// re-fed query). Distributed methods return logits on the last host;
-    /// Dense sessions are forwarded to [`HostWorker::decode_pass_dense`].
-    fn decode_pass(
-        &mut self,
-        sid: SessionId,
-        tokens: &[i32],
-    ) -> Result<(Option<Vec<f32>>, DecodeTiming)> {
+    /// Open one decode pass over a single session's chunk (the re-fed
+    /// query). Dense sessions finish immediately (no collective); the
+    /// distributed methods return a [`DecodeJob`]. All tripwires run here,
+    /// before any fabric round, identically on every host.
+    fn decode_begin(&mut self, sid: SessionId, tag: u64, tokens: &[i32]) -> Result<Begun> {
         // A session mid-prefill has a partially filled KV slot; decoding it
         // would produce plausible-but-wrong logits. Checked before any
         // collective (machine maps are identical on every host).
@@ -355,67 +541,89 @@ impl HostWorker {
         }
         let method = self.ensure_session(sid)?;
         if !method.distributed_decode() {
-            return self.decode_pass_dense(sid, tokens);
+            let (logits, timing) = self.decode_pass_dense(sid, tokens)?;
+            return Ok(Begun::Done(Resp::StepDone { host: self.rank, sid, logits, timing }));
         }
-        let n = tokens.len();
         let pos0 = self.sessions[&sid].next_pos;
-        let positions: Vec<i32> = (0..n as i32).map(|i| pos0 + i).collect();
-        let cfg = &self.cfg;
-        let (a, m) = (&cfg.apb, &cfg.model);
-        let backend = self.backend.as_ref();
-        let last = self.rank == a.n_hosts - 1;
+        let positions: Vec<i32> = (0..tokens.len() as i32).map(|i| pos0 + i).collect();
+        let t0 = std::time::Instant::now();
         let mut tm = DecodeTiming::default();
         let mut sw = Stopwatch::start();
-        let total0 = std::time::Instant::now();
-
-        let mut hidden = backend.embed(tokens)?;
+        let hidden = self.backend.embed(tokens)?;
         tm.pre_s += sw.lap();
+        Ok(Begun::Job(DecodeJob {
+            kind: JobKind::Chunk { sid, n_rows: tokens.len() },
+            tag,
+            hidden,
+            positions,
+            li: 0,
+            awaiting: None,
+            tm,
+            t0,
+        }))
+    }
 
-        for li in 0..m.n_layers {
-            // decode_pre: project + rope the chunk.
-            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
-            tm.pre_s += sw.lap();
-
-            // Last host appends the chunk's KV before attending (line 7).
-            let self_causal = if last {
-                self.pool.get_mut(sid)?.append(li, &k, &v)?;
-                true
-            } else {
-                false
-            };
-            // [shared | private] view: a prefix-hit session attends its
-            // shared document rows plus its own tail, bit-identical to a
-            // contiguous cold cache (one segmented kernel underneath).
-            let cache = self.pool.get(sid)?;
-            let view = cache.view(li);
-            let (out, lse) = backend.decode_attn_view(&q, &view, self_causal)?;
-            tm.attn_s += sw.lap();
-
-            // Gather all hosts' partials (line 9), session-tagged ...
-            let all = self.fabric.att_gather.all_gather_tagged(self.rank, sid, (out, lse));
-            tm.comm_s += sw.lap();
-
-            // ... and merge with the online-softmax identity (line 10).
-            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
-            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
-            let att = merge_partials(&outs_v, &lses_v);
-            tm.merge_s += sw.lap();
-
-            // decode_post: O-proj + FFN, replicated (identical on all hosts).
-            hidden = backend.decode_post(li, &hidden, &att)?;
-            tm.post_s += sw.lap();
+    /// Open a continuous-batching decode step: one single-token row PER
+    /// SESSION, stacked into ONE backend pass per layer (decode_pre with
+    /// per-row positions + decode_attn_batch against per-row caches + one
+    /// merge + one decode_post), so the per-step cost grows sublinearly in
+    /// the number of active sessions. Row order — and therefore collective
+    /// payload layout — is the leader's entry order on every host. The
+    /// round tag is the leader's batch digest, shipped in the envelope.
+    fn decode_batch_begin(
+        &mut self,
+        tag: u64,
+        entries: Vec<(SessionId, i32)>,
+    ) -> Result<Begun> {
+        // Strict residency: decoding a cleared (or never-admitted) session
+        // is a scheduler bug; silently resurrecting an empty cache would
+        // turn it into plausible-but-wrong tokens. Checked before any
+        // collective (session maps are identical on every host).
+        for &(sid, _) in &entries {
+            if !self.sessions.contains_key(&sid) {
+                bail!("session {sid} not resident: cannot decode-batch");
+            }
+            if self.machines.contains_key(&sid) {
+                bail!("session {sid} has a prefill in flight: cannot decode-batch");
+            }
         }
-        self.sessions.get_mut(&sid).unwrap().next_pos += n as i32;
-
-        let logits = if last {
-            let l = backend.lm_head(&hidden)?;
-            tm.lm_head_s += sw.lap();
-            Some(l.data)
-        } else {
-            None
-        };
-        tm.total_s = total0.elapsed().as_secs_f64();
-        Ok((logits, tm))
+        // Decode routing must be uniform across the batch: Dense sessions
+        // never join collectives, so mixing them with distributed sessions
+        // would desync the att_gather rounds. The scheduler groups by
+        // decode path; this is the tripwire (identical on every host,
+        // checked before any collective).
+        let distributed = self.sessions[&entries[0].0].method.distributed_decode();
+        for &(sid, _) in &entries {
+            if self.sessions[&sid].method.distributed_decode() != distributed {
+                bail!(
+                    "decode batch mixes Dense and distributed sessions \
+                     (session {sid} disagrees with session {})",
+                    entries[0].0
+                );
+            }
+        }
+        if !distributed {
+            let (logits, timing) = self.decode_batch_dense(&entries)?;
+            return Ok(Begun::Done(Resp::BatchDone { host: self.rank, logits, timing }));
+        }
+        let tokens: Vec<i32> = entries.iter().map(|&(_, t)| t).collect();
+        let positions: Vec<i32> =
+            entries.iter().map(|&(sid, _)| self.sessions[&sid].next_pos).collect();
+        let t0 = std::time::Instant::now();
+        let mut tm = DecodeTiming::default();
+        let mut sw = Stopwatch::start();
+        let hidden = self.backend.embed(&tokens)?;
+        tm.pre_s += sw.lap();
+        Ok(Begun::Job(DecodeJob {
+            kind: JobKind::Batch { entries },
+            tag,
+            hidden,
+            positions,
+            li: 0,
+            awaiting: None,
+            tm,
+            t0,
+        }))
     }
 
     /// Dense decode: host 0's cache holds every key, so the chunk attends
@@ -463,7 +671,7 @@ impl HostWorker {
         Ok((Some(logits.data), tm))
     }
 
-    /// Dense twin of [`HostWorker::decode_batch`]: all rows on host 0, one
+    /// Dense twin of the batched decode job: all rows on host 0, one
     /// stacked pass per layer against the sessions' own caches, still zero
     /// communication.
     fn decode_batch_dense(
@@ -516,132 +724,5 @@ impl HostWorker {
             .map(|i| l.data[i * vocab..(i + 1) * vocab].to_vec())
             .collect();
         Ok((Some(rows), tm))
-    }
-
-    /// Continuous-batching decode step: one single-token row PER SESSION,
-    /// stacked into ONE backend pass per layer (decode_pre with per-row
-    /// positions + decode_attn_batch against per-row caches + one merge +
-    /// one decode_post), so the per-step cost grows sublinearly in the
-    /// number of active sessions. Row order — and therefore collective
-    /// payload layout — is the leader's entry order on every host.
-    fn decode_batch(
-        &mut self,
-        entries: &[(SessionId, i32)],
-    ) -> Result<(Option<Vec<Vec<f32>>>, DecodeTiming)> {
-        // Strict residency: decoding a cleared (or never-admitted) session
-        // is a scheduler bug; silently resurrecting an empty cache would
-        // turn it into plausible-but-wrong tokens. Checked before any
-        // collective (session maps are identical on every host).
-        for &(sid, _) in entries {
-            if !self.sessions.contains_key(&sid) {
-                anyhow::bail!("session {sid} not resident: cannot decode-batch");
-            }
-            if self.machines.contains_key(&sid) {
-                anyhow::bail!(
-                    "session {sid} has a prefill in flight: cannot decode-batch"
-                );
-            }
-        }
-        // Decode routing must be uniform across the batch: Dense sessions
-        // never join collectives, so mixing them with distributed sessions
-        // would desync the att_gather rounds. The scheduler groups by
-        // decode path; this is the tripwire (identical on every host,
-        // checked before any collective).
-        let distributed = self.sessions[&entries[0].0].method.distributed_decode();
-        for &(sid, _) in entries {
-            if self.sessions[&sid].method.distributed_decode() != distributed {
-                anyhow::bail!(
-                    "decode batch mixes Dense and distributed sessions \
-                     (session {sid} disagrees with session {})",
-                    entries[0].0
-                );
-            }
-        }
-        if !distributed {
-            return self.decode_batch_dense(entries);
-        }
-        let tag = batch_tag(entries);
-        let tokens: Vec<i32> = entries.iter().map(|&(_, t)| t).collect();
-        let positions: Vec<i32> =
-            entries.iter().map(|&(sid, _)| self.sessions[&sid].next_pos).collect();
-        let cfg = &self.cfg;
-        let (a, m) = (&cfg.apb, &cfg.model);
-        let backend = self.backend.as_ref();
-        let last = self.rank == a.n_hosts - 1;
-        let mut tm = DecodeTiming::default();
-        let mut sw = Stopwatch::start();
-        let total0 = std::time::Instant::now();
-
-        let mut hidden = backend.embed(&tokens)?;
-        tm.pre_s += sw.lap();
-
-        for li in 0..m.n_layers {
-            let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
-            tm.pre_s += sw.lap();
-
-            // Last host appends each session's new row to ITS cache before
-            // attending; each row then sees exactly its own cache's valid
-            // prefix (the n=1 self-causal rule).
-            if last {
-                for (i, &(sid, _)) in entries.iter().enumerate() {
-                    self.pool.get_mut(sid)?.append(
-                        li,
-                        &k.slice_rows(i, i + 1),
-                        &v.slice_rows(i, i + 1),
-                    )?;
-                }
-            }
-            let views: Vec<KvView<'_>> = entries
-                .iter()
-                .map(|&(sid, _)| Ok(self.pool.get(sid)?.view(li)))
-                .collect::<Result<_>>()?;
-            let (out, lse) = backend.decode_attn_batch(&q, &views)?;
-            tm.attn_s += sw.lap();
-
-            // One batch-tagged AllGather round per layer for ALL sessions.
-            let all = self.fabric.att_gather.all_gather_tagged(self.rank, tag, (out, lse));
-            tm.comm_s += sw.lap();
-
-            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
-            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
-            let att = merge_partials(&outs_v, &lses_v);
-            tm.merge_s += sw.lap();
-
-            hidden = backend.decode_post(li, &hidden, &att)?;
-            tm.post_s += sw.lap();
-        }
-        for &(sid, _) in entries {
-            self.sessions.get_mut(&sid).unwrap().next_pos += 1;
-        }
-
-        let logits = if last {
-            let l = backend.lm_head(&hidden)?;
-            tm.lm_head_s += sw.lap();
-            let vocab = m.vocab_size;
-            Some(
-                (0..entries.len())
-                    .map(|i| l.data[i * vocab..(i + 1) * vocab].to_vec())
-                    .collect(),
-            )
-        } else {
-            None
-        };
-        tm.total_s = total0.elapsed().as_secs_f64();
-        Ok((logits, tm))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn batch_tag_is_order_sensitive_and_token_blind() {
-        let a = batch_tag(&[(1, 5), (2, 9)]);
-        let b = batch_tag(&[(2, 5), (1, 9)]);
-        let c = batch_tag(&[(1, 0), (2, 0)]);
-        assert_ne!(a, b, "session order must change the round tag");
-        assert_eq!(a, c, "sampled tokens must not change the round tag");
-        assert_ne!(batch_tag(&[(1, 0)]), batch_tag(&[(1, 0), (2, 0)]));
     }
 }

@@ -1,9 +1,9 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! The `Cluster` owns one worker thread per host (each with its own
-//! execution backend + KV pool) and drives the inference procedure of the
-//! request's `config::AttnMethod` (the paper's comparison set as
-//! executable modes — full matrix in `docs/architecture.md`, rationale in
+//! The `Cluster` drives one worker per host (each with its own execution
+//! backend + KV pool) through the inference procedure of the request's
+//! `config::AttnMethod` (the paper's comparison set as executable modes —
+//! full matrix in `docs/architecture.md`, rationale in
 //! `docs/ADR-001-attn-methods.md`):
 //!
 //!   APB / StarAttn prefill (Algorithm 2, per layer):
@@ -23,14 +23,26 @@
 //!     sessions instead decode entirely on host 0 (its cache holds every
 //!     key) with no collective.
 //!
-//! Requests are first-class **sessions**: every command carries a
+//! **Drivers** (`docs/ADR-004-threaded-hosts.md`): every leader→host
+//! command travels as one transport-shaped [`Envelope`] and both drivers
+//! share one dispatch path ([`Cluster::dispatch`]). Under
+//! [`Driver::Threaded`] each host runs [`host::run_host`] on its own OS
+//! thread and collectives genuinely rendezvous (a wedged rank surfaces as
+//! a structured `cluster::ClusterError` timeout, never a deadlock); under
+//! [`Driver::Sequential`] the leader owns the workers directly and
+//! round-robins decode microsteps in rank order — a deterministic oracle
+//! the parity suite (`rust/tests/driver_parity.rs`) holds the threaded
+//! driver bit-identical to. `Cluster::start` picks the driver from
+//! `APB_DRIVER` (default threaded); `Cluster::start_with` pins it.
+//!
+//! Requests are first-class **sessions**: every envelope carries a
 //! [`SessionId`], each host worker keeps one KV-pool slot plus position
 //! bookkeeping per resident session, and a continuous-batching step decodes
 //! all active sessions in ONE stacked backend pass per layer
 //! (`Cmd::DecodeBatch`). The leader thread never touches tensors on the
-//! prefill path — it only routes commands; all compute + collectives happen
-//! inside host workers, exactly like the paper's one-process-per-GPU
-//! deployment.
+//! prefill path — it only routes envelopes; all compute + collectives
+//! happen inside host workers, exactly like the paper's
+//! one-process-per-GPU deployment.
 //!
 //! Prefill is **chunked and resumable** (`Cmd::PrefillBegin` +
 //! `Cmd::PrefillChunk`, driven through [`Cluster::prefill_begin`] /
@@ -38,7 +50,8 @@
 //! `prefill::PrefillMachine` one bounded step per command, bit-identical
 //! to one-shot prefill for any chunk size, so the scheduler can interleave
 //! resident sessions' decode ticks between a long admission's chunks
-//! instead of stalling them — see `docs/ADR-002-chunked-prefill.md`.
+//! instead of stalling them — see `docs/ADR-002-chunked-prefill.md`. The
+//! one-prefill-at-a-time rule is enforced by an RAII [`PrefillPermit`].
 //!
 //! With `config::ApbParams::prefix_cache` on, prefill also rides
 //! **shared-prefix KV reuse** (`docs/ADR-003-prefix-caching.md`): the
@@ -57,13 +70,13 @@ mod prefill;
 pub mod scheduler;
 pub mod timing;
 
-use std::cell::Cell;
+use std::cell::RefCell;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::Fabric;
+use crate::cluster::Interconnect;
 use crate::config::{ApbOptions, AttnMethod, Config};
 use crate::util::tensor::Tensor;
 
@@ -75,11 +88,22 @@ pub use timing::{DecodeTiming, PrefillTiming};
 /// start at 1 so they never collide.
 pub const LEGACY_SESSION: SessionId = 0;
 
-/// Commands from the leader to host workers. Every request-scoped command
-/// names its session.
+/// The transport unit between leader and hosts: which session the command
+/// is about, the fabric round tag any collective it opens must use, and
+/// the command body. Session-scoped commands ride `tag == sid`; a batched
+/// decode rides the leader's [`batch_tag`] digest; cluster-scoped commands
+/// (`PoolStats`, `ClearAll`, `Shutdown`) use `sid = tag = 0`.
+#[derive(Clone)]
+pub struct Envelope {
+    pub sid: SessionId,
+    pub tag: u64,
+    pub body: Cmd,
+}
+
+/// Command bodies. Session addressing lives on the [`Envelope`], not here.
 #[derive(Clone)]
 pub enum Cmd {
-    /// Claim the session's KV-pool slot and build its resumable
+    /// Claim the envelope session's KV-pool slot and build its resumable
     /// `prefill::PrefillMachine` over this host's token layout. Answered
     /// by `Resp::PrefillBegun` with the (rank-uniform) plan length.
     /// `digest` is the rank-symmetric prefix-cache key
@@ -88,7 +112,6 @@ pub enum Cmd {
     /// takes the warm fast path when the host's prefix store holds the
     /// entry, and freezes its document KV into the store on a cold run.
     PrefillBegin {
-        sid: SessionId,
         tokens: Arc<Vec<i32>>,
         opts: ApbOptions,
         digest: Option<u64>,
@@ -98,17 +121,17 @@ pub enum Cmd {
     /// hosts verify it against their machine's progress (desync tripwire).
     /// The final step answers `Resp::PrefillDone`, earlier ones
     /// `Resp::PrefillStep`.
-    PrefillChunk { sid: SessionId, chunk_idx: usize },
+    PrefillChunk { chunk_idx: usize },
     /// Report this host's KV-pool accounting (`Resp::PoolStats`).
     PoolStats,
     /// Process the re-fed query chunk (decode path, n = l_q).
-    QueryChunk { sid: SessionId, tokens: Arc<Vec<i32>> },
+    QueryChunk { tokens: Arc<Vec<i32>> },
     /// One continuous-batching decode step: one (session, previous token)
     /// entry per active session, executed as a single stacked backend pass
-    /// per layer.
+    /// per layer. The envelope's tag is the leader's [`batch_tag`] digest.
     DecodeBatch { entries: Arc<Vec<(SessionId, i32)>> },
-    /// Drop one session's state (KV slot + positions).
-    Clear { sid: SessionId },
+    /// Drop the envelope session's state (KV slot + positions).
+    Clear,
     /// Drop every session (between serving phases / legacy callers).
     ClearAll,
     Shutdown,
@@ -155,34 +178,151 @@ pub enum Resp {
     Error { host: usize, msg: String },
 }
 
+/// Collective round tag for a decode batch: order-sensitive digest of the
+/// session ids, so desynchronized batch composition across hosts trips the
+/// fabric's tag assertion instead of silently merging the wrong partials.
+/// Computed once by the leader and shipped on the [`Envelope`].
+fn batch_tag(entries: &[(SessionId, i32)]) -> u64 {
+    entries
+        .iter()
+        .fold(0x517C_C1B7_2722_0A95u64, |acc, (sid, _)| {
+            acc.wrapping_mul(0x100_0000_01B3).wrapping_add(sid ^ 0x9E37_79B9_7F4A_7C15)
+        })
+}
+
+/// Which execution driver a [`Cluster`] runs its hosts under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    /// The leader owns every `host::HostWorker` and advances decode jobs
+    /// itself, round-robin in rank order. Single-threaded, deterministic,
+    /// never blocks (every collective is posted by all ranks before any
+    /// rank completes it — the microstep invariant). The test oracle.
+    Sequential,
+    /// One OS thread per host ([`host::run_host`]); collectives genuinely
+    /// rendezvous and per-host wall clocks measure real overlap. The
+    /// production driver and the default.
+    Threaded,
+}
+
+impl Driver {
+    /// Parse a driver name as accepted by `--driver` and `APB_DRIVER`.
+    pub fn parse(s: &str) -> Option<Driver> {
+        match s {
+            "sequential" | "seq" => Some(Driver::Sequential),
+            "threaded" | "thread" => Some(Driver::Threaded),
+            _ => None,
+        }
+    }
+
+    /// Driver choice from the `APB_DRIVER` environment variable
+    /// (`sequential` | `threaded`), defaulting to [`Driver::Threaded`].
+    /// Panics on an unrecognized value — a typo silently falling back to a
+    /// different execution mode would invalidate a CI matrix leg.
+    pub fn from_env() -> Driver {
+        match std::env::var("APB_DRIVER") {
+            Ok(s) => Driver::parse(&s).unwrap_or_else(|| {
+                panic!("APB_DRIVER={s:?} is not a driver (expected sequential|threaded)")
+            }),
+            Err(_) => Driver::Threaded,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Driver::Sequential => "sequential",
+            Driver::Threaded => "threaded",
+        }
+    }
+}
+
 struct HostHandle {
-    cmd_tx: Sender<Cmd>,
+    cmd_tx: Sender<Envelope>,
     join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HostHandle {
+    /// The single leader→host entry point: enqueue one envelope.
+    fn post(&self, env: Envelope) -> Result<()> {
+        self.cmd_tx
+            .send(env)
+            .map_err(|_| anyhow::anyhow!("host channel closed"))
+    }
+}
+
+/// How the leader reaches its hosts, per [`Driver`]. The sequential
+/// workers sit in a `RefCell` (not a `Mutex`) on purpose: the leader is
+/// the only caller, and a re-entrant dispatch is a bug worth a panic, not
+/// a deadlock.
+enum Link {
+    Threaded {
+        hosts: Vec<HostHandle>,
+        resp_rx: Receiver<Resp>,
+    },
+    Sequential {
+        workers: RefCell<Vec<host::HostWorker>>,
+    },
 }
 
 pub struct Cluster {
     pub cfg: Config,
-    pub fabric: Arc<Fabric>,
-    hosts: Vec<HostHandle>,
-    resp_rx: Receiver<Resp>,
+    pub fabric: Arc<Interconnect>,
+    driver: Driver,
+    link: Link,
     /// At most ONE prefill may be in flight per cluster: the ring machine
     /// keeps posted-but-incomplete fabric rounds across chunk steps, so a
     /// second interleaved prefill would join those rounds with a different
-    /// session tag and trip the desync panic. `prefill_begin` records the
-    /// session here; the final `prefill_step` or clearing that session
-    /// releases it. A step ERROR keeps it held — ranks that did not error
-    /// still hold machines — until `clear_session` cancels them. (A `Cell`
-    /// suffices: the leader is single-threaded — `Cluster` is `!Sync`
-    /// through its mpsc endpoints.)
-    prefill_inflight: Cell<Option<SessionId>>,
+    /// session tag and trip the desync panic. [`PrefillPermit`] is the
+    /// RAII claim on this slot; `clear_session`/`clear` release it
+    /// directly (recovery path). Behind `Arc<Mutex>` so the permit can
+    /// outlive any borrow of the cluster (it rides inside
+    /// [`PrefillProgress`]).
+    prefill_slot: Arc<Mutex<Option<SessionId>>>,
+}
+
+/// RAII claim on a cluster's one-prefill-in-flight slot, returned (inside
+/// [`PrefillProgress`]) by [`Cluster::prefill_begin`] and consumed by the
+/// final [`Cluster::prefill_step`].
+///
+/// Deliberately NOT released on `Drop`: after a failed step, ranks that
+/// did not themselves error still hold machines (and, for ring, posted
+/// fabric rounds), so the slot must stay held until
+/// [`Cluster::clear_session`] cancels them — dropping the progress handle
+/// must not quietly re-open admission.
+pub struct PrefillPermit {
+    slot: Arc<Mutex<Option<SessionId>>>,
+    sid: SessionId,
+}
+
+impl PrefillPermit {
+    fn claim(slot: &Arc<Mutex<Option<SessionId>>>, sid: SessionId) -> Result<PrefillPermit> {
+        let mut guard = slot.lock().unwrap();
+        if let Some(other) = *guard {
+            bail!(
+                "a prefill (session {other}) is already in flight on this \
+                 cluster; drive it to completion (or clear that session) before \
+                 beginning another — one resumable prefill at a time"
+            );
+        }
+        *guard = Some(sid);
+        Ok(PrefillPermit { slot: Arc::clone(slot), sid })
+    }
+
+    /// Release the slot — only if it still names this permit's session (a
+    /// `clear_session` may already have re-opened it for someone else).
+    fn finish(self) {
+        let mut guard = self.slot.lock().unwrap();
+        if *guard == Some(self.sid) {
+            *guard = None;
+        }
+    }
 }
 
 /// Leader-side handle to one in-flight resumable prefill: how many chunk
 /// steps remain, plus the accumulators (`wall_seconds` counts only time
 /// spent inside `prefill_begin`/`prefill_step` calls — the interleaved
 /// decode ticks of OTHER sessions are not charged to this request; the
-/// comm delta per call is all this prefill's, because the leader is
-/// single-threaded).
+/// comm delta per call is all this prefill's, because the leader drives
+/// one command round at a time).
 pub struct PrefillProgress {
     pub sid: SessionId,
     n_steps: usize,
@@ -193,6 +333,9 @@ pub struct PrefillProgress {
     retained: Vec<Vec<Vec<Vec<u32>>>>,
     prefix_hit: bool,
     prefix_bytes_saved: u64,
+    /// The in-flight claim; taken and finished by the final step. Stays
+    /// held across step errors (see [`PrefillPermit`]).
+    permit: Option<PrefillPermit>,
 }
 
 impl PrefillProgress {
@@ -361,75 +504,157 @@ pub fn n_anchor_for(cfg: &Config, rank: usize, opts: &ApbOptions) -> i32 {
 }
 
 impl Cluster {
-    /// Spawn one worker per host; each compiles the artifact set and
-    /// uploads weights. Blocks until all engines are ready.
+    /// Start a cluster under the driver named by `APB_DRIVER`
+    /// (default: threaded). See [`Cluster::start_with`].
     pub fn start(cfg: &Config) -> Result<Cluster> {
-        let fabric = Fabric::new(cfg.apb.n_hosts);
-        let (resp_tx, resp_rx) = channel::<Resp>();
-        let (ready_tx, ready_rx) = channel::<Result<usize>>();
-        let mut hosts = Vec::with_capacity(cfg.apb.n_hosts);
-        for rank in 0..cfg.apb.n_hosts {
-            let (cmd_tx, cmd_rx) = channel::<Cmd>();
-            let cfg2 = cfg.clone();
-            let fabric2 = Arc::clone(&fabric);
-            let resp_tx2 = resp_tx.clone();
-            let ready_tx2 = ready_tx.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("apb-host-{rank}"))
-                .spawn(move || {
-                    host::run_host(rank, cfg2, fabric2, cmd_rx, resp_tx2, ready_tx2)
-                })
-                .context("spawning host thread")?;
-            hosts.push(HostHandle { cmd_tx, join: Some(join) });
-        }
-        drop(ready_tx);
-        for _ in 0..cfg.apb.n_hosts {
-            ready_rx
-                .recv()
-                .context("host died during startup")??;
-        }
+        Cluster::start_with(cfg, Driver::from_env())
+    }
+
+    /// Spawn (threaded) or construct in place (sequential) one worker per
+    /// host; each compiles the artifact set and uploads weights. Blocks
+    /// until all engines are ready.
+    pub fn start_with(cfg: &Config, driver: Driver) -> Result<Cluster> {
+        let fabric = Interconnect::new(cfg.apb.n_hosts);
+        let link = match driver {
+            Driver::Threaded => {
+                let (resp_tx, resp_rx) = channel::<Resp>();
+                let (ready_tx, ready_rx) = channel::<Result<usize>>();
+                let mut hosts = Vec::with_capacity(cfg.apb.n_hosts);
+                for rank in 0..cfg.apb.n_hosts {
+                    let (cmd_tx, cmd_rx) = channel::<Envelope>();
+                    let cfg2 = cfg.clone();
+                    let fabric2 = Arc::clone(&fabric);
+                    let resp_tx2 = resp_tx.clone();
+                    let ready_tx2 = ready_tx.clone();
+                    let join = std::thread::Builder::new()
+                        .name(format!("apb-host-{rank}"))
+                        .spawn(move || {
+                            host::run_host(rank, cfg2, fabric2, cmd_rx, resp_tx2, ready_tx2)
+                        })
+                        .context("spawning host thread")?;
+                    hosts.push(HostHandle { cmd_tx, join: Some(join) });
+                }
+                drop(ready_tx);
+                for _ in 0..cfg.apb.n_hosts {
+                    ready_rx.recv().context("host died during startup")??;
+                }
+                Link::Threaded { hosts, resp_rx }
+            }
+            Driver::Sequential => {
+                let mut workers = Vec::with_capacity(cfg.apb.n_hosts);
+                for rank in 0..cfg.apb.n_hosts {
+                    workers.push(host::HostWorker::new(rank, cfg.clone(), Arc::clone(&fabric))?);
+                }
+                Link::Sequential { workers: RefCell::new(workers) }
+            }
+        };
         Ok(Cluster {
             cfg: cfg.clone(),
             fabric,
-            hosts,
-            resp_rx,
-            prefill_inflight: Cell::new(None),
+            driver,
+            link,
+            prefill_slot: Arc::new(Mutex::new(None)),
         })
     }
 
-    /// Release the in-flight marker (unconditionally, or only if it names
-    /// `sid`).
+    /// The driver this cluster runs under.
+    pub fn driver(&self) -> Driver {
+        self.driver
+    }
+
+    /// Release the in-flight prefill slot (unconditionally, or only if it
+    /// names `sid`) — the recovery path `clear_session`/`clear` use; the
+    /// happy path releases through [`PrefillPermit::finish`].
     fn release_prefill(&self, sid: Option<SessionId>) {
-        if sid.is_none() || self.prefill_inflight.get() == sid {
-            self.prefill_inflight.set(None);
+        let mut guard = self.prefill_slot.lock().unwrap();
+        if sid.is_none() || *guard == sid {
+            *guard = None;
         }
     }
 
-    fn broadcast(&self, cmd: Cmd) -> Result<()> {
-        for h in &self.hosts {
-            h.cmd_tx
-                .send(cmd.clone())
-                .map_err(|_| anyhow::anyhow!("host channel closed"))?;
-        }
-        Ok(())
+    /// One envelope per host, identical bodies.
+    fn fan_out(&self, sid: SessionId, tag: u64, body: Cmd) -> Vec<Envelope> {
+        (0..self.cfg.apb.n_hosts)
+            .map(|_| Envelope { sid, tag, body: body.clone() })
+            .collect()
     }
 
-    /// Collect exactly `n` responses, DRAINING the round even when hosts
-    /// report errors — a partial drain would leave stale responses queued
-    /// and desynchronize every later round. Fails after the drain with the
-    /// joined error messages.
-    fn collect<F: FnMut(Resp) -> Result<()>>(&self, n: usize, mut f: F) -> Result<()> {
+    /// The ONE dispatch path both drivers share: deliver one envelope to
+    /// every host, return every host's response (any order — responses
+    /// carry their rank).
+    ///
+    /// Threaded: post all envelopes, then block for n responses (host
+    /// threads rendezvous through the fabric among themselves; a wedged
+    /// rank surfaces as that rank's timeout error response, so this recv
+    /// is bounded too).
+    ///
+    /// Sequential: begin every envelope, then round-robin the opened
+    /// decode jobs one microstep at a time in rank order. By the microstep
+    /// invariant (every rank posts a collective round at the same step
+    /// index and completes it at a strictly later index) no `job_step`
+    /// ever blocks.
+    fn dispatch(&self, envs: Vec<Envelope>) -> Result<Vec<Resp>> {
+        debug_assert_eq!(envs.len(), self.cfg.apb.n_hosts);
+        match &self.link {
+            Link::Threaded { hosts, resp_rx } => {
+                for (h, env) in hosts.iter().zip(envs) {
+                    h.post(env)?;
+                }
+                let mut resps = Vec::with_capacity(hosts.len());
+                for _ in 0..hosts.len() {
+                    resps.push(
+                        resp_rx.recv().context("cluster response channel closed")?,
+                    );
+                }
+                Ok(resps)
+            }
+            Link::Sequential { workers } => {
+                let mut workers = workers.borrow_mut();
+                let n = workers.len();
+                let mut resps: Vec<Option<Resp>> = (0..n).map(|_| None).collect();
+                let mut jobs: Vec<Option<host::DecodeJob>> = (0..n).map(|_| None).collect();
+                for (rank, env) in envs.into_iter().enumerate() {
+                    match workers[rank].begin(env) {
+                        host::Begun::Done(r) => resps[rank] = Some(r),
+                        host::Begun::Job(j) => jobs[rank] = Some(j),
+                    }
+                }
+                while jobs.iter().any(|j| j.is_some()) {
+                    for rank in 0..n {
+                        if let Some(job) = jobs[rank].as_mut() {
+                            if let Some(r) = workers[rank].job_step(job) {
+                                resps[rank] = Some(r);
+                                jobs[rank] = None;
+                            }
+                        }
+                    }
+                }
+                Ok(resps
+                    .into_iter()
+                    .map(|r| r.expect("every rank responds"))
+                    .collect())
+            }
+        }
+    }
+
+    /// Dispatch + error folding: splits out `Resp::Error`s and fails with
+    /// the joined messages AFTER the round fully drained (a partial drain
+    /// would leave stale responses queued and desynchronize every later
+    /// round on the threaded driver).
+    fn transact(&self, envs: Vec<Envelope>) -> Result<Vec<Resp>> {
+        let resps = self.dispatch(envs)?;
         let mut errors: Vec<String> = Vec::new();
-        for _ in 0..n {
-            match self.resp_rx.recv().context("cluster response channel closed")? {
+        let mut ok = Vec::with_capacity(resps.len());
+        for r in resps {
+            match r {
                 Resp::Error { host, msg } => errors.push(format!("host {host}: {msg}")),
-                other => f(other)?,
+                other => ok.push(other),
             }
         }
         if !errors.is_empty() {
             bail!("{}", errors.join("; "));
         }
-        Ok(())
+        Ok(ok)
     }
 
     /// Start a resumable prefill of a document + query into session `sid`'s
@@ -438,7 +663,8 @@ impl Cluster {
     /// with [`Cluster::prefill_step`] until it yields the report. Fails
     /// with a backpressure error when every KV-pool slot is occupied, and
     /// when another prefill is already in flight (one at a time — the ring
-    /// pipeline holds open fabric rounds across steps).
+    /// pipeline holds open fabric rounds across steps; see
+    /// [`PrefillPermit`]).
     pub fn prefill_begin(
         &self,
         sid: SessionId,
@@ -453,25 +679,23 @@ impl Cluster {
         if query.len() != a.query_len {
             bail!("query length {} != configured {}", query.len(), a.query_len);
         }
-        if let Some(other) = self.prefill_inflight.get() {
-            bail!(
-                "a prefill (session {other}) is already in flight on this \
-                 cluster; drive it to completion (or clear that session) before \
-                 beginning another — one resumable prefill at a time"
-            );
-        }
-        self.prefill_inflight.set(Some(sid));
+        let permit = PrefillPermit::claim(&self.prefill_slot, sid)?;
         match self.prefill_begin_inner(sid, doc, query, opts) {
-            Ok(p) => Ok(p),
+            Ok(mut p) => {
+                p.permit = Some(permit);
+                Ok(p)
+            }
             Err(e) => {
-                self.release_prefill(Some(sid));
+                // No host holds a machine (begin either failed uniformly or
+                // the error pre-empted the fan-out), so admission re-opens.
+                permit.finish();
                 Err(e)
             }
         }
     }
 
     /// Fallible body of [`Cluster::prefill_begin`]; the caller owns the
-    /// in-flight flag.
+    /// permit.
     fn prefill_begin_inner(
         &self,
         sid: SessionId,
@@ -488,22 +712,27 @@ impl Cluster {
             .apb
             .prefix_cache
             .then(|| crate::kvcache::prefix_digest(&self.cfg, doc, query, opts));
-        for (rank, h) in self.hosts.iter().enumerate() {
-            let tokens = Arc::new(host_tokens_for(&self.cfg, doc, query, rank, opts));
-            h.cmd_tx
-                .send(Cmd::PrefillBegin { sid, tokens, opts: *opts, digest })
-                .map_err(|_| anyhow::anyhow!("host {rank} channel closed"))?;
-        }
-        let mut steps: Vec<usize> = Vec::with_capacity(self.hosts.len());
-        let mut hits: Vec<bool> = Vec::with_capacity(self.hosts.len());
-        self.collect(self.hosts.len(), |r| {
+        let envs: Vec<Envelope> = (0..self.cfg.apb.n_hosts)
+            .map(|rank| Envelope {
+                sid,
+                tag: sid,
+                body: Cmd::PrefillBegin {
+                    tokens: Arc::new(host_tokens_for(&self.cfg, doc, query, rank, opts)),
+                    opts: *opts,
+                    digest,
+                },
+            })
+            .collect();
+        let n_hosts = envs.len();
+        let mut steps: Vec<usize> = Vec::with_capacity(n_hosts);
+        let mut hits: Vec<bool> = Vec::with_capacity(n_hosts);
+        for r in self.transact(envs)? {
             if let Resp::PrefillBegun { steps: s, sid: rsid, prefix_hit, .. } = r {
                 debug_assert_eq!(rsid, sid);
                 steps.push(s);
                 hits.push(prefix_hit);
             }
-            Ok(())
-        })?;
+        }
         // Digest-desync tripwire: hit/miss must be rank-uniform (the stores
         // evolve in leader lockstep, so a split verdict means a host's
         // store diverged — running collectives on a subset of ranks would
@@ -525,10 +754,11 @@ impl Cluster {
             next: 0,
             wall_seconds: t0.elapsed().as_secs_f64(),
             comm_bytes: 0,
-            per_host: vec![PrefillTiming::default(); self.hosts.len()],
-            retained: vec![Vec::new(); self.hosts.len()],
+            per_host: vec![PrefillTiming::default(); n_hosts],
+            retained: vec![Vec::new(); n_hosts],
             prefix_hit,
             prefix_bytes_saved: 0,
+            permit: None,
         })
     }
 
@@ -546,11 +776,11 @@ impl Cluster {
         if let Err(e) = self.prefill_step_inner(p, last) {
             // Only the ranks that themselves errored dropped their
             // machines; surviving ranks may still hold machines (and, for
-            // ring, posted rounds). The in-flight marker therefore STAYS
-            // held: recovery is `clear_session(sid)`, which aborts the
+            // ring, posted rounds). The permit therefore STAYS held inside
+            // `p`: recovery is `clear_session(sid)`, which aborts the
             // machines on every host (draining posted rounds) and releases
-            // the marker — a fresh prefill before that clear would wedge
-            // the fabric.
+            // the slot — a fresh prefill before that clear would wedge the
+            // fabric.
             return Err(e);
         }
         p.next += 1;
@@ -559,7 +789,9 @@ impl Cluster {
         if !last {
             return Ok(None);
         }
-        self.release_prefill(Some(p.sid));
+        if let Some(permit) = p.permit.take() {
+            permit.finish();
+        }
         Ok(Some(PrefillReport {
             sid: p.sid,
             per_host: std::mem::take(&mut p.per_host),
@@ -571,28 +803,26 @@ impl Cluster {
         }))
     }
 
-    /// Fallible body of [`Cluster::prefill_step`]: broadcast one
+    /// Fallible body of [`Cluster::prefill_step`]: fan out one
     /// `PrefillChunk` and collect every host's step response (harvesting
     /// timing + retained indices on the final step).
     fn prefill_step_inner(&self, p: &mut PrefillProgress, last: bool) -> Result<()> {
-        self.broadcast(Cmd::PrefillChunk { sid: p.sid, chunk_idx: p.next })?;
-        let per_host = &mut p.per_host;
-        let retained = &mut p.retained;
-        let saved = &mut p.prefix_bytes_saved;
-        self.collect(self.hosts.len(), |r| match r {
-            Resp::PrefillStep { .. } => {
-                debug_assert!(!last, "host finished early");
-                Ok(())
+        let envs = self.fan_out(p.sid, p.sid, Cmd::PrefillChunk { chunk_idx: p.next });
+        for r in self.transact(envs)? {
+            match r {
+                Resp::PrefillStep { .. } => {
+                    debug_assert!(!last, "host finished early");
+                }
+                Resp::PrefillDone { host, timing, retained: ret, prefix_bytes, .. } => {
+                    debug_assert!(last, "host finished late");
+                    p.per_host[host] = timing;
+                    p.retained[host] = ret;
+                    p.prefix_bytes_saved += prefix_bytes;
+                }
+                _ => {}
             }
-            Resp::PrefillDone { host, timing, retained: ret, prefix_bytes, .. } => {
-                debug_assert!(last, "host finished late");
-                per_host[host] = timing;
-                retained[host] = ret;
-                *saved += prefix_bytes;
-                Ok(())
-            }
-            _ => Ok(()),
-        })
+        }
+        Ok(())
     }
 
     /// One-shot prefill (Algorithm 1 lines 1–12): begin, then drain every
@@ -617,7 +847,6 @@ impl Cluster {
     /// Per-host KV-pool accounting (indexed by rank) — the observable the
     /// chunk-split invariance tests compare and ops dashboards poll.
     pub fn pool_stats(&self) -> Result<Vec<PoolStats>> {
-        self.broadcast(Cmd::PoolStats)?;
         let mut stats = vec![
             PoolStats {
                 resident: 0,
@@ -626,14 +855,13 @@ impl Cluster {
                 prefix_entries: 0,
                 prefix_bytes: 0,
             };
-            self.hosts.len()
+            self.cfg.apb.n_hosts
         ];
-        self.collect(self.hosts.len(), |r| {
+        for r in self.transact(self.fan_out(0, 0, Cmd::PoolStats))? {
             if let Resp::PoolStats { host, stats: s } = r {
                 stats[host] = s;
             }
-            Ok(())
-        })?;
+        }
         Ok(stats)
     }
 
@@ -645,18 +873,17 @@ impl Cluster {
         }
         let bytes0 = self.fabric.meter.bytes_total();
         let t0 = std::time::Instant::now();
-        self.broadcast(Cmd::QueryChunk { sid, tokens: Arc::new(query.to_vec()) })?;
+        let envs = self.fan_out(sid, sid, Cmd::QueryChunk { tokens: Arc::new(query.to_vec()) });
         let mut logits: Option<Vec<f32>> = None;
-        let mut per_host = vec![DecodeTiming::default(); self.hosts.len()];
-        self.collect(self.hosts.len(), |r| {
+        let mut per_host = vec![DecodeTiming::default(); self.cfg.apb.n_hosts];
+        for r in self.transact(envs)? {
             if let Resp::StepDone { host, logits: l, timing, .. } = r {
                 per_host[host] = timing;
                 if let Some(l) = l {
                     logits = Some(l);
                 }
             }
-            Ok(())
-        })?;
+        }
         Ok(ChunkReport {
             sid,
             logits: logits.context("no host produced query logits")?,
@@ -681,18 +908,21 @@ impl Cluster {
         }
         let bytes0 = self.fabric.meter.bytes_total();
         let t0 = std::time::Instant::now();
-        self.broadcast(Cmd::DecodeBatch { entries: Arc::new(entries.to_vec()) })?;
+        let envs = self.fan_out(
+            0,
+            batch_tag(entries),
+            Cmd::DecodeBatch { entries: Arc::new(entries.to_vec()) },
+        );
         let mut rows: Option<Vec<Vec<f32>>> = None;
-        let mut per_host = vec![DecodeTiming::default(); self.hosts.len()];
-        self.collect(self.hosts.len(), |r| {
+        let mut per_host = vec![DecodeTiming::default(); self.cfg.apb.n_hosts];
+        for r in self.transact(envs)? {
             if let Resp::BatchDone { host, logits, timing } = r {
                 per_host[host] = timing;
                 if let Some(l) = logits {
                     rows = Some(l);
                 }
             }
-            Ok(())
-        })?;
+        }
         let rows = rows.context("no host produced batch logits")?;
         if rows.len() != entries.len() {
             bail!("batch returned {} logit rows for {} entries", rows.len(), entries.len());
@@ -708,22 +938,20 @@ impl Cluster {
     /// Drop one session's state (KV slot + position bookkeeping + any
     /// in-flight prefill machine) on every host, freeing its residency
     /// slot. Clearing the session whose prefill is in flight cancels it
-    /// cleanly: every host drains any posted-but-incomplete ring round
-    /// (see `PrefillMachine::abort`) and the one-prefill-at-a-time marker
+    /// cleanly: every host drains any posted-but-incomplete fabric round
+    /// (see `PrefillMachine::abort`) and the one-prefill-at-a-time slot
     /// is released, so the cluster keeps serving.
     pub fn clear_session(&self, sid: SessionId) -> Result<()> {
-        self.broadcast(Cmd::Clear { sid })?;
-        self.collect(self.hosts.len(), |_| Ok(()))?;
+        self.transact(self.fan_out(sid, sid, Cmd::Clear))?;
         self.release_prefill(Some(sid));
         Ok(())
     }
 
     /// Drop every session's state on every host, including any in-flight
-    /// prefill machines (cancelled cleanly — posted ring rounds are
-    /// drained — and the in-flight marker is released).
+    /// prefill machines (cancelled cleanly — posted fabric rounds are
+    /// drained — and the in-flight slot is released).
     pub fn clear(&self) -> Result<()> {
-        self.broadcast(Cmd::ClearAll)?;
-        self.collect(self.hosts.len(), |_| Ok(()))?;
+        self.transact(self.fan_out(0, 0, Cmd::ClearAll))?;
         self.release_prefill(None);
         Ok(())
     }
@@ -768,18 +996,20 @@ impl Cluster {
     }
 
     pub fn n_hosts(&self) -> usize {
-        self.hosts.len()
+        self.cfg.apb.n_hosts
     }
 }
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        for h in &self.hosts {
-            let _ = h.cmd_tx.send(Cmd::Shutdown);
-        }
-        for h in &mut self.hosts {
-            if let Some(j) = h.join.take() {
-                let _ = j.join();
+        if let Link::Threaded { hosts, .. } = &mut self.link {
+            for h in hosts.iter() {
+                let _ = h.cmd_tx.send(Envelope { sid: 0, tag: 0, body: Cmd::Shutdown });
+            }
+            for h in hosts.iter_mut() {
+                if let Some(j) = h.join.take() {
+                    let _ = j.join();
+                }
             }
         }
     }
@@ -882,6 +1112,27 @@ mod tests {
         let star = ApbOptions { method: AttnMethod::StarAttn, ..Default::default() };
         assert_eq!(host_tokens_for(&cfg, &doc, &query, 1, &star),
                    host_tokens(&cfg, &doc, &query, 1, &star));
+    }
+
+    #[test]
+    fn batch_tag_is_order_sensitive_and_token_blind() {
+        let a = batch_tag(&[(1, 5), (2, 9)]);
+        let b = batch_tag(&[(2, 5), (1, 9)]);
+        let c = batch_tag(&[(1, 0), (2, 0)]);
+        assert_ne!(a, b, "session order must change the round tag");
+        assert_eq!(a, c, "sampled tokens must not change the round tag");
+        assert_ne!(batch_tag(&[(1, 0)]), batch_tag(&[(1, 0), (2, 0)]));
+    }
+
+    #[test]
+    fn driver_parse_and_names() {
+        assert_eq!(Driver::parse("sequential"), Some(Driver::Sequential));
+        assert_eq!(Driver::parse("seq"), Some(Driver::Sequential));
+        assert_eq!(Driver::parse("threaded"), Some(Driver::Threaded));
+        assert_eq!(Driver::parse("thread"), Some(Driver::Threaded));
+        assert_eq!(Driver::parse("parallel"), None);
+        assert_eq!(Driver::Sequential.name(), "sequential");
+        assert_eq!(Driver::Threaded.name(), "threaded");
     }
 
     #[test]

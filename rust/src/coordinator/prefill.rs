@@ -2,7 +2,7 @@
 //! stall-free serving (`docs/ADR-002-chunked-prefill.md`).
 //!
 //! A [`PrefillMachine`] holds one session's in-flight prefill on one host.
-//! The leader drives it with `Cmd::PrefillChunk { sid, chunk_idx }`, one
+//! The leader drives it with `Cmd::PrefillChunk { chunk_idx }` envelopes, one
 //! bounded step at a time, so the scheduler can interleave resident
 //! sessions' decode ticks between steps (Medha-style "no request left
 //! behind"). Every machine advances through a *precomputed plan* whose
@@ -24,9 +24,13 @@
 //!
 //! * **APB / StarAttn** are *layer-major*: the top-l_p selection needs the
 //!   whole block's scores and the passing AllGather happens once per
-//!   layer, so a layer runs `Pre×C → Select+Gather → Post×C` and only then
-//!   moves on. (Chunk-major chunking would need per-chunk gathers —
-//!   different comm.)
+//!   layer, so a layer runs `Pre×C → Select(+post) → Append×C →
+//!   Assemble(complete) → Post×C` and only then moves on. (Chunk-major
+//!   chunking would need per-chunk gathers — different comm.) The gather
+//!   rides the split [`post`/`complete`](crate::cluster::collectives)
+//!   halves with the C cache-append steps scheduled *inside* the window,
+//!   so the compressed-block pass is genuinely hidden behind local work —
+//!   the measured counterpart of the paper's Figure 1 overlap claim.
 //! * **RingAttn** is layer-major too (the rotation moves *full* KV blocks),
 //!   but the N-1 exchange rounds are software-pipelined through the split
 //!   [`post`/`complete`](crate::cluster::collectives) halves: each round's
@@ -54,7 +58,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Fabric;
+use crate::cluster::{complete_accounted, Interconnect, Receipt};
 use crate::config::{ApbOptions, ApbParams, AttnMethod, Config};
 use crate::kvcache::{KvCache, SessionId, SharedPrefix};
 use crate::runtime::ExecBackend;
@@ -68,7 +72,7 @@ use super::timing::{PrefillTiming, Stopwatch};
 pub(crate) struct StepCtx<'a> {
     pub rank: usize,
     pub cfg: &'a Config,
-    pub fabric: &'a Fabric,
+    pub fabric: &'a Interconnect,
     pub backend: &'a dyn ExecBackend,
     /// The session's KV-pool slot (claimed at `PrefillBegin`).
     pub cache: &'a mut KvCache,
@@ -127,9 +131,9 @@ fn gather_compressed(k: &Tensor, v: &Tensor, idx: &[Vec<usize>]) -> (Tensor, Ten
 // Plans
 // ---------------------------------------------------------------------------
 
-/// One bounded unit of prefill work. Ops touching the fabric (`ApbGather`,
-/// `RingPost`, `RingForward`, `RingComplete`) sit at the same plan indices
-/// on every rank — that is the lockstep invariant.
+/// One bounded unit of prefill work. Ops touching the fabric (`ApbSelect`,
+/// `ApbAssemble`, `RingPost`, `RingForward`, `RingComplete`) sit at the
+/// same plan indices on every rank — that is the lockstep invariant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Op {
     // --- APB / StarAttn (layer-major) ---------------------------------
@@ -139,10 +143,17 @@ enum Op {
     /// Chunked pre: anchor rows (at c == 0) + one local chunk through
     /// projection/RoPE/scores.
     ApbPre { li: usize, c: usize },
-    /// Top-l_p select (+ retained record) and, for APB, the per-layer
-    /// AllGather of compressed blocks (split post/complete).
-    ApbGather { li: usize },
-    /// Modified-mask attention + FFN for one chunk, then its cache append.
+    /// Top-l_p select (+ retained record) and, for APB, *posting* the
+    /// per-layer AllGather of compressed blocks (completed by
+    /// `ApbAssemble`; StarAttn posts nothing).
+    ApbSelect { li: usize },
+    /// Append one chunk's LOCAL rows to the session's KV slot — scheduled
+    /// inside the gather window so the pass hides behind cache work.
+    ApbAppend { li: usize, c: usize },
+    /// Complete the compressed-block gather and assemble the passing
+    /// blocks of ranks < mine.
+    ApbAssemble { li: usize },
+    /// Modified-mask attention + FFN for one chunk.
     ApbPost { li: usize, c: usize },
     // --- RingAttn (layer-major, pipelined rotation) --------------------
     RingPre { li: usize, c: usize },
@@ -173,14 +184,18 @@ enum Op {
 }
 
 fn apb_plan(n_layers: usize, n_chunks: usize) -> Vec<Op> {
-    let mut plan = Vec::with_capacity(n_layers * (2 * n_chunks + 1));
+    let mut plan = Vec::with_capacity(n_layers * (3 * n_chunks + 2));
     for li in 0..n_layers {
         if n_chunks == 1 {
             plan.push(Op::ApbPreFull { li });
         } else {
             plan.extend((0..n_chunks).map(|c| Op::ApbPre { li, c }));
         }
-        plan.push(Op::ApbGather { li });
+        plan.push(Op::ApbSelect { li });
+        // The cache appends sit between post and complete on purpose: they
+        // are the local work the gather window hides behind.
+        plan.extend((0..n_chunks).map(|c| Op::ApbAppend { li, c }));
+        plan.push(Op::ApbAssemble { li });
         plan.extend((0..n_chunks).map(|c| Op::ApbPost { li, c }));
     }
     plan
@@ -262,7 +277,10 @@ pub(crate) struct PrefillMachine {
     /// Ring: the block received by the last completed exchange.
     held: Option<(Tensor, Tensor)>,
     /// Ring: receipt of the posted-but-not-yet-completed exchange round.
-    pending: Option<crate::cluster::collectives::Receipt>,
+    pending_ring: Option<Receipt>,
+    /// APB: receipt of the posted-but-not-yet-completed compressed-block
+    /// gather (in flight between `ApbSelect` and `ApbAssemble`).
+    pending_gather: Option<Receipt>,
     /// Prefix-cache key this request was begun under (`None` when the
     /// cluster runs without `ApbParams::prefix_cache`). A cold machine
     /// with a digest freezes its document KV into the store at the final
@@ -362,7 +380,8 @@ impl PrefillMachine {
             outs: Vec::new(),
             lses: Vec::new(),
             held: None,
-            pending: None,
+            pending_ring: None,
+            pending_gather: None,
             digest,
             warm: None,
         };
@@ -407,7 +426,8 @@ impl PrefillMachine {
             outs: Vec::new(),
             lses: Vec::new(),
             held: None,
-            pending: None,
+            pending_ring: None,
+            pending_gather: None,
             digest: Some(digest),
             warm: Some(entry),
         };
@@ -424,17 +444,21 @@ impl PrefillMachine {
         self.warm.as_ref()
     }
 
-    /// Cancel the machine, draining any posted-but-incomplete ring round.
-    /// Safe and non-blocking under the leader's lockstep: a receipt can
-    /// only be pending for a round EVERY rank posted during the same
-    /// broadcast step (the leader collected all responses before moving
-    /// on), so the round is already complete — `complete` returns the
-    /// payload immediately, which is discarded, and the collective's
-    /// per-rank delivery/outstanding state is left pristine for the next
-    /// session. Every rank runs this from the same `Cmd::Clear`/`ClearAll`.
-    pub(crate) fn abort(mut self, rank: usize, fabric: &Fabric) {
-        if let Some(receipt) = self.pending.take() {
-            let _ = fabric.ring_pass.complete(rank, receipt);
+    /// Cancel the machine, draining any posted-but-incomplete fabric round
+    /// (the ring rotation and/or the APB compressed-block gather) via
+    /// [`cancel`](crate::cluster::collectives::Fabric::cancel). Never
+    /// blocks: if the round already completed (the common case under the
+    /// leader's lockstep, where every rank posted during the same step)
+    /// the delivery is discarded; if the round is genuinely still open
+    /// (a peer died mid-round) the contribution is retracted — either way
+    /// the collective's per-rank state is pristine for the next session.
+    /// Every rank runs this from the same `Cmd::Clear`/`ClearAll`.
+    pub(crate) fn abort(mut self, rank: usize, fabric: &Interconnect) {
+        if let Some(receipt) = self.pending_ring.take() {
+            fabric.ring_pass.cancel(rank, receipt);
+        }
+        if let Some(receipt) = self.pending_gather.take() {
+            fabric.kv_gather.cancel(rank, receipt);
         }
     }
 
@@ -457,7 +481,9 @@ impl PrefillMachine {
         match op {
             Op::ApbPreFull { li } => self.apb_pre_full(ctx, li)?,
             Op::ApbPre { li, c } => self.apb_pre(ctx, li, c)?,
-            Op::ApbGather { li } => self.apb_gather(ctx, li)?,
+            Op::ApbSelect { li } => self.apb_select(ctx, li)?,
+            Op::ApbAppend { li, c } => self.apb_append(ctx, li, c)?,
+            Op::ApbAssemble { li } => self.apb_assemble(ctx, li)?,
             Op::ApbPost { li, c } => self.apb_post(ctx, li, c)?,
             Op::RingPre { li, c } => self.ring_pre(ctx, li, c)?,
             Op::RingPost { li } => self.ring_post(ctx, li)?,
@@ -521,7 +547,7 @@ impl PrefillMachine {
         Ok(())
     }
 
-    fn apb_gather(&mut self, ctx: &mut StepCtx<'_>, li: usize) -> Result<()> {
+    fn apb_select(&mut self, ctx: &mut StepCtx<'_>, li: usize) -> Result<()> {
         let (a, m) = (&ctx.cfg.apb, &ctx.cfg.model);
         let mut sw = Stopwatch::start();
         let n_tot = a.n_tot();
@@ -552,21 +578,61 @@ impl PrefillMachine {
         let (k_c, v_c) = gather_compressed(&k_local, &v_local, &idx);
         self.tm.topk_s += sw.lap();
 
-        // AllGather of compressed blocks (§3.5), session-tagged — the fused
-        // post+complete (nothing to overlap: assembly and layer_post both
-        // need every block; the split halves earn their keep in the ring
-        // rotation). StarAttn skips passing entirely: zero prefill
-        // communication.
+        // Post the AllGather of compressed blocks (§3.5), session-tagged —
+        // completed by `ApbAssemble` after the appends, so the pass rides
+        // under local work (the measured-overlap window). StarAttn skips
+        // passing entirely: zero prefill communication.
         let passing = self.opts.method.passes_compressed_blocks();
         self.pass_len = if passing { (ctx.rank * a.passing_len) as i32 } else { 0 };
-        let blocks: Vec<(Tensor, Tensor)> = if passing {
-            ctx.fabric.kv_gather.all_gather_tagged(ctx.rank, self.sid, (k_c, v_c))
-        } else {
-            Vec::new()
-        };
+        if passing {
+            self.pending_gather =
+                Some(ctx.fabric.kv_gather.post_tagged(ctx.rank, self.sid, (k_c, v_c)));
+        }
         self.tm.comm_s += sw.lap();
+        Ok(())
+    }
+
+    fn apb_append(&mut self, ctx: &mut StepCtx<'_>, li: usize, c: usize) -> Result<()> {
+        let a = &ctx.cfg.apb;
+        let mut sw = Stopwatch::start();
+        // Cache append of this chunk's LOCAL rows only (anchor discarded).
+        // Runs between the gather's post and complete: attention reads the
+        // per-layer k/v scratch, never the pool, so appending early is
+        // bit-identical — same slices, same chunk order, same pool bytes.
+        let (c0, c1) = self.chunks[c];
+        ctx.cache.append(
+            li,
+            &self.k.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
+            &self.v.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
+        )?;
+        self.tm.cache_s += sw.lap();
+        Ok(())
+    }
+
+    fn apb_assemble(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
+        let (a, m) = (&ctx.cfg.apb, &ctx.cfg.model);
+        // Complete the gather (StarAttn never posted one). On a rendezvous
+        // timeout the receipt is kept so `abort` can still drain the round.
+        let blocks: Vec<(Tensor, Tensor)> = match self.pending_gather.take() {
+            Some(receipt) => match complete_accounted(
+                &ctx.fabric.kv_gather,
+                ctx.rank,
+                &receipt,
+                &mut self.tm.comm_s,
+                &mut self.tm.comm_window_s,
+                &mut self.tm.comm_hidden_s,
+            ) {
+                Ok(all) => all,
+                Err(e) => {
+                    self.pending_gather = Some(receipt);
+                    return Err(e.into());
+                }
+            },
+            None => Vec::new(),
+        };
 
         // Passing-block assembly: ranks < mine, rank order.
+        let mut sw = Stopwatch::start();
         self.k_pass = Tensor::zeros(vec![a.pass_max(), m.n_kv_heads, m.head_dim()]);
         self.v_pass = self.k_pass.clone();
         for r in 0..ctx.rank.min(blocks.len()) {
@@ -593,14 +659,6 @@ impl PrefillMachine {
         )?;
         self.hidden.write_rows(row0, &new_rows);
         self.tm.layer_post_s += sw.lap();
-
-        // Cache append: this chunk's LOCAL rows only (anchor discarded).
-        ctx.cache.append(
-            li,
-            &self.k.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
-            &self.v.slice_rows(a.l_aq() + c0, a.l_aq() + c1),
-        )?;
-        self.tm.cache_s += sw.lap();
         Ok(())
     }
 
@@ -637,30 +695,49 @@ impl PrefillMachine {
         // while the exchange is in flight.
         let receipt = ctx.fabric.ring_pass.post_tagged(
             ctx.rank, self.sid, (self.k.clone(), self.v.clone()));
-        self.pending = Some(receipt);
+        self.pending_ring = Some(receipt);
         self.tm.comm_s += sw.lap();
         Ok(())
     }
 
+    /// Complete the pending ring round, folding its exposed/window/hidden
+    /// times into the machine's buckets. On a rendezvous timeout the
+    /// receipt goes back into `pending_ring` so a later `abort` can still
+    /// drain the round.
+    fn complete_ring(&mut self, ctx: &mut StepCtx<'_>) -> Result<(Tensor, Tensor)> {
+        let receipt = self.pending_ring.take().expect("ring step without a posted round");
+        match complete_accounted(
+            &ctx.fabric.ring_pass,
+            ctx.rank,
+            &receipt,
+            &mut self.tm.comm_s,
+            &mut self.tm.comm_window_s,
+            &mut self.tm.comm_hidden_s,
+        ) {
+            Ok(block) => Ok(block),
+            Err(e) => {
+                self.pending_ring = Some(receipt);
+                Err(e.into())
+            }
+        }
+    }
+
     fn ring_forward(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
+        let block = self.complete_ring(ctx)?;
         let mut sw = Stopwatch::start();
-        let receipt = self.pending.take().expect("ring forward without a posted round");
-        let block = ctx.fabric.ring_pass.complete(ctx.rank, receipt);
         // Forward the received block onward, keep a copy to attend to while
         // the next exchange is in flight.
         let receipt = ctx.fabric.ring_pass.post_tagged(
             ctx.rank, self.sid, (block.0.clone(), block.1.clone()));
-        self.pending = Some(receipt);
+        self.pending_ring = Some(receipt);
         self.held = Some(block);
         self.tm.comm_s += sw.lap();
         Ok(())
     }
 
     fn ring_complete(&mut self, ctx: &mut StepCtx<'_>, _li: usize) -> Result<()> {
-        let mut sw = Stopwatch::start();
-        let receipt = self.pending.take().expect("ring complete without a posted round");
-        self.held = Some(ctx.fabric.ring_pass.complete(ctx.rank, receipt));
-        self.tm.comm_s += sw.lap();
+        let block = self.complete_ring(ctx)?;
+        self.held = Some(block);
         Ok(())
     }
 
@@ -778,8 +855,10 @@ mod tests {
         // rank derives the same plan (length AND op sequence) from the
         // config alone.
         for n_chunks in [1usize, 2, 5] {
+            // Per layer: (1 | C) pre + select + C appends + assemble +
+            // C posts = 3C + 2 (the C == 1 fast path folds pre into one op).
             let apb = apb_plan(3, n_chunks);
-            assert_eq!(apb.len(), 3 * (2 * n_chunks + 1));
+            assert_eq!(apb.len(), 3 * (3 * n_chunks + 2));
             for n_hosts in [1usize, 2, 4] {
                 let ring = ring_plan(2, n_hosts, n_chunks);
                 // Per layer: C pre + N collective-touching ops (1 post,

@@ -7,6 +7,14 @@
 //!   comm        -> AllGather wait (communication)
 //!   layer_post  -> attention + O projection + FFN
 //!   cache       -> KV-cache append ("others")
+//!
+//! `comm_s` is the *exposed* communication time (what the host actually
+//! blocked on). The companion pair `comm_window_s` / `comm_hidden_s` tracks
+//! the full post→delivery windows of the host's collective rounds and the
+//! part of those windows its own compute covered — `hidden / window` is the
+//! measured overlap fraction reported by `benches/fig1_prefill`. Both are
+//! outside `accounted()` on purpose: the window overlaps the compute
+//! buckets by construction.
 
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PrefillTiming {
@@ -17,6 +25,10 @@ pub struct PrefillTiming {
     pub layer_post_s: f64,
     pub cache_s: f64,
     pub total_s: f64,
+    /// Full post→delivery span of this host's collective rounds.
+    pub comm_window_s: f64,
+    /// Part of `comm_window_s` hidden behind this host's own compute.
+    pub comm_hidden_s: f64,
 }
 
 impl PrefillTiming {
@@ -37,6 +49,8 @@ impl PrefillTiming {
         self.layer_post_s += o.layer_post_s;
         self.cache_s += o.cache_s;
         self.total_s += o.total_s;
+        self.comm_window_s += o.comm_window_s;
+        self.comm_hidden_s += o.comm_hidden_s;
     }
 }
 
@@ -49,6 +63,10 @@ pub struct DecodeTiming {
     pub post_s: f64,
     pub lm_head_s: f64,
     pub total_s: f64,
+    /// Full post→delivery span of this host's decode gather rounds.
+    pub comm_window_s: f64,
+    /// Part of `comm_window_s` hidden behind this host's own compute.
+    pub comm_hidden_s: f64,
 }
 
 impl DecodeTiming {
@@ -60,6 +78,8 @@ impl DecodeTiming {
         self.post_s += o.post_s;
         self.lm_head_s += o.lm_head_s;
         self.total_s += o.total_s;
+        self.comm_window_s += o.comm_window_s;
+        self.comm_hidden_s += o.comm_hidden_s;
     }
 }
 
@@ -94,13 +114,19 @@ mod tests {
             layer_post_s: 0.3,
             cache_s: 0.05,
             total_s: 1.0,
+            comm_window_s: 0.15,
+            comm_hidden_s: 0.05,
         };
+        // Window/hidden stay outside accounted(): they overlap the compute
+        // buckets by construction.
         assert!((t.accounted() - 0.8).abs() < 1e-12);
         assert!((t.other() - 0.2).abs() < 1e-12);
         let mut sum = PrefillTiming::default();
         sum.add(&t);
         sum.add(&t);
         assert!((sum.total_s - 2.0).abs() < 1e-12);
+        assert!((sum.comm_window_s - 0.3).abs() < 1e-12);
+        assert!((sum.comm_hidden_s - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -12,10 +12,10 @@ use anyhow::{bail, Result};
 
 use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B};
 use apb::bench_harness::Table;
-use apb::cluster::Fabric;
+use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
-use apb::coordinator::Cluster;
+use apb::coordinator::{Cluster, Driver};
 use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
 use apb::ruler::tasks::{infbench_tasks, ruler_tasks, ModelCol};
 use apb::ruler::{gen_instance, TaskKind};
@@ -25,7 +25,10 @@ use apb::util::rng::Rng;
 const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
   info                              list artifacts and config
   run      --config tiny --max-new 8 --method apb|star|ring|dense
+           --driver threaded|sequential (host execution driver; default
+           $APB_DRIVER or threaded)
   serve    --config tiny --requests 4 --max-new 4 --method apb|star|ring|dense
+           --driver threaded|sequential
            --chunk-tokens N (prefill chunk size; smaller = finer decode
            interleaving) --prefix-cache (shared-prefix KV reuse: requests
            over one corpus skip repeat prefills) --smoke (CI gate: assert
@@ -48,13 +51,24 @@ fn print_comm(cluster: &Cluster) {
     let m = &cluster.fabric.meter;
     println!(
         "comm: kv {} B / {} rounds | ring {} B / {} rounds | att {} B / {} rounds",
-        m.bytes_for(Fabric::KV_LABEL),
-        m.rounds_for(Fabric::KV_LABEL),
-        m.bytes_for(Fabric::RING_LABEL),
-        m.rounds_for(Fabric::RING_LABEL),
-        m.bytes_for(Fabric::ATT_LABEL),
-        m.rounds_for(Fabric::ATT_LABEL),
+        m.bytes_for(Interconnect::KV_LABEL),
+        m.rounds_for(Interconnect::KV_LABEL),
+        m.bytes_for(Interconnect::RING_LABEL),
+        m.rounds_for(Interconnect::RING_LABEL),
+        m.bytes_for(Interconnect::ATT_LABEL),
+        m.rounds_for(Interconnect::ATT_LABEL),
     );
+}
+
+/// Resolve the host execution driver from `--driver`, falling back to the
+/// `APB_DRIVER` environment default.
+fn driver_from(args: &Args) -> Result<Driver> {
+    match args.get("driver") {
+        Some(s) => Driver::parse(s)
+            .ok_or_else(|| anyhow::anyhow!(
+                "--driver={s} is not a driver (expected sequential|threaded)")),
+        None => Ok(Driver::from_env()),
+    }
 }
 
 fn main() -> Result<()> {
@@ -108,12 +122,13 @@ fn default_request(cfg: &apb::config::Config, seed: u64) -> (Vec<i32>, Vec<i32>)
 fn run(args: &Args) -> Result<()> {
     let method = method_from(args)?;
     let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
-    let cluster = Cluster::start(&cfg)?;
+    let cluster = Cluster::start_with(&cfg, driver_from(args)?)?;
     let (doc, query) = default_request(&cfg, args.usize_or("seed", 1)? as u64);
     let opts = ApbOptions { method, ..Default::default() };
     let rep = cluster.prefill(&doc, &query, &opts)?;
     let gen = cluster.generate(&query, args.usize_or("max-new", 8)?)?;
-    println!("method {} (exact attention: {})", method.name(), method.exact_attention());
+    println!("method {} (exact attention: {}) | driver {}", method.name(),
+             method.exact_attention(), cluster.driver().name());
     println!("tokens: {:?}", gen.tokens);
     println!("prefill {:.1} ms | decode {:.1} ms | prefill comm {} B",
              rep.wall_seconds * 1e3, gen.wall_seconds * 1e3, rep.comm_bytes);
@@ -130,7 +145,7 @@ fn serve(args: &Args) -> Result<()> {
     // Cluster-wide chunked-prefill granularity (per-request overrides ride
     // on ApbOptions::chunk_tokens).
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
-    let cluster = Cluster::start(&cfg)?;
+    let cluster = Cluster::start_with(&cfg, driver_from(args)?)?;
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;
     let max_new = args.usize_or("max-new", 4)?;
@@ -216,8 +231,9 @@ fn serve(args: &Args) -> Result<()> {
                             "smoke: best warm TTFT {:.3} ms !< cold TTFT {:.3} ms",
                             warm * 1e3, cold * 1e3);
         }
-        println!("apb serve --smoke OK (chunk_tokens {}, prefix cache {})",
-                 cfg.apb.chunk_tokens, if prefix_cache { "on" } else { "off" });
+        println!("apb serve --smoke OK (chunk_tokens {}, prefix cache {}, driver {})",
+                 cfg.apb.chunk_tokens, if prefix_cache { "on" } else { "off" },
+                 cluster.driver().name());
     }
     Ok(())
 }

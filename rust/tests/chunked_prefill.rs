@@ -11,12 +11,12 @@
 //!
 //! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
 
-use apb::cluster::Fabric;
+use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::Cluster;
 use apb::util::rng::Rng;
 
-const LABELS: [&str; 3] = [Fabric::KV_LABEL, Fabric::ATT_LABEL, Fabric::RING_LABEL];
+const LABELS: [&str; 3] = [Interconnect::KV_LABEL, Interconnect::ATT_LABEL, Interconnect::RING_LABEL];
 
 /// Everything the invariance compares, captured from one fresh cluster.
 #[derive(Debug, PartialEq)]

@@ -7,7 +7,7 @@
 //! these are non-skipping tier-1 tests); with `--features pjrt` and
 //! `make artifacts` the same assertions run against the PJRT cluster.
 
-use apb::cluster::Fabric;
+use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::Cluster;
 use apb::ruler::{gen_instance, TaskKind};
@@ -183,8 +183,8 @@ fn run_method(method: AttnMethod) -> (Vec<f32>, u64, u64, u64) {
     let m = &cluster.fabric.meter;
     (
         gen.query_logits,
-        m.bytes_for(Fabric::KV_LABEL),
-        m.bytes_for(Fabric::RING_LABEL),
+        m.bytes_for(Interconnect::KV_LABEL),
+        m.bytes_for(Interconnect::RING_LABEL),
         m.bytes_total(),
     )
 }
@@ -240,20 +240,20 @@ fn ring_rotation_moves_full_kv_blocks() {
     let total_rows = a.query_len + a.doc_len(); // [query | doc] split
     let want_ring = (m.n_layers * (a.n_hosts - 1) * total_rows * row_bytes) as u64;
     let meter = &cluster.fabric.meter;
-    assert_eq!(meter.bytes_for(Fabric::RING_LABEL), want_ring);
+    assert_eq!(meter.bytes_for(Interconnect::RING_LABEL), want_ring);
     assert_eq!(
-        meter.rounds_for(Fabric::RING_LABEL),
+        meter.rounds_for(Interconnect::RING_LABEL),
         (m.n_layers * a.n_hosts * (a.n_hosts - 1)) as u64,
         "every rank contributes to every exchange round"
     );
-    assert_eq!(meter.bytes_for(Fabric::KV_LABEL), 0);
+    assert_eq!(meter.bytes_for(Interconnect::KV_LABEL), 0);
 
     // APB's compressed passing on the same request, for the ratio claim.
     let apb_cluster = Cluster::start(&Config::sim_tiny()).expect("cluster start");
     apb_cluster.prefill(&inst.doc, &inst.query, &ApbOptions::default()).unwrap();
     let want_kv = (m.n_layers * a.n_hosts * 2 * a.passing_len * m.n_kv_heads
         * m.head_dim() * 4) as u64;
-    let kv = apb_cluster.fabric.meter.bytes_for(Fabric::KV_LABEL);
+    let kv = apb_cluster.fabric.meter.bytes_for(Interconnect::KV_LABEL);
     assert_eq!(kv, want_kv);
     assert!(want_ring > kv,
             "ring must move more bytes than APB's compressed blocks \

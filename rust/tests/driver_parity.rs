@@ -1,0 +1,185 @@
+//! Driver parity — the acceptance gate of the threaded-hosts redesign
+//! (docs/ADR-004-threaded-hosts.md): a cluster under [`Driver::Threaded`]
+//! (one OS thread per host, genuinely rendezvousing collectives) must be
+//! **bit-identical** to the [`Driver::Sequential`] oracle (leader-owned
+//! workers, deterministic rank-order microstepping) in
+//!
+//! * the query-chunk and per-step decode logits,
+//! * the per-label CommMeter bytes AND rounds (the drivers may never add,
+//!   drop or resize a collective),
+//! * the per-host KV-pool slot bytes,
+//!
+//! for every `AttnMethod`, across chunk sizes, and through mid-prefill
+//! cancellation. A wedged threaded rank cannot hang the suite: the fabric's
+//! rendezvous timeout converts a stuck round into a structured error, so a
+//! deadlock shows up as a test FAILURE, not a CI timeout.
+//!
+//! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
+
+use apb::cluster::Interconnect;
+use apb::config::{ApbOptions, AttnMethod, Config};
+use apb::coordinator::{Cluster, Driver};
+use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
+
+const LABELS: [&str; 3] =
+    [Interconnect::KV_LABEL, Interconnect::ATT_LABEL, Interconnect::RING_LABEL];
+
+fn request(cfg: &Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    (doc, query)
+}
+
+/// Everything the parity property compares, captured from one fresh
+/// cluster. Wall-clock timing is deliberately excluded — it is the one
+/// thing the drivers are ALLOWED to differ on.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    chunk_logits: Vec<f32>,
+    step_logits: Vec<f32>,
+    /// (bytes, rounds) per meter label after the whole scenario.
+    comm: Vec<(u64, u64)>,
+    pool_bytes: Vec<usize>,
+}
+
+/// One full scenario on a fresh cluster under `driver`: optionally begin a
+/// prefill, drive `k` chunk steps and CANCEL it mid-flight (the fabric
+/// must drain identically under both drivers), then prefill a fresh
+/// session to completion and decode (query chunk + one batched step).
+fn run(driver: Driver, method: AttnMethod, ct: usize, abort_after: Option<usize>)
+       -> Fingerprint {
+    let cfg = Config::sim_tiny().with_method(method);
+    let cluster = Cluster::start_with(&cfg, driver).expect("cluster");
+    let (doc, query) = request(&cfg, 0xAB1E);
+    let opts = ApbOptions { method, chunk_tokens: Some(ct), ..Default::default() };
+    if let Some(k) = abort_after {
+        let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+        for _ in 0..k.min(p.n_steps() - 1) {
+            cluster.prefill_step(&mut p).expect("step");
+        }
+        cluster.clear_session(1).expect("cancel mid-prefill");
+    }
+    cluster.prefill_session(2, &doc, &query, &opts).expect("prefill");
+    let chunk = cluster.decode_query_chunk(2, &query).expect("query chunk");
+    let vocab = cfg.model.vocab_size;
+    let tok = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let step = cluster.decode_step_batch(&[(2, tok)]).expect("decode step");
+    let m = &cluster.fabric.meter;
+    Fingerprint {
+        chunk_logits: chunk.logits,
+        step_logits: step.logits[0].1.clone(),
+        comm: LABELS.iter().map(|l| (m.bytes_for(l), m.rounds_for(l))).collect(),
+        pool_bytes: cluster
+            .pool_stats()
+            .expect("pool stats")
+            .iter()
+            .map(|s| s.bytes_used)
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_threaded_equals_sequential_for_all_methods() {
+    println!("APB-RUN driver_parity backend=sim");
+    let cfg = Config::sim_tiny();
+    for method in AttnMethod::ALL {
+        // Chunk sizes spanning single-token, mid-block and one-shot; with
+        // and without a cancelled admission before the measured request.
+        for ct in [1usize, 7, 10 * cfg.apb.doc_len()] {
+            for abort_after in [None, Some(2)] {
+                let seq = run(Driver::Sequential, method, ct, abort_after);
+                assert!(seq.chunk_logits.iter().all(|x| x.is_finite()),
+                        "{} ct={ct}: non-finite oracle logits", method.name());
+                let thr = run(Driver::Threaded, method, ct, abort_after);
+                assert_eq!(thr, seq,
+                           "{} ct={ct} abort_after={abort_after:?}: threaded \
+                            diverged from the sequential oracle",
+                           method.name());
+            }
+        }
+    }
+}
+
+/// One serving-shaped scenario: session 1 resident and decoding, session 2
+/// admitted chunk-by-chunk with a seeded-random number of session-1 decode
+/// ticks interleaved between chunk steps. Returns the full logits trace of
+/// every tick plus the comm fingerprint — same seed, same interleaving,
+/// so the drivers must match bit-for-bit.
+fn interleaved(driver: Driver, seed: u64) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start_with(&cfg, driver).expect("cluster");
+    let (doc, query) = request(&cfg, seed);
+    let opts = ApbOptions::default();
+    cluster.prefill_session(1, &doc, &query, &opts).expect("prefill A");
+    let chunk = cluster.decode_query_chunk(1, &query).expect("chunk A");
+    let vocab = cfg.model.vocab_size;
+    let mut tok = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let mut trace = chunk.logits;
+
+    let mut rng = Rng::new(seed ^ 0x71C4);
+    let mut p = cluster.prefill_begin(2, &doc, &query, &opts).expect("begin B");
+    loop {
+        let done = cluster.prefill_step(&mut p).expect("step B");
+        for _ in 0..rng.below(3) {
+            let rep = cluster.decode_step_batch(&[(1, tok)]).expect("tick A");
+            tok = Tensor::argmax_row(&rep.logits[0].1) as i32;
+            trace.extend(rep.logits[0].1.iter().copied());
+        }
+        if done.is_some() {
+            break;
+        }
+    }
+    let chunk_b = cluster.decode_query_chunk(2, &query).expect("chunk B");
+    trace.extend(chunk_b.logits);
+    let m = &cluster.fabric.meter;
+    (trace, LABELS.iter().map(|l| (m.bytes_for(l), m.rounds_for(l))).collect())
+}
+
+#[test]
+fn stress_concurrent_threaded_clusters_match_their_sequential_oracles() {
+    // N worker threads, each owning TWO whole clusters (a sequential
+    // oracle and a threaded run of the identical seeded interleaving) —
+    // up to N × n_hosts host threads plus N leaders live at once, all
+    // hammering mpsc channels and condvar rendezvous concurrently. Any
+    // cross-cluster interference, lost wakeup or deadlock surfaces as a
+    // divergence, a rendezvous-timeout error, or a join failure here.
+    println!("APB-RUN driver_parity_stress backend=sim");
+    let handles: Vec<_> = (0..4u64)
+        .map(|i| {
+            std::thread::Builder::new()
+                .name(format!("parity-worker-{i}"))
+                .spawn(move || {
+                    let seq = interleaved(Driver::Sequential, 0xBEEF + i);
+                    let thr = interleaved(Driver::Threaded, 0xBEEF + i);
+                    assert_eq!(thr, seq, "worker {i}: threaded diverged");
+                })
+                .expect("spawn")
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress worker panicked (deadlock/divergence)");
+    }
+}
+
+#[test]
+fn sequential_driver_reports_itself_and_env_default_is_threaded() {
+    let cfg = Config::sim_tiny();
+    let seq = Cluster::start_with(&cfg, Driver::Sequential).expect("sequential cluster");
+    assert_eq!(seq.driver(), Driver::Sequential);
+    assert_eq!(seq.n_hosts(), cfg.apb.n_hosts);
+    // `Cluster::start` resolves APB_DRIVER; this test binary does not set
+    // it, so the default must be the production (threaded) driver — unless
+    // the CI matrix leg pinned it, in which case it must follow the pin.
+    let want = match std::env::var("APB_DRIVER") {
+        Ok(s) => Driver::parse(&s).expect("valid APB_DRIVER"),
+        Err(_) => Driver::Threaded,
+    };
+    let env = Cluster::start(&cfg).expect("env cluster");
+    assert_eq!(env.driver(), want);
+}

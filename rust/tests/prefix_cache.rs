@@ -12,13 +12,13 @@
 //!
 //! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
 
-use apb::cluster::Fabric;
+use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, PoolStats, SessionId};
 use apb::util::rng::Rng;
 
-const LABELS: [&str; 3] = [Fabric::KV_LABEL, Fabric::ATT_LABEL, Fabric::RING_LABEL];
+const LABELS: [&str; 3] = [Interconnect::KV_LABEL, Interconnect::ATT_LABEL, Interconnect::RING_LABEL];
 
 fn request(cfg: &Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
     let mut rng = Rng::new(seed);

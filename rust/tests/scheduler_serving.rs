@@ -2,7 +2,7 @@
 //! slots. Runs on the native SimEngine by default (non-skipping); uses
 //! PJRT artifacts when present + enabled.
 
-use apb::cluster::Fabric;
+use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, SessionId};
@@ -162,7 +162,7 @@ fn decode_ticks_proceed_between_prefill_chunks() {
         }
     }
     // A emits one token per tick from 2 up to its budget while B admits
-    // (34 chunk steps at ct=4), so every tick of A's remaining lifetime is
+    // (52 chunk steps at ct=4), so every tick of A's remaining lifetime is
     // asserted above.
     assert!(asserted_ticks >= 4,
             "B's chunked admission must interleave with A's decode over multiple \
@@ -325,9 +325,9 @@ fn batched_decode_is_one_backend_pass_per_layer() {
     let t2 = Tensor::argmax_row(&c2.logits[c2.logits.len() - vocab..]) as i32;
 
     let per_step = (cfg.apb.n_hosts * cfg.model.n_layers) as u64;
-    let r0 = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL);
+    let r0 = cluster.fabric.meter.rounds_for(Interconnect::ATT_LABEL);
     let rep = cluster.decode_step_batch(&[(1, t1), (2, t2)]).unwrap();
-    let dr = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL) - r0;
+    let dr = cluster.fabric.meter.rounds_for(Interconnect::ATT_LABEL) - r0;
     assert_eq!(dr, per_step,
                "2-session batched step took {dr} att rounds, expected {per_step}");
     assert_eq!(rep.logits.len(), 2);
@@ -337,9 +337,9 @@ fn batched_decode_is_one_backend_pass_per_layer() {
 
     // And a single-session step costs the same number of rounds: the batch
     // dimension rides the same collectives rather than multiplying them.
-    let r1 = cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL);
+    let r1 = cluster.fabric.meter.rounds_for(Interconnect::ATT_LABEL);
     cluster.decode_step_batch(&[(1, t1)]).unwrap();
-    assert_eq!(cluster.fabric.meter.rounds_for(Fabric::ATT_LABEL) - r1, per_step);
+    assert_eq!(cluster.fabric.meter.rounds_for(Interconnect::ATT_LABEL) - r1, per_step);
 }
 
 #[test]
@@ -399,6 +399,6 @@ fn legacy_generate_reports_decode_comm() {
     assert!(gen.comm_bytes > 0, "GenReport.comm_bytes must meter decode traffic");
     // Prefill comm (compressed KV) and decode comm (attention partials)
     // are metered under separate labels.
-    assert!(cluster.fabric.meter.bytes_for(Fabric::KV_LABEL) > 0);
-    assert!(cluster.fabric.meter.bytes_for(Fabric::ATT_LABEL) >= gen.comm_bytes);
+    assert!(cluster.fabric.meter.bytes_for(Interconnect::KV_LABEL) > 0);
+    assert!(cluster.fabric.meter.bytes_for(Interconnect::ATT_LABEL) >= gen.comm_bytes);
 }
