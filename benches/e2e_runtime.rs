@@ -1,65 +1,217 @@
 //! Real end-to-end runtime bench on the cluster (SimEngine by default,
 //! PJRT tiny artifacts when built with `--features pjrt` + `make artifacts`):
-//! prefill wall-time, decode per-token latency, the paper's tok/s speed
-//! metric, and the coordinator-overhead share — the numbers the §Perf
-//! iteration log in EXPERIMENTS.md tracks.
+//! the scalar-vs-tiled kernel microbench, prefill wall-time, decode
+//! per-token latency, the paper's tok/s speed metric, the
+//! coordinator-overhead share, and the KV slab-arena counters — the numbers
+//! committed to `BENCH_runtime.json` (regenerated and field-validated by
+//! CI's threaded leg) and explained in `docs/serving-guide.md`.
+//!
+//! Timing exclusion rule: every timed section measures ONLY the operation
+//! it names. State preparation (cache clears, the prefill that decode
+//! steps extend) runs in `Bencher::run_with_setup`'s untimed setup phase
+//! before each iteration, so the decode rows are decode steps only — never
+//! a hidden re-prefill.
 
 use apb::bench_harness::{default_bencher, Table};
-use apb::config::{ApbOptions, AttnMethod};
+use apb::config::{ApbOptions, AttnMethod, Config};
 use apb::coordinator::Cluster;
 use apb::report;
+use apb::runtime::sim::{masked_attention_seg, masked_attention_seg_ref, resolve_sim_threads};
+use apb::runtime::KvSeg;
 use apb::util::json::{self, Json};
 use apb::util::rng::Rng;
 use apb::util::stats::fmt_duration;
+use apb::util::tensor::Tensor;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+    Tensor::new(shape, data).expect("rand tensor")
+}
+
+fn tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.range(1, vocab as i64) as i32).collect()
+}
 
 fn main() {
-    let cfg = apb::load_config_or_sim("tiny").expect("config");
-    let cluster = Cluster::start(&cfg).expect("cluster");
-    let mut rng = Rng::new(123);
-    let doc: Vec<i32> = (0..cfg.apb.doc_len())
-        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
-        .collect();
-    let query: Vec<i32> = (0..cfg.apb.query_len)
-        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
-        .collect();
-    let opts = ApbOptions::default();
-
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--quick");
     let b = default_bencher();
-    println!("== e2e_runtime ({} backend: {} hosts, doc {} tokens) ==",
-             cfg.backend.name(), cfg.apb.n_hosts, cfg.apb.doc_len());
+    if smoke {
+        println!("[e2e_runtime] smoke mode");
+    }
 
-    // Prefill (includes cache clear so each iteration is a fresh request).
-    let s_prefill = b.report("prefill (full APB, per request)", || {
-        cluster.clear().unwrap();
-        cluster.prefill(&doc, &query, &opts).unwrap();
-    });
+    // --- Kernel microbench: scalar reference vs tiled dispatch -------------
+    // Segmented shapes chosen to look like the hot call sites (a prefill
+    // chunk attending [anchor | passing | local], and a long decode tail).
+    // Each shape first asserts bit-identity, then times both kernels; the
+    // committed JSON records min-of-iters so CI can require the tiled
+    // kernel to win on at least one shape without flaking on noise.
+    struct Shape {
+        name: &'static str,
+        nq: usize,
+        seg_rows: [usize; 2],
+        h: usize,
+        kh: usize,
+        hd: usize,
+    }
+    let shapes = [
+        Shape { name: "prefill-chunk", nq: 16, seg_rows: [96, 32], h: 8, kh: 4, hd: 32 },
+        Shape { name: "long-tail", nq: 8, seg_rows: [384, 128], h: 8, kh: 2, hd: 64 },
+    ];
+    let mut kernel_rows = Vec::new();
+    let mut kernel_table =
+        Table::new("kernel: masked_attention_seg scalar vs tiled (min over iters)",
+                   &["shape", "scalar", "tiled", "speedup"]);
+    let mut any_tiled_win = false;
+    for sp in &shapes {
+        let mut rng = Rng::new(7);
+        let nq = if smoke { sp.nq.min(8) } else { sp.nq };
+        let q = rand_tensor(&mut rng, vec![nq, sp.h, sp.hd]);
+        let kv: Vec<(Tensor, Tensor, usize)> = sp
+            .seg_rows
+            .iter()
+            .map(|&r| {
+                let rows = if smoke { r / 2 } else { r };
+                (rand_tensor(&mut rng, vec![rows, sp.kh, sp.hd]),
+                 rand_tensor(&mut rng, vec![rows, sp.kh, sp.hd]),
+                 rows)
+            })
+            .collect();
+        let segs: Vec<KvSeg<'_>> =
+            kv.iter().map(|(k, v, len)| KvSeg { k, v, len: *len }).collect();
+        let nk: usize = kv.iter().map(|s| s.2).sum();
+        // Causal-style stair mask so tiles see partial visibility too.
+        let visible = move |qi: usize, kj: usize| kj < nk - (nq - 1 - qi);
+        let (o_ref, l_ref) = masked_attention_seg_ref(&q, &segs, visible);
+        let (o_til, l_til) = masked_attention_seg(&q, &segs, visible);
+        assert_eq!(o_ref.data, o_til.data, "{}: tiled out != scalar out", sp.name);
+        assert_eq!(l_ref.data, l_til.data, "{}: tiled lse != scalar lse", sp.name);
+        let s_ref = b.run(|| {
+            std::hint::black_box(masked_attention_seg_ref(&q, &segs, visible));
+        });
+        let s_til = b.run(|| {
+            std::hint::black_box(masked_attention_seg(&q, &segs, visible));
+        });
+        any_tiled_win |= s_til.min <= s_ref.min;
+        kernel_table.row(vec![
+            sp.name.into(),
+            fmt_duration(s_ref.min),
+            fmt_duration(s_til.min),
+            format!("{:.2}x", s_ref.min / s_til.min.max(1e-12)),
+        ]);
+        kernel_rows.push(report::row(vec![
+            ("shape", json::s(sp.name)),
+            ("nq", json::num(nq as f64)),
+            ("nk", json::num(nk as f64)),
+            ("scalar_min_s", json::num(s_ref.min)),
+            ("tiled_min_s", json::num(s_til.min)),
+        ]));
+    }
+    kernel_table.print();
+    assert!(any_tiled_win, "tiled kernel slower than scalar on every shape");
+
+    // --- End-to-end: scalar-pinned cluster vs default (tiled + pool) -------
+    let cfg = apb::load_config_or_sim("tiny").expect("config");
+    let cfg_scalar = cfg.clone().with_sim_scalar(true);
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let scalar_cluster = Cluster::start(&cfg_scalar).expect("scalar cluster");
+    let mut rng = Rng::new(123);
+    let doc = tokens(&mut rng, cfg.apb.doc_len(), cfg.model.vocab_size);
+    let query = tokens(&mut rng, cfg.apb.query_len, cfg.model.vocab_size);
+    let opts = ApbOptions::default();
+    let sim_threads = resolve_sim_threads(cfg.sim_threads, cfg.apb.n_hosts);
+    println!("== e2e_runtime ({} backend: {} hosts, doc {} tokens, {} sim threads) ==",
+             cfg.backend.name(), cfg.apb.n_hosts, cfg.apb.doc_len(), sim_threads);
+
+    // Prefill: clear in setup, time the prefill alone.
+    let s_prefill_scalar = b.run_with_setup(
+        || scalar_cluster.clear().unwrap(),
+        || {
+            scalar_cluster.prefill(&doc, &query, &opts).unwrap();
+        },
+    );
+    let s_prefill = b.run_with_setup(
+        || cluster.clear().unwrap(),
+        || {
+            cluster.prefill(&doc, &query, &opts).unwrap();
+        },
+    );
+    println!("prefill  scalar {}  tiled {}  ({:.2}x, min)",
+             fmt_duration(s_prefill_scalar.min), fmt_duration(s_prefill.min),
+             s_prefill_scalar.min / s_prefill.min.max(1e-12));
 
     // StarAttn prefill (no communication) for the comm-cost delta.
     let star_opts = ApbOptions { method: AttnMethod::StarAttn, ..opts };
-    let s_star = b.report("prefill (no passing = Star-mode)", || {
-        cluster.clear().unwrap();
-        cluster.prefill(&doc, &query, &star_opts).unwrap();
-    });
+    let s_star = b.run_with_setup(
+        || cluster.clear().unwrap(),
+        || {
+            cluster.prefill(&doc, &query, &star_opts).unwrap();
+        },
+    );
 
-    // Decode.
-    cluster.clear().unwrap();
-    cluster.prefill(&doc, &query, &opts).unwrap();
-    let n_new = 8;
-    let s_gen = b.run(|| {
-        // Query chunk + n_new greedy steps; cache resets via clear+prefill
-        // are excluded by re-prefilling outside the timer? Prefill state
-        // persists; generate() appends to host H's cache each run, so
-        // clear+prefill inside keeps it bounded.
-        cluster.clear().unwrap();
-        cluster.prefill(&doc, &query, &opts).unwrap();
-        cluster.generate(&query, n_new).unwrap();
-    });
-    let gen_only = (s_gen.mean - s_prefill.mean).max(0.0);
-    let per_tok = gen_only / n_new as f64;
-    println!("decode+query-chunk: {} total, ~{} per generated token",
-             fmt_duration(gen_only), fmt_duration(per_tok));
+    // Decode: setup re-prefills (untimed), the timed body is the query
+    // chunk + n_new greedy steps — nothing else.
+    let n_new = if smoke { 4 } else { 8 };
+    let mut gen_scalar = None;
+    let s_gen_scalar = b.run_with_setup(
+        || {
+            scalar_cluster.clear().unwrap();
+            scalar_cluster.prefill(&doc, &query, &opts).unwrap();
+        },
+        || gen_scalar = Some(scalar_cluster.generate(&query, n_new).unwrap()),
+    );
+    let mut gen_tiled = None;
+    let s_gen = b.run_with_setup(
+        || {
+            cluster.clear().unwrap();
+            cluster.prefill(&doc, &query, &opts).unwrap();
+        },
+        || gen_tiled = Some(cluster.generate(&query, n_new).unwrap()),
+    );
+    let (gen_scalar, gen_tiled) = (gen_scalar.unwrap(), gen_tiled.unwrap());
+    // The perf pass must be invisible in the numerics: same greedy tokens,
+    // bit-identical query logits, scalar vs tiled+pooled.
+    assert_eq!(gen_scalar.tokens, gen_tiled.tokens, "scalar/tiled tokens diverge");
+    assert_eq!(gen_scalar.query_logits, gen_tiled.query_logits,
+               "scalar/tiled query logits diverge");
+    let per_tok_scalar = s_gen_scalar.min / n_new as f64;
+    let per_tok = s_gen.min / n_new as f64;
+    println!("decode   scalar ~{}  tiled ~{} per generated token (min)",
+             fmt_duration(per_tok_scalar), fmt_duration(per_tok));
 
-    // Component shares from the host timers.
+    // --- Slab arena: freeze/evict churn + steady-state decode --------------
+    // A prefix-cache cluster cycling MORE distinct documents than the store
+    // caps (max_resident) forces freeze -> evict -> freeze churn; after the
+    // arena warms up, every re-armed slot slab is recycled. Then a decode
+    // window on the same cluster must allocate zero slabs.
+    let warm = Cluster::start(&cfg.clone().with_prefix_cache(true)).expect("warm cluster");
+    let churn_rounds = cfg.apb.max_resident.max(1) * 2 + 2;
+    for round in 0..churn_rounds {
+        let sid = (round + 1) as u64;
+        let d = tokens(&mut rng, cfg.apb.doc_len(), cfg.model.vocab_size);
+        warm.prefill_session(sid, &d, &query, &opts).expect("churn prefill");
+        warm.clear_session(sid).expect("churn clear");
+    }
+    let churn_stats = warm.pool_stats().expect("pool stats");
+    let slab_allocs: u64 = churn_stats.iter().map(|s| s.slab_allocs).sum();
+    let slab_reuses: u64 = churn_stats.iter().map(|s| s.slab_reuses).sum();
+    let slabs_free: u64 = churn_stats.iter().map(|s| s.slabs_free as u64).sum();
+    assert!(slab_reuses > 0,
+            "churning {churn_rounds} docs past the prefix cap must recycle slabs");
+    // Steady-state decode: query chunk + batched steps on a live session.
+    warm.prefill_session(999, &doc, &query, &opts).expect("steady prefill");
+    let before: u64 = warm.pool_stats().expect("stats").iter().map(|s| s.slab_allocs).sum();
+    warm.decode_query_chunk(999, &query).expect("steady query chunk");
+    for t in 0..n_new {
+        warm.decode_step_batch(&[(999, (t + 2) as i32)]).expect("steady step");
+    }
+    let after: u64 = warm.pool_stats().expect("stats").iter().map(|s| s.slab_allocs).sum();
+    let decode_slab_allocs_delta = after - before;
+    assert_eq!(decode_slab_allocs_delta, 0, "decode steps must not allocate slabs");
+    println!("slabs    allocs {slab_allocs}  reuses {slab_reuses}  free {slabs_free}  \
+              decode-window alloc delta {decode_slab_allocs_delta}");
+
+    // --- Coordinator overhead from the host timers -------------------------
     cluster.clear().unwrap();
     let rep = cluster.prefill(&doc, &query, &opts).unwrap();
     let mut sum = apb::coordinator::PrefillTiming::default();
@@ -79,17 +231,43 @@ fn main() {
     table.print();
     println!("coordinator (non-PJRT) share: {:.1}%", share * 100.0);
 
-    let speed = (doc.len() + query.len() + n_new) as f64 / s_gen.mean;
+    let speed = (doc.len() + query.len() + n_new) as f64 / (s_prefill.min + s_gen.min);
     println!("paper speed metric: {:.0} tok/s (tiny model, CPU interpret)", speed);
+
+    // --- Machine-readable record (committed as BENCH_runtime.json) ---------
+    // `schema_version` gates the CI validator: bump it when fields change.
+    let bench = json::obj(vec![
+        ("bench", json::s("e2e_runtime")),
+        ("schema_version", json::num(1.0)),
+        ("config", json::s(&cfg.name)),
+        ("smoke", Json::Bool(smoke)),
+        ("driver", json::s(cluster.driver().name())),
+        ("sim_threads", json::num(sim_threads as f64)),
+        ("kernel_shapes", Json::Arr(kernel_rows)),
+        ("prefill_scalar_min_s", json::num(s_prefill_scalar.min)),
+        ("prefill_tiled_min_s", json::num(s_prefill.min)),
+        ("star_prefill_min_s", json::num(s_star.min)),
+        ("decode_per_token_scalar_s", json::num(per_tok_scalar)),
+        ("decode_per_token_tiled_s", json::num(per_tok)),
+        ("n_new", json::num(n_new as f64)),
+        ("slab_allocs", json::num(slab_allocs as f64)),
+        ("slab_reuses", json::num(slab_reuses as f64)),
+        ("slabs_free", json::num(slabs_free as f64)),
+        ("decode_slab_allocs_delta", json::num(decode_slab_allocs_delta as f64)),
+        ("coordinator_share", json::num(share)),
+        ("speed_tok_per_s", json::num(speed)),
+    ]);
+    std::fs::write("BENCH_runtime.json", bench.pretty()).expect("BENCH_runtime.json");
+    println!("[bench json] BENCH_runtime.json");
 
     let path = report::write_report(
         "e2e_runtime",
-        vec![("config", json::s(&cfg.name))],
+        vec![("config", json::s(&cfg.name)), ("smoke", Json::Bool(smoke))],
         Json::Arr(vec![report::row(vec![
-            ("prefill_mean_s", json::num(s_prefill.mean)),
-            ("prefill_p50_s", json::num(s_prefill.p50)),
-            ("star_prefill_s", json::num(s_star.mean)),
-            ("decode_per_token_s", json::num(per_tok)),
+            ("prefill_scalar_min_s", json::num(s_prefill_scalar.min)),
+            ("prefill_tiled_min_s", json::num(s_prefill.min)),
+            ("star_prefill_min_s", json::num(s_star.min)),
+            ("decode_per_token_tiled_s", json::num(per_tok)),
             ("speed_tok_per_s", json::num(speed)),
             ("coordinator_share", json::num(share)),
         ])]),

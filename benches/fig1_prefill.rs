@@ -200,9 +200,11 @@ fn main() {
 
     // Machine-readable perf record for CI (checked for well-formed JSON):
     // per-method measured walltime + comm bytes and the modeled overlap
-    // fraction, written next to the bench invocation.
+    // fraction, written next to the bench invocation. `schema_version`
+    // gates the CI field validator: bump it when fields change shape.
     let bench = json::obj(vec![
         ("bench", json::s("fig1_prefill")),
+        ("schema_version", json::num(2.0)),
         ("config", json::s("sim-tiny")),
         ("smoke", Json::Bool(smoke)),
         ("driver", json::s(Driver::from_env().name())),

@@ -39,6 +39,25 @@ impl Bencher {
         summarize(&samples)
     }
 
+    /// Time `f` with an untimed `setup` before EVERY iteration (warmup and
+    /// timed alike). This is how a bench excludes state preparation from
+    /// the measurement: e.g. a decode bench re-prefills in `setup` so the
+    /// timed body is decode steps only.
+    pub fn run_with_setup<S: FnMut(), F: FnMut()>(&self, mut setup: S, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            setup();
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            setup();
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        summarize(&samples)
+    }
+
     pub fn report<F: FnMut()>(&self, name: &str, f: F) -> Summary {
         let s = self.run(f);
         println!(
@@ -201,6 +220,17 @@ mod tests {
         assert_eq!(s.n, 5);
         assert!(s.mean > 0.0 && s.mean < 1.0);
         assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn run_with_setup_runs_setup_before_every_iteration() {
+        let b = Bencher { warmup_iters: 2, iters: 5 };
+        let mut setups = 0usize;
+        let mut bodies = 0usize;
+        let s = b.run_with_setup(|| setups += 1, || bodies += 1);
+        assert_eq!(s.n, 5);
+        assert_eq!(setups, 7, "setup precedes warmup and timed iterations");
+        assert_eq!(bodies, 7);
     }
 
     #[test]

@@ -234,6 +234,16 @@ pub struct Config {
     /// Full parsed manifest (artifacts, weights, golden sections);
     /// `Json::Null` for `Sim` configs.
     pub manifest: Json,
+    /// Kernel-pool threads per `SimEngine`. 0 (the default) defers to
+    /// `runtime::sim::resolve_sim_threads`: the `APB_SIM_THREADS` env var,
+    /// else `available_parallelism / n_hosts`. Set explicitly in tests that
+    /// must not race on the process environment.
+    pub sim_threads: usize,
+    /// Pin the sim backend to its scalar reference kernels (serial, no
+    /// tiling) — the retired pre-ADR-005 hot path, kept as the baseline the
+    /// runtime bench compares the tiled/pooled kernels against.
+    /// Bit-identical to the default; only wall time differs.
+    pub sim_scalar: bool,
 }
 
 fn u(v: &Json, key: &str) -> Result<usize> {
@@ -343,6 +353,8 @@ impl Config {
             backend: BackendKind::Pjrt,
             dir: dir.to_path_buf(),
             manifest,
+            sim_threads: 0,
+            sim_scalar: false,
         })
     }
 
@@ -357,7 +369,23 @@ impl Config {
             backend: BackendKind::Sim,
             dir: PathBuf::new(),
             manifest: Json::Null,
+            sim_threads: 0,
+            sim_scalar: false,
         }
+    }
+
+    /// Pin the sim kernel pool to exactly `n` threads (see
+    /// [`Config::sim_threads`]); `n = 1` forces the tiled kernels serial.
+    pub fn with_sim_threads(mut self, n: usize) -> Config {
+        self.sim_threads = n;
+        self
+    }
+
+    /// Pin the sim backend to the scalar reference kernels (see
+    /// [`Config::sim_scalar`]) — the bench baseline and proptest oracle.
+    pub fn with_sim_scalar(mut self, on: bool) -> Config {
+        self.sim_scalar = on;
+        self
     }
 
     /// Toggle shared-prefix KV reuse ([`ApbParams::prefix_cache`]) on this

@@ -328,11 +328,7 @@ impl HostWorker {
                 // cache's valid prefix (the n=1 self-causal rule).
                 if last {
                     for (i, &(sid, _)) in entries.iter().enumerate() {
-                        self.pool.get_mut(sid)?.append(
-                            li,
-                            &k.slice_rows(i, i + 1),
-                            &v.slice_rows(i, i + 1),
-                        )?;
+                        self.pool.get_mut(sid)?.append_row(li, &k, &v, i)?;
                     }
                 }
                 let views: Vec<KvView<'_>> = entries
@@ -699,11 +695,7 @@ impl HostWorker {
             let (q, k, v) = backend.decode_pre(li, &hidden, &positions)?;
             tm.pre_s += sw.lap();
             for (i, &(sid, _)) in entries.iter().enumerate() {
-                self.pool.get_mut(sid)?.append(
-                    li,
-                    &k.slice_rows(i, i + 1),
-                    &v.slice_rows(i, i + 1),
-                )?;
+                self.pool.get_mut(sid)?.append_row(li, &k, &v, i)?;
             }
             let views: Vec<KvView<'_>> = entries
                 .iter()

@@ -854,6 +854,9 @@ impl Cluster {
                 bytes_reserved: 0,
                 prefix_entries: 0,
                 prefix_bytes: 0,
+                slab_allocs: 0,
+                slab_reuses: 0,
+                slabs_free: 0,
             };
             self.cfg.apb.n_hosts
         ];

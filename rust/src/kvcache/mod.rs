@@ -73,10 +73,19 @@ pub struct PoolStats {
     /// Bytes of immutable shared-prefix KV the store holds, each entry
     /// counted once regardless of how many sessions are attached.
     pub prefix_bytes: usize,
+    /// Lifetime slot-shaped KV slabs freshly allocated by the freeze path
+    /// (arena misses). Flat once the arena is warm: steady-state serving
+    /// freezes into recycled slabs and allocates nothing.
+    pub slab_allocs: u64,
+    /// Lifetime slabs recycled from the arena free list (arena hits).
+    pub slab_reuses: u64,
+    /// Slabs currently parked in the arena free list.
+    pub slabs_free: usize,
 }
 
 /// One layer's K/V rows plus the valid length (`k`/`v` may be padded past
-/// `len` inside a [`KvCache`] slot; [`SharedPrefix`] layers are exact-size).
+/// `len`, both in [`KvCache`] slots and in [`SharedPrefix`] entries — the
+/// latter inherit the slot slabs they were frozen from).
 #[derive(Debug, Clone)]
 pub struct LayerCache {
     /// Key rows, `[rows, kv_heads, head_dim]`.
@@ -158,7 +167,9 @@ pub fn prefix_digest(cfg: &Config, doc: &[i32], query: &[i32], opts: &ApbOptions
 /// attaching cannot perturb any other rider.
 #[derive(Debug)]
 pub struct SharedPrefix {
-    /// Per-layer exact-size (k, v, len) rows in prefill append order.
+    /// Per-layer (k, v, len) rows in prefill append order — the padded
+    /// slab tensors moved out of the freezing session's slot, valid to
+    /// `len` (readers mask to it; padding rows are never read).
     layers: Vec<LayerCache>,
     /// The [`prefix_digest`] this entry was frozen under.
     digest: u64,
@@ -294,6 +305,31 @@ impl KvCache {
         Ok(())
     }
 
+    /// Append row `row` of batched `k`/`v` (`[n, kh, hd]`) to a layer's
+    /// private tail — the continuous-batching decode step's per-session
+    /// append, copied straight from the batch tensor without materializing
+    /// a one-row slice. Same combined-length rule as [`KvCache::append`].
+    pub fn append_row(&mut self, layer: usize, k: &Tensor, v: &Tensor, row: usize) -> Result<()> {
+        let shared_len = self.shared_len(layer);
+        let lc = &mut self.layers[layer];
+        if shared_len + lc.len + 1 > self.cache_max {
+            bail!(
+                "kv cache overflow: layer {layer} len {} + 1 > cap {}",
+                shared_len + lc.len,
+                self.cache_max
+            );
+        }
+        let rl = lc.k.row_len();
+        assert_eq!(k.row_len(), rl, "append_row: row shape mismatch");
+        assert!(row < k.shape[0], "append_row: row {row} of {}", k.shape[0]);
+        lc.k.data[lc.len * rl..(lc.len + 1) * rl]
+            .copy_from_slice(&k.data[row * rl..(row + 1) * rl]);
+        lc.v.data[lc.len * rl..(lc.len + 1) * rl]
+            .copy_from_slice(&v.data[row * rl..(row + 1) * rl]);
+        lc.len += 1;
+        Ok(())
+    }
+
     /// Borrowed `[shared | private]` view of one layer for decode.
     pub fn view(&self, layer: usize) -> KvView<'_> {
         let lc = &self.layers[layer];
@@ -345,6 +381,51 @@ struct Slot {
     cache: KvCache,
 }
 
+/// Recycled slot-shaped KV slab tensors (`docs/ADR-005-sim-perf.md`).
+///
+/// [`KvPool::freeze_shared`] MOVES a slot's padded per-layer tensors into
+/// the frozen [`SharedPrefix`] entry and re-arms the slot from this free
+/// list; when the store later drops the last reference to an entry, its
+/// tensors come back here. Steady-state freeze/evict churn therefore
+/// allocates nothing — the counters below are the observable CI gates on.
+///
+/// Slabs are NOT zeroed on reuse: every reader masks to the valid `len`
+/// rows, so stale padding is unreachable (the slab-vs-fresh bit-identity
+/// proptest pins this). Entries dropped outside the pool's eviction points
+/// (a session freed while holding the last ref to a never-stored entry)
+/// are lost to the allocator — reclamation is best-effort by design.
+struct SlabArena {
+    /// Expected slab shape `[cache_max, kv_heads, head_dim]`; foreign
+    /// shapes are refused at `put` (they could only arise from a future
+    /// cross-pool migration, and a silently wrong slab shape would corrupt
+    /// every later freeze).
+    shape: Vec<usize>,
+    free: Vec<Tensor>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl SlabArena {
+    fn take(&mut self) -> Tensor {
+        match self.free.pop() {
+            Some(t) => {
+                self.reuses += 1;
+                t
+            }
+            None => {
+                self.allocs += 1;
+                Tensor::zeros(self.shape.clone())
+            }
+        }
+    }
+
+    fn put(&mut self, t: Tensor) {
+        if t.shape == self.shape {
+            self.free.push(t);
+        }
+    }
+}
+
 /// One prefix-store entry plus its LRU stamp.
 struct PrefixSlot {
     entry: Arc<SharedPrefix>,
@@ -368,6 +449,8 @@ pub struct KvPool {
     prefix_tick: u64,
     /// Lifetime hit counter (ops observability).
     prefix_hits: u64,
+    /// Slab recycler backing [`KvPool::freeze_shared`].
+    arena: SlabArena,
 }
 
 impl KvPool {
@@ -392,6 +475,12 @@ impl KvPool {
             prefix_cap: 0,
             prefix_tick: 0,
             prefix_hits: 0,
+            arena: SlabArena {
+                shape: vec![cache_max, kv_heads, head_dim],
+                free: Vec::new(),
+                allocs: 0,
+                reuses: 0,
+            },
         }
     }
 
@@ -495,11 +584,15 @@ impl KvPool {
     /// Drop every session AND the prefix store (full reset between serving
     /// phases; `Cmd::Clear` on one session keeps the store warm instead).
     pub fn clear_all(&mut self) {
+        // Slots first: dropping their shared refs makes the store the last
+        // holder, so every entry's slabs can come back to the arena.
         for s in &mut self.slots {
             s.sid = None;
             s.cache.clear();
         }
-        self.prefix.clear();
+        for p in std::mem::take(&mut self.prefix) {
+            self.reclaim(p.entry);
+        }
         self.prefix_tick = 0;
     }
 
@@ -513,7 +606,9 @@ impl KvPool {
     pub fn set_prefix_cap(&mut self, cap: usize) {
         self.prefix_cap = cap;
         if cap == 0 {
-            self.prefix.clear();
+            for p in std::mem::take(&mut self.prefix) {
+                self.reclaim(p.entry);
+            }
         }
     }
 
@@ -566,7 +661,8 @@ impl KvPool {
                 .map(|(i, _)| i);
             match victim {
                 Some(i) => {
-                    self.prefix.remove(i);
+                    let evicted = self.prefix.remove(i);
+                    self.reclaim(evicted.entry);
                 }
                 None => return false,
             }
@@ -577,38 +673,54 @@ impl KvPool {
     }
 
     /// Freeze a cold-prefilled session's private KV into a [`SharedPrefix`]
-    /// entry: MOVE the valid rows out of the slot into exact-size tensors,
-    /// attach the new entry back onto the session (so the session itself
-    /// decodes over `[shared | empty tail]`, the same path warm riders
-    /// take), and offer it to the store under `digest`. Returns the entry;
-    /// store insertion is best-effort (see [`KvPool::prefix_insert`]).
+    /// entry: MOVE the slot's padded per-layer tensors into the entry
+    /// wholesale (zero row copies — the entry keeps `len` to bound the
+    /// valid region, exactly as the slot did), re-arm the slot with slabs
+    /// from the arena free list, attach the new entry back onto the session
+    /// (so the session itself decodes over `[shared | empty tail]`, the
+    /// same path warm riders take), and offer it to the store under
+    /// `digest`. Returns the entry; store insertion is best-effort (see
+    /// [`KvPool::prefix_insert`]). Once the arena is warm, this whole
+    /// operation allocates nothing.
     pub fn freeze_shared(
         &mut self,
         sid: SessionId,
         digest: u64,
         retained: Vec<Vec<Vec<u32>>>,
     ) -> Result<Arc<SharedPrefix>> {
-        let cache = self.get_mut(sid)?;
+        let Some(idx) = self.slots.iter().position(|s| s.sid == Some(sid)) else {
+            bail!("session {sid} not resident in kv pool");
+        };
+        let cache = &mut self.slots[idx].cache;
         if cache.shared.is_some() {
             bail!("freeze_shared: session {sid} already rides a shared prefix");
         }
-        let layers: Vec<LayerCache> = cache
-            .layers
-            .iter()
-            .map(|l| LayerCache {
-                k: l.k.slice_rows(0, l.len),
-                v: l.v.slice_rows(0, l.len),
-                len: l.len,
-            })
-            .collect();
-        let bytes = layers.iter().map(|l| 2 * l.len * l.k.row_len() * 4).sum();
-        let entry = Arc::new(SharedPrefix { layers, digest, bytes, retained });
+        let mut layers = Vec::with_capacity(cache.layers.len());
         for lc in &mut cache.layers {
+            let k = std::mem::replace(&mut lc.k, self.arena.take());
+            let v = std::mem::replace(&mut lc.v, self.arena.take());
+            layers.push(LayerCache { k, v, len: lc.len });
             lc.len = 0;
         }
+        // Bytes stay the VALID-region formula: the padding rows riding
+        // along in the moved slabs are reserved capacity, not held KV.
+        let bytes = layers.iter().map(|l| 2 * l.len * l.k.row_len() * 4).sum();
+        let entry = Arc::new(SharedPrefix { layers, digest, bytes, retained });
         cache.shared = Some(Arc::clone(&entry));
         self.prefix_insert(Arc::clone(&entry));
         Ok(entry)
+    }
+
+    /// Return an entry's slab tensors to the arena if this `Arc` was the
+    /// last reference. Best-effort: an entry still attached to a session
+    /// (or cloned out by a caller) is simply left to the allocator.
+    fn reclaim(&mut self, entry: Arc<SharedPrefix>) {
+        if let Ok(e) = Arc::try_unwrap(entry) {
+            for l in e.layers {
+                self.arena.put(l.k);
+                self.arena.put(l.v);
+            }
+        }
     }
 
     // -- accounting ----------------------------------------------------------
@@ -635,6 +747,9 @@ impl KvPool {
             bytes_reserved: self.bytes_reserved(),
             prefix_entries: self.prefix_entries(),
             prefix_bytes: self.prefix_bytes(),
+            slab_allocs: self.arena.allocs,
+            slab_reuses: self.arena.reuses,
+            slabs_free: self.arena.free.len(),
         }
     }
 }
@@ -727,7 +842,8 @@ mod tests {
         assert_eq!(p.stats(),
                    PoolStats { resident: 0, bytes_used: 0,
                                bytes_reserved: 2 * (2 * 4 * 1 * 2 * 4),
-                               prefix_entries: 0, prefix_bytes: 0 });
+                               prefix_entries: 0, prefix_bytes: 0,
+                               slab_allocs: 0, slab_reuses: 0, slabs_free: 0 });
         p.alloc(1).unwrap().append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
         let s = p.stats();
         assert_eq!(s.resident, 1);
@@ -866,6 +982,121 @@ mod tests {
         p.clear_all();
         assert_eq!(p.prefix_entries(), 0);
         assert_eq!(p.stats().prefix_bytes, 0);
+    }
+
+    #[test]
+    fn append_row_matches_sliced_append() {
+        // The batched-decode append path (no one-row temporaries) must be
+        // byte-identical to slicing the batch row and appending it.
+        let batch_k = rows(3, 2, 4, 10.0);
+        let batch_v = rows(3, 2, 4, 90.0);
+        let mut a = KvCache::new(1, 8, 2, 4);
+        let mut b = KvCache::new(1, 8, 2, 4);
+        for row in [2usize, 0, 1] {
+            a.append_row(0, &batch_k, &batch_v, row).unwrap();
+            b.append(0, &batch_k.slice_rows(row, row + 1),
+                     &batch_v.slice_rows(row, row + 1)).unwrap();
+        }
+        assert_eq!(a.len(0), 3);
+        assert_eq!(a.layers[0].k, b.layers[0].k);
+        assert_eq!(a.layers[0].v, b.layers[0].v);
+        assert_eq!(a.bytes_used(), b.bytes_used());
+        // The combined-length check still guards the tail.
+        let mut c = KvCache::new(1, 1, 2, 4);
+        c.append_row(0, &batch_k, &batch_v, 0).unwrap();
+        assert!(c.append_row(0, &batch_k, &batch_v, 1).is_err());
+        assert_eq!(c.len(0), 1);
+    }
+
+    // -- slab arena ----------------------------------------------------------
+
+    #[test]
+    fn freeze_evict_churn_reuses_slabs_and_stops_allocating() {
+        let mut p = KvPool::new(1, 2, 6, 1, 2);
+        p.set_prefix_cap(1);
+        // Cold start: the first freeze re-arms the slot with 2 fresh slabs
+        // per layer (the arena has nothing to recycle yet), and the second
+        // still allocates — its predecessor's slabs only return when the
+        // eviction fires at insert time, AFTER the new freeze took slabs.
+        freeze(&mut p, 1, 0xA1, 2);
+        p.free(1);
+        let s = p.stats();
+        assert_eq!(s.slab_allocs, 4, "2 layers x (k, v) fresh slabs");
+        assert_eq!(s.slab_reuses, 0);
+        assert_eq!(s.slabs_free, 0, "entry still holds the moved slabs");
+        freeze(&mut p, 1, 0xB0, 2);
+        p.free(1);
+        let s = p.stats();
+        assert_eq!(s.slab_allocs, 8);
+        assert_eq!(s.slabs_free, 4, "evicted 0xA1's slabs parked");
+        // Steady state: two slab generations in flight, every further
+        // freeze recycles and the allocation count stays flat forever.
+        for round in 1..=4u64 {
+            freeze(&mut p, 1, 0xB0 + round, 2);
+            p.free(1);
+        }
+        let s = p.stats();
+        assert_eq!(s.slab_allocs, 8, "steady-state churn allocates nothing");
+        assert_eq!(s.slab_reuses, 4 * 4, "every later freeze recycled");
+        assert_eq!(s.slabs_free, 4);
+    }
+
+    #[test]
+    fn slab_reuse_is_invisible_to_readers() {
+        let mut p = KvPool::new(1, 1, 6, 1, 2);
+        p.set_prefix_cap(1);
+        // Generation 1 pollutes a slab with 4 rows of distinctive values;
+        // generation 2's insert evicts it, parking the polluted slabs;
+        // generation 3's freeze re-arms the slot with them, un-zeroed.
+        freeze(&mut p, 1, 0xA1, 4);
+        p.free(1);
+        freeze(&mut p, 2, 0xA2, 1);
+        p.free(2);
+        freeze(&mut p, 3, 0xA3, 2);
+        assert!(p.stats().slab_reuses >= 2, "slot re-armed from the free list");
+        // Session 3 now decodes into a recycled tail slab. Valid rows read
+        // back exactly; rows past `len` (still holding generation-1 data)
+        // are unreachable because every view masks to `len`.
+        let k = rows(2, 1, 2, 77.0);
+        let v = rows(2, 1, 2, 88.0);
+        p.get_mut(3).unwrap().append(0, &k, &v).unwrap();
+        let c = p.get(3).unwrap();
+        let view = c.view(0);
+        assert_eq!(view.tail.len, 2);
+        assert_eq!(view.tail.k.slice_rows(0, 2), k);
+        assert_eq!(view.tail.v.slice_rows(0, 2), v);
+        assert_eq!(c.bytes_used(), 2 * 2 * 2 * 4, "byte accounting is len-based");
+    }
+
+    #[test]
+    fn clear_all_and_cap_zero_return_slabs() {
+        let mut p = KvPool::new(2, 1, 6, 1, 2);
+        p.set_prefix_cap(2);
+        freeze(&mut p, 1, 0xC1, 2);
+        freeze(&mut p, 2, 0xC2, 2);
+        assert_eq!(p.stats().slabs_free, 0, "entries hold their slabs");
+        // clear_all drops the sessions FIRST, so both entries reclaim.
+        p.clear_all();
+        let s = p.stats();
+        assert_eq!(s.prefix_entries, 0);
+        assert_eq!(s.slabs_free, 4, "2 entries x (k, v) slabs returned");
+        // Disabling the store reclaims held entries the same way (2 taken
+        // by the freeze, then its entry's 2 returned on cap 0).
+        p.set_prefix_cap(2);
+        freeze(&mut p, 3, 0xC3, 2);
+        p.free(3);
+        p.set_prefix_cap(0);
+        assert_eq!(p.stats().prefix_entries, 0);
+        assert_eq!(p.stats().slabs_free, 4);
+        // A live external ref blocks reclamation (best-effort contract).
+        p.set_prefix_cap(2);
+        let held = freeze(&mut p, 4, 0xC4, 2);
+        p.free(4);
+        let before = p.stats().slabs_free;
+        p.clear_all();
+        assert_eq!(p.stats().slabs_free, before,
+                   "externally-held entry not reclaimed");
+        drop(held);
     }
 
     #[test]

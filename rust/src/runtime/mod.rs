@@ -15,6 +15,7 @@
 //!
 //! [`create_backend`] picks the implementation from `Config::backend`.
 
+pub mod pool;
 pub mod sim;
 
 #[cfg(feature = "pjrt")]
@@ -45,7 +46,8 @@ pub struct KvSeg<'a> {
 /// optional immutable **shared-prefix** segment (present when the session
 /// rides a prefix-cache hit — `kvcache::SharedPrefix`,
 /// `docs/ADR-003-prefix-caching.md`) followed by the session's **private
-/// tail** (query chunk + decoded tokens, appended copy-on-extend). The
+/// tail** (query chunk + decoded tokens, appended in place into the
+/// slot's slab-backed capacity — `docs/ADR-005-sim-perf.md`). The
 /// logical cache is the in-order concatenation `[shared | tail]`; backends
 /// attend it through [`ExecBackend::decode_attn_view`] /
 /// [`ExecBackend::decode_attn_batch`] without materializing the
@@ -71,12 +73,30 @@ impl<'a> KvView<'a> {
     }
 
     /// The view's segments in key order (`[shared | tail]`), for kernels
-    /// that walk the logical concatenation.
-    pub fn segs(&self) -> Vec<KvSeg<'a>> {
+    /// that walk the logical concatenation. Returns a stack-held
+    /// [`SegList`] (derefs to `&[KvSeg]`) — the decode hot path calls this
+    /// per row per layer per step, so it must not heap-allocate.
+    pub fn segs(&self) -> SegList<'a> {
         match self.shared {
-            Some(s) => vec![s, self.tail],
-            None => vec![self.tail],
+            Some(s) => SegList { segs: [s, self.tail], n: 2 },
+            None => SegList { segs: [self.tail, self.tail], n: 1 },
         }
+    }
+}
+
+/// At most two [`KvSeg`]s on the stack (`[shared | tail]` or `[tail]`),
+/// dereferencing to the valid slice. The unused slot of a one-segment list
+/// repeats the tail (`KvSeg` is `Copy`) and is never exposed.
+pub struct SegList<'a> {
+    segs: [KvSeg<'a>; 2],
+    n: usize,
+}
+
+impl<'a> std::ops::Deref for SegList<'a> {
+    type Target = [KvSeg<'a>];
+
+    fn deref(&self) -> &[KvSeg<'a>] {
+        &self.segs[..self.n]
     }
 }
 

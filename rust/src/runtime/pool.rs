@@ -1,0 +1,332 @@
+//! `SimPool` — a hand-rolled, std-only thread pool for row-parallel sim
+//! kernels (`docs/ADR-005-sim-perf.md`).
+//!
+//! The segmented attention kernel, the retaining-head scorer and batched
+//! decode all decompose into independent (query-row × kv-head) work units:
+//! no two units share an accumulator, so distributing them across threads
+//! cannot change a single bit of the result — only which core computes it.
+//! This pool exploits exactly that shape and nothing more:
+//!
+//! * one job at a time (`run` blocks until every unit completed), so a
+//!   borrowed closure can be handed to workers behind a raw pointer whose
+//!   pointee provably outlives every use;
+//! * the caller participates in draining the task queue — a pool sized 1
+//!   has zero worker threads and `run` degenerates to a plain serial loop;
+//! * re-entrant `run` calls (a task spawning sub-work on the same pool)
+//!   fall back to inline execution instead of deadlocking on the job slot.
+//!
+//! Sizing composes with `Driver::Threaded` (one pool per `SimEngine`, one
+//! engine per host thread): `SimEngine::new` resolves
+//! `Config::sim_threads` = 0 to `APB_SIM_THREADS`, else to
+//! `available_parallelism / n_hosts`, so H host threads × T pool threads
+//! stays at roughly the machine's core count rather than H × cores.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the job closure. Sound to send across threads
+/// because (a) the pointee is `Sync` (enforced by `SimPool::run`'s
+/// signature) and (b) `run` does not return until every task finished, so
+/// the borrow outlives every dereference.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: see `TaskPtr` docs — the pointee is `Sync` and outlives all use.
+unsafe impl Send for TaskPtr {}
+
+struct Job {
+    f: TaskPtr,
+    n_tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Tasks fully executed (claimed AND returned).
+    done: usize,
+    /// A worker-executed task panicked; `run` re-panics after the job.
+    panicked: bool,
+}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a job (or shutdown).
+    work_cv: Condvar,
+    /// The `run` caller waits here for `done == n_tasks`.
+    done_cv: Condvar,
+}
+
+thread_local! {
+    /// True while this thread is executing pool work (worker threads for
+    /// their whole life, the `run` caller for the span of the call) — the
+    /// re-entrancy guard that turns nested `run` calls into inline loops.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The pool. `Drop` signals shutdown and joins every worker, so engines
+/// (and tests constructing many of them) never leak threads.
+pub struct SimPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SimPool {
+    /// Build a pool that executes jobs on `threads` threads total: the
+    /// `run` caller plus `threads - 1` spawned workers. `threads <= 1`
+    /// spawns nothing and `run` is a plain serial loop.
+    pub fn new(threads: usize) -> SimPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        SimPool { shared, workers }
+    }
+
+    /// Total threads that drain a job (caller + workers), always >= 1.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `f(0), f(1), ..., f(n_tasks - 1)` exactly once each, in
+    /// unspecified order across the pool's threads, and return when ALL of
+    /// them completed. Tasks must write only to disjoint state (see
+    /// [`ShardedOut`]); under that contract the result is bit-identical to
+    /// the serial loop whatever the schedule.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        // Serial pool, trivial jobs, or a nested call from inside a task:
+        // run inline. (Nested dispatch would wait on the job slot the outer
+        // call still owns — a deadlock — so the guard is load-bearing.)
+        if self.workers.is_empty() || n_tasks == 1 || IN_POOL.with(Cell::get) {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        IN_POOL.with(|c| c.set(true));
+        let ptr = TaskPtr(f as *const (dyn Fn(usize) + Sync));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "SimPool::run re-entered with a live job");
+            st.job = Some(Job { f: ptr, n_tasks, next: 0, done: 0, panicked: false });
+        }
+        self.shared.work_cv.notify_all();
+        // The caller pulls tasks too: a pool is never idle while its owner
+        // spins, and a 2-thread pool really uses 2 threads.
+        loop {
+            let t = {
+                let mut st = self.shared.state.lock().unwrap();
+                let job = st.job.as_mut().expect("job lives until run() clears it");
+                if job.next >= job.n_tasks {
+                    break;
+                }
+                let t = job.next;
+                job.next += 1;
+                t
+            };
+            f(t);
+            let mut st = self.shared.state.lock().unwrap();
+            let job = st.job.as_mut().expect("job lives until run() clears it");
+            job.done += 1;
+        }
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.job.as_ref().expect("job lives until run() clears it").done < n_tasks {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job.take().expect("job lives until run() clears it").panicked
+        };
+        IN_POOL.with(|c| c.set(false));
+        assert!(!panicked, "SimPool worker task panicked");
+    }
+}
+
+impl Drop for SimPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        let (f, t, n_tasks) = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job.as_mut() {
+                    Some(job) if job.next < job.n_tasks => {
+                        let t = job.next;
+                        job.next += 1;
+                        break (job.f, t, job.n_tasks);
+                    }
+                    // No job, or a drained one the caller is collecting:
+                    // sleep until the next `run` (or shutdown) wakes us.
+                    _ => st = sh.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        // SAFETY: `run` keeps the closure alive until done == n_tasks, and
+        // this dereference happens strictly before this task's `done`
+        // increment below.
+        let task = unsafe { &*f.0 };
+        let panicked = catch_unwind(AssertUnwindSafe(|| task(t))).is_err();
+        let mut st = sh.state.lock().unwrap();
+        if let Some(job) = st.job.as_mut() {
+            job.done += 1;
+            job.panicked |= panicked;
+            if job.done == job.n_tasks {
+                sh.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Write-only shared view of an output buffer for pool tasks.
+///
+/// Tasks produce disjoint slices of one output tensor (row × head-group
+/// shards); this wrapper lets `Fn` closures write them through a shared
+/// reference without handing out `&mut` aliases. Bounds are checked; the
+/// DISJOINTNESS of concurrent writes is the caller's contract (trivially
+/// held by the kernels: shard `(i, j)` writes only offsets derived from
+/// `(i, j)`).
+pub struct ShardedOut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: writes go to caller-guaranteed disjoint ranges of one allocation;
+// distinct memory locations written from distinct threads are not a data
+// race. Reads never happen through this type.
+unsafe impl Send for ShardedOut<'_> {}
+unsafe impl Sync for ShardedOut<'_> {}
+
+impl<'a> ShardedOut<'a> {
+    pub fn new(data: &'a mut [f32]) -> ShardedOut<'a> {
+        ShardedOut {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Copy `src` into `offset..offset + src.len()`.
+    pub fn write(&self, offset: usize, src: &[f32]) {
+        assert!(offset + src.len() <= self.len, "ShardedOut write out of bounds");
+        // SAFETY: in-bounds (checked above); disjoint from every concurrent
+        // write by the caller's sharding contract.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(offset), src.len());
+        }
+    }
+
+    /// Write one element at `offset`.
+    pub fn set(&self, offset: usize, v: f32) {
+        assert!(offset < self.len, "ShardedOut set out of bounds");
+        // SAFETY: as in `write`.
+        unsafe {
+            self.ptr.add(offset).write(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_every_task_inline() {
+        let pool = SimPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(17, &|t| {
+            hits.fetch_add(t + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (1..=17).sum());
+    }
+
+    #[test]
+    fn parallel_pool_runs_each_task_exactly_once() {
+        let pool = SimPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mut out = vec![0f32; 256];
+        let sh = ShardedOut::new(&mut out);
+        pool.run(256, &|t| sh.set(t, t as f32 + 1.0));
+        for (t, &v) in out.iter().enumerate() {
+            assert_eq!(v, t as f32 + 1.0, "task {t} ran exactly once");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = SimPool::new(3);
+        for round in 0..20 {
+            let hits = AtomicUsize::new(0);
+            pool.run(round + 2, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), round + 2);
+        }
+    }
+
+    #[test]
+    fn nested_run_falls_back_inline() {
+        let pool = SimPool::new(3);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // A task re-entering the pool must not deadlock on the job slot.
+            pool.run(8, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn sharded_out_writes_disjoint_slices() {
+        let pool = SimPool::new(4);
+        let rows = 64usize;
+        let width = 7usize;
+        let mut out = vec![0f32; rows * width];
+        let sh = ShardedOut::new(&mut out);
+        pool.run(rows, &|i| {
+            let row: Vec<f32> = (0..width).map(|d| (i * width + d) as f32).collect();
+            sh.write(i * width, &row);
+        });
+        for (j, &v) in out.iter().enumerate() {
+            assert_eq!(v, j as f32);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        // Many short-lived pools must not wedge on shutdown.
+        for _ in 0..8 {
+            let pool = SimPool::new(4);
+            pool.run(16, &|_| {});
+            drop(pool);
+        }
+    }
+}

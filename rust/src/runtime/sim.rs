@@ -19,12 +19,16 @@
 //!   read the query-similarity feature of `build_features`, so
 //!   query-relevant KV units score high, exactly what training produces.
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{bail, Result};
 
 use crate::config::{BackendKind, Config, ModelConfig};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
+use super::pool::{ShardedOut, SimPool};
 use super::ExecBackend;
 
 // ---------------------------------------------------------------------------
@@ -130,7 +134,7 @@ fn silu(x: f64) -> f64 {
 /// `[shared | private]` prefix-cache view is bit-identical to attending the
 /// contiguous cache it replaces (the invariant
 /// `docs/ADR-003-prefix-caching.md` rests on).
-pub fn masked_attention<F: Fn(usize, usize) -> bool>(
+pub fn masked_attention<F: Fn(usize, usize) -> bool + Sync>(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -149,7 +153,264 @@ pub fn masked_attention<F: Fn(usize, usize) -> bool>(
 /// across segments in order). The per-(row, head) f64 accumulation walks
 /// keys in logical order, so for equal row values the result is
 /// bit-identical to [`masked_attention`] over the contiguous equivalent.
-pub fn masked_attention_seg<F: Fn(usize, usize) -> bool>(
+///
+/// This entry point runs the tiled kernel serially on the calling thread;
+/// `SimEngine` routes through the same work units on its [`SimPool`].
+/// Either way the result is bit-identical to [`masked_attention_seg_ref`],
+/// the retired scalar loop kept as the oracle (`docs/ADR-005-sim-perf.md`
+/// spells out the ordering argument).
+pub fn masked_attention_seg<F: Fn(usize, usize) -> bool + Sync>(
+    q: &Tensor,
+    segs: &[super::KvSeg<'_>],
+    visible: F,
+) -> (Tensor, Tensor) {
+    seg_attn_dispatch(None, q, segs, &visible)
+}
+
+/// Key-tile width of the blocked attention passes: a tile of visible keys
+/// is processed against every head of a unit's GQA group before the next
+/// tile is touched, so the tile's K/V rows are reused from cache `g` times
+/// instead of re-streamed per head. 32 keys × 32 dims × 4 B = 4 KiB per
+/// tile per tensor — L1-resident alongside the q rows and scratch.
+const KEY_TILE: usize = 32;
+
+/// Per-thread kernel scratch, reused across calls — hoists the per-call
+/// heap allocations of the scalar reference (`vis`/`scores`/`acc` vectors
+/// and the multi-segment locate map) out of the hot path.
+#[derive(Default)]
+struct AttnScratch {
+    /// Visible logical key indices of one query row.
+    vis: Vec<u32>,
+    /// `(dispatch nonce, absolute query row)` that `vis` is valid for.
+    /// Scratch persists across calls on each thread, so reuse must be keyed:
+    /// consecutive dispatches may ask different masks for the same row.
+    vis_key: (u64, u64),
+    /// Scores of a unit's `g` heads over the visible keys, head-major.
+    scores: Vec<f64>,
+    /// Running score max per head of the unit.
+    maxes: Vec<f64>,
+    /// Softmax denominator per head of the unit.
+    denoms: Vec<f64>,
+    /// f64 value accumulators, `g * hd`, head-major.
+    acc: Vec<f64>,
+    /// One finished f32 output row, staged before the sharded write.
+    out_row: Vec<f32>,
+}
+
+thread_local! {
+    static ATTN_SCRATCH: RefCell<AttnScratch> = RefCell::new(AttnScratch::default());
+    /// Logical key -> (segment, local row) map of a multi-segment dispatch.
+    /// Deliberately a SEPARATE cell from `ATTN_SCRATCH`: the dispatcher
+    /// holds this borrow across the whole job while every work unit —
+    /// including the ones the dispatching thread itself executes — takes
+    /// `ATTN_SCRATCH` mutably.
+    static SEG_MAP: RefCell<Vec<(u32, u32)>> = const { RefCell::new(Vec::new()) };
+    /// Feature-vector scratch of the pooled retaining-head scorer.
+    static FEAT_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Distinguishes dispatches in `AttnScratch::vis_key`. Starts at 1 so the
+/// default key `(0, 0)` can never collide with a live dispatch.
+static DISPATCH_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// One dispatch's loop-invariant state, shared read-only by every work unit.
+struct SegAttn<'a> {
+    q: &'a Tensor,
+    segs: &'a [super::KvSeg<'a>],
+    /// Multi-segment locate map (empty when `single`).
+    map: &'a [(u32, u32)],
+    single: bool,
+    nk: usize,
+    h: usize,
+    kh: usize,
+    g: usize,
+    hd: usize,
+    scale: f64,
+    nonce: u64,
+    /// Absolute `q`/output row under local row 0 — the batched-decode path
+    /// points one unit at one absolute row; full dispatches use 0.
+    row0: usize,
+}
+
+impl SegAttn<'_> {
+    #[inline(always)]
+    fn locate(&self, kj: usize) -> (usize, usize) {
+        if self.single {
+            (0, kj)
+        } else {
+            let (si, r) = self.map[kj];
+            (si as usize, r as usize)
+        }
+    }
+
+    /// Compute heads `j*g .. (j+1)*g` of local query row `i` — one
+    /// (query-row × kv-head) work unit. Keys are walked in logical order in
+    /// `KEY_TILE` blocks with the group's heads innermost: per (row, head)
+    /// every f64 operation happens in exactly the scalar reference's order,
+    /// so the result is bit-identical — tiling only changes which head
+    /// visits a key tile next, never the order of any head's accumulation.
+    fn unit<F: Fn(usize, usize) -> bool>(
+        &self,
+        visible: &F,
+        i: usize,
+        j: usize,
+        out: &ShardedOut<'_>,
+        lse: &ShardedOut<'_>,
+    ) {
+        let (h, kh, g, hd) = (self.h, self.kh, self.g, self.hd);
+        let row = self.row0 + i;
+        ATTN_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let AttnScratch { vis, vis_key, scores, maxes, denoms, acc, out_row } =
+                &mut *scratch;
+            let key = (self.nonce, row as u64);
+            if *vis_key != key {
+                vis.clear();
+                vis.extend((0..self.nk).filter(|&kj| visible(i, kj)).map(|kj| kj as u32));
+                *vis_key = key;
+            }
+            if vis.is_empty() {
+                for hh in j * g..(j + 1) * g {
+                    lse.set(row * h + hh, f32::NEG_INFINITY);
+                }
+                return; // output rows stay zero
+            }
+            let nv = vis.len();
+            scores.clear();
+            scores.resize(g * nv, 0.0);
+            maxes.clear();
+            maxes.resize(g, f64::NEG_INFINITY);
+            // Pass 1: scores + running max. Key tiles outer, heads inner.
+            let mut t0 = 0usize;
+            for tile in vis.chunks(KEY_TILE) {
+                for hl in 0..g {
+                    let qb = (row * h + j * g + hl) * hd;
+                    let qrow = &self.q.data[qb..qb + hd];
+                    let mut m = maxes[hl];
+                    for (ti, &kj) in tile.iter().enumerate() {
+                        let (si, r) = self.locate(kj as usize);
+                        let kb = (r * kh + j) * hd;
+                        let kd = &self.segs[si].k.data[kb..kb + hd];
+                        let mut dot = 0f64;
+                        for d in 0..hd {
+                            dot += qrow[d] as f64 * kd[d] as f64;
+                        }
+                        let s = dot * self.scale;
+                        scores[hl * nv + t0 + ti] = s;
+                        m = m.max(s);
+                    }
+                    maxes[hl] = m;
+                }
+                t0 += tile.len();
+            }
+            // Pass 2: softmax accumulation, same tile-outer/head-inner walk,
+            // per head strictly in logical key order.
+            denoms.clear();
+            denoms.resize(g, 0.0);
+            acc.clear();
+            acc.resize(g * hd, 0.0);
+            let mut t0 = 0usize;
+            for tile in vis.chunks(KEY_TILE) {
+                for hl in 0..g {
+                    let m = maxes[hl];
+                    let arow = &mut acc[hl * hd..(hl + 1) * hd];
+                    let mut denom = denoms[hl];
+                    for (ti, &kj) in tile.iter().enumerate() {
+                        let w = (scores[hl * nv + t0 + ti] - m).exp();
+                        denom += w;
+                        let (si, r) = self.locate(kj as usize);
+                        let vb = (r * kh + j) * hd;
+                        let vd = &self.segs[si].v.data[vb..vb + hd];
+                        for (slot, &vv) in arow.iter_mut().zip(vd) {
+                            *slot += w * vv as f64;
+                        }
+                    }
+                    denoms[hl] = denom;
+                }
+                t0 += tile.len();
+            }
+            out_row.clear();
+            out_row.resize(hd, 0.0);
+            for hl in 0..g {
+                let hh = j * g + hl;
+                let denom = denoms[hl];
+                for (o, &slot) in out_row.iter_mut().zip(&acc[hl * hd..(hl + 1) * hd]) {
+                    *o = (slot / denom) as f32;
+                }
+                out.write((row * h + hh) * hd, out_row);
+                lse.set(row * h + hh, (maxes[hl] + denom.ln()) as f32);
+            }
+        });
+    }
+}
+
+/// Shared dispatcher behind [`masked_attention_seg`] and the engine's
+/// pooled attention: validates shapes, builds the segment map once into
+/// per-thread scratch, and drains the `(query-row × kv-head)` units either
+/// inline (`pool: None`) or across the pool.
+fn seg_attn_dispatch<F: Fn(usize, usize) -> bool + Sync>(
+    pool: Option<&SimPool>,
+    q: &Tensor,
+    segs: &[super::KvSeg<'_>],
+    visible: &F,
+) -> (Tensor, Tensor) {
+    assert_eq!(q.rank(), 3);
+    let (nq, h, hd) = (q.shape[0], q.shape[1], q.shape[2]);
+    let kh = segs.first().map_or(1, |s| s.k.shape[1]);
+    for s in segs {
+        assert_eq!(s.k.rank(), 3);
+        assert_eq!(s.k.shape, s.v.shape);
+        assert!(s.len <= s.k.shape[0], "segment len {} > rows {}", s.len, s.k.shape[0]);
+        assert_eq!(s.k.shape[1], kh, "segments disagree on kv heads");
+        assert_eq!(s.k.shape[2], hd, "segments disagree on head dim");
+    }
+    assert_eq!(h % kh, 0, "GQA heads {h} not divisible by kv heads {kh}");
+    let g = h / kh;
+    let single = segs.len() == 1;
+    let mut out = Tensor::zeros(vec![nq, h, hd]);
+    let mut lse = Tensor::zeros(vec![nq, h]);
+    SEG_MAP.with(|cell| {
+        let mut map = cell.borrow_mut();
+        map.clear();
+        if !single {
+            for (si, s) in segs.iter().enumerate() {
+                map.extend((0..s.len).map(|r| (si as u32, r as u32)));
+            }
+        }
+        let nk = if single { segs[0].len } else { map.len() };
+        let ctx = SegAttn {
+            q,
+            segs,
+            map: &map,
+            single,
+            nk,
+            h,
+            kh,
+            g,
+            hd,
+            scale: 1.0 / (hd as f64).sqrt(),
+            nonce: DISPATCH_NONCE.fetch_add(1, Ordering::Relaxed),
+            row0: 0,
+        };
+        let out_sh = ShardedOut::new(&mut out.data);
+        let lse_sh = ShardedOut::new(&mut lse.data);
+        let work = |u: usize| ctx.unit(visible, u / kh, u % kh, &out_sh, &lse_sh);
+        match pool {
+            Some(p) => p.run(nq * kh, &work),
+            None => {
+                for u in 0..nq * kh {
+                    work(u);
+                }
+            }
+        }
+    });
+    (out, lse)
+}
+
+/// The retired scalar loop, kept verbatim as the bit-identity oracle for
+/// the tiled kernel (and as the baseline the benches compare against via
+/// `Config::sim_scalar`). See [`masked_attention_seg`] for semantics.
+pub fn masked_attention_seg_ref<F: Fn(usize, usize) -> bool>(
     q: &Tensor,
     segs: &[super::KvSeg<'_>],
     visible: F,
@@ -164,11 +425,9 @@ pub fn masked_attention_seg<F: Fn(usize, usize) -> bool>(
         assert_eq!(s.k.shape[1], kh, "segments disagree on kv heads");
         assert_eq!(s.k.shape[2], hd, "segments disagree on head dim");
     }
-    // Logical key kj -> (segment, local row). The single-segment case — the
-    // wrapper every pre-existing prefill/decode kernel goes through — is
-    // the identity map, kept allocation- and indirection-free so unifying
-    // the kernels costs the hot cold path nothing (the mapping never
-    // changes values, only where a row is fetched from).
+    // Logical key kj -> (segment, local row). The single-segment case is
+    // the identity map, kept allocation- and indirection-free (the mapping
+    // never changes values, only where a row is fetched from).
     let single = segs.len() == 1;
     let mut src: Vec<(usize, usize)> = Vec::new();
     if !single {
@@ -363,6 +622,34 @@ pub struct SimEngine {
     final_norm: Vec<f32>,
     lm_head_w: Tensor,
     layers: Vec<LayerWeights>,
+    /// Row-parallel kernel pool, shared by every attention/scoring call of
+    /// this engine (`docs/ADR-005-sim-perf.md`). Sized by
+    /// [`resolve_sim_threads`] at construction.
+    pool: SimPool,
+    /// `Config::sim_scalar`: pin the retired scalar reference kernels (and
+    /// a serial pool) — the baseline the runtime bench compares against.
+    scalar: bool,
+}
+
+/// Resolve the engine's kernel-pool size: an explicit `Config::sim_threads`
+/// wins; else the `APB_SIM_THREADS` env var; else
+/// `available_parallelism / n_hosts` (so `Driver::Threaded` running one
+/// engine per host thread keeps total threads ≈ core count), min 1.
+///
+/// Read once at engine construction — tests that need a specific size set
+/// `Config::sim_threads` instead of racing on the process environment.
+pub fn resolve_sim_threads(configured: usize, n_hosts: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    if let Ok(s) = std::env::var("APB_SIM_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |p| (p.get() / n_hosts.max(1)).max(1))
 }
 
 impl SimEngine {
@@ -386,6 +673,11 @@ impl SimEngine {
         let final_norm = vec![1.0f32; m.d_model];
         let lm_head_w = normal_tensor(&mut rng, vec![m.d_model, m.vocab_size]);
         let layers = (0..m.n_layers).map(|_| layer_weights(&mut rng, m)).collect();
+        let threads = if cfg.sim_scalar {
+            1
+        } else {
+            resolve_sim_threads(cfg.sim_threads, cfg.apb.n_hosts)
+        };
         Ok(SimEngine {
             model: m.clone(),
             l_aq: cfg.apb.l_aq(),
@@ -396,7 +688,25 @@ impl SimEngine {
             final_norm,
             lm_head_w,
             layers,
+            pool: SimPool::new(threads),
+            scalar: cfg.sim_scalar,
         })
+    }
+
+    /// Segmented attention through the engine's kernel selection: the tiled
+    /// kernel drained across the engine pool, or the scalar reference when
+    /// `Config::sim_scalar` pins the baseline. Bit-identical either way.
+    fn attn<F: Fn(usize, usize) -> bool + Sync>(
+        &self,
+        q: &Tensor,
+        segs: &[super::KvSeg<'_>],
+        visible: F,
+    ) -> (Tensor, Tensor) {
+        if self.scalar {
+            masked_attention_seg_ref(q, segs, visible)
+        } else {
+            seg_attn_dispatch(Some(&self.pool), q, segs, &visible)
+        }
     }
 
     fn project_qkv(&self, lw: &LayerWeights, hidden: &Tensor) -> (Tensor, Tensor, Tensor) {
@@ -472,56 +782,94 @@ impl SimEngine {
         v: &Tensor,
     ) -> Tensor {
         let m = &self.model;
-        let (hd, kh, g) = (m.head_dim(), m.n_kv_heads, m.gqa_groups());
+        let kh = m.n_kv_heads;
         let n = q_nr.shape[0];
-        let w = qq.len() / (kh * hd);
-        let feat_dim = 3 * hd + 2;
-        let scale = 1.0 / (hd as f64).sqrt();
+        let feat_dim = 3 * m.head_dim() + 2;
         let mut scores = Tensor::zeros(vec![n, kh]);
-        let mut feat = vec![0f64; feat_dim];
-        for i in 0..n {
-            for j in 0..kh {
-                // Q component: mean over the GQA group.
-                for d in 0..hd {
-                    let mut s = 0f64;
-                    for t in 0..g {
-                        s += q_nr.data[(i * m.n_heads + j * g + t) * hd + d] as f64;
-                    }
-                    feat[d] = s / g as f64;
+        if self.scalar || n * kh <= 1 {
+            let mut feat = vec![0f64; feat_dim];
+            for i in 0..n {
+                for j in 0..kh {
+                    scores.data[i * kh + j] = self.score_one(lw, qq, q_nr, k_nr, v, i, j,
+                                                             &mut feat);
                 }
-                let kb = (i * kh + j) * hd;
-                for d in 0..hd {
-                    feat[hd + d] = k_nr.data[kb + d] as f64;
-                    feat[2 * hd + d] = v.data[kb + d] as f64;
-                }
-                // Query-similarity statistics over the embedded-query rows.
-                let mut smax = f64::NEG_INFINITY;
-                let mut smean = 0f64;
-                for wi in 0..w {
-                    let mut dot = 0f64;
-                    for d in 0..hd {
-                        dot += qq[(wi * kh + j) * hd + d] * k_nr.data[kb + d] as f64;
-                    }
-                    let s = dot * scale;
-                    smax = smax.max(s);
-                    smean += s;
-                }
-                feat[3 * hd] = if w > 0 { smax } else { 0.0 };
-                feat[3 * hd + 1] = if w > 0 { smean / w as f64 } else { 0.0 };
-                // gelu MLP: scores[i, j] = gelu(feat·w1 + b1)·w2 + b2.
-                let r = m.retaining_hidden;
-                let mut out = lw.rh_b2 as f64;
-                for u in 0..r {
-                    let mut hsum = lw.rh_b1[u] as f64;
-                    for (fi, &fv) in feat.iter().enumerate() {
-                        hsum += fv * lw.rh_w1.data[fi * r + u] as f64;
-                    }
-                    out += gelu(hsum) * lw.rh_w2.data[u] as f64;
-                }
-                scores.data[i * kh + j] = out as f32;
             }
+        } else {
+            // Each (row, kv-head) score is independent — fan out across the
+            // engine pool. The unit index enumerates (i, j) in the same
+            // order as the serial loop; writes are disjoint by construction.
+            let sh = ShardedOut::new(&mut scores.data);
+            self.pool.run(n * kh, &|u| {
+                FEAT_SCRATCH.with(|cell| {
+                    let mut feat = cell.borrow_mut();
+                    feat.clear();
+                    feat.resize(feat_dim, 0.0);
+                    sh.set(u, self.score_one(lw, qq, q_nr, k_nr, v, u / kh, u % kh,
+                                             &mut feat));
+                });
+            });
         }
         scores
+    }
+
+    /// One `(row, kv-head)` retaining score — the loop body of
+    /// [`SimEngine::score_rows`], pure in `(i, j)` so the serial and pooled
+    /// walks produce identical bits. `feat` is caller-provided scratch of
+    /// length `3 * hd + 2`.
+    #[allow(clippy::too_many_arguments)]
+    fn score_one(
+        &self,
+        lw: &LayerWeights,
+        qq: &[f64],
+        q_nr: &Tensor,
+        k_nr: &Tensor,
+        v: &Tensor,
+        i: usize,
+        j: usize,
+        feat: &mut [f64],
+    ) -> f32 {
+        let m = &self.model;
+        let (hd, kh, g) = (m.head_dim(), m.n_kv_heads, m.gqa_groups());
+        let w = qq.len() / (kh * hd);
+        let scale = 1.0 / (hd as f64).sqrt();
+        // Q component: mean over the GQA group.
+        for d in 0..hd {
+            let mut s = 0f64;
+            for t in 0..g {
+                s += q_nr.data[(i * m.n_heads + j * g + t) * hd + d] as f64;
+            }
+            feat[d] = s / g as f64;
+        }
+        let kb = (i * kh + j) * hd;
+        for d in 0..hd {
+            feat[hd + d] = k_nr.data[kb + d] as f64;
+            feat[2 * hd + d] = v.data[kb + d] as f64;
+        }
+        // Query-similarity statistics over the embedded-query rows.
+        let mut smax = f64::NEG_INFINITY;
+        let mut smean = 0f64;
+        for wi in 0..w {
+            let mut dot = 0f64;
+            for d in 0..hd {
+                dot += qq[(wi * kh + j) * hd + d] * k_nr.data[kb + d] as f64;
+            }
+            let s = dot * scale;
+            smax = smax.max(s);
+            smean += s;
+        }
+        feat[3 * hd] = if w > 0 { smax } else { 0.0 };
+        feat[3 * hd + 1] = if w > 0 { smean / w as f64 } else { 0.0 };
+        // gelu MLP: scores[i, j] = gelu(feat·w1 + b1)·w2 + b2.
+        let r = m.retaining_hidden;
+        let mut out = lw.rh_b2 as f64;
+        for u in 0..r {
+            let mut hsum = lw.rh_b1[u] as f64;
+            for (fi, &fv) in feat.iter().enumerate() {
+                hsum += fv * lw.rh_w1.data[fi * r + u] as f64;
+            }
+            out += gelu(hsum) * lw.rh_w2.data[u] as f64;
+        }
+        out as f32
     }
 
     /// `build_features` + retaining-head MLP over the whole local block of
@@ -665,7 +1013,8 @@ impl ExecBackend for SimEngine {
         let pass_max = self.pass_max;
         // The mask is a function of the ABSOLUTE layout row, so a chunk
         // starting at row0 sees exactly what the monolithic pass shows it.
-        let (att, _lse) = masked_attention(q_rows, &k_attn, &v_attn, |qi, kj| {
+        let seg = super::KvSeg { k: &k_attn, v: &v_attn, len: k_attn.shape[0] };
+        let (att, _lse) = self.attn(q_rows, &[seg], |qi, kj| {
             apb_visible(l_aq, pass_max, n_anchor, pass_len, qi + row0, kj)
         });
         Ok(self.attn_tail(lw, hidden_rows, &att))
@@ -699,13 +1048,35 @@ impl ExecBackend for SimEngine {
         self_causal: bool,
     ) -> Result<(Tensor, Tensor)> {
         let n = q.shape[0];
-        Ok(masked_attention(q, k_cache, v_cache, |qi, kj| {
+        let seg = super::KvSeg { k: k_cache, v: v_cache, len: k_cache.shape[0] };
+        Ok(self.attn(q, &[seg], |qi, kj| {
             let visible_len = if self_causal {
                 cache_len.saturating_sub(n - 1 - qi)
             } else {
                 cache_len
             };
             kj < visible_len
+        }))
+    }
+
+    /// Segmented-view decode attention through the engine's pooled kernel.
+    /// Same visibility rule as the trait default; bit-identical to it (the
+    /// visible key set and per-(row, head) accumulation order are equal).
+    fn decode_attn_view(
+        &self,
+        q: &Tensor,
+        view: &super::KvView<'_>,
+        self_causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        let n = q.shape[0];
+        let total = view.len();
+        Ok(self.attn(q, &view.segs(), |qi, kj| {
+            let visible = if self_causal {
+                total.saturating_sub(n - 1 - qi)
+            } else {
+                total
+            };
+            kj < visible
         }))
     }
 
@@ -726,20 +1097,80 @@ impl ExecBackend for SimEngine {
         }
         let mut out = Tensor::zeros(vec![b, h, hd]);
         let mut lse = Tensor::zeros(vec![b, h]);
-        for (i, c) in caches.iter().enumerate() {
-            let total = c.len();
-            let (o, l) =
-                masked_attention_seg(&q.slice_rows(i, i + 1), &c.segs(), |_, kj| kj < total);
-            out.write_rows(i, &o);
-            lse.write_rows(i, &l);
+        if self.scalar {
+            for (i, c) in caches.iter().enumerate() {
+                let total = c.len();
+                let (o, l) = masked_attention_seg_ref(&q.slice_rows(i, i + 1), &c.segs(),
+                                                      |_, kj| kj < total);
+                out.write_rows(i, &o);
+                lse.write_rows(i, &l);
+            }
+            return Ok((out, lse));
+        }
+        // One work unit per (batch row × kv head), each pointed straight at
+        // its absolute q/output row — no per-row q slices or out/lse
+        // temporaries. Each unit builds its row's segment map in its own
+        // thread's scratch; units run serial kernels, so the pool is never
+        // re-entered.
+        let kh = self.model.n_kv_heads;
+        let g = h / kh;
+        let scale = 1.0 / (hd as f64).sqrt();
+        let nonce = DISPATCH_NONCE.fetch_add(1, Ordering::Relaxed);
+        {
+            let out_sh = ShardedOut::new(&mut out.data);
+            let lse_sh = ShardedOut::new(&mut lse.data);
+            self.pool.run(b * kh, &|u| {
+                let (i, j) = (u / kh, u % kh);
+                let c = &caches[i];
+                let total = c.len();
+                let segs = c.segs();
+                SEG_MAP.with(|cell| {
+                    let mut map = cell.borrow_mut();
+                    map.clear();
+                    let single = segs.len() == 1;
+                    if !single {
+                        for (si, s) in segs.iter().enumerate() {
+                            map.extend((0..s.len).map(|r| (si as u32, r as u32)));
+                        }
+                    }
+                    let ctx = SegAttn {
+                        q,
+                        segs: &segs,
+                        map: &map,
+                        single,
+                        nk: total,
+                        h,
+                        kh,
+                        g,
+                        hd,
+                        scale,
+                        nonce,
+                        row0: i,
+                    };
+                    ctx.unit(&|_, kj| kj < total, 0, j, &out_sh, &lse_sh);
+                });
+            });
         }
         Ok((out, lse))
     }
 
-    // `attn_partial` deliberately uses the trait default: that default IS
-    // this engine's native kernel (`masked_attention` with the
-    // position-causal rule), so an override would only duplicate it. For
-    // PJRT the same default acts as the host-side fallback.
+    /// Position-causal partial attention (ring / dense baselines) through
+    /// the engine's pooled kernel — same rule as the trait default.
+    fn attn_partial(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+    ) -> Result<(Tensor, Tensor)> {
+        anyhow::ensure!(q.shape[0] == q_pos.len(),
+                        "attn_partial: {} q rows, {} positions", q.shape[0], q_pos.len());
+        anyhow::ensure!(k.shape[0] == k_pos.len(),
+                        "attn_partial: {} k rows, {} positions", k.shape[0], k_pos.len());
+        let seg = super::KvSeg { k, v, len: k.shape[0] };
+        Ok(self.attn(q, &[seg], |qi, kj| k_pos[kj] <= q_pos[qi]))
+    }
 
     fn decode_post(&self, layer: usize, hidden: &Tensor, att: &Tensor) -> Result<Tensor> {
         Ok(self.attn_tail(&self.layers[layer], hidden, att))

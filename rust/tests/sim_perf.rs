@@ -1,0 +1,209 @@
+//! Bit-identity gates of the SimEngine hot-path performance pass
+//! (docs/ADR-005-sim-perf.md): the tiled/pooled kernels and the slab-backed
+//! KV pool are pure performance changes, so every observable — logits,
+//! LSEs, KV bytes, pool stats — must match the scalar reference EXACTLY
+//! (f32 bit equality, not tolerance), for every `AttnMethod`, under both
+//! drivers, across randomized shapes, segmentations and masks.
+//!
+//! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
+
+use apb::config::{ApbOptions, AttnMethod, Config};
+use apb::coordinator::{Cluster, Driver};
+use apb::runtime::sim::{masked_attention_seg, masked_attention_seg_ref, resolve_sim_threads};
+use apb::runtime::KvSeg;
+use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    Tensor::new(shape, data).expect("rand tensor")
+}
+
+/// Randomized sweep: the serially-tiled public kernel vs the retired scalar
+/// loop, over random GQA shapes, 1–3 segments (some empty, some padded past
+/// `len`), and random masks including fully-masked rows. Scratch builds up
+/// across iterations on this one thread, so shape/mask interleaving also
+/// exercises the thread-local scratch + nonce invalidation.
+#[test]
+fn prop_tiled_kernel_matches_scalar_reference() {
+    println!("APB-RUN sim_perf backend=sim");
+    let mut rng = Rng::new(0x5E6_0051);
+    let gqa = [(4usize, 4usize), (4, 2), (8, 2), (6, 3), (4, 1), (1, 1)];
+    for case in 0..60u64 {
+        let (h, kh) = gqa[rng.below(gqa.len() as u64) as usize];
+        let hd = [4usize, 8, 16, 32][rng.below(4) as usize];
+        let nq = 1 + rng.below(9) as usize;
+        let n_segs = 1 + rng.below(3) as usize;
+        let kv: Vec<(Tensor, Tensor, usize)> = (0..n_segs)
+            .map(|_| {
+                let len = rng.below(80) as usize; // 0-len segments included
+                let rows = len + rng.below(9) as usize; // padding past len
+                (rand_tensor(&mut rng, vec![rows.max(1), kh, hd]),
+                 rand_tensor(&mut rng, vec![rows.max(1), kh, hd]),
+                 len)
+            })
+            .collect();
+        let segs: Vec<KvSeg<'_>> =
+            kv.iter().map(|(k, v, len)| KvSeg { k, v, len: *len }).collect();
+        let nk: usize = kv.iter().map(|s| s.2).sum();
+        let q = rand_tensor(&mut rng, vec![nq, h, hd]);
+        // Random mask; roughly one row in four is fully masked (out must be
+        // exactly 0 and lse exactly -inf on both paths).
+        let mask: Vec<bool> = (0..nq)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    vec![false; nk]
+                } else {
+                    (0..nk).map(|_| rng.below(3) > 0).collect()
+                }
+            })
+            .collect::<Vec<Vec<bool>>>()
+            .concat();
+        let visible = |qi: usize, kj: usize| mask[qi * nk + kj];
+        let (o_ref, l_ref) = masked_attention_seg_ref(&q, &segs, visible);
+        let (o_til, l_til) = masked_attention_seg(&q, &segs, visible);
+        assert_eq!(o_ref.shape, o_til.shape);
+        assert_eq!(
+            o_ref.data, o_til.data,
+            "case {case}: tiled out != scalar (nq={nq} h={h} kh={kh} hd={hd} nk={nk})"
+        );
+        assert_eq!(
+            l_ref.data, l_til.data,
+            "case {case}: tiled lse != scalar (nq={nq} h={h} kh={kh} hd={hd} nk={nk})"
+        );
+    }
+}
+
+fn request(cfg: &Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    (doc, query)
+}
+
+/// Two-session serving scenario on a fresh cluster; the batched decode step
+/// carries BOTH sessions, so the pooled `decode_attn_batch` path runs with
+/// heterogeneous per-session cache lengths.
+fn scenario(cfg: &Config, driver: Driver) -> (Vec<f32>, Vec<apb::coordinator::PoolStats>) {
+    let cluster = Cluster::start_with(cfg, driver).expect("cluster");
+    let opts = ApbOptions { method: cfg.method, ..Default::default() };
+    let (doc_a, query) = request(cfg, 0xA11CE);
+    let (doc_b, _) = request(cfg, 0xB0B);
+    cluster.prefill_session(1, &doc_a, &query, &opts).expect("prefill A");
+    cluster.prefill_session(2, &doc_b, &query, &opts).expect("prefill B");
+    let vocab = cfg.model.vocab_size;
+    let mut trace = Vec::new();
+    let mut toks = Vec::new();
+    for sid in [1u64, 2] {
+        let chunk = cluster.decode_query_chunk(sid, &query).expect("query chunk");
+        toks.push(Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32);
+        trace.extend(chunk.logits);
+    }
+    for _ in 0..3 {
+        let rep = cluster
+            .decode_step_batch(&[(1, toks[0]), (2, toks[1])])
+            .expect("batched step");
+        for (i, (_, logits)) in rep.logits.iter().enumerate() {
+            toks[i] = Tensor::argmax_row(logits) as i32;
+            trace.extend(logits.iter().copied());
+        }
+    }
+    (trace, cluster.pool_stats().expect("pool stats"))
+}
+
+/// The perf knobs (`sim_scalar`, `sim_threads`) must be invisible in every
+/// observable, for every method, under both drivers: scalar reference,
+/// tiled serial (1 thread) and tiled pooled (4 threads) produce the same
+/// logits trace and the same per-host pool stats.
+#[test]
+fn prop_perf_knobs_are_invisible_for_all_methods_and_drivers() {
+    println!("APB-RUN sim_perf_knobs backend=sim");
+    for method in AttnMethod::ALL {
+        for driver in [Driver::Sequential, Driver::Threaded] {
+            let base = Config::sim_tiny().with_method(method);
+            let oracle = scenario(&base.clone().with_sim_scalar(true), driver);
+            assert!(oracle.0.iter().all(|x| x.is_finite()),
+                    "{} {driver:?}: non-finite oracle logits", method.name());
+            for threads in [1usize, 4] {
+                let got = scenario(&base.clone().with_sim_threads(threads), driver);
+                assert_eq!(got.0, oracle.0,
+                           "{} {driver:?} threads={threads}: logits diverged \
+                            from the scalar reference",
+                           method.name());
+                assert_eq!(got.1, oracle.1,
+                           "{} {driver:?} threads={threads}: pool stats diverged",
+                           method.name());
+            }
+        }
+    }
+}
+
+/// Slab lifecycle through the whole cluster: churning more distinct
+/// documents than the prefix store caps forces freeze → evict → recycle,
+/// after which a fresh request served from RECYCLED (never re-zeroed) slabs
+/// must match a cold cluster bit-for-bit — logits, KV bytes and prefix
+/// accounting alike.
+#[test]
+fn slab_recycling_is_invisible_to_a_served_request() {
+    println!("APB-RUN sim_perf_slabs backend=sim");
+    let cfg = Config::sim_tiny().with_prefix_cache(true);
+    let churned = Cluster::start(&cfg).expect("churned cluster");
+    let opts = ApbOptions::default();
+    let (_, query) = request(&cfg, 1);
+    for round in 0..cfg.apb.max_resident * 2 + 2 {
+        let (doc, _) = request(&cfg, 0x1000 + round as u64);
+        let sid = (round + 1) as u64;
+        churned.prefill_session(sid, &doc, &query, &opts).expect("churn prefill");
+        churned.clear_session(sid).expect("churn clear");
+    }
+    let reuses: u64 = churned.pool_stats().expect("stats").iter()
+        .map(|s| s.slab_reuses).sum();
+    assert!(reuses > 0, "churn past the prefix cap must recycle slabs");
+    // Reset the store (NOT the arena: `clear` parks every entry's slabs on
+    // the free list and the lifetime counters survive), so the measured
+    // request below freezes into recycled slabs and both clusters end up
+    // with exactly one prefix entry to compare.
+    churned.clear().expect("clear churned cluster");
+
+    let fresh = Cluster::start(&cfg).expect("fresh cluster");
+    let (doc, _) = request(&cfg, 0xF00D);
+    let vocab = cfg.model.vocab_size;
+    let mut traces = Vec::new();
+    for cluster in [&churned, &fresh] {
+        cluster.prefill_session(77, &doc, &query, &opts).expect("measured prefill");
+        let chunk = cluster.decode_query_chunk(77, &query).expect("query chunk");
+        let tok = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+        let step = cluster.decode_step_batch(&[(77, tok)]).expect("step");
+        let mut trace = chunk.logits;
+        trace.extend(step.logits[0].1.iter().copied());
+        traces.push((trace,
+                     cluster.pool_stats().expect("stats").iter()
+                         .map(|s| (s.bytes_used, s.prefix_bytes, s.resident))
+                         .collect::<Vec<_>>()));
+    }
+    let reuses_after: u64 = churned.pool_stats().expect("stats").iter()
+        .map(|s| s.slab_reuses).sum();
+    assert!(reuses_after > reuses,
+            "the measured request must have frozen into recycled slabs");
+    assert_eq!(traces[0].0, traces[1].0,
+               "request served from recycled slabs diverged from a cold cluster");
+    assert_eq!(traces[0].1, traces[1].1,
+               "byte accounting diverged between recycled and cold pools");
+}
+
+#[test]
+fn sim_thread_resolution_is_explicit_then_env_then_cores() {
+    // An explicit config pin always wins; 0 defers (this test cannot assert
+    // the env layer without racing other tests on the process environment,
+    // so it only pins the arithmetic of the fallback).
+    assert_eq!(resolve_sim_threads(3, 8), 3);
+    assert_eq!(resolve_sim_threads(1, 1), 1);
+    let auto = resolve_sim_threads(0, usize::MAX);
+    assert_eq!(auto, 1, "huge host counts must clamp the pool to 1 thread");
+    assert!(resolve_sim_threads(0, 1) >= 1);
+}
