@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
                 query: inst.query.clone(),
                 max_new,
                 opts,
+                class: Default::default(),
             })?;
             scheduler.run_all()?;
         }
@@ -95,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 query: inst.query,
                 max_new,
                 opts,
+                class: Default::default(),
             })?;
         }
         println!("queued {} requests", scheduler.queued());

@@ -1,0 +1,209 @@
+"""Mirror of rust/src/workload/mod.rs::generate over rust/src/util/rng.rs.
+
+Replays the exact RNG draw sequence of the Rust trace generator (xoshiro256**
+seeded through splitmix64, identical call order) for every named TraceSpec and
+asserts the preconditions the serving smoke gates rely on:
+
+* every named trace generates, arrivals are monotone;
+* `smoke` and `adversarial` contain at least one block-scale long request
+  (`apb serve --trace smoke --smoke` asserts `n_long >= 1`);
+* under `--prefix-cache` the smoke trace produces at least one prefix HIT:
+  some shared-corpus (doc, query) pair is used at least twice (the first
+  admitted use is cold; the one-prefill-at-a-time permit serialises
+  admissions, so every later use of the pair attaches warm);
+* starvation headroom: an upper bound on total admission work (196 ticks per
+  ct=1 long, 17 per short) stays below the default 1024-tick starvation
+  budget for `smoke`, so the CI gate `starved == 0` cannot be violated by
+  construction of the trace alone.
+
+Stdlib-only, like the other mirrors (no numpy needed here).
+"""
+
+import math
+
+M64 = (1 << 64) - 1
+
+
+def splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & M64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """xoshiro256** — bit-identical twin of rust/src/util/rng.rs::Rng."""
+
+    def __init__(self, seed):
+        s, x = [], seed & M64
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & M64
+            s.append(splitmix64(x))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def below(self, n):
+        return self.next_u64() % max(n, 1)
+
+    def range(self, lo, hi):
+        assert hi > lo
+        return lo + self.below(hi - lo)
+
+    def choice_weighted(self, weights):
+        total = sum(weights)
+        if total <= 0.0:
+            return self.below(len(weights))
+        target = self.f64() * total
+        for i, w in enumerate(weights):
+            target -= w
+            if target <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+# --- sim_tiny geometry (rust/src/config/mod.rs::Config::sim_tiny) ----------
+N_HOSTS, BLOCK_LEN, QUERY_LEN, VOCAB, N_LAYERS = 3, 32, 4, 128, 2
+DOC_LEN = N_HOSTS * BLOCK_LEN
+
+# --- named TraceSpecs (rust/src/workload/mod.rs::TraceSpec::by_name) --------
+SPECS = {
+    "smoke": dict(
+        seed=0xAB5E, n_requests=8,
+        arrival=("poisson", 2.0),
+        long_fraction=0.2, long_chunk_tokens=1,
+        short_max_new=(2, 4), long_max_new=(4, 8),
+        prefix_hit_rate=0.5, corpus_size=2, class_weights=[0.5, 0.5, 0.0],
+    ),
+    "adversarial": dict(
+        seed=0xBAD_F00D, n_requests=12,
+        arrival=("bursty", 4, 16),
+        long_fraction=0.34, long_chunk_tokens=1,
+        short_max_new=(1, 3), long_max_new=(6, 10),
+        prefix_hit_rate=0.25, corpus_size=2, class_weights=[0.6, 0.4, 0.0],
+    ),
+    "poisson": dict(
+        seed=0x903507, n_requests=16,
+        arrival=("poisson", 4.0),
+        long_fraction=0.125, long_chunk_tokens=2,
+        short_max_new=(2, 5), long_max_new=(6, 12),
+        prefix_hit_rate=0.4, corpus_size=3, class_weights=[0.4, 0.5, 0.1],
+    ),
+    "bursty": dict(
+        seed=0xB0257, n_requests=12,
+        arrival=("bursty", 3, 32),
+        long_fraction=0.25, long_chunk_tokens=2,
+        short_max_new=(1, 4), long_max_new=(4, 8),
+        prefix_hit_rate=0.3, corpus_size=2, class_weights=[0.3, 0.5, 0.2],
+    ),
+}
+
+
+def random_tokens(rng, n):
+    return [rng.range(1, VOCAB) for _ in range(n)]
+
+
+def generate(spec):
+    """Mirror of workload::generate — identical draw order."""
+    rng = Rng(spec["seed"])
+    corpus = [
+        (tuple(random_tokens(rng, DOC_LEN)), tuple(random_tokens(rng, QUERY_LEN)))
+        for _ in range(max(spec["corpus_size"], 1))
+    ]
+    arrivals, at_tick = [], 0
+    for i in range(spec["n_requests"]):
+        if i > 0:
+            a = spec["arrival"]
+            if a[0] == "poisson":
+                u = max(rng.f64(), 1e-12)
+                # f64::round ties away from zero == round-half-up for
+                # positive values (math.floor(x + 0.5)).
+                at_tick += int(math.floor(-math.log(u) * a[1] + 0.5))
+            else:
+                _, burst, gap = a
+                if i % max(burst, 1) == 0:
+                    at_tick += gap
+        long = rng.f64() < spec["long_fraction"]
+        if long:
+            lo, hi = spec["long_max_new"]
+            max_new = rng.range(lo, hi + 1)
+            doc = tuple(random_tokens(rng, DOC_LEN))
+            query = tuple(random_tokens(rng, QUERY_LEN))
+            arrivals.append(dict(at=at_tick, long=True, cls="batch",
+                                 max_new=max_new, pair=None))
+        else:
+            cls = ["interactive", "standard", "batch"][
+                rng.choice_weighted(spec["class_weights"])]
+            lo, hi = spec["short_max_new"]
+            max_new = rng.range(lo, hi + 1)
+            shares = rng.f64() < spec["prefix_hit_rate"]
+            if shares:
+                pair = rng.below(len(corpus))
+            else:
+                pair = None
+                random_tokens(rng, DOC_LEN)
+                random_tokens(rng, QUERY_LEN)
+            arrivals.append(dict(at=at_tick, long=False, cls=cls,
+                                 max_new=max_new, pair=pair))
+    return arrivals
+
+
+def apb_plan_len(chunk_tokens):
+    """APB plan length (rust prefill.rs::apb_plan): L * (3C + 2), C > 1."""
+    n_chunks = (BLOCK_LEN + chunk_tokens - 1) // chunk_tokens
+    per_layer = 5 if n_chunks == 1 else 3 * n_chunks + 2
+    return N_LAYERS * per_layer
+
+
+def main():
+    for name, spec in SPECS.items():
+        tr = generate(spec)
+        assert len(tr) == spec["n_requests"], name
+        ticks = [r["at"] for r in tr]
+        assert ticks == sorted(ticks), f"{name}: arrivals not monotone"
+        n_long = sum(r["long"] for r in tr)
+        pair_uses = {}
+        for r in tr:
+            if r["pair"] is not None:
+                pair_uses[r["pair"]] = pair_uses.get(r["pair"], 0) + 1
+        hits = sum(c - 1 for c in pair_uses.values())
+        # Admission-work upper bound (ticks): one plan step per tick plus
+        # one seating/query-chunk tick per request.
+        work = sum(
+            apb_plan_len(spec["long_chunk_tokens"]) + 1 if r["long"]
+            else apb_plan_len(16) + 1
+            for r in tr
+        )
+        print(f"{name:12s} n_long={n_long} classes="
+              f"{[r['cls'] for r in tr]} pair_uses={pair_uses} "
+              f"hits>={hits} arrivals={ticks} work<={work}")
+        if name in ("smoke", "adversarial"):
+            assert n_long >= 1, f"{name}: --smoke gate needs a long request"
+        if name == "smoke":
+            assert hits >= 1, "smoke: --prefix-cache gate needs a warm replay"
+            assert work < 1024, (
+                f"smoke: admission work bound {work} >= starvation budget — "
+                "the starved==0 CI gate could trip")
+    print("workload trace mirror OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -230,7 +230,18 @@ impl HostWorker {
                 }
             }
             Cmd::PrefillChunk { chunk_idx } => match self.prefill_chunk(sid, chunk_idx) {
-                Ok(None) => Resp::PrefillStep { host: self.rank, sid },
+                Ok(None) => {
+                    // Report whether this rank's machine sits at a fabric
+                    // quiescent point: the leader needs rank-uniform
+                    // quiescence to decide if the prefill may be suspended
+                    // (permit released) at this chunk boundary.
+                    let quiescent = self
+                        .machines
+                        .get(&sid)
+                        .map(|m| m.fabric_quiescent())
+                        .unwrap_or(true);
+                    Resp::PrefillStep { host: self.rank, sid, quiescent }
+                }
                 Ok(Some((timing, retained, prefix_hit, prefix_bytes))) => Resp::PrefillDone {
                     host: self.rank,
                     sid,

@@ -147,8 +147,13 @@ pub enum Resp {
     /// verdict would run collectives on some ranks only and wedge the
     /// fabric).
     PrefillBegun { host: usize, sid: SessionId, steps: usize, prefix_hit: bool },
-    /// One intermediate prefill step finished on this host.
-    PrefillStep { host: usize, sid: SessionId },
+    /// One intermediate prefill step finished on this host. `quiescent`
+    /// reports whether the host's machine now sits at a fabric-quiescent
+    /// point (no posted-but-incomplete ring rotation or APB gather); the
+    /// leader asserts it is rank-uniform and records it on
+    /// [`PrefillProgress`] so a suspend at this boundary knows whether the
+    /// one-prefill-at-a-time permit may be released.
+    PrefillStep { host: usize, sid: SessionId, quiescent: bool },
     /// This host's KV-pool accounting snapshot.
     PoolStats { host: usize, stats: PoolStats },
     PrefillDone {
@@ -333,6 +338,11 @@ pub struct PrefillProgress {
     retained: Vec<Vec<Vec<Vec<u32>>>>,
     prefix_hit: bool,
     prefix_bytes_saved: u64,
+    /// Whether every host's machine sits at a fabric-quiescent point (no
+    /// posted-but-incomplete collective round). Rank-uniform by the
+    /// lockstep invariant (asserted per step); `true` before the first
+    /// step. Governs whether a suspend may release the prefill permit.
+    quiescent: bool,
     /// The in-flight claim; taken and finished by the final step. Stays
     /// held across step errors (see [`PrefillPermit`]).
     permit: Option<PrefillPermit>,
@@ -353,6 +363,67 @@ impl PrefillProgress {
     /// known from `prefill_begin`, before any step is driven.
     pub fn prefix_hit(&self) -> bool {
         self.prefix_hit
+    }
+
+    /// Whether the machines currently hold no open fabric round (see the
+    /// field doc). A [`Cluster::prefill_suspend`] at a quiescent boundary
+    /// releases the one-prefill-at-a-time permit; a non-quiescent suspend
+    /// parks the machines but keeps the permit held.
+    pub fn fabric_quiescent(&self) -> bool {
+        self.quiescent
+    }
+}
+
+/// A parked in-flight prefill, produced by [`Cluster::prefill_suspend`]
+/// and revived by [`Cluster::prefill_resume`]. The per-host
+/// `PrefillMachine`s stay exactly where they are (keyed by session in each
+/// host's machine map — parking involves NO host command), so resumption
+/// is pure bookkeeping and the resumed run is bit-identical to an
+/// uninterrupted one. The suspended session keeps its KV-pool slot and
+/// therefore still counts toward residency.
+///
+/// If the suspend happened at a fabric-quiescent boundary the prefill
+/// permit was released and other prefills may start (and finish) while
+/// this one is parked. At a non-quiescent boundary the permit stays
+/// captive in here — no other prefill can join the open collective
+/// rounds — and is handed back verbatim on resume. Either way, dropping
+/// the token without resuming leaks the session until
+/// [`Cluster::clear_session`] reclaims it (which also drains any open
+/// rounds and frees a captive permit's slot).
+pub struct SuspendedPrefill {
+    sid: SessionId,
+    n_steps: usize,
+    next: usize,
+    wall_seconds: f64,
+    comm_bytes: u64,
+    per_host: Vec<PrefillTiming>,
+    retained: Vec<Vec<Vec<Vec<u32>>>>,
+    prefix_hit: bool,
+    prefix_bytes_saved: u64,
+    quiescent: bool,
+    permit: Option<PrefillPermit>,
+}
+
+impl SuspendedPrefill {
+    /// The parked session.
+    pub fn sid(&self) -> SessionId {
+        self.sid
+    }
+
+    /// Steps already driven before the suspend.
+    pub fn steps_done(&self) -> usize {
+        self.next
+    }
+
+    /// Total plan steps (unchanged by suspension).
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Whether the suspend landed on a fabric-quiescent boundary (permit
+    /// released) or holds the permit captive.
+    pub fn holds_permit(&self) -> bool {
+        self.permit.is_some()
     }
 }
 
@@ -758,6 +829,7 @@ impl Cluster {
             retained: vec![Vec::new(); n_hosts],
             prefix_hit,
             prefix_bytes_saved: 0,
+            quiescent: true,
             permit: None,
         })
     }
@@ -808,21 +880,117 @@ impl Cluster {
     /// timing + retained indices on the final step).
     fn prefill_step_inner(&self, p: &mut PrefillProgress, last: bool) -> Result<()> {
         let envs = self.fan_out(p.sid, p.sid, Cmd::PrefillChunk { chunk_idx: p.next });
+        let mut quiet: Vec<bool> = Vec::with_capacity(self.cfg.apb.n_hosts);
         for r in self.transact(envs)? {
             match r {
-                Resp::PrefillStep { .. } => {
+                Resp::PrefillStep { quiescent, .. } => {
                     debug_assert!(!last, "host finished early");
+                    quiet.push(quiescent);
                 }
                 Resp::PrefillDone { host, timing, retained: ret, prefix_bytes, .. } => {
                     debug_assert!(last, "host finished late");
                     p.per_host[host] = timing;
                     p.retained[host] = ret;
                     p.prefix_bytes_saved += prefix_bytes;
+                    quiet.push(true);
                 }
                 _ => {}
             }
         }
+        // Quiescence-desync tripwire: fabric ops sit at identical plan
+        // indices on every rank (lockstep invariant), so a split verdict
+        // means a host's machine diverged from the shared plan.
+        let quiescent = quiet[0];
+        if quiet.iter().any(|&q| q != quiescent) {
+            bail!(
+                "prefill quiescence desync for session {}: per-host verdicts \
+                 {quiet:?} are not rank-uniform",
+                p.sid
+            );
+        }
+        p.quiescent = quiescent;
         Ok(())
+    }
+
+    /// Park an in-flight prefill at the current chunk boundary WITHOUT
+    /// aborting it: the per-host machines stay resident (no host command is
+    /// sent — parking is leader-side bookkeeping only) and the returned
+    /// [`SuspendedPrefill`] revives bit-identically via
+    /// [`Cluster::prefill_resume`].
+    ///
+    /// At a fabric-quiescent boundary ([`PrefillProgress::fabric_quiescent`])
+    /// the one-prefill-at-a-time permit is RELEASED, so other prefills can
+    /// begin, run, and finish while this one is parked — this is the seam
+    /// the SLO scheduler preempts through. At a non-quiescent boundary
+    /// (mid ring rotation / mid APB gather) the permit stays captive
+    /// inside the token: no other prefill can join the open collective
+    /// rounds, so suspension is still safe at ANY chunk boundary — it just
+    /// cannot re-open admission until resumed past the open round.
+    ///
+    /// Fails on a finished or errored progress handle (no permit to park).
+    pub fn prefill_suspend(&self, mut p: PrefillProgress) -> Result<SuspendedPrefill> {
+        if p.next >= p.n_steps {
+            bail!("prefill for session {} already finished: nothing to suspend", p.sid);
+        }
+        let Some(permit) = p.permit.take() else {
+            bail!(
+                "prefill for session {} holds no permit (begin failed or a \
+                 prior step errored); clear the session instead of suspending",
+                p.sid
+            );
+        };
+        let permit = if p.quiescent {
+            permit.finish();
+            None
+        } else {
+            Some(permit)
+        };
+        Ok(SuspendedPrefill {
+            sid: p.sid,
+            n_steps: p.n_steps,
+            next: p.next,
+            wall_seconds: p.wall_seconds,
+            comm_bytes: p.comm_bytes,
+            per_host: std::mem::take(&mut p.per_host),
+            retained: std::mem::take(&mut p.retained),
+            prefix_hit: p.prefix_hit,
+            prefix_bytes_saved: p.prefix_bytes_saved,
+            quiescent: p.quiescent,
+            permit,
+        })
+    }
+
+    /// Revive a suspended prefill: re-claim the one-prefill-at-a-time slot
+    /// (or reuse the captive permit from a non-quiescent suspend) and hand
+    /// back a [`PrefillProgress`] that continues exactly where the suspend
+    /// left off. When another prefill currently holds the slot the token
+    /// comes back untouched as `Err` so the caller can retry later —
+    /// resumption never aborts or leaks the parked session.
+    pub fn prefill_resume(
+        &self,
+        s: SuspendedPrefill,
+    ) -> std::result::Result<PrefillProgress, SuspendedPrefill> {
+        let mut s = s;
+        let permit = match s.permit.take() {
+            Some(p) => p,
+            None => match PrefillPermit::claim(&self.prefill_slot, s.sid) {
+                Ok(p) => p,
+                Err(_) => return Err(s),
+            },
+        };
+        Ok(PrefillProgress {
+            sid: s.sid,
+            n_steps: s.n_steps,
+            next: s.next,
+            wall_seconds: s.wall_seconds,
+            comm_bytes: s.comm_bytes,
+            per_host: s.per_host,
+            retained: s.retained,
+            prefix_hit: s.prefix_hit,
+            prefix_bytes_saved: s.prefix_bytes_saved,
+            quiescent: s.quiescent,
+            permit: Some(permit),
+        })
     }
 
     /// One-shot prefill (Algorithm 1 lines 1–12): begin, then drain every

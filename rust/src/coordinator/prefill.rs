@@ -444,6 +444,19 @@ impl PrefillMachine {
         self.warm.as_ref()
     }
 
+    /// True when this rank holds no posted-but-incomplete fabric round
+    /// (neither a ring rotation nor an APB compressed-block gather is in
+    /// flight). At a quiescent boundary the machine can be parked
+    /// indefinitely — and the one-prefill-at-a-time permit released — with
+    /// no peer able to observe the pause, because every collective this
+    /// machine will ever touch again starts from a fresh post. The plan
+    /// builders make quiescence rank-uniform: fabric ops sit at identical
+    /// plan indices on every rank (lockstep invariant), so either all
+    /// ranks report quiescent at a boundary or none do.
+    pub(crate) fn fabric_quiescent(&self) -> bool {
+        self.pending_ring.is_none() && self.pending_gather.is_none()
+    }
+
     /// Cancel the machine, draining any posted-but-incomplete fabric round
     /// (the ring rotation and/or the APB compressed-block gather) via
     /// [`cancel`](crate::cluster::collectives::Fabric::cancel). Never

@@ -1,5 +1,6 @@
 //! Request scheduler: continuous batching over session slots, with
-//! **stall-free chunked admission**.
+//! **stall-free chunked admission** and **SLO-aware preemptive
+//! scheduling**.
 //!
 //! The pre-session scheduler drained a FIFO run-to-completion — one request
 //! occupied all H hosts from prefill to last token, with a full cluster
@@ -13,14 +14,37 @@
 //!
 //! Admission is where head-of-line blocking used to live: a one-shot
 //! prefill of a long request froze every resident session for its whole
-//! duration. Each [`Scheduler::step`] now advances the admitting session's
+//! duration. Each [`Scheduler::step`] advances the admitting session's
 //! resumable prefill by AT MOST ONE chunk (`Cluster::prefill_step`,
 //! bounded by `chunk_tokens`) and *then* runs the batched decode tick, so
 //! no resident session ever stalls longer than one chunk — Medha's "no
-//! request left behind", executable. Per-request TTFT/TPOT (whose
-//! definitions chunking does NOT change: TTFT is still enqueue → first
-//! query-chunk logit) and the per-session `prefill_chunks` count land in
-//! [`ServingMetrics`].
+//! request left behind", executable.
+//!
+//! Chunking bounds how long resident *decoders* wait, but FIFO admission
+//! still lets one block-scale prefill head-of-line-block every *queued*
+//! request behind it. [`SchedPolicy`] closes that gap:
+//!
+//! * **Priority classes** ([`Class`]) with per-class TTFT SLOs — the queue
+//!   pops by [`effective_priority`], not arrival order.
+//! * **Aging** — a request's effective priority improves linearly with
+//!   every tick it waits, so class is a head start, never a trump card:
+//!   after `aging_ticks` ticks of waiting a request outranks a fresh
+//!   arrival one class above it (starvation-free admission).
+//! * **Preemption** — when a strictly more urgent request is queued and
+//!   the in-flight admission sits at a fabric-quiescent chunk boundary,
+//!   the scheduler parks it ([`Cluster::prefill_suspend`]) without
+//!   aborting: the per-host machines stay resident, the prefill permit is
+//!   released, the urgent request admits, and the parked prefill resumes
+//!   later bit-identically. Aging makes preemption self-limiting: once a
+//!   request has waited `2 * aging_ticks` its effective priority is at
+//!   least as urgent as ANY fresh arrival, so the strict-inequality
+//!   preemption rule can never fire against it again.
+//!
+//! All policy decisions are made in scheduler **ticks** (one per
+//! [`Scheduler::step`]), never wall clock, so a seeded trace replays
+//! identically under `Driver::Sequential` and `Driver::Threaded`
+//! ([`ReplayFingerprint`]). Per-request TTFT/TPOT land in
+//! [`ServingMetrics`] with p50/p95/p99 spreads and per-class goodput.
 //!
 //! When the cluster runs with `ApbParams::prefix_cache`, an admission
 //! whose request matches a frozen shared prefix is warm: its entire
@@ -40,7 +64,109 @@ use anyhow::{bail, Result};
 use crate::config::ApbOptions;
 use crate::util::stats::{summarize, Summary};
 
-use super::{Cluster, PrefillProgress, PrefillReport, SessionId};
+use super::{Cluster, PrefillProgress, PrefillReport, SessionId, SuspendedPrefill};
+
+/// Priority class of a request — the head start it gets at admission.
+/// Lower [`Class::index`] admits sooner at equal waiting time; aging
+/// ([`SchedPolicy::aging_ticks`]) converts waiting into priority so no
+/// class can starve another (see [`effective_priority`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Class {
+    /// Latency-sensitive traffic (chat turns, short lookups).
+    Interactive,
+    /// The default for unclassified requests — exactly the old FIFO
+    /// behavior when every request carries it.
+    #[default]
+    Standard,
+    /// Throughput traffic that tolerates queueing (block-scale prefills,
+    /// offline summarization).
+    Batch,
+}
+
+impl Class {
+    /// Every class, in priority order (most urgent first).
+    pub const ALL: [Class; 3] = [Class::Interactive, Class::Standard, Class::Batch];
+
+    /// Priority rank: 0 = most urgent. The multiplier in
+    /// [`effective_priority`].
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Standard => 1,
+            Class::Batch => 2,
+        }
+    }
+
+    /// Stable lowercase name (CLI, reports, `BENCH_serving.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Standard => "standard",
+            Class::Batch => "batch",
+        }
+    }
+
+    /// Parse a class name as accepted by trace specs and the CLI.
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "interactive" => Some(Class::Interactive),
+            "standard" => Some(Class::Standard),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduling policy: per-class TTFT SLOs plus the aging and preemption
+/// knobs. The default is back-compatible: all-`Standard` traffic under the
+/// default policy degenerates to exact FIFO with zero preemptions (equal
+/// class ⇒ effective priority orders by arrival; the strict-inequality
+/// preemption rule never fires against the earliest arrival).
+#[derive(Debug, Clone)]
+pub struct SchedPolicy {
+    /// Ticks of waiting worth one priority class: a request that has
+    /// waited `aging_ticks` outranks a fresh arrival one class above it.
+    /// Must be >= 1 (0 would erase classes entirely — use all-Standard
+    /// traffic for that).
+    pub aging_ticks: u64,
+    /// Whether a strictly more urgent queued request may park the
+    /// in-flight admission at a fabric-quiescent chunk boundary.
+    pub preempt: bool,
+    /// Per-class TTFT SLO in scheduler ticks, indexed by [`Class::index`].
+    /// Goodput in [`ServingMetrics`] counts requests whose `ttft_ticks`
+    /// meets their class SLO.
+    pub slo_ttft_ticks: [u64; 3],
+    /// The starvation tripwire: a completed request whose `ttft_ticks`
+    /// exceeds this counts as starved in [`ServingMetrics::starved`]. The
+    /// serving-invariant suite pins this to 0 on the smoke trace.
+    pub starvation_budget_ticks: u64,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy {
+            aging_ticks: 32,
+            preempt: true,
+            slo_ttft_ticks: [64, 256, 4096],
+            starvation_budget_ticks: 1024,
+        }
+    }
+}
+
+/// Effective priority of a request that has waited `waited_ticks`:
+/// `class.index() * aging_ticks - waited_ticks`. **Lower is more
+/// urgent.** Class is a head start of `aging_ticks` per level; waiting
+/// erodes it one tick at a time. Two properties the invariant tests lean
+/// on:
+///
+/// * within one class this is exactly FIFO (longer wait ⇒ lower value);
+/// * any request that has waited `Class::ALL.len() * aging_ticks` ticks
+///   has a value ≤ the best any fresh arrival can present, so neither
+///   admission selection nor the strict-inequality preemption rule can
+///   pass it over — admission is starvation-free.
+pub fn effective_priority(class: Class, waited_ticks: u64, aging_ticks: u64) -> i64 {
+    class.index() as i64 * aging_ticks as i64 - waited_ticks as i64
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -49,11 +175,14 @@ pub struct Request {
     pub query: Vec<i32>,
     pub max_new: usize,
     pub opts: ApbOptions,
+    /// Priority class ([`Class::Standard`] preserves pre-policy behavior).
+    pub class: Class,
 }
 
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    pub class: Class,
     pub tokens: Vec<i32>,
     pub queue_wait_s: f64,
     pub prefill: PrefillReport,
@@ -61,9 +190,31 @@ pub struct Response {
     pub e2e_s: f64,
     /// Paper speed metric: (#input + #output) / (prefill + decode) time.
     pub speed_tok_per_s: f64,
-    /// Time to first token: submission → first sampled token (includes
-    /// queue wait, prefill and the query-chunk pass).
+    /// Time to first token — THE definition, used by every TTFT field in
+    /// this crate (`ttft_s`, [`Response::ttft_ticks`], the
+    /// [`ServingMetrics`] summaries and the `BENCH_serving.json` record):
+    /// **enqueue → first query-chunk logit**. The span covers queue wait
+    /// (frozen when the request is popped for admission, reported
+    /// separately as `queue_wait_s`), every resumable-prefill chunk, the
+    /// decode ticks of OTHER sessions interleaved between those chunks,
+    /// AND any time the prefill spent suspended by a preemption — a
+    /// preempted-then-resumed request's TTFT still measures from enqueue,
+    /// never from resume (asserted by
+    /// `ttft_spans_suspension_not_resume` in `rust/tests/slo_scheduling.rs`).
     pub ttft_s: f64,
+    /// TTFT in scheduler ticks, same definition as [`Response::ttft_s`]:
+    /// submit tick → the tick whose admission work produced the first
+    /// query-chunk logit. Tick-based, so deterministic across drivers.
+    pub ttft_ticks: u64,
+    /// End-to-end service ticks: submit tick → retire tick, minus the
+    /// ticks spent queued (the tick twin of `e2e_s`, which also excludes
+    /// queue wait).
+    pub e2e_ticks: u64,
+    /// Ticks spent in the admission queue before being popped.
+    pub queue_wait_ticks: u64,
+    /// How many times this request's in-flight prefill was parked by the
+    /// preemption policy (0 under FIFO-equivalent traffic).
+    pub preemptions: usize,
     /// Time per output token: mean decode-step latency after the first
     /// token (0.0 for single-token requests).
     pub tpot_s: f64,
@@ -76,31 +227,75 @@ pub struct Response {
     pub prefill_chunks: usize,
 }
 
-/// Cluster-independent admission control: a bounded FIFO that rejects
-/// (backpressure to the client) instead of growing without bound. Split
-/// from the scheduler so the admission policy is unit-testable without a
-/// live cluster.
+/// One queued request, stamped with its submission tick (for aging) and a
+/// submission sequence number (FIFO tie-break at equal priority).
+struct Queued {
+    req: Request,
+    at: Instant,
+    enq_tick: u64,
+    seq: u64,
+}
+
+/// Cluster-independent admission control: a bounded queue that rejects
+/// (backpressure to the client) instead of growing without bound, and pops
+/// by [`effective_priority`] rather than arrival order. Split from the
+/// scheduler so the admission policy is unit-testable without a live
+/// cluster. With single-class traffic `pop_best` IS FIFO (aging orders by
+/// arrival; ties broken by submission sequence).
 pub struct AdmissionQueue {
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<Queued>,
+    next_seq: u64,
     pub max_queue: usize,
 }
 
 impl AdmissionQueue {
     pub fn new(max_queue: usize) -> Self {
-        AdmissionQueue { queue: VecDeque::new(), max_queue }
+        AdmissionQueue { queue: VecDeque::new(), next_seq: 0, max_queue }
     }
 
-    /// Admission control: reject when the queue is full.
-    pub fn submit(&mut self, req: Request) -> Result<()> {
+    /// Admission control: reject when the queue is full. `now_tick` stamps
+    /// the request for aging.
+    pub fn submit(&mut self, req: Request, now_tick: u64) -> Result<()> {
         if self.queue.len() >= self.max_queue {
             bail!("queue full ({} requests): backpressure", self.max_queue);
         }
-        self.queue.push_back((req, Instant::now()));
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Queued { req, at: Instant::now(), enq_tick: now_tick, seq });
         Ok(())
     }
 
-    pub fn pop(&mut self) -> Option<(Request, Instant)> {
-        self.queue.pop_front()
+    /// The best (lowest) effective priority any queued request presents at
+    /// `now_tick`, or `None` on an empty queue. The preemption rule
+    /// compares this against the in-flight admission.
+    pub fn peek_best_eff(&self, now_tick: u64, aging_ticks: u64) -> Option<i64> {
+        self.queue
+            .iter()
+            .map(|q| effective_priority(q.req.class, now_tick.saturating_sub(q.enq_tick), aging_ticks))
+            .min()
+    }
+
+    /// Pop the most urgent request: lowest [`effective_priority`], ties
+    /// broken by submission order. Returns the request plus its enqueue
+    /// wall-instant and tick.
+    pub fn pop_best(&mut self, now_tick: u64, aging_ticks: u64) -> Option<(Request, Instant, u64)> {
+        let best = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| {
+                (
+                    effective_priority(
+                        q.req.class,
+                        now_tick.saturating_sub(q.enq_tick),
+                        aging_ticks,
+                    ),
+                    q.seq,
+                )
+            })
+            .map(|(i, _)| i)?;
+        let q = self.queue.remove(best).expect("index from enumerate");
+        Some((q.req, q.at, q.enq_tick))
     }
 
     pub fn len(&self) -> usize {
@@ -119,14 +314,19 @@ struct ActiveSession {
     /// decode group (distributed merge vs. Dense host-0) its ticks join.
     method: crate::config::AttnMethod,
     req_id: u64,
+    class: Class,
     enqueued: Instant,
+    enq_tick: u64,
     queue_wait_s: f64,
+    queue_wait_ticks: u64,
     prefill: PrefillReport,
     prefill_chunks: usize,
+    preemptions: usize,
     max_new: usize,
     n_in: usize,
     tokens: Vec<i32>,
     ttft_s: f64,
+    ttft_ticks: u64,
     gen_started: Instant,
     step_seconds: Vec<f64>,
     decode_comm_bytes: u64,
@@ -145,55 +345,116 @@ struct Admitting {
     req: Request,
     sid: SessionId,
     enqueued: Instant,
+    enq_tick: u64,
     /// Queue wait freezes when the request is popped for admission — the
-    /// chunks that follow are service time, not queueing.
+    /// chunks that follow are service time, not queueing. Suspension time
+    /// after a preemption is service time too (it still counts toward
+    /// TTFT, which measures from enqueue).
     queue_wait_s: f64,
+    queue_wait_ticks: u64,
+    preemptions: usize,
     progress: PrefillProgress,
+}
+
+/// A preempted admission, parked mid-prefill. Holds its KV slot (counts
+/// toward residency) and its [`SuspendedPrefill`] token; competes for
+/// re-admission through the same [`effective_priority`] as the queue,
+/// aged from its ORIGINAL submission tick.
+struct Parked {
+    req: Request,
+    sid: SessionId,
+    enqueued: Instant,
+    enq_tick: u64,
+    queue_wait_s: f64,
+    queue_wait_ticks: u64,
+    preemptions: usize,
+    suspended: SuspendedPrefill,
 }
 
 pub struct Scheduler<'a> {
     cluster: &'a Cluster,
     pub admission: AdmissionQueue,
+    /// The scheduling policy (classes, SLOs, aging, preemption). The
+    /// default degenerates to FIFO under single-class traffic.
+    pub policy: SchedPolicy,
     /// Residency bound: how many sessions may hold KV simultaneously
     /// (defaults to the config's `max_resident`, i.e. the KV-pool size —
     /// admitting more would be rejected by the hosts anyway). The
-    /// admitting session's slot counts.
+    /// admitting session's slot counts, and so does every parked
+    /// (suspended) session: preemption trades latency, not memory.
     pub max_resident: usize,
     active: Vec<ActiveSession>,
     admitting: Option<Admitting>,
+    /// Preempted admissions, parked mid-prefill (KV still resident).
+    parked: Vec<Parked>,
     next_sid: SessionId,
+    /// The scheduler clock: one tick per [`Scheduler::step`] call. Every
+    /// policy decision (aging, SLOs, preemption) reads this — never wall
+    /// time — so seeded traces replay identically across drivers.
+    tick: u64,
     /// High-water mark of simultaneously resident sessions (decoding +
-    /// admitting).
+    /// admitting + parked).
     pub peak_resident: usize,
+    /// Total preemptions performed (suspend events), across all requests.
+    pub preemptions_total: usize,
     pub completed: Vec<Response>,
 }
 
 impl<'a> Scheduler<'a> {
     pub fn new(cluster: &'a Cluster, max_queue: usize) -> Self {
+        Self::with_policy(cluster, max_queue, SchedPolicy::default())
+    }
+
+    /// A scheduler with an explicit [`SchedPolicy`].
+    pub fn with_policy(cluster: &'a Cluster, max_queue: usize, policy: SchedPolicy) -> Self {
+        assert!(policy.aging_ticks >= 1, "aging_ticks must be >= 1");
         Scheduler {
             cluster,
             admission: AdmissionQueue::new(max_queue),
+            policy,
             max_resident: cluster.cfg.apb.max_resident,
             active: Vec::new(),
             admitting: None,
+            parked: Vec::new(),
             next_sid: super::LEGACY_SESSION + 1,
+            tick: 0,
             peak_resident: 0,
+            preemptions_total: 0,
             completed: Vec::new(),
         }
     }
 
     pub fn submit(&mut self, req: Request) -> Result<()> {
-        self.admission.submit(req)
+        let tick = self.tick;
+        self.admission.submit(req, tick)
     }
 
     pub fn queued(&self) -> usize {
         self.admission.len()
     }
 
-    /// Sessions currently resident on the cluster (decoding + the one being
-    /// prefilled, which already holds its KV slot).
+    /// The scheduler clock (ticks elapsed = [`Scheduler::step`] calls).
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Jump the scheduler clock forward to `tick` (no-op when already
+    /// past). Trace replay uses this to model idle gaps between arrivals
+    /// without burning a `step` per empty tick; aging and SLO accounting
+    /// see the jump.
+    pub fn advance_to(&mut self, tick: u64) {
+        self.tick = self.tick.max(tick);
+    }
+
+    /// Sessions currently resident on the cluster: decoding + the one
+    /// being prefilled + parked preempted admissions (all hold KV slots).
     pub fn resident(&self) -> usize {
-        self.active.len() + usize::from(self.admitting.is_some())
+        self.active.len() + usize::from(self.admitting.is_some()) + self.parked.len()
+    }
+
+    /// Preempted admissions currently parked mid-prefill.
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
     }
 
     /// The admission in flight, if any: (request id, chunk steps driven,
@@ -212,37 +473,202 @@ impl<'a> Scheduler<'a> {
         self.active.iter().map(|s| (s.req_id, s.tokens.len())).collect()
     }
 
-    /// Advance admission by AT MOST one prefill chunk: pop the next queued
-    /// request into a free slot if no admission is in flight, then drive
-    /// one `PrefillChunk` step. When the plan finishes, run the query-chunk
-    /// pass (first token, TTFT) and move the session into the decode set.
-    /// Everything here is bounded by one chunk of work — the stall-free
-    /// invariant.
-    fn admit_step(&mut self) -> Result<()> {
-        if self.admitting.is_none() {
-            // The admitting session claims a KV slot on every host, so it
-            // must fit the residency bound alongside the decoding sessions.
-            if self.active.len() + 1 > self.max_resident {
-                return Ok(());
-            }
-            let Some((req, enqueued)) = self.admission.pop() else {
-                return Ok(());
-            };
-            let sid = self.next_sid;
-            self.next_sid += 1;
-            let queue_wait_s = enqueued.elapsed().as_secs_f64();
-            let progress =
-                self.cluster.prefill_begin(sid, &req.doc, &req.query, &req.opts)?;
-            self.admitting = Some(Admitting { req, sid, enqueued, queue_wait_s, progress });
-            self.peak_resident = self.peak_resident.max(self.active.len() + 1);
+    /// Effective priority of the in-flight admission at the current tick.
+    fn admitting_eff(&self) -> Option<i64> {
+        self.admitting.as_ref().map(|a| {
+            effective_priority(
+                a.req.class,
+                self.tick.saturating_sub(a.enq_tick),
+                self.policy.aging_ticks,
+            )
+        })
+    }
+
+    /// Index of the most urgent parked admission, with its priority.
+    fn best_parked(&self) -> Option<(usize, i64)> {
+        self.parked
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                (
+                    effective_priority(
+                        p.req.class,
+                        self.tick.saturating_sub(p.enq_tick),
+                        self.policy.aging_ticks,
+                    ),
+                    i,
+                )
+            })
+            .min()
+            .map(|(eff, i)| (i, eff))
+    }
+
+    /// Preemption check: when a STRICTLY more urgent request is queued and
+    /// the in-flight admission sits at a fabric-quiescent chunk boundary,
+    /// park it (releasing the prefill permit) so the urgent request can
+    /// admit this very tick. Aging makes this self-limiting: after one
+    /// preemption the parked request and its preemptor age at the same
+    /// rate, so their priority gap is constant and the parked one can
+    /// never be preempted by the same rival again; after waiting
+    /// `Class::ALL.len() * aging_ticks` its priority beats every possible
+    /// fresh arrival, so the strict rule goes permanently quiet for it.
+    fn maybe_preempt(&mut self) -> Result<()> {
+        if !self.policy.preempt {
+            return Ok(());
         }
+        let Some(admit_eff) = self.admitting_eff() else { return Ok(()) };
+        let Some(best_eff) = self.admission.peek_best_eff(self.tick, self.policy.aging_ticks)
+        else {
+            return Ok(());
+        };
+        if best_eff >= admit_eff {
+            return Ok(());
+        }
+        // Only preempt at a fabric-quiescent boundary: a non-quiescent
+        // suspend keeps the prefill permit captive, so the preemptor could
+        // not begin its own prefill anyway — parking would add latency and
+        // free nothing.
+        if !self.admitting.as_ref().expect("checked above").progress.fabric_quiescent() {
+            return Ok(());
+        }
+        // The preemptor needs a KV slot of its own next to the parked
+        // session's (suspension keeps KV resident); without room the swap
+        // would just stall admission entirely.
+        if self.active.len() + self.parked.len() + 2 > self.max_resident {
+            return Ok(());
+        }
+        let a = self.admitting.take().expect("checked above");
+        let suspended = self.cluster.prefill_suspend(a.progress)?;
+        self.preemptions_total += 1;
+        self.parked.push(Parked {
+            req: a.req,
+            sid: a.sid,
+            enqueued: a.enqueued,
+            enq_tick: a.enq_tick,
+            queue_wait_s: a.queue_wait_s,
+            queue_wait_ticks: a.queue_wait_ticks,
+            preemptions: a.preemptions + 1,
+            suspended,
+        });
+        Ok(())
+    }
+
+    /// Fill the admission seat when empty: resume the most urgent parked
+    /// admission or begin the most urgent queued request, whichever
+    /// presents the lower effective priority (ties prefer the parked one —
+    /// it was submitted no later, holds KV already, and may hold a captive
+    /// permit that blocks fresh prefills).
+    fn seat_next(&mut self) -> Result<()> {
+        if self.admitting.is_some() {
+            return Ok(());
+        }
+        let parked_best = self.best_parked();
+        // A non-quiescent suspend keeps the prefill permit captive: no new
+        // prefill can begin until that one resumes, so it overrides the
+        // priority comparison.
+        let captive = self.parked.iter().position(|p| p.suspended.holds_permit());
+        let queued_best = self.admission.peek_best_eff(self.tick, self.policy.aging_ticks);
+        let resume_idx = match (captive, parked_best, queued_best) {
+            (Some(i), _, _) => Some(i),
+            (None, Some((i, pe)), Some(qe)) if pe <= qe => Some(i),
+            (None, Some((i, _)), None) => Some(i),
+            _ => None,
+        };
+        if let Some(i) = resume_idx {
+            let Parked {
+                req,
+                sid,
+                enqueued,
+                enq_tick,
+                queue_wait_s,
+                queue_wait_ticks,
+                preemptions,
+                suspended,
+            } = self.parked.remove(i);
+            match self.cluster.prefill_resume(suspended) {
+                Ok(progress) => {
+                    self.admitting = Some(Admitting {
+                        req,
+                        sid,
+                        enqueued,
+                        enq_tick,
+                        queue_wait_s,
+                        queue_wait_ticks,
+                        preemptions,
+                        progress,
+                    });
+                }
+                Err(suspended) => {
+                    // The prefill slot is held elsewhere (legacy caller
+                    // outside the scheduler). Re-park and retry next tick.
+                    self.parked.push(Parked {
+                        req,
+                        sid,
+                        enqueued,
+                        enq_tick,
+                        queue_wait_s,
+                        queue_wait_ticks,
+                        preemptions,
+                        suspended,
+                    });
+                }
+            }
+            return Ok(());
+        }
+        // The admitting session claims a KV slot on every host, so it must
+        // fit the residency bound alongside decoders and parked sessions.
+        if self.active.len() + self.parked.len() + 1 > self.max_resident {
+            return Ok(());
+        }
+        let Some((req, enqueued, enq_tick)) =
+            self.admission.pop_best(self.tick, self.policy.aging_ticks)
+        else {
+            return Ok(());
+        };
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        let queue_wait_s = enqueued.elapsed().as_secs_f64();
+        let queue_wait_ticks = self.tick.saturating_sub(enq_tick);
+        let progress = self.cluster.prefill_begin(sid, &req.doc, &req.query, &req.opts)?;
+        self.admitting = Some(Admitting {
+            req,
+            sid,
+            enqueued,
+            enq_tick,
+            queue_wait_s,
+            queue_wait_ticks,
+            preemptions: 0,
+            progress,
+        });
+        Ok(())
+    }
+
+    /// Advance admission by AT MOST one prefill chunk: apply the
+    /// preemption rule, seat the most urgent waiting request if the seat
+    /// is free, then drive one `PrefillChunk` step. When the plan
+    /// finishes, run the query-chunk pass (first token, TTFT) and move the
+    /// session into the decode set. Everything here is bounded by one
+    /// chunk of work — the stall-free invariant.
+    fn admit_step(&mut self) -> Result<()> {
+        self.maybe_preempt()?;
+        self.seat_next()?;
+        self.peak_resident = self.peak_resident.max(self.resident());
         let Some(a) = self.admitting.as_mut() else { return Ok(()) };
         let cluster = self.cluster;
         let Some(prefill) = cluster.prefill_step(&mut a.progress)? else {
             return Ok(()); // more chunks to go; decode ticks run in between
         };
-        let Admitting { req, sid, enqueued, queue_wait_s, progress } =
-            self.admitting.take().expect("admitting session vanished");
+        let a = self.admitting.take().expect("admitting session vanished");
+        let Admitting {
+            req,
+            sid,
+            enqueued,
+            enq_tick,
+            queue_wait_s,
+            queue_wait_ticks,
+            preemptions,
+            progress,
+        } = a;
         let prefill_chunks = progress.n_steps();
         let gen_started = Instant::now();
         let chunk = cluster.decode_query_chunk(sid, &req.query)?;
@@ -258,17 +684,22 @@ impl<'a> Scheduler<'a> {
             sid,
             method: req.opts.method,
             req_id: req.id,
+            class: req.class,
             enqueued,
+            enq_tick,
             queue_wait_s,
+            queue_wait_ticks,
             prefill,
             prefill_chunks,
+            preemptions,
             max_new: req.max_new,
             n_in: req.doc.len() + req.query.len(),
             tokens,
-            // TTFT's definition is UNCHANGED by chunking: submission →
-            // first query-chunk logit (it now naturally includes the decode
-            // ticks interleaved between this request's prefill chunks).
+            // TTFT per THE definition (see `Response::ttft_s`): measured
+            // from enqueue, so it spans queue wait, every chunk, the
+            // interleaved decode ticks AND any preemption-parked span.
             ttft_s: enqueued.elapsed().as_secs_f64(),
+            ttft_ticks: self.tick.saturating_sub(enq_tick),
             gen_started,
             step_seconds: Vec::new(),
             decode_comm_bytes: chunk.comm_bytes,
@@ -332,6 +763,10 @@ impl<'a> Scheduler<'a> {
             self.cluster.clear_session(s.sid)?;
             let gen_wall_s = s.gen_started.elapsed().as_secs_f64();
             let e2e_s = s.enqueued.elapsed().as_secs_f64() - s.queue_wait_s;
+            let e2e_ticks = self
+                .tick
+                .saturating_sub(s.enq_tick)
+                .saturating_sub(s.queue_wait_ticks);
             let n_out = s.tokens.len();
             let speed = (s.n_in + n_out) as f64
                 / (s.prefill.wall_seconds + gen_wall_s).max(f64::MIN_POSITIVE);
@@ -342,6 +777,7 @@ impl<'a> Scheduler<'a> {
             };
             self.completed.push(Response {
                 id: s.req_id,
+                class: s.class,
                 tokens: s.tokens,
                 queue_wait_s: s.queue_wait_s,
                 prefill: s.prefill,
@@ -349,6 +785,10 @@ impl<'a> Scheduler<'a> {
                 e2e_s,
                 speed_tok_per_s: speed,
                 ttft_s: s.ttft_s,
+                ttft_ticks: s.ttft_ticks,
+                e2e_ticks,
+                queue_wait_ticks: s.queue_wait_ticks,
+                preemptions: s.preemptions,
                 tpot_s,
                 decode_comm_bytes: s.decode_comm_bytes,
                 prefill_chunks: s.prefill_chunks,
@@ -357,19 +797,24 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
-    /// One scheduling tick: advance admission by AT MOST one prefill chunk,
-    /// then advance every active session one token, then retire finished
-    /// sessions — so a newly admitted long request can never freeze
-    /// resident decoders for more than one chunk of work. Returns false
-    /// when fully idle (nothing queued, nothing admitting, nothing
-    /// resident).
+    /// One scheduling tick: advance the clock, apply preemption/seating,
+    /// advance admission by AT MOST one prefill chunk, then advance every
+    /// active session one token, then retire finished sessions — so a
+    /// newly admitted long request can never freeze resident decoders for
+    /// more than one chunk of work. Returns false when fully idle (nothing
+    /// queued, nothing admitting, nothing parked, nothing resident).
     pub fn step(&mut self) -> Result<bool> {
         if self.max_resident == 0 {
             bail!("max_resident must be >= 1 (nothing could ever be admitted)");
         }
-        if self.admission.is_empty() && self.active.is_empty() && self.admitting.is_none() {
+        if self.admission.is_empty()
+            && self.active.is_empty()
+            && self.admitting.is_none()
+            && self.parked.is_empty()
+        {
             return Ok(false);
         }
+        self.tick += 1;
         self.admit_step()?;
         self.decode_tick()?;
         self.retire()?;
@@ -384,10 +829,94 @@ impl<'a> Scheduler<'a> {
     }
 
     pub fn metrics(&self) -> ServingMetrics {
-        let mut m = ServingMetrics::from_responses(&self.completed);
+        let mut m = ServingMetrics::with_policy(&self.completed, &self.policy);
         m.peak_resident = self.peak_resident;
+        m.preemptions_total = self.preemptions_total;
         m
     }
+
+    /// Timing-free digest of a finished run for cross-driver replay
+    /// equality: everything here is deterministic given the same trace —
+    /// token values, tick-based latencies, modeled comm bytes, policy
+    /// tallies — while wall-clock fields (`*_s`) are excluded. Shared by
+    /// `rust/tests/driver_parity.rs` and `rust/tests/slo_scheduling.rs`.
+    pub fn replay_fingerprint(&self) -> ReplayFingerprint {
+        let mut per_request: Vec<RequestFingerprint> = self
+            .completed
+            .iter()
+            .map(|r| RequestFingerprint {
+                id: r.id,
+                class: r.class,
+                tokens: r.tokens.clone(),
+                prefill_comm_bytes: r.prefill.comm_bytes,
+                prefill_chunks: r.prefill_chunks,
+                prefix_hit: r.prefill.prefix_hit,
+                ttft_ticks: r.ttft_ticks,
+                e2e_ticks: r.e2e_ticks,
+                queue_wait_ticks: r.queue_wait_ticks,
+                preemptions: r.preemptions,
+                decode_comm_bytes: r.decode_comm_bytes,
+            })
+            .collect();
+        per_request.sort_by_key(|r| r.id);
+        ReplayFingerprint {
+            n_requests: self.completed.len(),
+            total_tokens: self.completed.iter().map(|r| r.tokens.len()).sum(),
+            final_tick: self.tick,
+            peak_resident: self.peak_resident,
+            preemptions_total: self.preemptions_total,
+            per_request,
+        }
+    }
+}
+
+/// Per-completed-request digest inside [`ReplayFingerprint`] — only
+/// driver-deterministic fields (tokens, ticks, modeled comm bytes), no
+/// wall clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestFingerprint {
+    pub id: u64,
+    pub class: Class,
+    pub tokens: Vec<i32>,
+    pub prefill_comm_bytes: u64,
+    pub prefill_chunks: usize,
+    pub prefix_hit: bool,
+    pub ttft_ticks: u64,
+    pub e2e_ticks: u64,
+    pub queue_wait_ticks: u64,
+    pub preemptions: usize,
+    pub decode_comm_bytes: u64,
+}
+
+/// Normalized, timing-free run digest (see
+/// [`Scheduler::replay_fingerprint`]): two runs of the same seeded trace
+/// must compare equal under BOTH drivers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplayFingerprint {
+    pub n_requests: usize,
+    pub total_tokens: usize,
+    pub final_tick: u64,
+    pub peak_resident: usize,
+    pub preemptions_total: usize,
+    pub per_request: Vec<RequestFingerprint>,
+}
+
+/// Per-class slice of [`ServingMetrics`]: latency spread and goodput for
+/// one [`Class`] (absent classes are skipped, not zero-filled).
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub class: Class,
+    pub n_requests: usize,
+    /// TTFT in scheduler ticks over this class's completed requests.
+    pub ttft_ticks: Summary,
+    /// Requests whose `ttft_ticks` met the class TTFT SLO
+    /// ([`SchedPolicy::slo_ttft_ticks`]).
+    pub slo_met: usize,
+    /// Output tokens produced by SLO-meeting requests — "goodput" counts
+    /// only work delivered within the latency contract.
+    pub goodput_tokens: usize,
+    /// Fraction of this class's requests that met their SLO.
+    pub slo_fraction: f64,
 }
 
 /// Aggregate serving metrics over completed requests.
@@ -399,7 +928,10 @@ pub struct ServingMetrics {
     pub decode: Summary,
     pub queue_wait: Summary,
     pub speed_tok_per_s: Summary,
+    /// TTFT (seconds) — definition on [`Response::ttft_s`].
     pub ttft: Summary,
+    /// TTFT in scheduler ticks — the deterministic twin of `ttft`.
+    pub ttft_ticks: Summary,
     pub tpot: Summary,
     /// Resumable-prefill steps driven per request: the chunked-admission
     /// fairness observable (1 step per layer phase minimum; grows as
@@ -410,6 +942,15 @@ pub struct ServingMetrics {
     /// High-water mark of sessions resident at once (0 when built from
     /// bare responses).
     pub peak_resident: usize,
+    /// Per-class latency + goodput, in [`Class::ALL`] order, classes with
+    /// no completed requests omitted.
+    pub per_class: Vec<ClassStats>,
+    /// Completed requests whose `ttft_ticks` blew the policy's
+    /// starvation budget — the serving-invariant suite and the CI smoke
+    /// trace pin this to 0.
+    pub starved: usize,
+    /// Total preemption (suspend) events across the run.
+    pub preemptions_total: usize,
     /// Requests whose prefill attached to a cached shared prefix instead
     /// of recomputing (`docs/ADR-003-prefix-caching.md`); 0 unless the
     /// cluster runs with `ApbParams::prefix_cache`.
@@ -427,7 +968,14 @@ pub struct ServingMetrics {
 }
 
 impl ServingMetrics {
+    /// Metrics under the default [`SchedPolicy`] (per-class SLOs at their
+    /// default budgets).
     pub fn from_responses(rs: &[Response]) -> ServingMetrics {
+        Self::with_policy(rs, &SchedPolicy::default())
+    }
+
+    /// Metrics with SLO/goodput accounting under an explicit policy.
+    pub fn with_policy(rs: &[Response], policy: &SchedPolicy) -> ServingMetrics {
         assert!(!rs.is_empty(), "no completed responses");
         let col = |f: &dyn Fn(&Response) -> f64| -> Summary {
             summarize(&rs.iter().map(f).collect::<Vec<_>>())
@@ -440,6 +988,28 @@ impl ServingMetrics {
                 .collect();
             (!samples.is_empty()).then(|| summarize(&samples))
         };
+        let per_class = Class::ALL
+            .iter()
+            .filter_map(|&class| {
+                let of: Vec<&Response> = rs.iter().filter(|r| r.class == class).collect();
+                if of.is_empty() {
+                    return None;
+                }
+                let slo = policy.slo_ttft_ticks[class.index()];
+                let met: Vec<&&Response> =
+                    of.iter().filter(|r| r.ttft_ticks <= slo).collect();
+                Some(ClassStats {
+                    class,
+                    n_requests: of.len(),
+                    ttft_ticks: summarize(
+                        &of.iter().map(|r| r.ttft_ticks as f64).collect::<Vec<_>>(),
+                    ),
+                    slo_met: met.len(),
+                    goodput_tokens: met.iter().map(|r| r.tokens.len()).sum(),
+                    slo_fraction: met.len() as f64 / of.len() as f64,
+                })
+            })
+            .collect();
         ServingMetrics {
             n_requests: rs.len(),
             e2e: col(&|r| r.e2e_s),
@@ -448,11 +1018,18 @@ impl ServingMetrics {
             queue_wait: col(&|r| r.queue_wait_s),
             speed_tok_per_s: col(&|r| r.speed_tok_per_s),
             ttft: col(&|r| r.ttft_s),
+            ttft_ticks: col(&|r| r.ttft_ticks as f64),
             tpot: col(&|r| r.tpot_s),
             prefill_chunks: col(&|r| r.prefill_chunks as f64),
             total_tokens: rs.iter().map(|r| r.tokens.len()).sum(),
             decode_comm_bytes: rs.iter().map(|r| r.decode_comm_bytes).sum(),
             peak_resident: 0,
+            per_class,
+            starved: rs
+                .iter()
+                .filter(|r| r.ttft_ticks > policy.starvation_budget_ticks)
+                .count(),
+            preemptions_total: rs.iter().map(|r| r.preemptions).sum(),
             prefix_hits: rs.iter().filter(|r| r.prefill.prefix_hit).count(),
             prefix_bytes_saved: rs.iter().map(|r| r.prefill.prefix_bytes_saved).sum(),
             ttft_cold: ttft_of(false),
@@ -466,12 +1043,17 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
+        classed(id, Class::Standard)
+    }
+
+    fn classed(id: u64, class: Class) -> Request {
         Request {
             id,
             doc: vec![0; 8],
             query: vec![0; 2],
             max_new: 1,
             opts: ApbOptions::default(),
+            class,
         }
     }
 
@@ -482,7 +1064,7 @@ mod tests {
         let mut q = AdmissionQueue::new(3);
         let mut rejected = 0;
         for i in 0..10 {
-            match q.submit(req(i)) {
+            match q.submit(req(i), 0) {
                 Ok(()) => {}
                 Err(e) => {
                     assert!(format!("{e:#}").contains("backpressure"));
@@ -492,13 +1074,64 @@ mod tests {
         }
         assert_eq!(q.len(), 3);
         assert_eq!(rejected, 7);
-        // FIFO pop order, and popping reopens admission.
-        let (first, _) = q.pop().unwrap();
+        // Single-class pop_best IS FIFO, and popping reopens admission.
+        let aging = SchedPolicy::default().aging_ticks;
+        let (first, _, _) = q.pop_best(0, aging).unwrap();
         assert_eq!(first.id, 0);
-        q.submit(req(10)).unwrap();
-        assert!(q.submit(req(11)).is_err());
-        let ids: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(r, _)| r.id)).collect();
+        q.submit(req(10), 0).unwrap();
+        assert!(q.submit(req(11), 0).is_err());
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| q.pop_best(0, aging).map(|(r, _, _)| r.id)).collect();
         assert_eq!(ids, vec![1, 2, 10]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn classes_order_admission_and_aging_promotes() {
+        let aging = 8;
+        let mut q = AdmissionQueue::new(16);
+        q.submit(classed(0, Class::Batch), 0).unwrap();
+        q.submit(classed(1, Class::Interactive), 5).unwrap();
+        // At tick 5: batch has waited 5 (eff 2*8-5=11), fresh interactive
+        // eff 0 — interactive admits first despite arriving later.
+        assert_eq!(q.peek_best_eff(5, aging), Some(0));
+        let (r, _, _) = q.pop_best(5, aging).unwrap();
+        assert_eq!(r.id, 1);
+        // Much later the aged batch request beats a fresh interactive: at
+        // tick 0+2*aging its eff is 0, strictly below any later arrival.
+        q.submit(classed(2, Class::Interactive), 17).unwrap();
+        let (r, _, _) = q.pop_best(17, aging).unwrap();
+        assert_eq!(r.id, 0, "aged batch request outranks fresh interactive");
+    }
+
+    #[test]
+    fn effective_priority_is_fifo_within_class_and_bounded() {
+        let aging = 32;
+        for class in Class::ALL {
+            // Within one class: strictly FIFO (earlier ⇒ lower value).
+            assert!(
+                effective_priority(class, 10, aging) < effective_priority(class, 3, aging)
+            );
+            // Starvation bound: after ALL.len()*aging ticks of waiting, no
+            // fresh arrival of any class presents a lower value.
+            let aged = effective_priority(class, Class::ALL.len() as u64 * aging, aging);
+            for rival in Class::ALL {
+                assert!(aged <= effective_priority(rival, 0, aging));
+            }
+        }
+    }
+
+    #[test]
+    fn default_policy_is_fifo_compatible() {
+        // All-Standard traffic under the default policy: pop order is
+        // exactly arrival order regardless of probe tick.
+        let mut q = AdmissionQueue::new(8);
+        for i in 0..5 {
+            q.submit(req(i), i * 3).unwrap();
+        }
+        let aging = SchedPolicy::default().aging_ticks;
+        let ids: Vec<u64> =
+            std::iter::from_fn(|| q.pop_best(100, aging).map(|(r, _, _)| r.id)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 }

@@ -61,6 +61,7 @@ pub mod report;
 pub mod ruler;
 pub mod runtime;
 pub mod util;
+pub mod workload;
 
 use std::path::PathBuf;
 

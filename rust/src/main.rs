@@ -16,6 +16,8 @@ use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, Driver};
+use apb::util::json::{self, Json};
+use apb::workload::{self, TraceSpec};
 use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
 use apb::ruler::tasks::{infbench_tasks, ruler_tasks, ModelCol};
 use apb::ruler::{gen_instance, TaskKind};
@@ -33,6 +35,11 @@ const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
            interleaving) --prefix-cache (shared-prefix KV reuse: requests
            over one corpus skip repeat prefills) --smoke (CI gate: assert
            stall-free serving; with --prefix-cache also warm < cold TTFT)
+           --trace smoke|adversarial|poisson|bursty (drive a seeded
+           workload trace through the SLO scheduler: priority classes,
+           aging, preemption; prints p50/p95/p99 TTFT/TPOT + per-class
+           goodput and writes BENCH_serving.json)
+           --trace-seed N (reseed the trace generator)
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
@@ -146,6 +153,9 @@ fn serve(args: &Args) -> Result<()> {
     // on ApbOptions::chunk_tokens).
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
     let cluster = Cluster::start_with(&cfg, driver_from(args)?)?;
+    if args.get("trace").is_some() {
+        return serve_trace(args, &cfg, &cluster);
+    }
     let mut sched = Scheduler::new(&cluster, args.usize_or("queue", 64)?);
     let n = args.usize_or("requests", 4)?;
     let max_new = args.usize_or("max-new", 4)?;
@@ -164,6 +174,7 @@ fn serve(args: &Args) -> Result<()> {
                 query: inst.query.clone(),
                 max_new,
                 opts: ApbOptions { method, ..Default::default() },
+                class: Default::default(),
             })?;
             sched.run_all()?;
         }
@@ -176,6 +187,7 @@ fn serve(args: &Args) -> Result<()> {
                 query: inst.query,
                 max_new,
                 opts: ApbOptions { method, ..Default::default() },
+                class: Default::default(),
             })?;
         }
         sched.run_all()?;
@@ -234,6 +246,117 @@ fn serve(args: &Args) -> Result<()> {
         println!("apb serve --smoke OK (chunk_tokens {}, prefix cache {}, driver {})",
                  cfg.apb.chunk_tokens, if prefix_cache { "on" } else { "off" },
                  cluster.driver().name());
+    }
+    Ok(())
+}
+
+/// `apb serve --trace <spec>`: expand a named workload spec into a seeded
+/// trace, drive it through the SLO scheduler on this cluster, report
+/// percentile latency + per-class goodput, and write the schema-versioned
+/// `BENCH_serving.json` record (the serving twin of `BENCH_runtime.json`;
+/// regenerated + field-validated on CI's threaded leg).
+fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Result<()> {
+    let name = args.str_or("trace", "smoke");
+    let mut spec = TraceSpec::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--trace={name} is not a trace spec (expected one of {:?})",
+            TraceSpec::NAMES
+        )
+    })?;
+    if let Some(seed) = args.get("trace-seed") {
+        spec.seed = seed.parse().map_err(|_| anyhow::anyhow!("--trace-seed={seed} not a u64"))?;
+    }
+    if args.get("requests").is_some() {
+        spec.n_requests = args.usize_or("requests", spec.n_requests)?;
+    }
+    let trace = workload::generate(cfg, &spec)?;
+    let mut sched = Scheduler::new(cluster, args.usize_or("queue", 64)?);
+    let done = workload::run_trace(&mut sched, &trace)?;
+    let m = sched.metrics();
+    println!(
+        "trace '{}' (seed {}): {} requests ({} block-scale) over {} ticks | driver {}",
+        spec.name, spec.seed, done, trace.n_long(), sched.tick(), cluster.driver().name()
+    );
+    println!(
+        "ttft ticks p50/p95/p99 {:.0}/{:.0}/{:.0} | ttft ms p50/p95/p99 \
+         {:.1}/{:.1}/{:.1} | tpot ms p50/p95/p99 {:.2}/{:.2}/{:.2}",
+        m.ttft_ticks.p50, m.ttft_ticks.p95, m.ttft_ticks.p99,
+        m.ttft.p50 * 1e3, m.ttft.p95 * 1e3, m.ttft.p99 * 1e3,
+        m.tpot.p50 * 1e3, m.tpot.p95 * 1e3, m.tpot.p99 * 1e3,
+    );
+    println!(
+        "peak resident {} | preemptions {} | starved {} | prefix hits {}",
+        m.peak_resident, m.preemptions_total, m.starved, m.prefix_hits
+    );
+    let mut class_rows: Vec<Json> = Vec::new();
+    for c in &m.per_class {
+        println!(
+            "  class {:<11} n {:>2} | slo met {}/{} ({:.0}%) | goodput {} tok | \
+             ttft ticks p50/p99 {:.0}/{:.0}",
+            c.class.name(), c.n_requests, c.slo_met, c.n_requests,
+            c.slo_fraction * 100.0, c.goodput_tokens, c.ttft_ticks.p50, c.ttft_ticks.p99
+        );
+        class_rows.push(json::obj(vec![
+            ("class", json::s(c.class.name())),
+            ("n_requests", json::num(c.n_requests as f64)),
+            ("slo_met", json::num(c.slo_met as f64)),
+            ("slo_fraction", json::num(c.slo_fraction)),
+            ("goodput_tokens", json::num(c.goodput_tokens as f64)),
+            ("ttft_ticks_p50", json::num(c.ttft_ticks.p50)),
+            ("ttft_ticks_p95", json::num(c.ttft_ticks.p95)),
+            ("ttft_ticks_p99", json::num(c.ttft_ticks.p99)),
+        ]));
+    }
+    // `schema_version` gates the CI validator: bump it when fields change.
+    let bench = json::obj(vec![
+        ("bench", json::s("serving_trace")),
+        ("schema_version", json::num(1.0)),
+        ("config", json::s(&cfg.name)),
+        ("driver", json::s(cluster.driver().name())),
+        ("smoke", Json::Bool(args.has("smoke"))),
+        ("trace", json::s(spec.name)),
+        ("trace_seed", json::num(spec.seed as f64)),
+        ("prefix_cache", Json::Bool(cfg.apb.prefix_cache)),
+        ("n_requests", json::num(m.n_requests as f64)),
+        ("n_long", json::num(trace.n_long() as f64)),
+        ("final_tick", json::num(sched.tick() as f64)),
+        ("total_tokens", json::num(m.total_tokens as f64)),
+        ("peak_resident", json::num(m.peak_resident as f64)),
+        ("preemptions", json::num(m.preemptions_total as f64)),
+        ("starved", json::num(m.starved as f64)),
+        ("prefix_hits", json::num(m.prefix_hits as f64)),
+        ("prefix_bytes_saved", json::num(m.prefix_bytes_saved as f64)),
+        ("ttft_ticks_p50", json::num(m.ttft_ticks.p50)),
+        ("ttft_ticks_p95", json::num(m.ttft_ticks.p95)),
+        ("ttft_ticks_p99", json::num(m.ttft_ticks.p99)),
+        ("ttft_ms_p50", json::num(m.ttft.p50 * 1e3)),
+        ("ttft_ms_p95", json::num(m.ttft.p95 * 1e3)),
+        ("ttft_ms_p99", json::num(m.ttft.p99 * 1e3)),
+        ("tpot_ms_p50", json::num(m.tpot.p50 * 1e3)),
+        ("tpot_ms_p95", json::num(m.tpot.p95 * 1e3)),
+        ("tpot_ms_p99", json::num(m.tpot.p99 * 1e3)),
+        ("per_class", Json::Arr(class_rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", bench.pretty())?;
+    println!("[bench json] BENCH_serving.json");
+    if args.has("smoke") {
+        // CI gate for SLO scheduling: the whole trace completes, nothing
+        // starves (every short request reached its first token within the
+        // policy budget even with a block-scale prefill in flight), and
+        // every request went through chunked admission.
+        anyhow::ensure!(done == spec.n_requests,
+                        "smoke: {done} of {} trace requests completed", spec.n_requests);
+        anyhow::ensure!(m.starved == 0, "smoke: {} requests starved", m.starved);
+        anyhow::ensure!(m.prefill_chunks.min >= 1.0,
+                        "smoke: a request bypassed chunked admission");
+        anyhow::ensure!(trace.n_long() >= 1,
+                        "smoke: trace generated no block-scale request");
+        if cfg.apb.prefix_cache {
+            anyhow::ensure!(m.prefix_hits >= 1,
+                            "smoke: corpus-sharing trace produced no prefix hits");
+        }
+        println!("apb serve --trace {} --smoke OK (driver {})",
+                 spec.name, cluster.driver().name());
     }
     Ok(())
 }

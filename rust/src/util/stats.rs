@@ -9,6 +9,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -28,6 +29,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         min: sorted[0],
         p50: percentile(&sorted, 0.50),
         p90: percentile(&sorted, 0.90),
+        p95: percentile(&sorted, 0.95),
         p99: percentile(&sorted, 0.99),
         max: sorted[n - 1],
     }
@@ -96,8 +98,17 @@ mod tests {
     #[test]
     fn single_sample() {
         let s = summarize(&[7.0]);
+        assert_eq!(s.p95, 7.0);
         assert_eq!(s.p99, 7.0);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let samples: Vec<f64> = (0..100).map(|i| (i * 37 % 100) as f64).collect();
+        let s = summarize(&samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

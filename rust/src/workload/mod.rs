@@ -1,0 +1,423 @@
+//! Synthetic serving workloads: deterministic, seeded request traces for
+//! the SLO scheduler (`docs/ADR-006-slo-scheduling.md`).
+//!
+//! A [`TraceSpec`] describes traffic statistically — arrival process
+//! ([`Arrival::Poisson`] or [`Arrival::Bursty`]), a heavy-tailed length
+//! mix ([`LengthMix`]) blending short interactive requests with
+//! block-scale long-context ones, a shared-corpus prefix-hit rate riding
+//! the PR 5 prefix store, and per-class weights — and
+//! [`generate`] expands it into a concrete [`Trace`]: a tick-stamped,
+//! fully materialized request list. Everything downstream of the seed is
+//! deterministic (xoshiro256** from [`crate::util::rng`], no wall clock),
+//! so the same spec replays bit-identically under both cluster drivers —
+//! the property `rust/tests/slo_scheduling.rs` and `driver_parity.rs`
+//! pin via [`crate::coordinator::scheduler::ReplayFingerprint`].
+//!
+//! ## What "long" means here
+//!
+//! The sim config fixes the document and query geometry (`doc_len =
+//! n_hosts * block_len`), so a trace cannot vary *token counts* per
+//! request. Service-time heterogeneity — the thing that actually starves
+//! FIFO queues — is modeled on the two axes the stack does expose per
+//! request: the resumable-prefill granularity (`ApbOptions::chunk_tokens`,
+//! where `Some(1)` turns one admission into a block-scale many-step
+//! prefill occupying the admission seat for ~`L*(3*C+2)` scheduler ticks)
+//! and the decode budget (`max_new`). A "long" request is therefore a
+//! many-chunk, many-token [`Class::Batch`] request; a "short" one admits
+//! in few chunks and decodes briefly.
+//!
+//! ## Prefix sharing
+//!
+//! The prefix-store digest covers the ENTIRE (config, doc, query, opts)
+//! tuple, so hit-intended requests must reuse a corpus entry wholesale:
+//! the trace pre-generates `corpus_size` (doc, query) pairs and each
+//! short request either draws a fresh pair (miss) or replays a corpus
+//! pair (hit after its first cold use) with identical options. Long
+//! requests always draw fresh documents — block-scale contexts are
+//! assumed unique.
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::scheduler::{Class, Request, Scheduler};
+use crate::util::rng::Rng;
+
+/// Arrival process for a trace, in scheduler ticks.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson process: i.i.d. exponential gaps with the given mean (in
+    /// ticks) between consecutive arrivals.
+    Poisson { mean_gap_ticks: f64 },
+    /// Bursty: `burst` requests arrive back-to-back on one tick, then the
+    /// line goes quiet for `gap_ticks` ticks.
+    Bursty { burst: usize, gap_ticks: u64 },
+}
+
+/// Heavy-tailed service-length mix (see the module docs for why length
+/// here means chunk count + decode budget, not token count).
+#[derive(Debug, Clone)]
+pub struct LengthMix {
+    /// Probability a request is long (block-scale prefill, Batch class).
+    pub long_fraction: f64,
+    /// `ApbOptions::chunk_tokens` override for long requests (small value
+    /// ⇒ many resumable-prefill steps per admission).
+    pub long_chunk_tokens: usize,
+    /// Inclusive `max_new` range for short requests.
+    pub short_max_new: (usize, usize),
+    /// Inclusive `max_new` range for long requests.
+    pub long_max_new: (usize, usize),
+}
+
+/// A statistical description of serving traffic; [`generate`] expands it
+/// deterministically into a [`Trace`].
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Spec name (CLI `--trace <name>`, `BENCH_serving.json`).
+    pub name: &'static str,
+    pub seed: u64,
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    pub mix: LengthMix,
+    /// Probability a SHORT request replays a shared-corpus (doc, query)
+    /// pair instead of drawing fresh tokens. With the prefix store
+    /// enabled, every replay after the pair's first (cold) use is a hit.
+    pub prefix_hit_rate: f64,
+    /// How many distinct (doc, query) pairs the shared corpus holds.
+    pub corpus_size: usize,
+    /// Class weights for short requests, indexed by [`Class::index`]
+    /// (long requests are always [`Class::Batch`]).
+    pub class_weights: [f64; 3],
+}
+
+impl TraceSpec {
+    /// Look up a named spec (`smoke`, `adversarial`, `poisson`,
+    /// `bursty`). Returns `None` for unknown names; callers list
+    /// [`TraceSpec::NAMES`] in their usage text.
+    pub fn by_name(name: &str) -> Option<TraceSpec> {
+        match name {
+            // CI-sized: a handful of shorts around one block-scale long,
+            // with corpus sharing — small enough for the smoke gate,
+            // adversarial enough that FIFO would starve the shorts.
+            "smoke" => Some(TraceSpec {
+                name: "smoke",
+                seed: 0xAB5E,
+                n_requests: 8,
+                arrival: Arrival::Poisson { mean_gap_ticks: 2.0 },
+                mix: LengthMix {
+                    long_fraction: 0.2,
+                    long_chunk_tokens: 1,
+                    short_max_new: (2, 4),
+                    long_max_new: (4, 8),
+                },
+                prefix_hit_rate: 0.5,
+                corpus_size: 2,
+                class_weights: [0.5, 0.5, 0.0],
+            }),
+            // The starvation-freedom stressor: longs front-loaded in
+            // bursts so every short request arrives BEHIND a block-scale
+            // prefill — the head-of-line case Medha calls out.
+            "adversarial" => Some(TraceSpec {
+                name: "adversarial",
+                seed: 0xBAD_F00D,
+                n_requests: 12,
+                arrival: Arrival::Bursty { burst: 4, gap_ticks: 16 },
+                mix: LengthMix {
+                    long_fraction: 0.34,
+                    long_chunk_tokens: 1,
+                    short_max_new: (1, 3),
+                    long_max_new: (6, 10),
+                },
+                prefix_hit_rate: 0.25,
+                corpus_size: 2,
+                class_weights: [0.6, 0.4, 0.0],
+            }),
+            // Steady open-loop traffic, mostly short, occasional long.
+            "poisson" => Some(TraceSpec {
+                name: "poisson",
+                seed: 0x9035_07,
+                n_requests: 16,
+                arrival: Arrival::Poisson { mean_gap_ticks: 4.0 },
+                mix: LengthMix {
+                    long_fraction: 0.125,
+                    long_chunk_tokens: 2,
+                    short_max_new: (2, 5),
+                    long_max_new: (6, 12),
+                },
+                prefix_hit_rate: 0.4,
+                corpus_size: 3,
+                class_weights: [0.4, 0.5, 0.1],
+            }),
+            // Closed bursts with idle valleys — exercises advance_to's
+            // clock jumps and queue drain between bursts.
+            "bursty" => Some(TraceSpec {
+                name: "bursty",
+                seed: 0xB0257,
+                n_requests: 12,
+                arrival: Arrival::Bursty { burst: 3, gap_ticks: 32 },
+                mix: LengthMix {
+                    long_fraction: 0.25,
+                    long_chunk_tokens: 2,
+                    short_max_new: (1, 4),
+                    long_max_new: (4, 8),
+                },
+                prefix_hit_rate: 0.3,
+                corpus_size: 2,
+                class_weights: [0.3, 0.5, 0.2],
+            }),
+            _ => None,
+        }
+    }
+
+    /// The named specs [`TraceSpec::by_name`] accepts.
+    pub const NAMES: [&'static str; 4] = ["smoke", "adversarial", "poisson", "bursty"];
+}
+
+/// One trace entry: the fully built request and the scheduler tick it
+/// arrives on.
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    pub at_tick: u64,
+    pub req: Request,
+    /// Whether this request replays a shared-corpus pair (every replay
+    /// after the pair's first use hits the prefix store when enabled).
+    pub shares_corpus: bool,
+}
+
+/// A materialized workload: tick-stamped requests in arrival order.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub spec: TraceSpec,
+    pub arrivals: Vec<TracedRequest>,
+}
+
+impl Trace {
+    /// Requests flagged long (block-scale chunking) by the generator.
+    pub fn n_long(&self) -> usize {
+        self.arrivals
+            .iter()
+            .filter(|a| a.req.opts.chunk_tokens.is_some())
+            .count()
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    // Avoid token 0 so traces never collide with the all-zero docs some
+    // unit tests use as sentinels.
+    (0..n).map(|_| rng.range(1, vocab as i64) as i32).collect()
+}
+
+/// Expand a [`TraceSpec`] into a concrete [`Trace`] for `cfg`'s geometry.
+/// Pure function of (cfg, spec): same inputs ⇒ same trace, independent of
+/// driver, wall clock or call site.
+pub fn generate(cfg: &Config, spec: &TraceSpec) -> Result<Trace> {
+    if spec.n_requests == 0 {
+        bail!("trace '{}' generates no requests", spec.name);
+    }
+    spec.long_fraction_checked()?;
+    let mut rng = Rng::new(spec.seed);
+    let vocab = cfg.model.vocab_size;
+    let doc_len = cfg.apb.doc_len();
+    let query_len = cfg.apb.query_len;
+    // Shared corpus: pre-generated (doc, query) pairs that hit-intended
+    // requests replay wholesale (the prefix digest covers doc AND query).
+    let corpus: Vec<(Vec<i32>, Vec<i32>)> = (0..spec.corpus_size.max(1))
+        .map(|_| {
+            (random_tokens(&mut rng, doc_len, vocab), random_tokens(&mut rng, query_len, vocab))
+        })
+        .collect();
+    let mut arrivals = Vec::with_capacity(spec.n_requests);
+    let mut at_tick = 0u64;
+    for i in 0..spec.n_requests {
+        // Arrival clock.
+        if i > 0 {
+            match spec.arrival {
+                Arrival::Poisson { mean_gap_ticks } => {
+                    let u = rng.f64().max(1e-12);
+                    at_tick += (-u.ln() * mean_gap_ticks).round() as u64;
+                }
+                Arrival::Bursty { burst, gap_ticks } => {
+                    if i % burst.max(1) == 0 {
+                        at_tick += gap_ticks;
+                    }
+                }
+            }
+        }
+        // Length mix: heavy tail via the chunking + decode-budget axes.
+        let long = rng.f64() < spec.mix.long_fraction;
+        let (class, opts, max_new, doc, query, shares_corpus) = if long {
+            let opts = crate::config::ApbOptions {
+                chunk_tokens: Some(spec.mix.long_chunk_tokens.max(1)),
+                ..Default::default()
+            };
+            let (lo, hi) = spec.mix.long_max_new;
+            let max_new = rng.range(lo as i64, hi as i64 + 1) as usize;
+            (
+                Class::Batch,
+                opts,
+                max_new,
+                random_tokens(&mut rng, doc_len, vocab),
+                random_tokens(&mut rng, query_len, vocab),
+                false,
+            )
+        } else {
+            let class = Class::ALL[rng.choice_weighted(&spec.class_weights)];
+            let (lo, hi) = spec.mix.short_max_new;
+            let max_new = rng.range(lo as i64, hi as i64 + 1) as usize;
+            let shares = rng.f64() < spec.prefix_hit_rate;
+            let (doc, query) = if shares {
+                corpus[rng.below(corpus.len() as u64) as usize].clone()
+            } else {
+                (random_tokens(&mut rng, doc_len, vocab), random_tokens(&mut rng, query_len, vocab))
+            };
+            (class, crate::config::ApbOptions::default(), max_new, doc, query, shares)
+        };
+        arrivals.push(TracedRequest {
+            at_tick,
+            req: Request { id: i as u64, doc, query, max_new, opts, class },
+            shares_corpus,
+        });
+    }
+    Ok(Trace { spec: spec.clone(), arrivals })
+}
+
+impl TraceSpec {
+    fn long_fraction_checked(&self) -> Result<f64> {
+        let f = self.mix.long_fraction;
+        if !(0.0..=1.0).contains(&f) {
+            bail!("trace '{}': long_fraction {f} outside [0, 1]", self.name);
+        }
+        Ok(f)
+    }
+}
+
+/// Drive a [`Trace`] through a scheduler to completion: submit each
+/// request on its arrival tick, `step` the scheduler in between, and jump
+/// the clock over idle gaps with `advance_to` (so aging and SLO
+/// accounting see the gap without burning a step per empty tick). A full
+/// admission queue defers the submission to a later tick instead of
+/// dropping it — open-loop arrival with blocking backpressure, kept
+/// deterministic. Returns how many requests completed.
+pub fn run_trace(sched: &mut Scheduler<'_>, trace: &Trace) -> Result<usize> {
+    let before = sched.completed.len();
+    let mut next = 0usize;
+    loop {
+        while next < trace.arrivals.len() && trace.arrivals[next].at_tick <= sched.tick() {
+            match sched.submit(trace.arrivals[next].req.clone()) {
+                Ok(()) => next += 1,
+                // Queue full: leave the arrival pending and let the
+                // scheduler drain a tick first.
+                Err(_) => break,
+            }
+        }
+        let progressed = sched.step()?;
+        if !progressed {
+            if next < trace.arrivals.len() {
+                sched.advance_to(trace.arrivals[next].at_tick);
+            } else {
+                break;
+            }
+        }
+    }
+    Ok(sched.completed.len() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::sim_tiny()
+    }
+
+    #[test]
+    fn named_specs_generate_deterministically() {
+        for name in TraceSpec::NAMES {
+            let spec = TraceSpec::by_name(name).expect("named spec");
+            let a = generate(&cfg(), &spec).unwrap();
+            let b = generate(&cfg(), &spec).unwrap();
+            assert_eq!(a.arrivals.len(), spec.n_requests);
+            for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+                assert_eq!(x.at_tick, y.at_tick, "{name}: arrival clock diverged");
+                assert_eq!(x.req.doc, y.req.doc, "{name}: doc tokens diverged");
+                assert_eq!(x.req.query, y.req.query);
+                assert_eq!(x.req.max_new, y.req.max_new);
+                assert_eq!(x.req.class, y.req.class);
+                assert_eq!(x.req.opts.chunk_tokens, y.req.opts.chunk_tokens);
+            }
+        }
+        assert!(TraceSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_sized_to_config() {
+        let c = cfg();
+        for name in TraceSpec::NAMES {
+            let trace = generate(&c, &TraceSpec::by_name(name).unwrap()).unwrap();
+            let mut last = 0;
+            for a in &trace.arrivals {
+                assert!(a.at_tick >= last, "{name}: arrivals out of order");
+                last = a.at_tick;
+                assert_eq!(a.req.doc.len(), c.apb.doc_len());
+                assert_eq!(a.req.query.len(), c.apb.query_len);
+                assert!(a.req.doc.iter().all(|&t| t > 0 && (t as usize) < c.model.vocab_size));
+            }
+        }
+    }
+
+    #[test]
+    fn long_requests_are_batch_class_with_fine_chunks() {
+        let trace =
+            generate(&cfg(), &TraceSpec::by_name("adversarial").unwrap()).unwrap();
+        assert!(trace.n_long() >= 1, "adversarial trace needs a block-scale prefill");
+        for a in &trace.arrivals {
+            if let Some(ct) = a.req.opts.chunk_tokens {
+                assert_eq!(a.req.class, Class::Batch);
+                assert!(ct <= 2, "long requests chunk finely (got {ct})");
+                assert!(!a.shares_corpus, "longs never ride the corpus");
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_sharing_reuses_exact_pairs() {
+        let spec = TraceSpec {
+            prefix_hit_rate: 1.0,
+            ..TraceSpec::by_name("smoke").unwrap()
+        };
+        let trace = generate(&cfg(), &spec).unwrap();
+        let sharers: Vec<&TracedRequest> =
+            trace.arrivals.iter().filter(|a| a.shares_corpus).collect();
+        assert!(sharers.len() >= 2, "hit rate 1.0 must produce sharers");
+        // Sharers replay corpus pairs wholesale: the number of DISTINCT
+        // (doc, query) pairs among them is bounded by the corpus size —
+        // the digest covers both doc and query, so anything less than
+        // verbatim reuse would never hit the store.
+        let mut distinct: Vec<(&[i32], &[i32])> = Vec::new();
+        for s in &sharers {
+            let pair = (s.req.doc.as_slice(), s.req.query.as_slice());
+            if !distinct.contains(&pair) {
+                distinct.push(pair);
+            }
+        }
+        assert!(
+            distinct.len() <= spec.corpus_size,
+            "{} distinct pairs among sharers exceeds corpus of {}",
+            distinct.len(),
+            spec.corpus_size
+        );
+    }
+
+    #[test]
+    fn seed_changes_trace() {
+        let base = TraceSpec::by_name("poisson").unwrap();
+        let reseeded = TraceSpec { seed: base.seed + 1, ..base.clone() };
+        let a = generate(&cfg(), &base).unwrap();
+        let b = generate(&cfg(), &reseeded).unwrap();
+        let differs = a
+            .arrivals
+            .iter()
+            .zip(&b.arrivals)
+            .any(|(x, y)| x.req.doc != y.req.doc || x.at_tick != y.at_tick);
+        assert!(differs, "reseeding must change the trace");
+    }
+}

@@ -41,10 +41,18 @@ fn assert_ablations_change_generation(cluster: &Cluster, doc: &[i32], query: &[i
     for (i, opts) in variants.iter().enumerate() {
         cluster.clear().unwrap();
         let rep = cluster.prefill(doc, query, opts).unwrap();
-        if !opts.method.passes_compressed_blocks() {
+        if opts.method.passes_compressed_blocks() {
+            assert!(rep.comm_bytes > 0, "variant {i} must pass compressed blocks");
+        } else {
             assert_eq!(rep.comm_bytes, 0, "no-passing must not communicate");
         }
         let gen = cluster.generate(query, 2).unwrap();
+        assert_eq!(gen.tokens.len(), 2, "variant {i} owes two greedy tokens");
+        let vocab = cluster.cfg.model.vocab_size;
+        assert!(
+            gen.tokens.iter().all(|&t| t >= 0 && (t as usize) < vocab),
+            "variant {i} emitted out-of-vocabulary tokens"
+        );
         assert!(gen.query_logits.iter().all(|x| x.is_finite()),
                 "variant {i} produced non-finite logits");
         let diff: f32 = gen
@@ -77,6 +85,7 @@ fn sim_e2e_prefill_decode_deterministic() {
 
     let rep = cluster.prefill(&doc, &query, &opts).expect("prefill");
     assert!(rep.comm_bytes > 0, "prefill must move compressed blocks");
+    assert_eq!(rep.per_host.len(), cfg.apb.n_hosts, "one timing row per host");
     for t in &rep.per_host {
         assert!(t.total_s > 0.0);
     }

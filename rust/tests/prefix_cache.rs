@@ -262,6 +262,7 @@ fn scheduler_reports_hits_and_hit_aware_ttft() {
             query: query.clone(),
             max_new: 2,
             opts: ApbOptions::default(),
+            class: Default::default(),
         }).expect("submit");
         sched.run_all().expect("run");
     }

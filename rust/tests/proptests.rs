@@ -146,7 +146,8 @@ fn prop_percentiles_bounded_and_monotone() {
         let n = 1 + rng.below(50) as usize;
         let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let s = summarize(&xs);
-        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95
+                && s.p95 <= s.p99 && s.p99 <= s.max);
         let mut sorted = xs.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         for q in [0.0, 0.25, 0.5, 0.75, 1.0] {

@@ -20,7 +20,7 @@ fn cluster() -> (apb::config::Config, Cluster) {
 fn request(cfg: &apb::config::Config, id: u64, rng: &mut Rng) -> Request {
     let inst = gen_instance(cfg, TaskKind::SingleNiah, rng);
     Request { id, doc: inst.doc, query: inst.query, max_new: 2,
-              opts: ApbOptions::default() }
+              opts: ApbOptions::default(), class: Default::default() }
 }
 
 /// Residency-overlap assertions need >= `n` KV slots. Sim configs ship 4,
@@ -120,7 +120,7 @@ fn decode_ticks_proceed_between_prefill_chunks() {
     let a = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
     sched
         .submit(Request { id: 0, doc: a.doc, query: a.query, max_new: a_budget,
-                          opts: ApbOptions::default() })
+                          opts: ApbOptions::default(), class: Default::default() })
         .unwrap();
     // Drive until A is decoding (its own admission finished).
     while sched.prefill_in_flight().is_some() || sched.active_token_counts().is_empty() {
@@ -136,6 +136,7 @@ fn decode_ticks_proceed_between_prefill_chunks() {
             query: b.query,
             max_new: 2,
             opts: ApbOptions { chunk_tokens: Some(4), ..Default::default() },
+            class: Default::default(),
         })
         .unwrap();
 
@@ -198,6 +199,7 @@ fn mixed_method_traffic_is_grouped_per_decode_path() {
                 query: inst.query,
                 max_new: 3,
                 opts: ApbOptions { method, ..Default::default() },
+                class: Default::default(),
             })
             .unwrap();
     }
@@ -269,7 +271,7 @@ fn overlapping_sessions_match_sequential() {
         .map(|id| {
             let inst = gen_instance(&cfg, TaskKind::SingleNiah, &mut rng);
             Request { id, doc: inst.doc, query: inst.query, max_new,
-                      opts: ApbOptions::default() }
+                      opts: ApbOptions::default(), class: Default::default() }
         })
         .collect();
 

@@ -1,0 +1,272 @@
+//! Suspend/resume bit-identity — the serving-invariant lockdown for the
+//! preemption seam (docs/ADR-006-slo-scheduling.md): parking an in-flight
+//! resumable prefill with `Cluster::prefill_suspend` and reviving it with
+//! `Cluster::prefill_resume` must be unobservable in everything but wall
+//! time. The query-chunk and decode logits, the per-label CommMeter bytes
+//! AND rounds, and the per-host KV-pool bytes must be bit-identical to an
+//! uninterrupted prefill — for every `AttnMethod`, under both drivers,
+//! suspending at EVERY chunk boundary (quiescent and permit-captive alike),
+//! and with a whole OTHER prefill interposed while parked.
+//!
+//! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
+
+use apb::cluster::Interconnect;
+use apb::config::{ApbOptions, AttnMethod, Config};
+use apb::coordinator::{Cluster, Driver};
+use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
+
+const LABELS: [&str; 3] =
+    [Interconnect::KV_LABEL, Interconnect::ATT_LABEL, Interconnect::RING_LABEL];
+
+fn request(cfg: &Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    (doc, query)
+}
+
+/// Everything suspension must leave untouched. Wall-clock timing is
+/// excluded on purpose — latency is the one thing parking MAY change.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    chunk_logits: Vec<f32>,
+    step_logits: Vec<f32>,
+    /// (bytes, rounds) per meter label after the whole scenario.
+    comm: Vec<(u64, u64)>,
+    pool_bytes: Vec<usize>,
+}
+
+fn fingerprint(cluster: &Cluster, query: &[i32]) -> Fingerprint {
+    let vocab = cluster.cfg.model.vocab_size;
+    let chunk = cluster.decode_query_chunk(1, query).expect("query chunk");
+    let tok = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let step = cluster.decode_step_batch(&[(1, tok)]).expect("decode step");
+    let m = &cluster.fabric.meter;
+    Fingerprint {
+        chunk_logits: chunk.logits,
+        step_logits: step.logits[0].1.clone(),
+        comm: LABELS.iter().map(|l| (m.bytes_for(l), m.rounds_for(l))).collect(),
+        pool_bytes: cluster
+            .pool_stats()
+            .expect("pool stats")
+            .iter()
+            .map(|s| s.bytes_used)
+            .collect(),
+    }
+}
+
+struct Outcome {
+    fp: Fingerprint,
+    n_steps: usize,
+    /// Suspensions that landed on a fabric-quiescent boundary (permit
+    /// released) vs. ones that held the permit captive mid-collective.
+    quiet: usize,
+    captive: usize,
+}
+
+/// One scenario on a fresh cluster: prefill session 1 with `chunk_tokens =
+/// ct`, optionally suspending AND resuming at every single chunk boundary,
+/// then decode (query chunk + one batched step). On captive boundaries the
+/// scenario also proves the permit is really held: a rival `prefill_begin`
+/// must be rejected without touching any host.
+fn run(driver: Driver, method: AttnMethod, ct: usize, suspend_every: bool) -> Outcome {
+    let cfg = Config::sim_tiny().with_method(method);
+    let cluster = Cluster::start_with(&cfg, driver).expect("cluster");
+    let (doc, query) = request(&cfg, 0x5EED);
+    let opts = ApbOptions { method, chunk_tokens: Some(ct), ..Default::default() };
+    let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+    let n_steps = p.n_steps();
+    let (mut quiet, mut captive) = (0usize, 0usize);
+    loop {
+        if suspend_every {
+            let done = p.steps_done();
+            let was_quiescent = p.fabric_quiescent();
+            let s = cluster.prefill_suspend(p).expect("suspend");
+            assert_eq!(s.sid(), 1);
+            assert_eq!(s.steps_done(), done);
+            assert_eq!(s.n_steps(), n_steps);
+            assert_eq!(
+                s.holds_permit(),
+                !was_quiescent,
+                "{} ct={ct} step {done}: the permit is released iff the \
+                 boundary is fabric-quiescent",
+                method.name()
+            );
+            if s.holds_permit() {
+                captive += 1;
+                // A captive permit keeps admission closed: the rival fails
+                // at the permit claim, before any host command.
+                let Err(err) = cluster.prefill_begin(9, &doc, &query, &opts) else {
+                    panic!("captive permit must reject a rival prefill");
+                };
+                assert!(
+                    format!("{err:#}").contains("already in flight"),
+                    "captive-permit rejection must name the in-flight session"
+                );
+            } else {
+                quiet += 1;
+            }
+            let Ok(revived) = cluster.prefill_resume(s) else {
+                panic!("{} ct={ct} step {done}: resume must reclaim the slot",
+                       method.name());
+            };
+            p = revived;
+            assert_eq!(p.steps_done(), done, "resume must not lose progress");
+        }
+        if cluster.prefill_step(&mut p).expect("step").is_some() {
+            break;
+        }
+    }
+    Outcome { fp: fingerprint(&cluster, &query), n_steps, quiet, captive }
+}
+
+#[test]
+fn suspend_resume_bit_identity_all_methods_both_drivers() {
+    println!("APB-RUN suspend_resume backend=sim");
+    for method in AttnMethod::ALL {
+        for driver in [Driver::Sequential, Driver::Threaded] {
+            for ct in [1usize, 5] {
+                let base = run(driver, method, ct, false);
+                assert!(base.fp.chunk_logits.iter().all(|x| x.is_finite()));
+                let split = run(driver, method, ct, true);
+                assert_eq!(
+                    split.fp, base.fp,
+                    "{} {:?} ct={ct}: suspending at every chunk boundary \
+                     changed logits, comm or pool state",
+                    method.name(), driver
+                );
+                // Every boundary was suspended exactly once.
+                assert_eq!(split.quiet + split.captive, split.n_steps);
+                // The fabric structure decides which boundaries hold the
+                // permit: APB's compressed-block gather and Ring's rotations
+                // stay open across steps; StarAttn passes nothing and Dense
+                // never touches the fabric, so they park permit-free at
+                // every boundary.
+                match method {
+                    AttnMethod::Apb | AttnMethod::RingAttn => {
+                        assert!(split.captive > 0 && split.quiet > 0,
+                                "{} ct={ct}: expected both boundary kinds",
+                                method.name());
+                    }
+                    AttnMethod::StarAttn | AttnMethod::Dense => {
+                        assert_eq!(split.captive, 0,
+                                   "{} posts no fabric rounds", method.name());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A quiescent suspension releases the prefill permit, so a whole OTHER
+/// session can admit — begin, run every chunk, finish, freeze KV — while
+/// the first sits parked; resuming then yields the exact same logits, comm
+/// totals and pool bytes as running the two prefills back to back. This is
+/// the precise seam `Scheduler::maybe_preempt` swaps requests through.
+fn interpose(driver: Driver, split: bool) -> Fingerprint {
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start_with(&cfg, driver).expect("cluster");
+    let (doc, query) = request(&cfg, 0xD0C);
+    let (doc2, query2) = request(&cfg, 0x0DD);
+    let opts = ApbOptions { chunk_tokens: Some(4), ..Default::default() };
+    if split {
+        let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+        let target = p.n_steps() / 2;
+        while p.steps_done() < target || !p.fabric_quiescent() {
+            assert!(
+                cluster.prefill_step(&mut p).expect("step").is_none(),
+                "no quiescent boundary found past the midpoint"
+            );
+        }
+        let s = cluster.prefill_suspend(p).expect("suspend");
+        assert!(!s.holds_permit(), "quiescent suspend must release the permit");
+        cluster.prefill_session(7, &doc2, &query2, &opts).expect("interposed");
+        let Ok(mut p) = cluster.prefill_resume(s) else {
+            panic!("slot must be free after the interposed prefill finished")
+        };
+        while cluster.prefill_step(&mut p).expect("step").is_none() {}
+    } else {
+        cluster.prefill_session(1, &doc, &query, &opts).expect("prefill 1");
+        cluster.prefill_session(7, &doc2, &query2, &opts).expect("prefill 7");
+    }
+    // Fingerprint decodes session 1; session 7's logits are checked too so
+    // the interposed prefill itself is value-verified, not just no-panic.
+    let chunk7 = cluster.decode_query_chunk(7, &query2).expect("chunk 7");
+    assert!(chunk7.logits.iter().all(|x| x.is_finite()));
+    let mut fp = fingerprint(&cluster, &query);
+    fp.chunk_logits.extend(chunk7.logits);
+    fp
+}
+
+#[test]
+fn quiescent_suspension_admits_an_interposed_prefill() {
+    println!("APB-RUN suspend_interpose backend=sim");
+    for driver in [Driver::Sequential, Driver::Threaded] {
+        let base = interpose(driver, false);
+        let split = interpose(driver, true);
+        assert_eq!(split, base,
+                   "{driver:?}: a prefill interposed through the parked seam \
+                    diverged from back-to-back execution");
+    }
+}
+
+#[test]
+fn resume_backs_off_while_a_rival_holds_the_slot() {
+    // The scheduler's re-park path: `prefill_resume` hands the token back
+    // untouched when another prefill owns the one-at-a-time slot, and the
+    // parked session still completes bit-identically afterwards.
+    println!("APB-RUN suspend_backoff backend=sim");
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let (doc, query) = request(&cfg, 0xFADE);
+    let opts = ApbOptions { chunk_tokens: Some(8), ..Default::default() };
+    let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+    cluster.prefill_step(&mut p).expect("step");
+    assert!(p.fabric_quiescent(), "APB's first pre op opens no round");
+    let s = cluster.prefill_suspend(p).expect("suspend");
+    assert!(!s.holds_permit());
+
+    // A rival takes the slot; the parked token must bounce, intact.
+    let mut rival = cluster.prefill_begin(2, &doc, &query, &opts).expect("rival");
+    let s = match cluster.prefill_resume(s) {
+        Ok(_) => panic!("resume must fail while session 2 holds the slot"),
+        Err(s) => s,
+    };
+    assert_eq!((s.sid(), s.steps_done()), (1, 1), "bounced token untouched");
+
+    while cluster.prefill_step(&mut rival).expect("rival step").is_none() {}
+    let Ok(mut p) = cluster.prefill_resume(s) else {
+        panic!("slot is free again once the rival finished")
+    };
+    while cluster.prefill_step(&mut p).expect("step").is_none() {}
+
+    // Same (doc, query) in both sessions: the parked-then-resumed KV must
+    // decode EXACTLY like the rival's uninterrupted one.
+    let c1 = cluster.decode_query_chunk(1, &query).expect("chunk 1");
+    let c2 = cluster.decode_query_chunk(2, &query).expect("chunk 2");
+    assert_eq!(c1.logits, c2.logits,
+               "interrupted and uninterrupted prefills of the same request \
+                must be indistinguishable");
+}
+
+#[test]
+fn suspend_rejects_a_finished_prefill() {
+    println!("APB-RUN suspend_finished backend=sim");
+    let cfg = Config::sim_tiny();
+    let cluster = Cluster::start(&cfg).expect("cluster");
+    let (doc, query) = request(&cfg, 0xF1ED);
+    let opts = ApbOptions::default();
+    let mut p = cluster.prefill_begin(1, &doc, &query, &opts).expect("begin");
+    while cluster.prefill_step(&mut p).expect("step").is_none() {}
+    let err = match cluster.prefill_suspend(p) {
+        Ok(_) => panic!("a finished prefill must not be suspendable"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("nothing to suspend"),
+            "finished prefill must be rejected with a diagnostic");
+}
