@@ -1,0 +1,214 @@
+//! Decode-scaling bench (`docs/ADR-007-adaptive-decode.md`) — the
+//! executable + modeled record behind `BENCH_decode.json`.
+//!
+//! Measured half (sim-tiny cluster, real collectives): the same session
+//! decoded under both fixed pass strategies while its resident context
+//! grows turn by turn. The claim under test: the pass-Q `qring` bytes
+//! per decode step are CONSTANT in context length, and the two
+//! strategies' logits are bit-identical at every point.
+//!
+//! Modeled half (Llama-3.1-8B / 8×A800 analytic twin): the pass-KV cost
+//! of re-gathering context KV grows linearly in `n_ctx` while the pass-Q
+//! rotation stays flat, crossing over well below paper scale — swept to
+//! beyond a million tokens, with the `Auto` chooser pinned to the
+//! per-point winner.
+
+use apb::attnsim::{decode_scaling_sweep, A800, DECODE_SWEEP_LENGTHS, LLAMA31_8B};
+use apb::bench_harness::Table;
+use apb::config::{ApbOptions, Config, PassStrategy};
+use apb::coordinator::Cluster;
+use apb::report;
+use apb::util::json::{self, Json};
+use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
+
+/// One measured context point: the per-label comm of a single-token
+/// decode step, plus the pool occupancy it attended.
+struct Point {
+    pool_bytes: u64,
+    att_bytes: u64,
+    qring_bytes: u64,
+    comm_bytes: u64,
+    logits: Vec<f32>,
+}
+
+/// Prefill one session under a fixed strategy, then alternate
+/// single-token decode steps (measured) with multi-token `append_turn`s
+/// (context growth) so successive points attend strictly longer caches.
+fn measure(strategy: PassStrategy, doc: &[i32], query: &[i32], turns: &[Vec<i32>]) -> Vec<Point> {
+    let cfg = Config::sim_tiny().with_pass_strategy(strategy);
+    let cluster = Cluster::start(&cfg).expect("sim cluster");
+    cluster
+        .prefill_session(1, doc, query, &ApbOptions::default())
+        .expect("prefill");
+    let chunk = cluster.decode_query_chunk(1, query).expect("query chunk");
+    let vocab = cfg.model.vocab_size;
+    let mut token = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let mut points = Vec::new();
+    for (i, turn) in turns.iter().enumerate() {
+        let rep = cluster.decode_step_batch(&[(1, token)]).expect("decode step");
+        assert_eq!(rep.strategy, strategy, "fixed strategy must pass through");
+        token = Tensor::argmax_row(&rep.logits[0].1) as i32;
+        let pool_bytes = cluster
+            .pool_stats()
+            .expect("pool stats")
+            .iter()
+            .map(|s| s.bytes_used as u64)
+            .sum();
+        points.push(Point {
+            pool_bytes,
+            att_bytes: rep.att_bytes,
+            qring_bytes: rep.qring_bytes,
+            comm_bytes: rep.comm_bytes,
+            logits: rep.logits[0].1.clone(),
+        });
+        // Grow the resident context before the next measured step. The
+        // last turn is not consumed: points.len() == turns.len().
+        if i + 1 < turns.len() {
+            cluster.append_turn(1, turn).expect("append turn");
+        }
+    }
+    points
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--quick");
+    if smoke {
+        println!("[fig_decode_scaling] smoke mode (sweep is already milliseconds)");
+    }
+
+    // --- Measured: per-step comm vs growing resident context -------------
+    let cfg = Config::sim_tiny();
+    let mut rng = Rng::new(0xDEC0);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    // Three measured points, two 2-token turns between them: within the
+    // sim-tiny last-host KV budget (query_len + max_new rows).
+    let turns: Vec<Vec<i32>> = (0..3)
+        .map(|_| {
+            (0..2)
+                .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+                .collect()
+        })
+        .collect();
+    let kv = measure(PassStrategy::PassKv, &doc, &query, &turns);
+    let q = measure(PassStrategy::PassQ, &doc, &query, &turns);
+
+    let mut measured =
+        Table::new("Measured per-step decode comm vs resident context (sim-tiny)",
+                   &["point", "pool B", "kv att B", "kv qring B", "q att B", "q qring B"]);
+    let mut measured_rows = Vec::new();
+    for (i, (k, p)) in kv.iter().zip(q.iter()).enumerate() {
+        // The invariant the whole PR rests on: identical logits, and each
+        // strategy charges exactly one merge label.
+        assert_eq!(k.logits, p.logits, "point {i}: strategies must be bit-identical");
+        assert_eq!(k.pool_bytes, p.pool_bytes, "point {i}: pool bytes");
+        assert_eq!(k.qring_bytes, 0, "gather path must not touch qring");
+        assert_eq!(p.att_bytes, 0, "rotation must not touch att");
+        assert_eq!(k.att_bytes, k.comm_bytes, "point {i}: kv label split");
+        assert_eq!(p.qring_bytes, p.comm_bytes, "point {i}: q label split");
+        measured.row(vec![
+            i.to_string(),
+            k.pool_bytes.to_string(),
+            k.att_bytes.to_string(),
+            k.qring_bytes.to_string(),
+            p.att_bytes.to_string(),
+            p.qring_bytes.to_string(),
+        ]);
+        measured_rows.push(report::row(vec![
+            ("point", json::num(i as f64)),
+            ("pool_bytes", json::num(k.pool_bytes as f64)),
+            ("pass_kv_att_bytes", json::num(k.att_bytes as f64)),
+            ("pass_kv_qring_bytes", json::num(k.qring_bytes as f64)),
+            ("pass_q_att_bytes", json::num(p.att_bytes as f64)),
+            ("pass_q_qring_bytes", json::num(p.qring_bytes as f64)),
+            ("logits_bit_identical", Json::Bool(true)),
+        ]));
+    }
+    measured.print();
+    // Context really grew between points, and the rotation didn't care.
+    assert!(kv.windows(2).all(|w| w[1].pool_bytes > w[0].pool_bytes),
+            "append_turn must grow the resident pool between points");
+    assert!(q.iter().all(|p| p.qring_bytes == q[0].qring_bytes && p.qring_bytes > 0),
+            "pass-Q qring bytes per step must be flat in context length");
+
+    // --- Modeled: million-token crossover (Llama-3.1-8B, 8×A800) ---------
+    let hosts = 8.0;
+    let t_new = 1.0;
+    let sweep = decode_scaling_sweep(&LLAMA31_8B, t_new, hosts, &A800, &DECODE_SWEEP_LENGTHS);
+    let mut modeled = Table::new(
+        "Modeled per-step decode comm, Llama-3.1-8B H=8 (bytes, seconds)",
+        &["n_ctx", "pass-kv B", "pass-q B", "pass-kv s", "pass-q s", "auto"],
+    );
+    let mut modeled_rows = Vec::new();
+    let mut crossover = Json::Null;
+    for p in &sweep {
+        if p.auto == PassStrategy::PassQ && matches!(crossover, Json::Null) {
+            crossover = json::num(p.n_ctx);
+        }
+        modeled.row(vec![
+            format!("{:.0}", p.n_ctx),
+            format!("{:.3e}", p.pass_kv_bytes),
+            format!("{:.3e}", p.pass_q_bytes),
+            format!("{:.4}", p.pass_kv_s),
+            format!("{:.4}", p.pass_q_s),
+            p.auto.name().to_string(),
+        ]);
+        modeled_rows.push(report::row(vec![
+            ("n_ctx", json::num(p.n_ctx)),
+            ("pass_kv_bytes", json::num(p.pass_kv_bytes)),
+            ("pass_q_bytes", json::num(p.pass_q_bytes)),
+            ("pass_kv_s", json::num(p.pass_kv_s)),
+            ("pass_q_s", json::num(p.pass_q_s)),
+            ("auto", json::s(p.auto.name())),
+            ("auto_s", json::num(p.auto_s)),
+        ]));
+    }
+    modeled.print();
+    // The modeled scaling claims CI field-validates from the JSON.
+    assert!(sweep.last().unwrap().n_ctx >= 1_048_576.0, "sweep must reach 1M tokens");
+    assert!(sweep.windows(2).all(|w| w[1].pass_kv_bytes > w[0].pass_kv_bytes),
+            "modeled pass-KV re-gather must grow with context");
+    assert!(sweep.iter().all(|p| (p.pass_q_bytes - sweep[0].pass_q_bytes).abs() < 1e-6),
+            "modeled pass-Q rotation must be flat in context");
+    // Auto is never slower than either fixed strategy at any point.
+    assert!(sweep.iter().all(|p| p.auto_s == p.pass_kv_s.min(p.pass_q_s)),
+            "Auto must match the per-point winner");
+
+    let bench = json::obj(vec![
+        ("bench", json::s("fig_decode_scaling")),
+        ("schema_version", json::num(1.0)),
+        ("config", json::s("sim-tiny")),
+        ("smoke", Json::Bool(smoke)),
+        ("driver", json::s(apb::coordinator::Driver::from_env().name())),
+        ("measured_hosts", json::num(cfg.apb.n_hosts as f64)),
+        ("measured", Json::Arr(measured_rows.clone())),
+        ("measured_qring_flat", Json::Bool(true)),
+        ("modeled_model", json::s("llama31-8b")),
+        ("modeled_hosts", json::num(hosts)),
+        ("modeled_t_new", json::num(t_new)),
+        ("modeled", Json::Arr(modeled_rows.clone())),
+        ("modeled_crossover_n_ctx", crossover),
+    ]);
+    std::fs::write("BENCH_decode.json", bench.pretty()).expect("BENCH_decode.json");
+    println!("[bench json] BENCH_decode.json");
+
+    let path = report::write_report(
+        "fig_decode_scaling_measured",
+        vec![("config", json::s("sim-tiny")), ("smoke", Json::Bool(smoke))],
+        Json::Arr(measured_rows),
+    )
+    .expect("report");
+    let path2 = report::write_report(
+        "fig_decode_scaling_modeled",
+        vec![("hosts", json::num(hosts)), ("smoke", Json::Bool(smoke))],
+        Json::Arr(modeled_rows),
+    )
+    .expect("report");
+    println!("[report] {}", path.display());
+    println!("[report] {}", path2.display());
+}

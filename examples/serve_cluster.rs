@@ -13,7 +13,8 @@
 //! each later request attaches warm (no document pass at all) — the demo
 //! prints the cold-vs-warm TTFT split (`docs/ADR-003-prefix-caching.md`).
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//! Results land in the committed bench artifacts (`BENCH_serving.json`,
+//! `BENCH_decode.json`; see README "Bench artifacts").
 
 use apb::bench_harness::Table;
 use apb::config::{ApbOptions, AttnMethod};

@@ -14,4 +14,8 @@ pub mod walltime;
 pub use flops::{apb_flops, fullattn_flops, minference_flops, starattn_flops, Hyper};
 pub use hardware::{Hardware, A800};
 pub use profiles::{ModelProfile, ALL_MODELS, LLAMA31_8B, QWEN25_14B, YI_34B};
-pub use walltime::{estimate, speed_tok_per_s, Breakdown, Estimate, Method};
+pub use walltime::{
+    choose_pass_strategy, decode_scaling_sweep, estimate, pass_kv_comm_bytes,
+    pass_q_comm_bytes, speed_tok_per_s, Breakdown, DecodePoint, Estimate, Method,
+    DECODE_SWEEP_LENGTHS,
+};

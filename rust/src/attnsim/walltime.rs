@@ -307,6 +307,128 @@ pub fn speed_tok_per_s(est: &Estimate, n_in: f64, n_out: f64) -> Option<f64> {
     Some((n_in + n_out) / total)
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive decode/append comm model (docs/ADR-007-adaptive-decode.md).
+//
+// The executable cluster exposes two merge collectives for decode/append:
+// pass-KV (re-gather the distributed KV the new rows must attend — volume
+// grows with resident context) and pass-Q (rotate the new rows' (out, lse)
+// attention partials around the qring — volume independent of context).
+// The executable twin measures the qring volume exactly
+// (`benches/fig_decode_scaling.rs`); this model prices both sides so the
+// crossover and the million-token scaling story can be swept far past what
+// the tiny sim config can hold.
+// ---------------------------------------------------------------------------
+
+/// Total bytes pass-KV moves to append `t_new` tokens onto a resident
+/// context of `n_ctx` tokens sharded across `hosts` devices: the other
+/// hosts' context KV shares are re-gathered so the new rows can attend
+/// them, and the new rows' own KV is broadcast so every replica extends.
+/// Grows linearly in `n_ctx` — the curve the modeled section of
+/// `BENCH_decode.json` records. Summed over layers.
+pub fn pass_kv_comm_bytes(m: &ModelProfile, n_ctx: f64, t_new: f64, hosts: f64,
+                          hw: &Hardware) -> f64 {
+    let kv_row = 2.0 * m.kv_heads * m.head_dim() * hw.elem_bytes;
+    m.layers * (n_ctx * (hosts - 1.0) / hosts + t_new * (hosts - 1.0)) * kv_row
+}
+
+/// Total bytes pass-Q moves for the same append: `hosts - 1` qring
+/// rotation rounds per layer, each carrying the `t_new` rows'
+/// `(out [h, hd], lse [h])` partial — independent of `n_ctx`, which is the
+/// whole point of the rotation.
+pub fn pass_q_comm_bytes(m: &ModelProfile, t_new: f64, hosts: f64, hw: &Hardware) -> f64 {
+    let partial_row = (m.heads * m.head_dim() + m.heads) * hw.elem_bytes;
+    m.layers * (hosts - 1.0) * t_new * partial_row
+}
+
+/// α–β time for the pass-KV side: one gather collective per layer.
+pub fn pass_kv_comm_time(m: &ModelProfile, n_ctx: f64, t_new: f64, hosts: f64,
+                         hw: &Hardware) -> f64 {
+    let total = pass_kv_comm_bytes(m, n_ctx, t_new, hosts, hw);
+    m.layers * hw.t_coll(total / m.layers)
+}
+
+/// α–β time for the pass-Q side: `hosts - 1` rotation rounds per layer,
+/// each paying the collective latency on its own (small) payload.
+pub fn pass_q_comm_time(m: &ModelProfile, t_new: f64, hosts: f64, hw: &Hardware) -> f64 {
+    if hosts < 2.0 {
+        return 0.0;
+    }
+    let rounds = m.layers * (hosts - 1.0);
+    let total = pass_q_comm_bytes(m, t_new, hosts, hw);
+    rounds * hw.t_coll(total / rounds)
+}
+
+/// The modeled adaptive chooser: pick whichever strategy moves its volume
+/// faster for this (context, append, topology) point. Mirrors the
+/// executable `PassStrategy::Auto` resolution — the executable gate is
+/// warmth (pass-Q needs a resident distributed cache), the modeled gate is
+/// the comm-time crossover; `BENCH_decode.json`'s validator checks the
+/// pick equals the per-point winner. Never returns `Auto`. Degenerate
+/// topologies (one host) fall back to pass-KV, like
+/// `config::PassStrategy::resolve`.
+pub fn choose_pass_strategy(m: &ModelProfile, n_ctx: f64, t_new: f64, hosts: f64,
+                            hw: &Hardware) -> crate::config::PassStrategy {
+    use crate::config::PassStrategy;
+    if hosts < 2.0 {
+        return PassStrategy::PassKv;
+    }
+    let kv = pass_kv_comm_time(m, n_ctx, t_new, hosts, hw);
+    let q = pass_q_comm_time(m, t_new, hosts, hw);
+    if q <= kv {
+        PassStrategy::PassQ
+    } else {
+        PassStrategy::PassKv
+    }
+}
+
+/// One point of the decode/append scaling sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodePoint {
+    pub n_ctx: f64,
+    /// Modeled comm volume of the append under each strategy (bytes,
+    /// summed over layers).
+    pub pass_kv_bytes: f64,
+    pub pass_q_bytes: f64,
+    /// Modeled append step time: shared memory-bound base (weights + the
+    /// host's KV shard streamed once) plus the strategy's comm time.
+    pub pass_kv_s: f64,
+    pub pass_q_s: f64,
+    /// The adaptive pick and its time — always the per-point winner.
+    pub auto: crate::config::PassStrategy,
+    pub auto_s: f64,
+}
+
+/// Context lengths for the decode scaling sweep — from the modeled
+/// crossover region up past the million-token mark the ROADMAP north star
+/// calls for.
+pub const DECODE_SWEEP_LENGTHS: [f64; 7] =
+    [4096.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0, 2097152.0];
+
+/// Sweep the decode/append model over `lengths`, pricing both strategies
+/// and the adaptive pick at each point (`BENCH_decode.json`'s modeled
+/// section; validated on CI's threaded leg).
+pub fn decode_scaling_sweep(m: &ModelProfile, t_new: f64, hosts: f64, hw: &Hardware,
+                            lengths: &[f64]) -> Vec<DecodePoint> {
+    use crate::config::PassStrategy;
+    lengths
+        .iter()
+        .map(|&n_ctx| {
+            let base = hw.t_mem(
+                m.params * hw.elem_bytes
+                    + n_ctx * m.kv_bytes_per_token(hw.elem_bytes) / hosts,
+            );
+            let pass_kv_bytes = pass_kv_comm_bytes(m, n_ctx, t_new, hosts, hw);
+            let pass_q_bytes = pass_q_comm_bytes(m, t_new, hosts, hw);
+            let pass_kv_s = base + pass_kv_comm_time(m, n_ctx, t_new, hosts, hw);
+            let pass_q_s = base + pass_q_comm_time(m, t_new, hosts, hw);
+            let auto = choose_pass_strategy(m, n_ctx, t_new, hosts, hw);
+            let auto_s = if auto == PassStrategy::PassQ { pass_q_s } else { pass_kv_s };
+            DecodePoint { n_ctx, pass_kv_bytes, pass_q_bytes, pass_kv_s, pass_q_s, auto, auto_s }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -452,6 +574,63 @@ mod tests {
         let e = est(Method::FlashAttn, 1048576.0);
         assert!(e.oom);
         assert_eq!(speed_tok_per_s(&e, 1048576.0, 64.0), None);
+    }
+
+    #[test]
+    fn pass_q_comm_flat_while_pass_kv_grows_to_a_million_tokens() {
+        // The ISSUE acceptance: qring volume independent of context while
+        // the pass-KV side grows linearly, swept past 1M tokens.
+        let last = *DECODE_SWEEP_LENGTHS.last().unwrap();
+        assert!(last >= 1_048_576.0, "sweep must reach the million-token mark");
+        let pts = decode_scaling_sweep(&LLAMA31_8B, 1.0, 8.0, &A800,
+                                       &DECODE_SWEEP_LENGTHS);
+        for w in pts.windows(2) {
+            assert!(w[1].pass_kv_bytes > w[0].pass_kv_bytes,
+                    "pass-KV volume must grow with context");
+            assert!(w[1].pass_kv_s > w[0].pass_kv_s,
+                    "pass-KV step time must grow with context");
+            assert!((w[1].pass_q_bytes - w[0].pass_q_bytes).abs() < 1e-9,
+                    "pass-Q volume must not depend on context");
+        }
+        // At scale the rotation wins outright.
+        let at_1m = pts.iter().find(|p| p.n_ctx == 1_048_576.0).unwrap();
+        assert!(at_1m.pass_q_s < at_1m.pass_kv_s);
+        assert_eq!(at_1m.auto, crate::config::PassStrategy::PassQ);
+    }
+
+    #[test]
+    fn auto_pick_matches_per_point_winner() {
+        for t_new in [1.0, 256.0, 4096.0] {
+            let pts = decode_scaling_sweep(&LLAMA31_8B, t_new, 8.0, &A800,
+                                           &DECODE_SWEEP_LENGTHS);
+            for p in &pts {
+                let min = p.pass_kv_s.min(p.pass_q_s);
+                assert_eq!(p.auto_s, min, "auto must take the per-point minimum");
+                let want = if p.pass_q_s <= p.pass_kv_s {
+                    crate::config::PassStrategy::PassQ
+                } else {
+                    crate::config::PassStrategy::PassKv
+                };
+                assert_eq!(p.auto, want, "auto pick at n_ctx {}", p.n_ctx);
+            }
+        }
+    }
+
+    #[test]
+    fn chooser_crossover_and_degenerate_topology() {
+        use crate::config::PassStrategy;
+        // A bulk append onto a tiny resident context moves more partial
+        // volume around the ring than re-gathering the context costs:
+        // the chooser must flip back to pass-KV on that side of the
+        // crossover.
+        assert_eq!(choose_pass_strategy(&LLAMA31_8B, 64.0, 4096.0, 8.0, &A800),
+                   PassStrategy::PassKv);
+        // Steady-state decode on a long resident context: pass-Q.
+        assert_eq!(choose_pass_strategy(&LLAMA31_8B, 1_048_576.0, 1.0, 8.0, &A800),
+                   PassStrategy::PassQ);
+        // One host has no ring to rotate around.
+        assert_eq!(choose_pass_strategy(&LLAMA31_8B, 1_048_576.0, 1.0, 1.0, &A800),
+                   PassStrategy::PassKv);
     }
 
     #[test]

@@ -67,7 +67,7 @@ pub enum ClusterError {
     /// never posted (crashed, aborted, or desynchronized). The receipt is
     /// still live — `cancel` it to drain the fabric.
     RendezvousTimeout {
-        /// Meter label of the collective ("kv", "att", "ring").
+        /// Meter label of the collective ("kv", "att", "ring", "qring").
         label: &'static str,
         /// The rank whose `complete` gave up.
         rank: usize,

@@ -10,8 +10,9 @@
 //! | label | collective | used by |
 //! |---|---|---|
 //! | `kv` | [`Collective`] AllGather of compressed (K_c, V_c) | APB prefill (Alg. 2 line "AllGather") |
-//! | `att` | [`Collective`] AllGather of (out, lse) partials | decode merge (Alg. 3), all distributed methods |
+//! | `att` | [`Collective`] AllGather of (out, lse) partials | decode merge (Alg. 3), pass-KV strategy |
 //! | `ring` | [`RingExchange`] neighbor send/recv of full KV blocks | RingAttn prefill rotation |
+//! | `qring` | [`RingExchange`] neighbor send/recv of (out, lse) partials | pass-Q decode rotation (ADR-007) |
 //!
 //! StarAttn charges no prefill label (its blocks never move) and Dense
 //! charges nothing at all. The full method × label matrix lives in
@@ -20,7 +21,7 @@
 //! The two concrete primitives share the [`Fabric`] trait (post / complete
 //! / cancel with structured [`ClusterError`] timeouts), so the coordinator
 //! is generic over which collective a step rides; [`Interconnect`] is the
-//! bundle of all three labeled instances handed to every host worker.
+//! bundle of all four labeled instances handed to every host worker.
 
 pub mod collectives;
 
@@ -34,16 +35,22 @@ use std::time::Duration;
 
 type TensorPair = (crate::util::tensor::Tensor, crate::util::tensor::Tensor);
 
-/// Shared interconnect handed to every host worker: the three labeled
+/// Shared interconnect handed to every host worker: the four labeled
 /// collectives plus their common byte meter.
 pub struct Interconnect {
     pub n_hosts: usize,
     /// AllGather used during prefill for compressed (K_c, V_c) blocks.
     pub kv_gather: Collective<TensorPair>,
-    /// AllGather used during decode for (partial out, lse) pairs.
+    /// AllGather used during decode for (partial out, lse) pairs (the
+    /// pass-KV strategy).
     pub att_gather: Collective<TensorPair>,
     /// Neighbor send/recv used by RingAttn prefill to rotate (K, V) blocks.
     pub ring_pass: RingExchange<TensorPair>,
+    /// Neighbor send/recv used by the pass-Q decode strategy to rotate
+    /// (partial out, lse) pairs around the ring — `n_hosts - 1` rounds per
+    /// layer per step, each round one context-length-independent payload
+    /// (`docs/ADR-007-adaptive-decode.md`).
+    pub q_ring: RingExchange<TensorPair>,
     /// Bytes-on-the-wire meter shared by all collectives.
     pub meter: Arc<CommMeter>,
 }
@@ -57,34 +64,40 @@ impl Interconnect {
             att_gather: Collective::labeled(n_hosts, Interconnect::ATT_LABEL, Arc::clone(&meter)),
             ring_pass: RingExchange::labeled(n_hosts, Interconnect::RING_LABEL,
                                              Arc::clone(&meter)),
+            q_ring: RingExchange::labeled(n_hosts, Interconnect::QRING_LABEL,
+                                          Arc::clone(&meter)),
             meter,
         })
     }
 
-    /// Apply one [`WireModel`] to all three collectives (see
+    /// Apply one [`WireModel`] to all four collectives (see
     /// `benches/fig1_prefill`: a modeled wire gives compute a real window
     /// to hide behind so overlap can be *measured*).
     pub fn set_wire(&self, wire: WireModel) {
         self.kv_gather.set_wire(wire);
         self.att_gather.set_wire(wire);
         self.ring_pass.set_wire(wire);
+        self.q_ring.set_wire(wire);
     }
 
-    /// Apply one rendezvous timeout to all three collectives.
+    /// Apply one rendezvous timeout to all four collectives.
     pub fn set_round_timeout(&self, timeout: Duration) {
         self.kv_gather.set_timeout(timeout);
         self.att_gather.set_timeout(timeout);
         self.ring_pass.set_timeout(timeout);
+        self.q_ring.set_timeout(timeout);
     }
 }
 
 impl Interconnect {
     /// Meter label of the prefill compressed-KV AllGather.
     pub const KV_LABEL: &'static str = "kv";
-    /// Meter label of the decode partial-attention AllGather.
+    /// Meter label of the decode partial-attention AllGather (pass-KV).
     pub const ATT_LABEL: &'static str = "att";
     /// Meter label of the RingAttn KV-block rotation.
     pub const RING_LABEL: &'static str = "ring";
+    /// Meter label of the pass-Q decode partial rotation.
+    pub const QRING_LABEL: &'static str = "qring";
 }
 
 #[cfg(test)]
@@ -180,5 +193,34 @@ mod tests {
         let r = fabric.ring_pass.post_tagged(0, 1, (t(), t()));
         assert!(fabric.ring_pass.complete(0, &r).is_err());
         fabric.ring_pass.cancel(0, r);
+
+        let r = fabric.q_ring.post_tagged(0, 1, (t(), t()));
+        assert!(fabric.q_ring.complete(0, &r).is_err());
+        fabric.q_ring.cancel(0, r);
+    }
+
+    #[test]
+    fn qring_meters_apart_from_att_and_ring() {
+        // The pass-Q rotation must charge its own label: strategy choice is
+        // observable purely from the meter split.
+        let n = 3;
+        let fabric = Interconnect::new(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let f = Arc::clone(&fabric);
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![1], vec![rank as f32]).unwrap();
+                let got = f.q_ring.exchange(rank, (t.clone(), t));
+                got.0.data[0] as usize
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), (rank + n - 1) % n, "from predecessor");
+        }
+        assert_eq!(fabric.meter.bytes_for(Interconnect::QRING_LABEL), (n * 2 * 4) as u64);
+        assert_eq!(fabric.meter.bytes_for(Interconnect::ATT_LABEL), 0);
+        assert_eq!(fabric.meter.bytes_for(Interconnect::RING_LABEL), 0);
+        assert_eq!(fabric.meter.rounds_for(Interconnect::QRING_LABEL), n as u64,
+                   "one metered contribution per rank per exchange");
     }
 }

@@ -196,6 +196,82 @@ impl AttnMethod {
     }
 }
 
+/// How the distributed decode/append path moves attention state between
+/// hosts (`docs/ADR-007-adaptive-decode.md`). Context Parallelism (Yang et
+/// al., PAPERS.md) frames the choice: move the (large, context-sized) KV
+/// toward the query, or move the (tiny, context-independent) query/partial
+/// state toward the resident KV.
+///
+/// Both executable strategies are **bit-identical**: they feed the same
+/// per-rank partials, reordered into rank order, through the same
+/// `util::tensor::merge_partials` fold, so logits, KV pool bytes and every
+/// non-decode comm label match exactly. Only the decode comm label differs
+/// (`att` AllGather vs `qring` ring rotation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PassStrategy {
+    /// Gather per-host attention partials with one AllGather per layer per
+    /// step (`att` label) — the pass-KV-shaped baseline path and the
+    /// pre-ADR-007 behaviour.
+    PassKv,
+    /// Rotate per-host attention partials around the ring (`qring` label),
+    /// one neighbour exchange per round, `n_hosts - 1` rounds per layer —
+    /// per-round payload is O(batch x heads x head_dim), independent of
+    /// context length.
+    PassQ,
+    /// Choose per session at decode time: `PassQ` when the session's KV is
+    /// already resident from a warm start (prefix-store hit) or a prior
+    /// turn (multi-turn append), else `PassKv`. The choice is made on the
+    /// leader from rank-uniform state and shipped in the decode command, so
+    /// every host resolves identically.
+    Auto,
+}
+
+impl PassStrategy {
+    pub const ALL: [PassStrategy; 3] =
+        [PassStrategy::PassKv, PassStrategy::PassQ, PassStrategy::Auto];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PassStrategy::PassKv => "pass-kv",
+            PassStrategy::PassQ => "pass-q",
+            PassStrategy::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI spelling (`--pass-strategy kv|q|auto`).
+    pub fn parse(s: &str) -> Result<PassStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "kv" | "pass-kv" | "passkv" | "gather" => Ok(PassStrategy::PassKv),
+            "q" | "pass-q" | "passq" | "ring" => Ok(PassStrategy::PassQ),
+            "auto" | "adaptive" => Ok(PassStrategy::Auto),
+            other => bail!("unknown pass strategy '{other}' \
+                            (expected kv|q|auto)"),
+        }
+    }
+
+    /// Resolve `Auto` into a concrete executable strategy for one decode
+    /// batch. `warm` is the rank-uniform chooser input: true when every
+    /// session in the batch holds KV that was already resident before this
+    /// request's tokens arrived (prefix-store hit or a completed earlier
+    /// turn). Single-host rings have no rotation to win from, and `Dense`
+    /// never reaches a distributed decode, so both resolve to `PassKv`.
+    pub fn resolve(self, warm: bool, n_hosts: usize, method: AttnMethod) -> PassStrategy {
+        if !method.distributed_decode() || n_hosts < 2 {
+            return PassStrategy::PassKv;
+        }
+        match self {
+            PassStrategy::Auto => {
+                if warm {
+                    PassStrategy::PassQ
+                } else {
+                    PassStrategy::PassKv
+                }
+            }
+            fixed => fixed,
+        }
+    }
+}
+
 /// Which execution backend a config is bound to (see `runtime`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
@@ -244,6 +320,13 @@ pub struct Config {
     /// runtime bench compares the tiled/pooled kernels against.
     /// Bit-identical to the default; only wall time differs.
     pub sim_scalar: bool,
+    /// Cluster-default decode pass strategy (`docs/ADR-007-adaptive-decode.md`):
+    /// how distributed decode moves attention partials between hosts.
+    /// Per-request override rides on [`ApbOptions::pass_strategy`]. The
+    /// default, [`PassStrategy::PassKv`], is the pre-ADR-007 gather path,
+    /// so existing configs and manifests are behaviour-preserving.
+    /// CLI: `apb serve --pass-strategy kv|q|auto`.
+    pub pass_strategy: PassStrategy,
 }
 
 fn u(v: &Json, key: &str) -> Result<usize> {
@@ -309,6 +392,15 @@ impl Config {
                 None => false,
             },
         };
+        // Older manifests predate the adaptive decode path; the gather
+        // (pass-KV) strategy is the pre-ADR-007 behaviour they were built
+        // against.
+        let pass_strategy = match a.get("pass_strategy") {
+            Some(v) => PassStrategy::parse(
+                v.as_str().context("field 'pass_strategy' not a string")?,
+            )?,
+            None => PassStrategy::PassKv,
+        };
         if apb.max_resident == 0 {
             bail!("max_resident must be >= 1");
         }
@@ -355,6 +447,7 @@ impl Config {
             manifest,
             sim_threads: 0,
             sim_scalar: false,
+            pass_strategy,
         })
     }
 
@@ -371,6 +464,7 @@ impl Config {
             manifest: Json::Null,
             sim_threads: 0,
             sim_scalar: false,
+            pass_strategy: PassStrategy::PassKv,
         }
     }
 
@@ -394,6 +488,15 @@ impl Config {
     /// (see `docs/ADR-003-prefix-caching.md`).
     pub fn with_prefix_cache(mut self, on: bool) -> Config {
         self.apb.prefix_cache = on;
+        self
+    }
+
+    /// Set the cluster-default decode pass strategy (see
+    /// [`Config::pass_strategy`]). Any value yields bit-identical logits,
+    /// KV bytes and pool accounting — only the decode comm label (and, for
+    /// `Auto`, the per-session choice) changes.
+    pub fn with_pass_strategy(mut self, s: PassStrategy) -> Config {
+        self.pass_strategy = s;
         self
     }
 
@@ -477,6 +580,12 @@ pub struct ApbOptions {
     /// logits/KV/comm — it only changes how finely the prefill state machine
     /// is sliced between scheduler ticks.
     pub chunk_tokens: Option<usize>,
+    /// Per-request decode pass strategy override (`None` = the cluster's
+    /// [`Config::pass_strategy`]). Deliberately EXCLUDED from
+    /// `kvcache::prefix_digest` (a decode-side knob, like `max_new`): a
+    /// pass-Q session shares prefix entries with a pass-KV one because
+    /// their prefill output is identical.
+    pub pass_strategy: Option<PassStrategy>,
 }
 
 impl Default for ApbOptions {
@@ -489,6 +598,7 @@ impl Default for ApbOptions {
             rd_seed: 1234,
             record_retained: false,
             chunk_tokens: None,
+            pass_strategy: None,
         }
     }
 }
@@ -603,6 +713,38 @@ mod tests {
         let d = c.clone().with_method(AttnMethod::Dense);
         assert_eq!(d.method, AttnMethod::Dense);
         assert_eq!(d.seed, c.seed);
+    }
+
+    #[test]
+    fn pass_strategy_parse_resolve_and_default() {
+        assert_eq!(PassStrategy::parse("kv").unwrap(), PassStrategy::PassKv);
+        assert_eq!(PassStrategy::parse("pass-q").unwrap(), PassStrategy::PassQ);
+        assert_eq!(PassStrategy::parse("Auto").unwrap(), PassStrategy::Auto);
+        assert!(PassStrategy::parse("teleport").is_err());
+        // The cluster default is the pre-ADR-007 gather path.
+        let c = Config::sim_tiny();
+        assert_eq!(c.pass_strategy, PassStrategy::PassKv);
+        let q = c.clone().with_pass_strategy(PassStrategy::PassQ);
+        assert_eq!(q.pass_strategy, PassStrategy::PassQ);
+        assert_eq!(q.seed, c.seed, "strategy never perturbs the model");
+        assert_eq!(ApbOptions::default().pass_strategy, None);
+        // Fixed strategies resolve to themselves on a distributed decode...
+        for warm in [false, true] {
+            assert_eq!(PassStrategy::PassKv.resolve(warm, 3, AttnMethod::Apb),
+                       PassStrategy::PassKv);
+            assert_eq!(PassStrategy::PassQ.resolve(warm, 3, AttnMethod::RingAttn),
+                       PassStrategy::PassQ);
+        }
+        // ...Auto picks by warmth (the prefix-hit / multi-turn signal)...
+        assert_eq!(PassStrategy::Auto.resolve(true, 3, AttnMethod::Apb),
+                   PassStrategy::PassQ);
+        assert_eq!(PassStrategy::Auto.resolve(false, 3, AttnMethod::Apb),
+                   PassStrategy::PassKv);
+        // ...and Dense / single-host always degenerate to the gather path.
+        for s in PassStrategy::ALL {
+            assert_eq!(s.resolve(true, 3, AttnMethod::Dense), PassStrategy::PassKv);
+            assert_eq!(s.resolve(true, 1, AttnMethod::Apb), PassStrategy::PassKv);
+        }
     }
 
     #[test]

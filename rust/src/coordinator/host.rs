@@ -36,7 +36,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{complete_accounted, Interconnect, Receipt};
-use crate::config::{ApbOptions, AttnMethod, Config};
+use crate::config::{ApbOptions, AttnMethod, Config, PassStrategy};
 use crate::kvcache::{KvPool, SessionId};
 use crate::runtime::{create_backend, ExecBackend, KvView};
 use crate::util::tensor::{merge_partials, Tensor};
@@ -97,19 +97,41 @@ enum JobKind {
 
 /// A resumable distributed decode pass (Algorithm 3): per-layer carry
 /// state between [`HostWorker::job_step`] microsteps. `awaiting` holds the
-/// receipt of the layer's posted-but-incomplete partial-attention gather —
-/// its presence IS the job's phase bit (post half done, complete half
-/// pending).
+/// receipt of the layer's posted-but-incomplete fabric round — its
+/// presence IS the job's phase bit (post half done, complete half
+/// pending). Which collective that round rides depends on `strategy`
+/// (`docs/ADR-007-adaptive-decode.md`):
+///
+/// * **pass-KV** — one `att` AllGather of (out, lse) partials per layer,
+///   merged the moment it completes (the original Algorithm-3 path);
+/// * **pass-Q** — `n_hosts - 1` `qring` neighbor rounds per layer,
+///   store-and-forward: each round delivers (and then forwards) one
+///   origin's partial, `parts` banks them by origin rank, and the merge
+///   runs only after the rotation delivered every origin — in rank order,
+///   so `merge_partials` sees bit-identical inputs to the gather path.
 pub(crate) struct DecodeJob {
     kind: JobKind,
     /// Fabric round tag (session id for chunks, the leader's batch digest
     /// for batches — shipped in the [`Envelope`]).
     tag: u64,
+    /// Resolved decode pass strategy — never [`PassStrategy::Auto`] here;
+    /// the leader resolves Auto before dispatch so every rank agrees.
+    strategy: PassStrategy,
     hidden: Tensor,
     positions: Vec<i32>,
     /// Next layer to run (== n_layers when only the finish step remains).
     li: usize,
     awaiting: Option<Receipt>,
+    /// Pass-Q rotation round within the current layer: 0 outside a
+    /// rotation, r after posting round r (rounds run 1..=n_hosts-1).
+    qround: usize,
+    /// Pass-Q partial bank, indexed by origin rank; `parts[self.rank]` is
+    /// this rank's own partial, banked at layer start.
+    parts: Vec<Option<(Tensor, Tensor)>>,
+    /// Pass-Q forwarding buffer: the partial received last round, to be
+    /// posted onward on its own microstep (never in the same call as the
+    /// complete — the one-fabric-op-per-microstep invariant).
+    carry: Option<(Tensor, Tensor)>,
     tm: DecodeTiming,
     t0: std::time::Instant,
 }
@@ -253,14 +275,18 @@ impl HostWorker {
                 Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
             },
             Cmd::PoolStats => Resp::PoolStats { host: self.rank, stats: self.pool.stats() },
-            Cmd::QueryChunk { tokens } => match self.decode_begin(sid, tag, &tokens) {
-                Ok(begun) => return begun,
-                Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-            },
-            Cmd::DecodeBatch { entries } => match self.decode_batch_begin(tag, entries.to_vec()) {
-                Ok(begun) => return begun,
-                Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
-            },
+            Cmd::QueryChunk { tokens, strategy, turn } => {
+                match self.decode_begin(sid, tag, &tokens, strategy, turn) {
+                    Ok(begun) => return begun,
+                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                }
+            }
+            Cmd::DecodeBatch { entries, strategy } => {
+                match self.decode_batch_begin(tag, entries.to_vec(), strategy) {
+                    Ok(begun) => return begun,
+                    Err(e) => Resp::Error { host: self.rank, msg: format!("{e:#}") },
+                }
+            }
         };
         Begun::Done(resp)
     }
@@ -276,41 +302,34 @@ impl HostWorker {
     }
 
     fn job_step_inner(&mut self, job: &mut DecodeJob) -> Result<Option<Resp>> {
-        // Complete half: the layer's gather was posted by the previous
-        // microstep; finish it, merge, run decode_post.
+        // Complete half: a fabric round was posted by the previous
+        // microstep; finish it on the strategy's collective. Pass-KV
+        // merges immediately (all partials arrive at once); pass-Q merges
+        // only once the rotation has delivered every origin's partial.
         if let Some(receipt) = job.awaiting.take() {
-            let all = match complete_accounted(
-                &self.fabric.att_gather,
-                self.rank,
-                &receipt,
-                &mut job.tm.comm_s,
-                &mut job.tm.comm_window_s,
-                &mut job.tm.comm_hidden_s,
-            ) {
-                Ok(all) => all,
-                Err(e) => {
-                    // Decode jobs have no resume path — drain the round so
-                    // the fabric survives this job's death.
-                    self.fabric.att_gather.cancel(self.rank, receipt);
-                    return Err(e.into());
-                }
-            };
-            let mut sw = Stopwatch::start();
-            let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
-            let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
-            let att = merge_partials(&outs_v, &lses_v);
-            job.tm.merge_s += sw.lap();
-            job.hidden = self.backend.decode_post(job.li, &job.hidden, &att)?;
-            job.tm.post_s += sw.lap();
-            job.li += 1;
+            if job.strategy == PassStrategy::PassQ {
+                self.complete_qring_round(job, receipt)?;
+            } else {
+                self.complete_att_gather(job, receipt)?;
+            }
             return Ok(None);
         }
         if job.li == self.cfg.model.n_layers {
             return self.job_finish(job).map(Some);
         }
+        // Mid-rotation post half (pass-Q only): forward the partial
+        // received last round to the successor. Posting gets its own
+        // microstep so the lockstep invariant holds — every rank posts
+        // round r at the same step index and completes it strictly later.
+        if let Some(fwd) = job.carry.take() {
+            job.qround += 1;
+            job.awaiting = Some(self.fabric.q_ring.post_tagged(self.rank, job.tag, fwd));
+            return Ok(None);
+        }
         // Post half of layer `li`: project, append (last host), attend the
-        // local partial, post the gather. The complete half runs next
-        // microstep — after every rank posted, by the lockstep invariant.
+        // local partial, post the strategy's opening round. The complete
+        // half runs next microstep — after every rank posted, by the
+        // lockstep invariant.
         let li = job.li;
         let last = self.rank == self.cfg.apb.n_hosts - 1;
         let mut sw = Stopwatch::start();
@@ -350,10 +369,104 @@ impl HostWorker {
             }
         };
         job.tm.attn_s += sw.lap();
-        // Gather all hosts' partials (line 9), round-tagged.
-        job.awaiting =
-            Some(self.fabric.att_gather.post_tagged(self.rank, job.tag, (out, lse)));
+        match job.strategy {
+            PassStrategy::PassQ => {
+                // Open the rotation: bank this rank's own partial at its
+                // origin slot and send a copy to the successor as round 1.
+                let n = self.cfg.apb.n_hosts;
+                job.parts.clear();
+                job.parts.resize_with(n, || None);
+                job.parts[self.rank] = Some((out.clone(), lse.clone()));
+                job.qround = 1;
+                job.awaiting =
+                    Some(self.fabric.q_ring.post_tagged(self.rank, job.tag, (out, lse)));
+            }
+            _ => {
+                // Gather all hosts' partials (line 9), round-tagged.
+                job.awaiting =
+                    Some(self.fabric.att_gather.post_tagged(self.rank, job.tag, (out, lse)));
+            }
+        }
         Ok(None)
+    }
+
+    /// Complete half of the pass-KV path: finish the layer's `att`
+    /// AllGather, merge every rank's partial (delivered in rank order),
+    /// run `decode_post`, advance to the next layer.
+    fn complete_att_gather(&mut self, job: &mut DecodeJob, receipt: Receipt) -> Result<()> {
+        let all = match complete_accounted(
+            &self.fabric.att_gather,
+            self.rank,
+            &receipt,
+            &mut job.tm.comm_s,
+            &mut job.tm.comm_window_s,
+            &mut job.tm.comm_hidden_s,
+        ) {
+            Ok(all) => all,
+            Err(e) => {
+                // Decode jobs have no resume path — drain the round so
+                // the fabric survives this job's death.
+                self.fabric.att_gather.cancel(self.rank, receipt);
+                return Err(e.into());
+            }
+        };
+        let mut sw = Stopwatch::start();
+        let outs_v: Vec<Tensor> = all.iter().map(|(o, _)| o.clone()).collect();
+        let lses_v: Vec<Tensor> = all.iter().map(|(_, l)| l.clone()).collect();
+        let att = merge_partials(&outs_v, &lses_v);
+        job.tm.merge_s += sw.lap();
+        job.hidden = self.backend.decode_post(job.li, &job.hidden, &att)?;
+        job.tm.post_s += sw.lap();
+        job.li += 1;
+        Ok(())
+    }
+
+    /// Complete one pass-Q rotation round. Store-and-forward: the pair
+    /// delivered at round r is the partial of origin rank
+    /// `(rank + n - r) % n` (each round every rank forwards what it
+    /// received the round before, so partials travel the ring unmodified).
+    /// Until the final round the item is also kept as `carry` for the next
+    /// post microstep; after round `n - 1` every origin's partial is
+    /// banked and the merge runs in rank order — the same slice order the
+    /// gather path's AllGather delivers, so `merge_partials` folds
+    /// bit-identical inputs in the identical FP op order.
+    fn complete_qring_round(&mut self, job: &mut DecodeJob, receipt: Receipt) -> Result<()> {
+        let n = self.cfg.apb.n_hosts;
+        let got = match complete_accounted(
+            &self.fabric.q_ring,
+            self.rank,
+            &receipt,
+            &mut job.tm.comm_s,
+            &mut job.tm.comm_window_s,
+            &mut job.tm.comm_hidden_s,
+        ) {
+            Ok(got) => got,
+            Err(e) => {
+                self.fabric.q_ring.cancel(self.rank, receipt);
+                return Err(e.into());
+            }
+        };
+        let origin = (self.rank + n - job.qround) % n;
+        if job.qround + 1 < n {
+            // Still rotating: this partial moves on next microstep.
+            job.carry = Some((got.0.clone(), got.1.clone()));
+            job.parts[origin] = Some(got);
+            return Ok(());
+        }
+        job.parts[origin] = Some(got);
+        let mut sw = Stopwatch::start();
+        let (outs_v, lses_v): (Vec<Tensor>, Vec<Tensor>) = job
+            .parts
+            .iter_mut()
+            .map(|p| p.take().expect("rotation delivered every origin's partial"))
+            .unzip();
+        let att = merge_partials(&outs_v, &lses_v);
+        job.tm.merge_s += sw.lap();
+        job.hidden = self.backend.decode_post(job.li, &job.hidden, &att)?;
+        job.tm.post_s += sw.lap();
+        job.li += 1;
+        job.qround = 0;
+        Ok(())
     }
 
     /// Retire a finished decode job: advance position bookkeeping, produce
@@ -535,11 +648,34 @@ impl HostWorker {
         Ok(())
     }
 
+    /// Tripwire + degenerate-topology guard for a decode command's pass
+    /// strategy: `Auto` must never reach a host (the leader resolves it so
+    /// every rank agrees — a per-rank resolution could split the fabric),
+    /// and a fixed `PassQ` on a non-distributed method or a single-host
+    /// cluster degrades to the collective-free gather path.
+    fn resolve_strategy(&self, strategy: PassStrategy, method: AttnMethod)
+                        -> Result<PassStrategy> {
+        if strategy == PassStrategy::Auto {
+            bail!("pass strategy Auto reached host {} unresolved (leader bug)", self.rank);
+        }
+        Ok(strategy.resolve(false, self.cfg.apb.n_hosts, method))
+    }
+
     /// Open one decode pass over a single session's chunk (the re-fed
-    /// query). Dense sessions finish immediately (no collective); the
-    /// distributed methods return a [`DecodeJob`]. All tripwires run here,
-    /// before any fabric round, identically on every host.
-    fn decode_begin(&mut self, sid: SessionId, tag: u64, tokens: &[i32]) -> Result<Begun> {
+    /// query, or — with `turn` set — a new conversation turn appended
+    /// against the resident `[shared | private]` cache). Dense sessions
+    /// finish immediately (no collective); the distributed methods return
+    /// a [`DecodeJob`] riding the resolved `strategy`'s collective. All
+    /// tripwires run here, before any fabric round, identically on every
+    /// host.
+    fn decode_begin(
+        &mut self,
+        sid: SessionId,
+        tag: u64,
+        tokens: &[i32],
+        strategy: PassStrategy,
+        turn: bool,
+    ) -> Result<Begun> {
         // A session mid-prefill has a partially filled KV slot; decoding it
         // would produce plausible-but-wrong logits. Checked before any
         // collective (machine maps are identical on every host).
@@ -547,6 +683,13 @@ impl HostWorker {
             bail!("session {sid} has a prefill in flight: cannot decode yet");
         }
         let method = self.ensure_session(sid)?;
+        let strategy = self.resolve_strategy(strategy, method)?;
+        if turn {
+            // New conversation turn: record the boundary before any of the
+            // turn's KV lands, so the marks partition the private tail by
+            // turn (`docs/ADR-007-adaptive-decode.md`).
+            self.pool.get_mut(sid)?.mark_turn();
+        }
         if !method.distributed_decode() {
             let (logits, timing) = self.decode_pass_dense(sid, tokens)?;
             return Ok(Begun::Done(Resp::StepDone { host: self.rank, sid, logits, timing }));
@@ -561,10 +704,14 @@ impl HostWorker {
         Ok(Begun::Job(DecodeJob {
             kind: JobKind::Chunk { sid, n_rows: tokens.len() },
             tag,
+            strategy,
             hidden,
             positions,
             li: 0,
             awaiting: None,
+            qround: 0,
+            parts: Vec::new(),
+            carry: None,
             tm,
             t0,
         }))
@@ -581,6 +728,7 @@ impl HostWorker {
         &mut self,
         tag: u64,
         entries: Vec<(SessionId, i32)>,
+        strategy: PassStrategy,
     ) -> Result<Begun> {
         // Strict residency: decoding a cleared (or never-admitted) session
         // is a scheduler bug; silently resurrecting an empty cache would
@@ -609,6 +757,8 @@ impl HostWorker {
                 );
             }
         }
+        let strategy =
+            self.resolve_strategy(strategy, self.sessions[&entries[0].0].method)?;
         if !distributed {
             let (logits, timing) = self.decode_batch_dense(&entries)?;
             return Ok(Begun::Done(Resp::BatchDone { host: self.rank, logits, timing }));
@@ -624,10 +774,14 @@ impl HostWorker {
         Ok(Begun::Job(DecodeJob {
             kind: JobKind::Batch { entries },
             tag,
+            strategy,
             hidden,
             positions,
             li: 0,
             awaiting: None,
+            qround: 0,
+            parts: Vec::new(),
+            carry: None,
             tm,
             t0,
         }))

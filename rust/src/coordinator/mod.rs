@@ -18,10 +18,18 @@
 //!   Dense prefill (exactness anchor): the whole [query | document]
 //!     sequence on host 0, plain causal attention, no communication.
 //!   decode (Algorithm 3, per layer):
-//!     decode_pre → per-host decode_attn(+LSE) → Gather → online-softmax
-//!     merge → decode_post; greedy next-token on the last host. Dense
-//!     sessions instead decode entirely on host 0 (its cache holds every
-//!     key) with no collective.
+//!     decode_pre → per-host decode_attn(+LSE) → merge collective →
+//!     online-softmax merge → decode_post; greedy next-token on the last
+//!     host. The merge collective is strategy-selected per round
+//!     (`docs/ADR-007-adaptive-decode.md`): **pass-KV** gathers every
+//!     rank's (out, lse) partial in one `att` AllGather; **pass-Q**
+//!     rotates the partials around the `qring` ring in `n_hosts - 1`
+//!     context-length-independent rounds; **Auto** resolves per round from
+//!     session warmth (prefix-store hits, multi-turn follow-ups) —
+//!     leader-side, so the choice is rank-uniform by construction. Both
+//!     strategies fold bit-identical partials in the identical rank order.
+//!     Dense sessions instead decode entirely on host 0 (its cache holds
+//!     every key) with no collective.
 //!
 //! **Drivers** (`docs/ADR-004-threaded-hosts.md`): every leader→host
 //! command travels as one transport-shaped [`Envelope`] and both drivers
@@ -76,8 +84,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use std::collections::HashMap;
+
 use crate::cluster::Interconnect;
-use crate::config::{ApbOptions, AttnMethod, Config};
+use crate::config::{ApbOptions, AttnMethod, Config, PassStrategy};
 use crate::util::tensor::Tensor;
 
 pub use crate::kvcache::{PoolStats, SessionId};
@@ -124,12 +134,19 @@ pub enum Cmd {
     PrefillChunk { chunk_idx: usize },
     /// Report this host's KV-pool accounting (`Resp::PoolStats`).
     PoolStats,
-    /// Process the re-fed query chunk (decode path, n = l_q).
-    QueryChunk { tokens: Arc<Vec<i32>> },
+    /// Process the re-fed query chunk (decode path, n = l_q) — or, with
+    /// `turn` set, a new conversation turn appended against the session's
+    /// resident `[shared | private]` cache (the multi-turn incremental
+    /// re-prefill; the host records the turn boundary in its KV cache).
+    /// `strategy` is the leader-resolved decode pass strategy (never
+    /// `Auto` — resolution must be rank-uniform, so it happens once,
+    /// leader-side).
+    QueryChunk { tokens: Arc<Vec<i32>>, strategy: PassStrategy, turn: bool },
     /// One continuous-batching decode step: one (session, previous token)
     /// entry per active session, executed as a single stacked backend pass
-    /// per layer. The envelope's tag is the leader's [`batch_tag`] digest.
-    DecodeBatch { entries: Arc<Vec<(SessionId, i32)>> },
+    /// per layer. The envelope's tag is the leader's [`batch_tag`] digest;
+    /// `strategy` is leader-resolved like `QueryChunk`'s.
+    DecodeBatch { entries: Arc<Vec<(SessionId, i32)>>, strategy: PassStrategy },
     /// Drop the envelope session's state (KV slot + positions).
     Clear,
     /// Drop every session (between serving phases / legacy callers).
@@ -268,11 +285,28 @@ enum Link {
     },
 }
 
+/// Leader-side adaptive-chooser state for one session
+/// (`docs/ADR-007-adaptive-decode.md`): whether its KV became resident
+/// without a full document pass (prefix-store hit), how many conversation
+/// turns it has appended, the attention method it was admitted under, and
+/// any per-request strategy override from `ApbOptions::pass_strategy`.
+#[derive(Debug, Clone, Copy)]
+struct SessionMeta {
+    prefix_hit: bool,
+    turns: u32,
+    method: AttnMethod,
+    strategy: Option<PassStrategy>,
+}
+
 pub struct Cluster {
     pub cfg: Config,
     pub fabric: Arc<Interconnect>,
     driver: Driver,
     link: Link,
+    /// Per-session [`SessionMeta`] feeding [`PassStrategy::Auto`]
+    /// resolution. `RefCell` for the same reason as the sequential
+    /// workers: the leader is the only caller.
+    decode_meta: RefCell<HashMap<SessionId, SessionMeta>>,
     /// At most ONE prefill may be in flight per cluster: the ring machine
     /// keeps posted-but-incomplete fabric rounds across chunk steps, so a
     /// second interleaved prefill would join those rounds with a different
@@ -491,7 +525,8 @@ pub struct GenReport {
     pub comm_bytes: u64,
 }
 
-/// Leader-side report for one session's query-chunk decode pass.
+/// Leader-side report for one session's query-chunk decode pass (or one
+/// multi-turn append via [`Cluster::append_turn`]).
 #[derive(Debug, Clone)]
 pub struct ChunkReport {
     pub sid: SessionId,
@@ -500,6 +535,12 @@ pub struct ChunkReport {
     pub per_host: Vec<DecodeTiming>,
     pub wall_seconds: f64,
     pub comm_bytes: u64,
+    /// The resolved pass strategy this round rode (never `Auto`).
+    pub strategy: PassStrategy,
+    /// This round's bytes on the pass-KV `att` AllGather.
+    pub att_bytes: u64,
+    /// This round's bytes on the pass-Q `qring` rotation.
+    pub qring_bytes: u64,
 }
 
 /// Leader-side report for one continuous-batching decode step.
@@ -510,6 +551,12 @@ pub struct StepBatchReport {
     pub per_host: Vec<DecodeTiming>,
     pub wall_seconds: f64,
     pub comm_bytes: u64,
+    /// The resolved pass strategy this step rode (never `Auto`).
+    pub strategy: PassStrategy,
+    /// This step's bytes on the pass-KV `att` AllGather.
+    pub att_bytes: u64,
+    /// This step's bytes on the pass-Q `qring` rotation.
+    pub qring_bytes: u64,
 }
 
 /// Token layout a host receives for one prefill, per attention method:
@@ -624,6 +671,7 @@ impl Cluster {
             fabric,
             driver,
             link,
+            decode_meta: RefCell::new(HashMap::new()),
             prefill_slot: Arc::new(Mutex::new(None)),
         })
     }
@@ -754,6 +802,18 @@ impl Cluster {
         match self.prefill_begin_inner(sid, doc, query, opts) {
             Ok(mut p) => {
                 p.permit = Some(permit);
+                // Seed the adaptive chooser: a prefix-store hit admits the
+                // session warm (its KV is resident without a document
+                // pass); turns accrue through `append_turn`.
+                self.decode_meta.borrow_mut().insert(
+                    sid,
+                    SessionMeta {
+                        prefix_hit: p.prefix_hit,
+                        turns: 0,
+                        method: opts.method,
+                        strategy: opts.pass_strategy,
+                    },
+                );
                 Ok(p)
             }
             Err(e) => {
@@ -1036,15 +1096,93 @@ impl Cluster {
         Ok(stats)
     }
 
+    /// Resolve the pass strategy for one decode round over `sids`
+    /// (`docs/ADR-007-adaptive-decode.md`). Precedence: a per-request
+    /// override (`ApbOptions::pass_strategy`) applies when every session
+    /// in the round carries the same one; otherwise the cluster default
+    /// (`Config::pass_strategy`) governs. `Auto` resolves to pass-Q only
+    /// when EVERY session in the round is warm — KV resident via a
+    /// prefix-store hit or an earlier appended turn (`turn_append` marks
+    /// the round itself as a follow-up over resident KV) — so a mixed
+    /// round pays the gather and the choice stays batch-uniform. Never
+    /// returns `Auto`: resolution is leader-side precisely so every rank
+    /// rides the same collective.
+    fn resolve_strategy(&self, sids: &[SessionId], turn_append: bool) -> PassStrategy {
+        let meta = self.decode_meta.borrow();
+        let mut warm = !sids.is_empty();
+        let mut method = self.cfg.method;
+        let mut overrides: Vec<Option<PassStrategy>> = Vec::with_capacity(sids.len());
+        for sid in sids {
+            match meta.get(sid) {
+                Some(m) => {
+                    warm &= m.prefix_hit || m.turns > 0;
+                    method = m.method;
+                    overrides.push(m.strategy);
+                }
+                None => {
+                    warm = false;
+                    overrides.push(None);
+                }
+            }
+        }
+        let warm = warm || turn_append;
+        let chosen = match overrides.first() {
+            Some(first) if overrides.iter().all(|o| o == first) => {
+                first.unwrap_or(self.cfg.pass_strategy)
+            }
+            _ => self.cfg.pass_strategy,
+        };
+        chosen.resolve(warm, self.cfg.apb.n_hosts, method)
+    }
+
     /// Re-feed a session's query chunk with exact distributed attention
     /// (Algorithm 1 lines 13–16), returning the chunk logits.
     pub fn decode_query_chunk(&self, sid: SessionId, query: &[i32]) -> Result<ChunkReport> {
         if query.len() != self.cfg.apb.query_len {
             bail!("query length {} != configured {}", query.len(), self.cfg.apb.query_len);
         }
+        self.chunk_pass(sid, query, false)
+    }
+
+    /// Append a new conversation turn to a resident session: the turn's
+    /// tokens re-prefill ONLY themselves, attending the resident
+    /// `[shared | private]` cache exactly like the re-fed query chunk (one
+    /// decode pass, self-causal on the last host), the host-side KV cache
+    /// records the turn boundary, and the session counts as warm for the
+    /// adaptive chooser from here on — a multi-turn follow-up is the
+    /// canonical pass-Q round. Fails (on every host, as backpressure) when
+    /// the turn would overflow the session's KV slot.
+    pub fn append_turn(&self, sid: SessionId, tokens: &[i32]) -> Result<ChunkReport> {
+        if tokens.is_empty() {
+            bail!("append_turn of zero tokens");
+        }
+        let report = self.chunk_pass(sid, tokens, true)?;
+        let mut meta = self.decode_meta.borrow_mut();
+        meta.entry(sid)
+            .or_insert(SessionMeta {
+                prefix_hit: false,
+                turns: 0,
+                method: self.cfg.method,
+                strategy: None,
+            })
+            .turns += 1;
+        Ok(report)
+    }
+
+    /// Shared body of [`Cluster::decode_query_chunk`] /
+    /// [`Cluster::append_turn`]: one strategy-resolved `Cmd::QueryChunk`
+    /// round over every host.
+    fn chunk_pass(&self, sid: SessionId, tokens: &[i32], turn: bool) -> Result<ChunkReport> {
+        let strategy = self.resolve_strategy(&[sid], turn);
         let bytes0 = self.fabric.meter.bytes_total();
+        let att0 = self.fabric.meter.bytes_for(Interconnect::ATT_LABEL);
+        let qring0 = self.fabric.meter.bytes_for(Interconnect::QRING_LABEL);
         let t0 = std::time::Instant::now();
-        let envs = self.fan_out(sid, sid, Cmd::QueryChunk { tokens: Arc::new(query.to_vec()) });
+        let envs = self.fan_out(
+            sid,
+            sid,
+            Cmd::QueryChunk { tokens: Arc::new(tokens.to_vec()), strategy, turn },
+        );
         let mut logits: Option<Vec<f32>> = None;
         let mut per_host = vec![DecodeTiming::default(); self.cfg.apb.n_hosts];
         for r in self.transact(envs)? {
@@ -1061,6 +1199,9 @@ impl Cluster {
             per_host,
             wall_seconds: t0.elapsed().as_secs_f64(),
             comm_bytes: self.fabric.meter.bytes_total() - bytes0,
+            strategy,
+            att_bytes: self.fabric.meter.bytes_for(Interconnect::ATT_LABEL) - att0,
+            qring_bytes: self.fabric.meter.bytes_for(Interconnect::QRING_LABEL) - qring0,
         })
     }
 
@@ -1077,12 +1218,16 @@ impl Cluster {
                 bail!("session {sid} appears twice in one decode batch");
             }
         }
+        let sids: Vec<SessionId> = entries.iter().map(|&(s, _)| s).collect();
+        let strategy = self.resolve_strategy(&sids, false);
         let bytes0 = self.fabric.meter.bytes_total();
+        let att0 = self.fabric.meter.bytes_for(Interconnect::ATT_LABEL);
+        let qring0 = self.fabric.meter.bytes_for(Interconnect::QRING_LABEL);
         let t0 = std::time::Instant::now();
         let envs = self.fan_out(
             0,
             batch_tag(entries),
-            Cmd::DecodeBatch { entries: Arc::new(entries.to_vec()) },
+            Cmd::DecodeBatch { entries: Arc::new(entries.to_vec()), strategy },
         );
         let mut rows: Option<Vec<Vec<f32>>> = None;
         let mut per_host = vec![DecodeTiming::default(); self.cfg.apb.n_hosts];
@@ -1103,6 +1248,9 @@ impl Cluster {
             per_host,
             wall_seconds: t0.elapsed().as_secs_f64(),
             comm_bytes: self.fabric.meter.bytes_total() - bytes0,
+            strategy,
+            att_bytes: self.fabric.meter.bytes_for(Interconnect::ATT_LABEL) - att0,
+            qring_bytes: self.fabric.meter.bytes_for(Interconnect::QRING_LABEL) - qring0,
         })
     }
 
@@ -1114,6 +1262,7 @@ impl Cluster {
     /// is released, so the cluster keeps serving.
     pub fn clear_session(&self, sid: SessionId) -> Result<()> {
         self.transact(self.fan_out(sid, sid, Cmd::Clear))?;
+        self.decode_meta.borrow_mut().remove(&sid);
         self.release_prefill(Some(sid));
         Ok(())
     }
@@ -1123,6 +1272,7 @@ impl Cluster {
     /// drained — and the in-flight slot is released).
     pub fn clear(&self) -> Result<()> {
         self.transact(self.fan_out(0, 0, Cmd::ClearAll))?;
+        self.decode_meta.borrow_mut().clear();
         self.release_prefill(None);
         Ok(())
     }
@@ -1304,6 +1454,38 @@ mod tests {
         assert_eq!(Driver::parse("parallel"), None);
         assert_eq!(Driver::Sequential.name(), "sequential");
         assert_eq!(Driver::Threaded.name(), "threaded");
+    }
+
+    #[test]
+    fn auto_chooser_tracks_session_warmth() {
+        let cfg = fake_cfg().with_pass_strategy(PassStrategy::Auto);
+        let cluster = Cluster::start_with(&cfg, Driver::Sequential).expect("cluster");
+        let meta = |hit, turns, strategy| SessionMeta {
+            prefix_hit: hit,
+            turns,
+            method: AttnMethod::Apb,
+            strategy,
+        };
+        // Unknown session: cold, Auto pays the gather.
+        assert_eq!(cluster.resolve_strategy(&[1], false), PassStrategy::PassKv);
+        // A turn append is by definition a follow-up over resident KV.
+        assert_eq!(cluster.resolve_strategy(&[1], true), PassStrategy::PassQ);
+        cluster.decode_meta.borrow_mut().insert(1, meta(true, 0, None));
+        cluster.decode_meta.borrow_mut().insert(2, meta(false, 2, None));
+        cluster.decode_meta.borrow_mut().insert(3, meta(false, 0, None));
+        // Prefix-hit and multi-turn sessions are warm → pass-Q.
+        assert_eq!(cluster.resolve_strategy(&[1], false), PassStrategy::PassQ);
+        assert_eq!(cluster.resolve_strategy(&[2], false), PassStrategy::PassQ);
+        assert_eq!(cluster.resolve_strategy(&[1, 2], false), PassStrategy::PassQ);
+        // One cold session in the round pays the gather for everyone.
+        assert_eq!(cluster.resolve_strategy(&[1, 3], false), PassStrategy::PassKv);
+        // A uniform per-request override beats the cluster default...
+        cluster.decode_meta.borrow_mut().insert(3, meta(false, 0, Some(PassStrategy::PassQ)));
+        assert_eq!(cluster.resolve_strategy(&[3], false), PassStrategy::PassQ);
+        // ...but a split override falls back to it (here: Auto over a
+        // warm + cold pair → gather).
+        cluster.decode_meta.borrow_mut().insert(1, meta(true, 0, Some(PassStrategy::PassKv)));
+        assert_eq!(cluster.resolve_strategy(&[1, 3], false), PassStrategy::PassKv);
     }
 
     #[test]

@@ -219,8 +219,15 @@ pub struct Response {
     /// token (0.0 for single-token requests).
     pub tpot_s: f64,
     /// Decode-path communication attributed to this request (query-chunk
-    /// pass + its share of each batched step's AllGather traffic).
+    /// pass + its share of each batched step's merge traffic).
     pub decode_comm_bytes: u64,
+    /// The pass-KV slice of `decode_comm_bytes`: bytes this request's
+    /// rounds moved over the `att` AllGather
+    /// (`docs/ADR-007-adaptive-decode.md`).
+    pub decode_att_bytes: u64,
+    /// The pass-Q slice of `decode_comm_bytes`: bytes over the `qring`
+    /// rotation — per round independent of context length.
+    pub decode_qring_bytes: u64,
     /// How many resumable-prefill steps (`Cmd::PrefillChunk`) admission
     /// drove for this request — the fairness knob's observable: more chunks
     /// = finer interleaving with resident sessions' decode ticks.
@@ -330,6 +337,8 @@ struct ActiveSession {
     gen_started: Instant,
     step_seconds: Vec<f64>,
     decode_comm_bytes: u64,
+    decode_att_bytes: u64,
+    decode_qring_bytes: u64,
 }
 
 impl ActiveSession {
@@ -703,6 +712,8 @@ impl<'a> Scheduler<'a> {
             gen_started,
             step_seconds: Vec::new(),
             decode_comm_bytes: chunk.comm_bytes,
+            decode_att_bytes: chunk.att_bytes,
+            decode_qring_bytes: chunk.qring_bytes,
         });
         Ok(())
     }
@@ -735,9 +746,9 @@ impl<'a> Scheduler<'a> {
         let rep = self.cluster.decode_step_batch(entries)?;
         // Exact attribution: spread the step's comm volume over the riders,
         // handing the division remainder to the first few so no bytes are
-        // dropped from the per-request totals.
+        // dropped from the per-request totals (same rule per label).
         let n = entries.len() as u64;
-        let (share, rem) = (rep.comm_bytes / n, rep.comm_bytes % n);
+        let spread = |total: u64, i: usize| total / n + u64::from((i as u64) < total % n);
         for (i, (sid, logits)) in rep.logits.iter().enumerate() {
             let s = self
                 .active
@@ -746,7 +757,9 @@ impl<'a> Scheduler<'a> {
                 .expect("batch response for unknown session");
             s.tokens.push(crate::util::tensor::Tensor::argmax_row(logits) as i32);
             s.step_seconds.push(rep.wall_seconds);
-            s.decode_comm_bytes += share + u64::from((i as u64) < rem);
+            s.decode_comm_bytes += spread(rep.comm_bytes, i);
+            s.decode_att_bytes += spread(rep.att_bytes, i);
+            s.decode_qring_bytes += spread(rep.qring_bytes, i);
         }
         Ok(())
     }
@@ -791,6 +804,8 @@ impl<'a> Scheduler<'a> {
                 preemptions: s.preemptions,
                 tpot_s,
                 decode_comm_bytes: s.decode_comm_bytes,
+                decode_att_bytes: s.decode_att_bytes,
+                decode_qring_bytes: s.decode_qring_bytes,
                 prefill_chunks: s.prefill_chunks,
             });
         }
@@ -856,6 +871,8 @@ impl<'a> Scheduler<'a> {
                 queue_wait_ticks: r.queue_wait_ticks,
                 preemptions: r.preemptions,
                 decode_comm_bytes: r.decode_comm_bytes,
+                decode_att_bytes: r.decode_att_bytes,
+                decode_qring_bytes: r.decode_qring_bytes,
             })
             .collect();
         per_request.sort_by_key(|r| r.id);
@@ -886,6 +903,8 @@ pub struct RequestFingerprint {
     pub queue_wait_ticks: u64,
     pub preemptions: usize,
     pub decode_comm_bytes: u64,
+    pub decode_att_bytes: u64,
+    pub decode_qring_bytes: u64,
 }
 
 /// Normalized, timing-free run digest (see
@@ -939,6 +958,11 @@ pub struct ServingMetrics {
     pub prefill_chunks: Summary,
     pub total_tokens: usize,
     pub decode_comm_bytes: u64,
+    /// Decode comm split by strategy label (ADR-007): bytes moved by the
+    /// pass-KV `att` AllGather vs the pass-Q `qring` rotation. They sum to
+    /// `decode_comm_bytes` (decode merges ride exactly one of the two).
+    pub decode_att_bytes: u64,
+    pub decode_qring_bytes: u64,
     /// High-water mark of sessions resident at once (0 when built from
     /// bare responses).
     pub peak_resident: usize,
@@ -1023,6 +1047,8 @@ impl ServingMetrics {
             prefill_chunks: col(&|r| r.prefill_chunks as f64),
             total_tokens: rs.iter().map(|r| r.tokens.len()).sum(),
             decode_comm_bytes: rs.iter().map(|r| r.decode_comm_bytes).sum(),
+            decode_att_bytes: rs.iter().map(|r| r.decode_att_bytes).sum(),
+            decode_qring_bytes: rs.iter().map(|r| r.decode_qring_bytes).sum(),
             peak_resident: 0,
             per_class,
             starved: rs

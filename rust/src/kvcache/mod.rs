@@ -225,6 +225,12 @@ pub struct KvCache {
     pub cache_max: usize,
     /// Attached shared prefix, if this session rides a prefix-cache hit.
     shared: Option<Arc<SharedPrefix>>,
+    /// Conversation-turn boundaries: the combined layer-0 length at the
+    /// moment each turn began ([`KvCache::mark_turn`]). Partitions the
+    /// private tail by turn for multi-turn append bookkeeping
+    /// (`docs/ADR-007-adaptive-decode.md`) and is the seam a future
+    /// copy-on-extend conversation branch would fork at.
+    turn_marks: Vec<usize>,
 }
 
 impl KvCache {
@@ -237,7 +243,24 @@ impl KvCache {
                 len: 0,
             })
             .collect();
-        KvCache { layers, cache_max, shared: None }
+        KvCache { layers, cache_max, shared: None, turn_marks: Vec::new() }
+    }
+
+    /// Record a conversation-turn boundary at the current combined layer-0
+    /// length — called BEFORE the new turn's first KV row lands, so mark
+    /// `i` is where turn `i + 1`'s rows start.
+    pub fn mark_turn(&mut self) {
+        self.turn_marks.push(self.len(0));
+    }
+
+    /// Number of recorded turn boundaries (0 for a single-turn session).
+    pub fn n_turns(&self) -> usize {
+        self.turn_marks.len()
+    }
+
+    /// The recorded turn boundaries, in append order.
+    pub fn turn_marks(&self) -> &[usize] {
+        &self.turn_marks
     }
 
     /// Valid rows of the attached shared prefix at `layer` (0 when cold).
@@ -346,6 +369,7 @@ impl KvCache {
     /// eviction; the store's copy of the prefix survives).
     pub fn clear(&mut self) {
         self.shared = None;
+        self.turn_marks.clear();
         for lc in &mut self.layers {
             lc.len = 0;
         }
@@ -796,6 +820,22 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!(c.bytes_used(), 0);
         assert_eq!(c.bytes_reserved(), 2 * 4 * 1 * 2 * 4);
+    }
+
+    #[test]
+    fn turn_marks_partition_tail_and_clear_with_cache() {
+        let mut c = KvCache::new(1, 8, 1, 2);
+        assert_eq!(c.n_turns(), 0);
+        c.append(0, &rows(3, 1, 2, 0.0), &rows(3, 1, 2, 0.0)).unwrap();
+        // Mark BEFORE the turn's rows land: the mark is where they start.
+        c.mark_turn();
+        c.append(0, &rows(2, 1, 2, 0.0), &rows(2, 1, 2, 0.0)).unwrap();
+        c.mark_turn();
+        c.append(0, &rows(1, 1, 2, 0.0), &rows(1, 1, 2, 0.0)).unwrap();
+        assert_eq!(c.turn_marks(), &[3, 5]);
+        assert_eq!(c.n_turns(), 2);
+        c.clear();
+        assert_eq!(c.n_turns(), 0, "marks die with the cache rows");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B};
 use apb::bench_harness::Table;
 use apb::cluster::Interconnect;
-use apb::config::{ApbOptions, AttnMethod};
+use apb::config::{ApbOptions, AttnMethod, PassStrategy};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, Driver};
 use apb::util::json::{self, Json};
@@ -29,17 +29,23 @@ const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
   run      --config tiny --max-new 8 --method apb|star|ring|dense
            --driver threaded|sequential (host execution driver; default
            $APB_DRIVER or threaded)
+           --pass-strategy kv|q|auto (decode merge transport: pass-KV att
+           AllGather, pass-Q qring rotation, or the leader-side adaptive
+           chooser — bit-identical either way; docs/ADR-007)
   serve    --config tiny --requests 4 --max-new 4 --method apb|star|ring|dense
-           --driver threaded|sequential
+           --driver threaded|sequential --pass-strategy kv|q|auto
            --chunk-tokens N (prefill chunk size; smaller = finer decode
            interleaving) --prefix-cache (shared-prefix KV reuse: requests
            over one corpus skip repeat prefills) --smoke (CI gate: assert
            stall-free serving; with --prefix-cache also warm < cold TTFT)
-           --trace smoke|adversarial|poisson|bursty (drive a seeded
+           --trace smoke|adversarial|poisson|bursty|soak (drive a seeded
            workload trace through the SLO scheduler: priority classes,
            aging, preemption; prints p50/p95/p99 TTFT/TPOT + per-class
            goodput and writes BENCH_serving.json)
            --trace-seed N (reseed the trace generator)
+           --sweep 1,2,4 (with --trace: replay the trace CLOSED-LOOP at
+           each multiprogramming level and print the latency/goodput
+           curve instead of the open-loop run)
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
@@ -57,14 +63,26 @@ fn method_from(args: &Args) -> Result<AttnMethod> {
 fn print_comm(cluster: &Cluster) {
     let m = &cluster.fabric.meter;
     println!(
-        "comm: kv {} B / {} rounds | ring {} B / {} rounds | att {} B / {} rounds",
+        "comm: kv {} B / {} rounds | ring {} B / {} rounds | att {} B / {} rounds \
+         | qring {} B / {} rounds",
         m.bytes_for(Interconnect::KV_LABEL),
         m.rounds_for(Interconnect::KV_LABEL),
         m.bytes_for(Interconnect::RING_LABEL),
         m.rounds_for(Interconnect::RING_LABEL),
         m.bytes_for(Interconnect::ATT_LABEL),
         m.rounds_for(Interconnect::ATT_LABEL),
+        m.bytes_for(Interconnect::QRING_LABEL),
+        m.rounds_for(Interconnect::QRING_LABEL),
     );
+}
+
+/// Resolve the decode pass strategy from `--pass-strategy`
+/// (`docs/ADR-007-adaptive-decode.md`); the pass-KV gather is the default.
+fn strategy_from(args: &Args) -> Result<PassStrategy> {
+    match args.get("pass-strategy") {
+        Some(s) => PassStrategy::parse(s),
+        None => Ok(PassStrategy::PassKv),
+    }
 }
 
 /// Resolve the host execution driver from `--driver`, falling back to the
@@ -128,7 +146,9 @@ fn default_request(cfg: &apb::config::Config, seed: u64) -> (Vec<i32>, Vec<i32>)
 
 fn run(args: &Args) -> Result<()> {
     let method = method_from(args)?;
-    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?.with_method(method);
+    let cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?
+        .with_method(method)
+        .with_pass_strategy(strategy_from(args)?);
     let cluster = Cluster::start_with(&cfg, driver_from(args)?)?;
     let (doc, query) = default_request(&cfg, args.usize_or("seed", 1)? as u64);
     let opts = ApbOptions { method, ..Default::default() };
@@ -148,7 +168,8 @@ fn serve(args: &Args) -> Result<()> {
     let prefix_cache = args.has("prefix-cache");
     let mut cfg = apb::load_config_or_sim(&args.str_or("config", "tiny"))?
         .with_method(method)
-        .with_prefix_cache(prefix_cache);
+        .with_prefix_cache(prefix_cache)
+        .with_pass_strategy(strategy_from(args)?);
     // Cluster-wide chunked-prefill granularity (per-request overrides ride
     // on ApbOptions::chunk_tokens).
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
@@ -270,6 +291,42 @@ fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Res
         spec.n_requests = args.usize_or("requests", spec.n_requests)?;
     }
     let trace = workload::generate(cfg, &spec)?;
+    if args.get("sweep").is_some() {
+        // Closed-loop latency/goodput sweep: replay the trace at each
+        // multiprogramming level on a fresh scheduler (prefix-store
+        // warmth persists across points, as across a real soak's phases).
+        let levels = args.usize_list_or("sweep", &[1, 2, 4])?;
+        let points = workload::sweep_closed_loop(
+            cluster, args.usize_or("queue", 64)?, &trace, &levels,
+        )?;
+        let mut table = Table::new(
+            &format!("closed-loop sweep, trace '{}' (seed {})", spec.name, spec.seed),
+            &["level", "done", "ticks", "tokens", "goodput tok/tick",
+              "ttft ticks p50", "p95", "slo frac"],
+        );
+        for p in &points {
+            table.row(vec![
+                p.concurrency.to_string(),
+                p.completed.to_string(),
+                p.final_tick.to_string(),
+                p.total_tokens.to_string(),
+                format!("{:.3}", p.goodput_tok_per_tick),
+                format!("{:.0}", p.ttft_ticks_p50),
+                format!("{:.0}", p.ttft_ticks_p95),
+                format!("{:.2}", p.slo_fraction),
+            ]);
+        }
+        table.print();
+        if args.has("smoke") {
+            for p in &points {
+                anyhow::ensure!(p.completed == trace.arrivals.len(),
+                                "smoke: level {} completed {} of {}",
+                                p.concurrency, p.completed, trace.arrivals.len());
+            }
+            println!("apb serve --trace {} --sweep --smoke OK", spec.name);
+        }
+        return Ok(());
+    }
     let mut sched = Scheduler::new(cluster, args.usize_or("queue", 64)?);
     let done = workload::run_trace(&mut sched, &trace)?;
     let m = sched.metrics();
@@ -287,6 +344,10 @@ fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Res
     println!(
         "peak resident {} | preemptions {} | starved {} | prefix hits {}",
         m.peak_resident, m.preemptions_total, m.starved, m.prefix_hits
+    );
+    println!(
+        "decode comm split (strategy {}): att {} B | qring {} B",
+        cfg.pass_strategy.name(), m.decode_att_bytes, m.decode_qring_bytes
     );
     let mut class_rows: Vec<Json> = Vec::new();
     for c in &m.per_class {
@@ -326,6 +387,9 @@ fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Res
         ("starved", json::num(m.starved as f64)),
         ("prefix_hits", json::num(m.prefix_hits as f64)),
         ("prefix_bytes_saved", json::num(m.prefix_bytes_saved as f64)),
+        ("pass_strategy", json::s(cfg.pass_strategy.name())),
+        ("decode_att_bytes", json::num(m.decode_att_bytes as f64)),
+        ("decode_qring_bytes", json::num(m.decode_qring_bytes as f64)),
         ("ttft_ticks_p50", json::num(m.ttft_ticks.p50)),
         ("ttft_ticks_p95", json::num(m.ttft_ticks.p95)),
         ("ttft_ticks_p99", json::num(m.ttft_ticks.p99)),
@@ -344,8 +408,11 @@ fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Res
         // starves (every short request reached its first token within the
         // policy budget even with a block-scale prefill in flight), and
         // every request went through chunked admission.
-        anyhow::ensure!(done == spec.n_requests,
-                        "smoke: {done} of {} trace requests completed", spec.n_requests);
+        // Follow-up turns make `arrivals` exceed `n_requests` on multi-turn
+        // specs (`soak`): gate on the expanded trace, not the spec knob.
+        anyhow::ensure!(done == trace.arrivals.len(),
+                        "smoke: {done} of {} trace arrivals completed",
+                        trace.arrivals.len());
         anyhow::ensure!(m.starved == 0, "smoke: {} requests starved", m.starved);
         anyhow::ensure!(m.prefill_chunks.min >= 1.0,
                         "smoke: a request bypassed chunked admission");

@@ -1,6 +1,8 @@
 //! Report emission: every bench prints its paper-style table/figure AND
 //! appends a machine-readable JSON record under `target/apb-reports/`, so
-//! EXPERIMENTS.md can cite stable artifacts.
+//! the committed bench artifacts (`BENCH_prefill.json`,
+//! `BENCH_runtime.json`, `BENCH_serving.json`, `BENCH_decode.json`) cite
+//! stable, regenerable sources.
 
 use std::io::Write;
 use std::path::PathBuf;

@@ -234,6 +234,15 @@ pub trait ExecBackend {
     /// padded local KV cache, returning `(out, lse)` for the online-softmax
     /// merge. If `self_causal`, the chunk's own KV has been appended and row
     /// `i` sees `j < cache_len - (n-1-i)`; otherwise `j < cache_len`.
+    ///
+    /// The `(out, lse)` pair is the decode attention *partial*: the unit
+    /// both merge collectives move. Pass-KV AllGathers one partial per
+    /// rank; pass-Q rotates the same partials around the `qring`
+    /// (`docs/ADR-007-adaptive-decode.md`). Either way the coordinator
+    /// folds them with `util::tensor::merge_partials` in rank order, so a
+    /// backend must produce partials whose value does NOT depend on which
+    /// collective carries them — that is the bit-identity invariant
+    /// `rust/tests/pass_strategy.rs` pins across strategies.
     fn decode_attn(
         &self,
         q: &Tensor,
@@ -284,7 +293,9 @@ pub trait ExecBackend {
     /// row per session; row `i` attends its own session's [`KvView`] (all
     /// valid rows visible — the row's own KV, if any, has already been
     /// appended by the caller). Returns stacked
-    /// `(out [B, h, hd], lse [B, h])`.
+    /// `(out [B, h, hd], lse [B, h])` — per-session partials that merge
+    /// across ranks exactly like [`ExecBackend::decode_attn`]'s, under
+    /// either pass strategy.
     ///
     /// The default implementation slices per row through
     /// [`ExecBackend::decode_attn_view`]; backends that can fuse the batch

@@ -2,7 +2,8 @@
 //! produced by `python/compile/aot.py`, compile them on the CPU PJRT client,
 //! and execute them from the coordinator hot path through [`ExecBackend`].
 //!
-//! Two deliberate performance choices (EXPERIMENTS.md §Perf):
+//! Two deliberate performance choices (measured in the committed bench
+//! artifacts, `BENCH_runtime.json` / `BENCH_decode.json`):
 //!  * model weights are uploaded to device buffers ONCE per engine and
 //!    executables run through `execute_b`, so the per-call cost is only the
 //!    activation transfers;
@@ -17,8 +18,8 @@
 //! path staged the hidden buffer once per layer (shared by layer_pre and
 //! layer_post) and loop-invariant scalars (pos / pass_len / n_anchor) once
 //! per pass; the typed stage methods re-upload them per call. That costs
-//! O(n_layers) extra host-to-device transfers per pass versus the §Perf
-//! iter 1 numbers in EXPERIMENTS.md. Recover it, if it matters again, by
+//! O(n_layers) extra host-to-device transfers per pass versus the
+//! pre-trait `BENCH_runtime.json` numbers. Recover it, if it matters again, by
 //! adding staged-buffer caching inside this backend (keyed on the hidden
 //! pointer / scalar value), not by widening the trait.
 

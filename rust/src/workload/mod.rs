@@ -35,6 +35,18 @@
 //! pair (hit after its first cold use) with identical options. Long
 //! requests always draw fresh documents — block-scale contexts are
 //! assumed unique.
+//!
+//! ## Multi-turn follow-ups and closed-loop sweeps
+//!
+//! A spec with `follow_up_rate > 0` (the `soak` spec) additionally emits
+//! follow-up turns: replays of an earlier short request's exact
+//! (doc, query) pair after a think-time gap, modeling multi-turn
+//! conversations. Follow-ups hit the prefix store wholesale, so they are
+//! the warm traffic the adaptive decode chooser
+//! (`docs/ADR-007-adaptive-decode.md`) steers on. Besides the open-loop
+//! [`run_trace`], [`run_trace_closed_loop`] holds a fixed
+//! multiprogramming level and [`sweep_closed_loop`] maps out the
+//! latency/goodput curve across levels.
 
 use anyhow::{bail, Result};
 
@@ -87,6 +99,16 @@ pub struct TraceSpec {
     /// Class weights for short requests, indexed by [`Class::index`]
     /// (long requests are always [`Class::Batch`]).
     pub class_weights: [f64; 3],
+    /// Probability a short request spawns a follow-up turn: a later
+    /// arrival replaying the SAME (doc, query) pair, modeling a
+    /// multi-turn conversation at trace granularity. The replay hits the
+    /// prefix store wholesale, so follow-up traffic is what steers the
+    /// adaptive decode chooser (`docs/ADR-007-adaptive-decode.md`) toward
+    /// pass-Q under sustained load.
+    pub follow_up_rate: f64,
+    /// Think-time gap, in ticks, between a request's arrival and its
+    /// follow-up turn.
+    pub follow_up_gap_ticks: u64,
 }
 
 impl TraceSpec {
@@ -112,6 +134,8 @@ impl TraceSpec {
                 prefix_hit_rate: 0.5,
                 corpus_size: 2,
                 class_weights: [0.5, 0.5, 0.0],
+                follow_up_rate: 0.0,
+                follow_up_gap_ticks: 0,
             }),
             // The starvation-freedom stressor: longs front-loaded in
             // bursts so every short request arrives BEHIND a block-scale
@@ -130,6 +154,8 @@ impl TraceSpec {
                 prefix_hit_rate: 0.25,
                 corpus_size: 2,
                 class_weights: [0.6, 0.4, 0.0],
+                follow_up_rate: 0.0,
+                follow_up_gap_ticks: 0,
             }),
             // Steady open-loop traffic, mostly short, occasional long.
             "poisson" => Some(TraceSpec {
@@ -146,6 +172,8 @@ impl TraceSpec {
                 prefix_hit_rate: 0.4,
                 corpus_size: 3,
                 class_weights: [0.4, 0.5, 0.1],
+                follow_up_rate: 0.0,
+                follow_up_gap_ticks: 0,
             }),
             // Closed bursts with idle valleys — exercises advance_to's
             // clock jumps and queue drain between bursts.
@@ -163,13 +191,37 @@ impl TraceSpec {
                 prefix_hit_rate: 0.3,
                 corpus_size: 2,
                 class_weights: [0.3, 0.5, 0.2],
+                follow_up_rate: 0.0,
+                follow_up_gap_ticks: 0,
+            }),
+            // Soak scale: thousands of base requests with multi-turn
+            // follow-up arrivals riding a shared corpus. Sized for the
+            // closed-loop goodput sweep ([`sweep_closed_loop`]) and for
+            // exercising the adaptive decode chooser against a realistic
+            // warm/cold mix — NOT for the CI smoke gate.
+            "soak" => Some(TraceSpec {
+                name: "soak",
+                seed: 0x50AC_50AC,
+                n_requests: 2000,
+                arrival: Arrival::Poisson { mean_gap_ticks: 1.5 },
+                mix: LengthMix {
+                    long_fraction: 0.05,
+                    long_chunk_tokens: 2,
+                    short_max_new: (1, 4),
+                    long_max_new: (4, 8),
+                },
+                prefix_hit_rate: 0.3,
+                corpus_size: 8,
+                class_weights: [0.4, 0.5, 0.1],
+                follow_up_rate: 0.35,
+                follow_up_gap_ticks: 24,
             }),
             _ => None,
         }
     }
 
     /// The named specs [`TraceSpec::by_name`] accepts.
-    pub const NAMES: [&'static str; 4] = ["smoke", "adversarial", "poisson", "bursty"];
+    pub const NAMES: [&'static str; 5] = ["smoke", "adversarial", "poisson", "bursty", "soak"];
 }
 
 /// One trace entry: the fully built request and the scheduler tick it
@@ -181,6 +233,11 @@ pub struct TracedRequest {
     /// Whether this request replays a shared-corpus pair (every replay
     /// after the pair's first use hits the prefix store when enabled).
     pub shares_corpus: bool,
+    /// Whether this arrival is a follow-up turn: a replay of an earlier
+    /// request's exact (doc, query) pair after a think-time gap. Always a
+    /// prefix-store hit once its parent has run, so follow-up traffic
+    /// reads as warm to the adaptive decode chooser.
+    pub follow_up: bool,
 }
 
 /// A materialized workload: tick-stamped requests in arrival order.
@@ -275,7 +332,32 @@ pub fn generate(cfg: &Config, spec: &TraceSpec) -> Result<Trace> {
             at_tick,
             req: Request { id: i as u64, doc, query, max_new, opts, class },
             shares_corpus,
+            follow_up: false,
         });
+    }
+    // Multi-turn follow-ups: replay a short request's exact (doc, query)
+    // pair after a think-time gap. The digest covers the whole pair, so
+    // every follow-up hits the prefix store once its parent has run —
+    // this is the warm traffic the adaptive decode chooser keys on.
+    if spec.follow_up_rate > 0.0 {
+        let mut follow_ups = Vec::new();
+        for a in &arrivals {
+            if a.req.opts.chunk_tokens.is_none() && rng.f64() < spec.follow_up_rate {
+                follow_ups.push(TracedRequest {
+                    at_tick: a.at_tick + spec.follow_up_gap_ticks,
+                    req: a.req.clone(),
+                    shares_corpus: a.shares_corpus,
+                    follow_up: true,
+                });
+            }
+        }
+        arrivals.extend(follow_ups);
+        // Stable sort keeps parent-before-follow-up at equal ticks; ids
+        // are reassigned so every submission stays unique.
+        arrivals.sort_by_key(|a| a.at_tick);
+        for (i, a) in arrivals.iter_mut().enumerate() {
+            a.req.id = i as u64;
+        }
     }
     Ok(Trace { spec: spec.clone(), arrivals })
 }
@@ -321,6 +403,103 @@ pub fn run_trace(sched: &mut Scheduler<'_>, trace: &Trace) -> Result<usize> {
     Ok(sched.completed.len() - before)
 }
 
+/// Closed-loop replay: ignore the trace's arrival clock and instead hold
+/// the multiprogramming level at `concurrency` — submit the next request
+/// the moment the number of outstanding requests (queued + resident +
+/// parked) drops below the level, and never idle while work remains.
+/// This is the load-generator dual of [`run_trace`]'s open loop: latency
+/// vs goodput as a function of offered concurrency rather than of an
+/// arrival process. Deterministic for a fixed (trace, level). Returns how
+/// many requests completed.
+pub fn run_trace_closed_loop(
+    sched: &mut Scheduler<'_>,
+    trace: &Trace,
+    concurrency: usize,
+) -> Result<usize> {
+    if concurrency == 0 {
+        bail!("closed-loop replay needs concurrency >= 1");
+    }
+    let before = sched.completed.len();
+    let mut next = 0usize;
+    loop {
+        while next < trace.arrivals.len()
+            && sched.queued() + sched.resident() + sched.parked_count() < concurrency
+        {
+            match sched.submit(trace.arrivals[next].req.clone()) {
+                Ok(()) => next += 1,
+                // Admission queue smaller than the level: let it drain.
+                Err(_) => break,
+            }
+        }
+        let progressed = sched.step()?;
+        if !progressed {
+            if next >= trace.arrivals.len() && sched.queued() == 0 {
+                break;
+            }
+            // The window is full of parked work waiting on the clock
+            // (aging, starvation budgets): advance it one tick so the
+            // loop can make progress instead of spinning.
+            sched.advance_to(sched.tick() + 1);
+        }
+    }
+    Ok(sched.completed.len() - before)
+}
+
+/// One operating point from [`sweep_closed_loop`]: the trace replayed at
+/// a fixed multiprogramming level.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Multiprogramming level held by the closed loop.
+    pub concurrency: usize,
+    pub completed: usize,
+    /// Scheduler tick when the last request retired.
+    pub final_tick: u64,
+    pub total_tokens: usize,
+    /// Decode tokens delivered per scheduler tick at this level — the
+    /// goodput axis of the latency/goodput curve.
+    pub goodput_tok_per_tick: f64,
+    pub ttft_ticks_p50: f64,
+    pub ttft_ticks_p95: f64,
+    /// Fraction of requests that met their class TTFT SLO.
+    pub slo_fraction: f64,
+}
+
+/// Replay `trace` closed-loop at each multiprogramming level in `levels`,
+/// each on a fresh [`Scheduler`] over the same cluster (prefix-store
+/// warmth carries across points, as it would across the phases of a real
+/// soak), and report the latency/goodput curve. Levels run in the given
+/// order; the whole sweep is deterministic for a fixed (cluster state,
+/// trace, levels).
+pub fn sweep_closed_loop(
+    cluster: &crate::coordinator::Cluster,
+    max_queue: usize,
+    trace: &Trace,
+    levels: &[usize],
+) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::with_capacity(levels.len());
+    for &level in levels {
+        let mut sched = Scheduler::new(cluster, max_queue);
+        let completed = run_trace_closed_loop(&mut sched, trace, level)?;
+        let m = sched.metrics();
+        let slo_met: usize = m.per_class.iter().map(|c| c.slo_met).sum();
+        points.push(SweepPoint {
+            concurrency: level,
+            completed,
+            final_tick: sched.tick(),
+            total_tokens: m.total_tokens,
+            goodput_tok_per_tick: m.total_tokens as f64 / sched.tick().max(1) as f64,
+            ttft_ticks_p50: m.ttft_ticks.p50,
+            ttft_ticks_p95: m.ttft_ticks.p95,
+            slo_fraction: if m.n_requests == 0 {
+                1.0
+            } else {
+                slo_met as f64 / m.n_requests as f64
+            },
+        });
+    }
+    Ok(points)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,7 +514,12 @@ mod tests {
             let spec = TraceSpec::by_name(name).expect("named spec");
             let a = generate(&cfg(), &spec).unwrap();
             let b = generate(&cfg(), &spec).unwrap();
-            assert_eq!(a.arrivals.len(), spec.n_requests);
+            // Follow-up turns ride on top of the base request count.
+            assert!(a.arrivals.len() >= spec.n_requests);
+            if spec.follow_up_rate == 0.0 {
+                assert_eq!(a.arrivals.len(), spec.n_requests);
+            }
+            assert_eq!(a.arrivals.len(), b.arrivals.len());
             for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
                 assert_eq!(x.at_tick, y.at_tick, "{name}: arrival clock diverged");
                 assert_eq!(x.req.doc, y.req.doc, "{name}: doc tokens diverged");
@@ -405,6 +589,66 @@ mod tests {
             distinct.len(),
             spec.corpus_size
         );
+    }
+
+    #[test]
+    fn soak_spec_is_soak_scale_with_follow_up_turns() {
+        let spec = TraceSpec::by_name("soak").expect("soak spec");
+        assert!(spec.n_requests >= 1000, "soak means thousands of requests");
+        let trace = generate(&cfg(), &spec).unwrap();
+        assert!(trace.arrivals.len() > spec.n_requests, "soak must emit follow-up turns");
+        // Ids stay unique and dense after the follow-up merge, and the
+        // clock stays monotone.
+        let mut last = 0;
+        for (i, a) in trace.arrivals.iter().enumerate() {
+            assert_eq!(a.req.id, i as u64, "ids must be reassigned after sorting");
+            assert!(a.at_tick >= last);
+            last = a.at_tick;
+        }
+        // Every follow-up replays an EARLIER arrival's exact pair —
+        // that verbatim reuse is what makes it a prefix-store hit and
+        // hence warm traffic for the decode chooser.
+        let n_follow = trace.arrivals.iter().filter(|a| a.follow_up).count();
+        assert!(n_follow > 0);
+        for f in trace.arrivals.iter().filter(|a| a.follow_up) {
+            assert!(f.req.opts.chunk_tokens.is_none(), "only shorts get follow-ups");
+            let parent = trace.arrivals.iter().any(|p| {
+                !p.follow_up
+                    && p.at_tick + spec.follow_up_gap_ticks == f.at_tick
+                    && p.req.doc == f.req.doc
+                    && p.req.query == f.req.query
+            });
+            assert!(parent, "follow-up without a matching earlier arrival");
+        }
+    }
+
+    #[test]
+    fn closed_loop_sweep_reports_latency_and_goodput() {
+        use crate::coordinator::{Cluster, Driver};
+        // Small trace with follow-ups so the sweep sees warm turns.
+        let spec = TraceSpec {
+            follow_up_rate: 0.5,
+            follow_up_gap_ticks: 8,
+            ..TraceSpec::by_name("smoke").unwrap()
+        };
+        let c = cfg();
+        let trace = generate(&c, &spec).unwrap();
+        let cluster = Cluster::start_with(&c, Driver::Sequential).expect("cluster");
+        let points = sweep_closed_loop(&cluster, 64, &trace, &[1, 3]).expect("sweep");
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert_eq!(p.completed, trace.arrivals.len(), "closed loop must drain the trace");
+            assert!(p.final_tick > 0);
+            assert!(p.goodput_tok_per_tick > 0.0);
+            assert!(p.ttft_ticks_p95 >= p.ttft_ticks_p50);
+            assert!((0.0..=1.0).contains(&p.slo_fraction));
+        }
+        // Determinism: replaying the same level on a fresh cluster gives
+        // the same operating point.
+        let cluster2 = Cluster::start_with(&c, Driver::Sequential).expect("cluster");
+        let again = sweep_closed_loop(&cluster2, 64, &trace, &[1]).expect("sweep");
+        assert_eq!(again[0].final_tick, points[0].final_tick);
+        assert_eq!(again[0].total_tokens, points[0].total_tokens);
     }
 
     #[test]

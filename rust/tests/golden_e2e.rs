@@ -165,6 +165,75 @@ fn sim_cross_host_merge_consistency() {
     assert!(diff > 1e-6, "different queries must change the merged logits");
 }
 
+#[test]
+fn sim_decode_comm_is_value_exact_per_label() {
+    // Value-level decode comm audit (`docs/ADR-007-adaptive-decode.md`):
+    // a full `generate` is one query-chunk pass plus `max_new - 1`
+    // single-token steps, and each layer of each pass moves exactly one
+    // (out, lse) partial per rank — on the `att` AllGather under pass-KV
+    // (1 post per rank per layer), on the `qring` rotation under pass-Q
+    // (n-1 posts per rank per layer, same partial unit). Asserted to the
+    // byte and to the round, not just nonzero.
+    use apb::cluster::Interconnect;
+    use apb::config::PassStrategy;
+    let base = Config::sim_tiny();
+    let mut rng = apb::util::rng::Rng::new(17);
+    let doc: Vec<i32> = (0..base.apb.doc_len())
+        .map(|_| rng.range(1, base.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..base.apb.query_len)
+        .map(|_| rng.range(1, base.model.vocab_size as i64) as i32)
+        .collect();
+    let (n, layers) = (base.apb.n_hosts, base.model.n_layers);
+    // One f32 (out, lse) partial row: [n_heads, head_dim] + [n_heads].
+    let partial_row = (base.model.n_heads * base.model.head_dim() + base.model.n_heads) * 4;
+    let n_new = base.apb.max_new_tokens;
+    let decode_rows = base.apb.query_len + (n_new - 1);
+    let exchanges = n_new; // 1 chunk + (n_new - 1) steps
+    let gather_bytes = (n * layers * decode_rows * partial_row) as u64;
+
+    let mut outcomes = Vec::new();
+    for strategy in [PassStrategy::PassKv, PassStrategy::PassQ] {
+        let cfg = Config::sim_tiny().with_pass_strategy(strategy);
+        let cluster = Cluster::start(&cfg).expect("sim cluster start");
+        cluster.prefill(&doc, &query, &ApbOptions::default()).expect("prefill");
+        let m = &cluster.fabric.meter;
+        let snap = || {
+            (
+                m.bytes_for(Interconnect::ATT_LABEL),
+                m.rounds_for(Interconnect::ATT_LABEL),
+                m.bytes_for(Interconnect::QRING_LABEL),
+                m.rounds_for(Interconnect::QRING_LABEL),
+            )
+        };
+        let before = snap();
+        let gen = cluster.generate(&query, n_new).expect("generate");
+        let after = snap();
+        let att = (after.0 - before.0, after.1 - before.1);
+        let qring = (after.2 - before.2, after.3 - before.3);
+        match strategy {
+            PassStrategy::PassKv => {
+                assert_eq!(att, (gather_bytes, (exchanges * n * layers) as u64),
+                           "pass-KV att (bytes, rounds)");
+                assert_eq!(qring, (0, 0), "gather path must not touch qring");
+            }
+            PassStrategy::PassQ => {
+                assert_eq!(
+                    qring,
+                    ((n - 1) as u64 * gather_bytes,
+                     (exchanges * n * (n - 1) * layers) as u64),
+                    "pass-Q qring (bytes, rounds)"
+                );
+                assert_eq!(att, (0, 0), "rotation must not touch att");
+            }
+            PassStrategy::Auto => unreachable!(),
+        }
+        outcomes.push((gen.tokens, gen.query_logits));
+    }
+    assert_eq!(outcomes[0], outcomes[1],
+               "pass strategies must generate bit-identically");
+}
+
 // ---------------------------------------------------------------------------
 // Golden tier — PJRT artifacts only
 // ---------------------------------------------------------------------------

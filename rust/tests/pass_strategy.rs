@@ -1,0 +1,260 @@
+//! Adaptive decode pass-strategy equivalence (`docs/ADR-007-adaptive-decode.md`).
+//!
+//! The hard invariant: pass-Q decode (qring rotation of attention
+//! partials) is **bit-identical** to the pass-KV gather path — same
+//! logits, same KV pool bytes, deterministic per-label comm bytes and
+//! rounds — because both feed the same per-rank partials, in rank order,
+//! through the same `merge_partials` fold. Property-tested here with the
+//! in-tree RNG (proptest is unavailable offline) across all four
+//! `AttnMethod`s and both cluster drivers, plus:
+//!
+//! * the qring volume per decode step is CONSTANT while the resident
+//!   context grows (the scaling point of the rotation), and
+//! * multi-turn `append_turn` counts as warm for the `Auto` chooser and
+//!   is itself strategy-independent bit-for-bit.
+
+use apb::cluster::Interconnect;
+use apb::config::{ApbOptions, AttnMethod, Config, PassStrategy};
+use apb::coordinator::{Cluster, Driver};
+use apb::kvcache::SessionId;
+use apb::util::rng::Rng;
+
+const SID: SessionId = 1;
+
+fn rand_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.range(1, vocab as i64) as i32).collect()
+}
+
+/// Everything one decode pass produces that must be reproducible:
+/// logits, greedy tokens, per-round label split, per-label meter rounds,
+/// and the pool's resident bytes.
+#[derive(Debug, Clone, PartialEq)]
+struct Transcript {
+    chunk_logits: Vec<f32>,
+    step_logits: Vec<Vec<f32>>,
+    tokens: Vec<i32>,
+    /// (comm, att, qring) byte deltas: index 0 is the chunk pass, then
+    /// one entry per decode step.
+    bytes: Vec<(u64, u64, u64)>,
+    /// (att, qring) meter-round deltas, same indexing.
+    rounds: Vec<(u64, u64)>,
+    strategies: Vec<PassStrategy>,
+    pool_bytes: usize,
+}
+
+/// Prefill one session and run `n_steps` greedy decode steps under the
+/// given fixed strategy, recording the full transcript.
+fn run(
+    driver: Driver,
+    method: AttnMethod,
+    strategy: PassStrategy,
+    doc: &[i32],
+    query: &[i32],
+    n_steps: usize,
+) -> Transcript {
+    let cfg = Config::sim_tiny().with_pass_strategy(strategy);
+    let cluster = Cluster::start_with(&cfg, driver).expect("cluster");
+    let opts = ApbOptions { method, ..Default::default() };
+    let prefill = cluster.prefill_session(SID, doc, query, &opts).expect("prefill");
+    // The strategy is a decode-side knob: prefill comm must not see it.
+    assert_eq!(
+        prefill.comm_bytes > 0,
+        method.passes_compressed_blocks() || method == AttnMethod::RingAttn,
+        "{}: prefill comm is method-determined, not strategy-determined",
+        method.name()
+    );
+
+    let meter = &cluster.fabric.meter;
+    let label_rounds = || {
+        (
+            meter.rounds_for(Interconnect::ATT_LABEL),
+            meter.rounds_for(Interconnect::QRING_LABEL),
+        )
+    };
+    let mut bytes = Vec::new();
+    let mut rounds = Vec::new();
+    let mut strategies = Vec::new();
+
+    let r0 = label_rounds();
+    let chunk = cluster.decode_query_chunk(SID, query).expect("query chunk");
+    let r1 = label_rounds();
+    bytes.push((chunk.comm_bytes, chunk.att_bytes, chunk.qring_bytes));
+    rounds.push((r1.0 - r0.0, r1.1 - r0.1));
+    strategies.push(chunk.strategy);
+
+    let vocab = cluster.cfg.model.vocab_size;
+    let mut token =
+        apb::util::tensor::Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..])
+            as i32;
+    let mut tokens = Vec::new();
+    let mut step_logits = Vec::new();
+    for _ in 0..n_steps {
+        tokens.push(token);
+        let r0 = label_rounds();
+        let rep = cluster.decode_step_batch(&[(SID, token)]).expect("decode step");
+        let r1 = label_rounds();
+        bytes.push((rep.comm_bytes, rep.att_bytes, rep.qring_bytes));
+        rounds.push((r1.0 - r0.0, r1.1 - r0.1));
+        strategies.push(rep.strategy);
+        token = apb::util::tensor::Tensor::argmax_row(&rep.logits[0].1) as i32;
+        step_logits.push(rep.logits[0].1.clone());
+    }
+
+    let pool_bytes = cluster
+        .pool_stats()
+        .expect("pool stats")
+        .iter()
+        .map(|s| s.bytes_used)
+        .sum();
+    Transcript {
+        chunk_logits: chunk.logits,
+        step_logits,
+        tokens,
+        bytes,
+        rounds,
+        strategies,
+        pool_bytes,
+    }
+}
+
+#[test]
+fn prop_pass_q_bit_identical_to_gather_for_all_methods_and_drivers() {
+    let cfg = Config::sim_tiny();
+    let (n, layers) = (cfg.apb.n_hosts, cfg.model.n_layers);
+    // One metered partial: (out [rows, h, hd], lse [rows, h]) in f32.
+    let partial_bytes =
+        |rows: usize| (rows * (cfg.model.n_heads * cfg.model.head_dim() + cfg.model.n_heads) * 4) as u64;
+    let mut rng = Rng::new(0x9AC7);
+    for case in 0..3usize {
+        let doc = rand_tokens(&mut rng, cfg.apb.doc_len(), cfg.model.vocab_size);
+        let query = rand_tokens(&mut rng, cfg.apb.query_len, cfg.model.vocab_size);
+        for method in AttnMethod::ALL {
+            let mut per_driver = Vec::new();
+            for driver in [Driver::Sequential, Driver::Threaded] {
+                let kv = run(driver, method, PassStrategy::PassKv, &doc, &query, 3);
+                let q = run(driver, method, PassStrategy::PassQ, &doc, &query, 3);
+                let tag = format!("case {case} {} {}", method.name(), driver.name());
+
+                // The invariant: logits, tokens and pool bytes are
+                // bit-identical across strategies.
+                assert_eq!(kv.chunk_logits, q.chunk_logits, "{tag}: chunk logits");
+                assert_eq!(kv.step_logits, q.step_logits, "{tag}: step logits");
+                assert_eq!(kv.tokens, q.tokens, "{tag}: greedy tokens");
+                assert_eq!(kv.pool_bytes, q.pool_bytes, "{tag}: pool bytes");
+
+                for (i, &(comm, att, qring)) in kv.bytes.iter().enumerate() {
+                    let rows = if i == 0 { cfg.apb.query_len } else { 1 };
+                    let (qcomm, qatt, qqring) = q.bytes[i];
+                    // Decode rounds charge exactly one merge label.
+                    assert_eq!(att + qring, comm, "{tag}: kv round {i} label split");
+                    assert_eq!(qatt + qqring, qcomm, "{tag}: q round {i} label split");
+                    assert_eq!(qring, 0, "{tag}: gather path must not touch qring");
+                    if method.distributed_decode() {
+                        assert_eq!(kv.strategies[i], PassStrategy::PassKv, "{tag}");
+                        assert_eq!(q.strategies[i], PassStrategy::PassQ, "{tag}");
+                        // Value-level: the gather posts one partial per
+                        // rank per layer; the rotation posts the same
+                        // partial unit n-1 times per rank per layer.
+                        assert_eq!(att, (n * layers) as u64 * partial_bytes(rows),
+                                   "{tag}: att bytes round {i}");
+                        assert_eq!(qatt, 0, "{tag}: rotation must not touch att");
+                        assert_eq!(qqring, (n - 1) as u64 * att,
+                                   "{tag}: qring bytes round {i}");
+                        assert_eq!(kv.rounds[i], ((n * layers) as u64, 0), "{tag}");
+                        assert_eq!(q.rounds[i], (0, (n * (n - 1) * layers) as u64),
+                                   "{tag}");
+                    } else {
+                        // Dense decodes on host 0: no merge collective at
+                        // all, and the strategy degenerates to pass-KV.
+                        assert_eq!((comm, qcomm), (0, 0), "{tag}: dense comm");
+                        assert_eq!(kv.strategies[i], PassStrategy::PassKv, "{tag}");
+                        assert_eq!(q.strategies[i], PassStrategy::PassKv, "{tag}");
+                    }
+                }
+                per_driver.push((kv, q));
+            }
+            // Driver parity: the whole transcript (logits, bytes, rounds,
+            // strategies, pool bytes) replays identically threaded vs
+            // sequential.
+            assert_eq!(per_driver[0], per_driver[1],
+                       "case {case} {}: drivers diverged", method.name());
+        }
+    }
+}
+
+#[test]
+fn qring_bytes_per_step_flat_while_context_grows() {
+    // Each decode step appends one token to the resident context, so by
+    // the last step the attended context is strictly longer than at the
+    // first — the rotation's per-step volume must not care.
+    let cfg = Config::sim_tiny().with_pass_strategy(PassStrategy::PassQ);
+    let cluster = Cluster::start_with(&cfg, Driver::Sequential).expect("cluster");
+    let mut rng = Rng::new(0xF1A7);
+    let doc = rand_tokens(&mut rng, cfg.apb.doc_len(), cfg.model.vocab_size);
+    let query = rand_tokens(&mut rng, cfg.apb.query_len, cfg.model.vocab_size);
+    cluster.prefill_session(SID, &doc, &query, &ApbOptions::default()).expect("prefill");
+    let chunk = cluster.decode_query_chunk(SID, &query).expect("chunk");
+    assert!(chunk.qring_bytes > 0, "pass-Q chunk must ride the qring");
+
+    let vocab = cluster.cfg.model.vocab_size;
+    let mut token =
+        apb::util::tensor::Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..])
+            as i32;
+    let mut per_step = Vec::new();
+    for _ in 0..cfg.apb.max_new_tokens - 1 {
+        let rep = cluster.decode_step_batch(&[(SID, token)]).expect("step");
+        per_step.push(rep.qring_bytes);
+        assert_eq!(rep.att_bytes, 0);
+        token = apb::util::tensor::Tensor::argmax_row(&rep.logits[0].1) as i32;
+    }
+    assert!(per_step.len() >= 4, "need several steps to see the growth");
+    assert!(per_step[0] > 0);
+    assert!(
+        per_step.iter().all(|&b| b == per_step[0]),
+        "qring bytes must be flat in context length, got {per_step:?}"
+    );
+}
+
+#[test]
+fn append_turn_is_warm_for_auto_and_strategy_independent() {
+    let mut rng = Rng::new(0x7B4E);
+    let base = Config::sim_tiny();
+    let doc = rand_tokens(&mut rng, base.apb.doc_len(), base.model.vocab_size);
+    let query = rand_tokens(&mut rng, base.apb.query_len, base.model.vocab_size);
+    let turn = rand_tokens(&mut rng, 3, base.model.vocab_size);
+
+    // Under Auto: a cold session's chunk pays the gather, the follow-up
+    // turn rides the qring, and every step after it stays warm.
+    let cfg = Config::sim_tiny().with_pass_strategy(PassStrategy::Auto);
+    let cluster = Cluster::start_with(&cfg, Driver::Sequential).expect("cluster");
+    cluster.prefill_session(SID, &doc, &query, &ApbOptions::default()).expect("prefill");
+    let chunk = cluster.decode_query_chunk(SID, &query).expect("chunk");
+    assert_eq!(chunk.strategy, PassStrategy::PassKv, "cold session pays the gather");
+    assert_eq!(chunk.qring_bytes, 0);
+    let turn_rep = cluster.append_turn(SID, &turn).expect("turn");
+    assert_eq!(turn_rep.strategy, PassStrategy::PassQ, "a follow-up turn is warm");
+    assert!(turn_rep.qring_bytes > 0);
+    assert_eq!(turn_rep.att_bytes, 0);
+    assert!(turn_rep.logits.iter().all(|x| x.is_finite()));
+    let vocab = cfg.model.vocab_size;
+    let tok = apb::util::tensor::Tensor::argmax_row(
+        &turn_rep.logits[turn_rep.logits.len() - vocab..],
+    ) as i32;
+    let step = cluster.decode_step_batch(&[(SID, tok)]).expect("step");
+    assert_eq!(step.strategy, PassStrategy::PassQ, "turned session stays warm");
+
+    // And the turn itself is bit-identical across fixed strategies.
+    let mut turn_logits = Vec::new();
+    for strategy in [PassStrategy::PassKv, PassStrategy::PassQ] {
+        let cfg = Config::sim_tiny().with_pass_strategy(strategy);
+        let cluster = Cluster::start_with(&cfg, Driver::Sequential).expect("cluster");
+        cluster
+            .prefill_session(SID, &doc, &query, &ApbOptions::default())
+            .expect("prefill");
+        cluster.decode_query_chunk(SID, &query).expect("chunk");
+        let rep = cluster.append_turn(SID, &turn).expect("turn");
+        assert_eq!(rep.strategy, strategy);
+        turn_logits.push(rep.logits);
+    }
+    assert_eq!(turn_logits[0], turn_logits[1], "turn logits must be bit-identical");
+}
