@@ -179,6 +179,16 @@ pub struct Request {
     pub class: Class,
 }
 
+/// Whether an error is a *backpressure* rejection (admission queue full,
+/// KV pool exhausted, turn overflowing its KV slot) rather than a fault.
+/// Both rejection sites spell it out in their message (see
+/// [`AdmissionQueue::submit`] and `KvPool`'s exhaustion error, which
+/// doc-tests the marker); the HTTP front door maps exactly these to
+/// `429 Too Many Requests` + `Retry-After` and everything else to 500.
+pub fn is_backpressure(err: &anyhow::Error) -> bool {
+    format!("{err:#}").contains("backpressure")
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -480,6 +490,27 @@ impl<'a> Scheduler<'a> {
     /// BETWEEN an admission's prefill chunks.
     pub fn active_token_counts(&self) -> Vec<(u64, usize)> {
         self.active.iter().map(|s| (s.req_id, s.tokens.len())).collect()
+    }
+
+    /// Tokens emitted so far per active (decoding) session, as
+    /// (request id, tokens) pairs. The HTTP front door's streaming loop
+    /// reads this after every [`Scheduler::step`] and flushes the suffix
+    /// beyond its per-request cursor as chunked-transfer token events —
+    /// the scheduler itself stays streaming-agnostic.
+    pub fn active_tokens(&self) -> Vec<(u64, &[i32])> {
+        self.active.iter().map(|s| (s.req_id, s.tokens.as_slice())).collect()
+    }
+
+    /// [`Scheduler::metrics`] without the non-empty precondition: `None`
+    /// until a first request completes. Ops surfaces (`GET /v1/metrics`)
+    /// poll before, during, and after traffic, so "no data yet" has to be
+    /// a value, not a panic.
+    pub fn metrics_opt(&self) -> Option<ServingMetrics> {
+        if self.completed.is_empty() {
+            None
+        } else {
+            Some(self.metrics())
+        }
     }
 
     /// Effective priority of the in-flight admission at the current tick.

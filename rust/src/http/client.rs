@@ -1,0 +1,131 @@
+//! Minimal std-only HTTP/1.1 client for loopback use: the workload
+//! generator's closed-loop HTTP driver, the `--http --smoke` CI gate, and
+//! `rust/tests/http_serving.rs` all speak through this. Keep-alive by
+//! default (one connection, many requests), with chunk-boundary-preserving
+//! streaming reads so tests can assert a response actually streamed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::response::ChunkedReader;
+
+/// One decoded response. `chunks` preserves the sender's chunk boundaries
+/// for chunked responses (fixed-length bodies decode as a single chunk).
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub chunks: Vec<Vec<u8>>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body with chunk boundaries flattened away.
+    pub fn body(&self) -> Vec<u8> {
+        self.chunks.concat()
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body()).into_owned()
+    }
+}
+
+/// A keep-alive connection to the front door.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        // A stuck server must surface as an error, not a hung test/CI job.
+        stream.set_read_timeout(Some(Duration::from_secs(120))).ok();
+        let writer = stream.try_clone().context("clone stream")?;
+        Ok(HttpClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Issue one request and read the complete response (chunk boundaries
+    /// preserved). `body = Some(json)` sends `Content-Length` framing.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<HttpResponse> {
+        write!(self.writer, "{method} {path} HTTP/1.1\r\nHost: apb\r\n")?;
+        match body {
+            Some(b) => {
+                write!(
+                    self.writer,
+                    "Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+                    b.len()
+                )?;
+                self.writer.write_all(b.as_bytes())?;
+            }
+            None => write!(self.writer, "\r\n")?,
+        }
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<HttpResponse> {
+        let status_line = self.read_line()?;
+        let mut parts = status_line.splitn(3, ' ');
+        let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
+            bail!("malformed status line '{status_line}'");
+        };
+        if !version.starts_with("HTTP/1.") {
+            bail!("unexpected version in '{status_line}'");
+        }
+        let status: u16 = code.parse().with_context(|| format!("status in '{status_line}'"))?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (k, v) = line.split_once(':').context("header line missing ':'")?;
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        let header = |name: &str| {
+            headers
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v.clone())
+        };
+        let chunks = if header("transfer-encoding").map(|v| v.eq_ignore_ascii_case("chunked"))
+            == Some(true)
+        {
+            let mut reader = ChunkedReader::new(64 * 1024 * 1024);
+            let mut chunks = Vec::new();
+            while let Some(c) =
+                reader.next_chunk(&mut self.reader).map_err(|e| anyhow::anyhow!("{e}"))?
+            {
+                chunks.push(c);
+            }
+            chunks
+        } else {
+            let n: usize = header("content-length")
+                .context("response without Content-Length or chunked framing")?
+                .parse()
+                .context("bad Content-Length")?;
+            let mut body = vec![0u8; n];
+            std::io::Read::read_exact(&mut self.reader, &mut body)?;
+            vec![body]
+        };
+        Ok(HttpResponse { status, headers, chunks })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).context("read line")?;
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(line)
+    }
+}

@@ -1,0 +1,25 @@
+//! Pure-Rust, std-only HTTP/1.1 front door for `apb serve --http`.
+//!
+//! No crates.io dependencies and no vendored HTTP stack: [`parser`]
+//! reads and validates requests byte-at-a-time against hard limits,
+//! [`response`] writes fixed-length and chunked responses (and decodes
+//! chunked bodies), [`router`] maps `(method, path)` to endpoints, and
+//! [`server`] runs the accept loop + engine thread that bridges
+//! connections into the existing [`crate::coordinator`] scheduler and
+//! cluster. [`client`] is the matching loopback client used by the
+//! workload generator's HTTP mode, the CI smoke gate, and the tier-1
+//! conformance suite.
+//!
+//! Design record: `docs/ADR-008-http-front-door.md`.
+
+pub mod client;
+pub mod parser;
+pub mod response;
+pub mod router;
+pub mod server;
+
+pub use client::{HttpClient, HttpResponse};
+pub use parser::{HttpRequest, Limits, ParseError};
+pub use response::{ChunkedReader, ChunkedWriter};
+pub use router::Route;
+pub use server::{HttpOptions, Server};

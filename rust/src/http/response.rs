@@ -1,0 +1,289 @@
+//! HTTP/1.1 response writing + chunked transfer-encoding, std-only.
+//!
+//! Two response shapes cover the whole `/v1` API:
+//!
+//! * [`write_simple`] — a fixed body with `Content-Length` (metrics,
+//!   health, every error status);
+//! * [`ChunkedWriter`] — `Transfer-Encoding: chunked` streaming for
+//!   `/v1/generate`, flushing **one chunk per emitted token event** so a
+//!   client sees tokens as the scheduler decodes them, not when the
+//!   request retires (`docs/ADR-008-http-front-door.md` records why this
+//!   beat SSE here).
+//!
+//! The matching [`ChunkedReader`]/[`read_chunked`] decoder serves both
+//! the client half (`http::client`, workload HTTP driver) and chunked
+//! *request* bodies in the parser. Writer and reader are round-tripped
+//! over arbitrary token-chunk partitions by the proptest below.
+
+use std::io::{self, BufRead, Write};
+
+use super::parser::ParseError;
+
+/// Canonical reason phrase for every status the front door emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Write a head: status line + headers + blank line.
+fn write_head<W: Write>(w: &mut W, status: u16, headers: &[(&str, String)]) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "\r\n")
+}
+
+/// Write a complete fixed-length response (keep-alive friendly: the
+/// explicit `Content-Length` lets the peer keep the connection open).
+pub fn write_simple<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+) -> io::Result<()> {
+    let mut headers: Vec<(&str, String)> = vec![
+        ("Content-Type", content_type.to_string()),
+        ("Content-Length", body.len().to_string()),
+    ];
+    headers.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+    write_head(w, status, &headers)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// JSON error body + status, shared by every error path so clients see
+/// one shape: `{"error": "..."}` (+ `Retry-After` on 429).
+pub fn write_error<W: Write>(
+    w: &mut W,
+    status: u16,
+    detail: &str,
+    retry_after_s: Option<u64>,
+) -> io::Result<()> {
+    let body = crate::util::json::JsonWriter::obj().str_field("error", detail).close();
+    let extra: Vec<(&str, String)> = match retry_after_s {
+        Some(s) => vec![("Retry-After", s.to_string())],
+        None => Vec::new(),
+    };
+    write_simple(w, status, "application/json", body.as_bytes(), &extra)
+}
+
+/// Streaming response writer: `Transfer-Encoding: chunked`, one flush per
+/// chunk. Call [`ChunkedWriter::finish`] to emit the terminal chunk; the
+/// connection stays reusable afterwards.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    finished: bool,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head and switch to chunked framing.
+    pub fn begin(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        extra: &[(&str, String)],
+    ) -> io::Result<ChunkedWriter<W>> {
+        let mut headers: Vec<(&str, String)> = vec![
+            ("Content-Type", content_type.to_string()),
+            ("Transfer-Encoding", "chunked".to_string()),
+        ];
+        headers.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+        write_head(&mut w, status, &headers)?;
+        w.flush()?;
+        Ok(ChunkedWriter { w, finished: false })
+    }
+
+    /// Emit one chunk (empty data is skipped — a zero-length chunk would
+    /// be the terminator) and flush it to the wire immediately.
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        debug_assert!(!self.finished, "chunk after finish");
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        write!(self.w, "\r\n")?;
+        self.w.flush()
+    }
+
+    /// Emit the terminal `0\r\n\r\n` chunk.
+    pub fn finish(mut self) -> io::Result<()> {
+        self.finished = true;
+        write!(self.w, "0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Incremental chunked-transfer decoder. [`ChunkedReader::next_chunk`]
+/// preserves the writer's chunk boundaries — the observable the workload
+/// driver uses to prove a response actually *streamed* (≥ 2 chunks)
+/// rather than arriving as one buffered blob.
+pub struct ChunkedReader {
+    /// Total decoded bytes so far, checked against the size cap.
+    total: usize,
+    max_total: usize,
+    done: bool,
+}
+
+impl ChunkedReader {
+    pub fn new(max_total: usize) -> ChunkedReader {
+        ChunkedReader { total: 0, max_total, done: false }
+    }
+
+    /// Read one chunk; `Ok(None)` after the terminal chunk (trailers are
+    /// consumed and discarded). Malformed framing is a 400, exceeding the
+    /// size cap a 413.
+    pub fn next_chunk<R: BufRead>(&mut self, r: &mut R) -> Result<Option<Vec<u8>>, ParseError> {
+        if self.done {
+            return Ok(None);
+        }
+        let size_line = read_line(r)?;
+        // Chunk extensions (";ext=val") are tolerated and ignored.
+        let size_hex = size_line.split(';').next().unwrap_or("").trim();
+        if size_hex.is_empty() || !size_hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(ParseError { status: 400, msg: "bad chunk size".into() });
+        }
+        let size = usize::from_str_radix(size_hex, 16)
+            .map_err(|_| ParseError { status: 400, msg: "chunk size overflows".into() })?;
+        if size == 0 {
+            // Terminal chunk: consume (and discard) trailers up to the
+            // blank line.
+            loop {
+                if read_line(r)?.is_empty() {
+                    break;
+                }
+            }
+            self.done = true;
+            return Ok(None);
+        }
+        self.total = self.total.saturating_add(size);
+        if self.total > self.max_total {
+            return Err(ParseError { status: 413, msg: "chunked body too large".into() });
+        }
+        let mut data = vec![0u8; size];
+        io::Read::read_exact(r, &mut data)
+            .map_err(|_| ParseError { status: 400, msg: "truncated chunk data".into() })?;
+        match read_line(r) {
+            Ok(l) if l.is_empty() => Ok(Some(data)),
+            _ => Err(ParseError { status: 400, msg: "chunk data missing CRLF".into() }),
+        }
+    }
+}
+
+/// Decode a whole chunked body to one buffer (request bodies, simple
+/// client calls).
+pub fn read_chunked<R: BufRead>(r: &mut R, max_total: usize) -> Result<Vec<u8>, ParseError> {
+    let mut reader = ChunkedReader::new(max_total);
+    let mut out = Vec::new();
+    while let Some(chunk) = reader.next_chunk(r)? {
+        out.extend_from_slice(&chunk);
+    }
+    Ok(out)
+}
+
+/// Read one CRLF (or bare-LF) terminated line of bounded length.
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, ParseError> {
+    let mut line = Vec::with_capacity(16);
+    let mut byte = [0u8; 1];
+    loop {
+        match io::Read::read(r, &mut byte) {
+            Ok(0) => return Err(ParseError { status: 400, msg: "truncated chunk framing".into() }),
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ParseError { status: 400, msg: format!("read error: {e}") }),
+        }
+        if byte[0] == b'\n' {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map_err(|_| ParseError { status: 400, msg: "non-UTF-8 chunk framing".into() });
+        }
+        line.push(byte[0]);
+        if line.len() > 128 {
+            return Err(ParseError { status: 400, msg: "chunk framing line too long".into() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    /// The satellite round-trip proptest: arbitrary token-chunk partitions
+    /// of arbitrary payloads survive writer → reader with byte identity
+    /// AND boundary identity.
+    #[test]
+    fn proptest_chunked_roundtrip_preserves_partitions() {
+        for seed in 0..64u64 {
+            let mut rng = Rng::new(0xC0FFEE ^ seed);
+            // A payload partitioned like a token stream: many small chunks.
+            let n_chunks = 1 + rng.below(24) as usize;
+            let chunks: Vec<Vec<u8>> = (0..n_chunks)
+                .map(|_| {
+                    let len = 1 + rng.below(96) as usize;
+                    (0..len).map(|_| rng.below(256) as u8).collect()
+                })
+                .collect();
+
+            let mut wire = Vec::new();
+            {
+                let mut cw =
+                    ChunkedWriter::begin(&mut wire, 200, "application/octet-stream", &[]).unwrap();
+                for c in &chunks {
+                    cw.chunk(c).unwrap();
+                }
+                cw.finish().unwrap();
+            }
+            // Skip the head: the reader starts at the first chunk-size line.
+            let head_end = wire.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+            let mut r = Cursor::new(wire[head_end..].to_vec());
+            let mut reader = ChunkedReader::new(1 << 20);
+            let mut back = Vec::new();
+            while let Some(c) = reader.next_chunk(&mut r).unwrap() {
+                back.push(c);
+            }
+            assert_eq!(back, chunks, "seed {seed}: partition not preserved");
+            assert_eq!(r.position() as usize, wire.len() - head_end, "seed {seed}: trailing bytes");
+        }
+        println!("APB-RUN http_chunked_roundtrip backend=none seeds=64");
+    }
+
+    #[test]
+    fn chunked_reader_enforces_size_cap() {
+        let mut wire = Vec::new();
+        let mut cw = ChunkedWriter::begin(&mut wire, 200, "x", &[]).unwrap();
+        cw.chunk(&[7u8; 256]).unwrap();
+        cw.finish().unwrap();
+        let head_end = wire.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let mut r = Cursor::new(wire[head_end..].to_vec());
+        let err = ChunkedReader::new(64).next_chunk(&mut r).unwrap_err();
+        assert_eq!(err.status, 413);
+    }
+
+    #[test]
+    fn error_bodies_are_json_with_retry_after() {
+        let mut wire = Vec::new();
+        write_error(&mut wire, 429, "kv pool exhausted", Some(1)).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains(r#"{"error":"kv pool exhausted"}"#));
+    }
+}

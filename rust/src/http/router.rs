@@ -1,0 +1,75 @@
+//! Route table for the `/v1` API — pure function of (method, path), so
+//! dispatch is unit-testable without sockets or a cluster.
+//!
+//! | Method | Path                | Route                      |
+//! |--------|---------------------|----------------------------|
+//! | POST   | `/v1/generate`      | [`Route::Generate`]        |
+//! | GET    | `/v1/metrics`       | [`Route::Metrics`]         |
+//! | GET    | `/v1/healthz`       | [`Route::Health`]          |
+//! | DELETE | `/v1/session/<id>`  | [`Route::ClearSession`]    |
+//!
+//! A known path with the wrong method is 405 (with the allowed method in
+//! the error detail); an unknown path is 404.
+
+/// One dispatched endpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    Generate,
+    Metrics,
+    Health,
+    /// Clear one persistent (kept) session by id, releasing its KV slot.
+    ClearSession(u64),
+}
+
+/// Resolve `(method, path)` to a route, or `(status, detail)` — 404 for
+/// unknown paths, 405 for a known path with the wrong method.
+pub fn route(method: &str, path: &str) -> Result<Route, (u16, String)> {
+    let allow = |m: &str, r: Route| {
+        if method == m {
+            Ok(r)
+        } else {
+            Err((405, format!("{path} allows {m} only")))
+        }
+    };
+    match path {
+        "/v1/generate" => allow("POST", Route::Generate),
+        "/v1/metrics" => allow("GET", Route::Metrics),
+        "/v1/healthz" => allow("GET", Route::Health),
+        _ => {
+            if let Some(id) = path.strip_prefix("/v1/session/") {
+                if !id.is_empty() && id.bytes().all(|b| b.is_ascii_digit()) {
+                    let id: u64 = id
+                        .parse()
+                        .map_err(|_| (404, format!("session id '{id}' out of range")))?;
+                    return allow("DELETE", Route::ClearSession(id));
+                }
+            }
+            Err((404, format!("no route for {path}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_resolve() {
+        assert_eq!(route("POST", "/v1/generate"), Ok(Route::Generate));
+        assert_eq!(route("GET", "/v1/metrics"), Ok(Route::Metrics));
+        assert_eq!(route("GET", "/v1/healthz"), Ok(Route::Health));
+        assert_eq!(route("DELETE", "/v1/session/42"), Ok(Route::ClearSession(42)));
+    }
+
+    #[test]
+    fn wrong_method_is_405_unknown_path_404() {
+        assert_eq!(route("GET", "/v1/generate").unwrap_err().0, 405);
+        assert_eq!(route("POST", "/v1/metrics").unwrap_err().0, 405);
+        assert_eq!(route("GET", "/v1/session/42").unwrap_err().0, 405);
+        assert_eq!(route("GET", "/nope").unwrap_err().0, 404);
+        assert_eq!(route("DELETE", "/v1/session/").unwrap_err().0, 404);
+        assert_eq!(route("DELETE", "/v1/session/abc").unwrap_err().0, 404);
+        // Out-of-range u64.
+        assert_eq!(route("DELETE", "/v1/session/99999999999999999999").unwrap_err().0, 404);
+    }
+}

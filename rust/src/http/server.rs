@@ -1,0 +1,1079 @@
+//! The HTTP front door: accept loop, per-connection handler threads, and
+//! the single **engine thread** that owns the `Cluster` + `Scheduler`.
+//!
+//! Threading model (`docs/ADR-008-http-front-door.md`): the cluster
+//! leader API is deliberately single-threaded (`RefCell` bookkeeping,
+//! one command round in flight), so handler threads never touch it.
+//! Instead each connection parses requests and sends [`EngineCmd`]s over
+//! an mpsc channel; the engine loop interleaves four duties per
+//! iteration, exactly like the scheduler's own tick discipline:
+//!
+//!   1. drain commands (submit scheduler requests, answer metrics /
+//!      clear-session, start draining on shutdown);
+//!   2. run at most one *persistent* ("keep": true) prefill inline when
+//!      the one-prefill-at-a-time permit is free;
+//!   3. one `Scheduler::step` (admission chunk + batched decode tick);
+//!   4. one batched decode step across live multi-turn streams, then
+//!      flush newly emitted tokens to every stream as chunked events.
+//!
+//! Backpressure maps to `429 Too Many Requests` + `Retry-After`
+//! (admission queue full, KV pool exhausted — including "every slot held
+//! by persistent sessions"), never to an internal error. Graceful
+//! shutdown stops the accept loop, rejects new generates with 503, and
+//! drains every in-flight stream to completion at quiescent boundaries
+//! before the cluster is dropped.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ApbOptions, AttnMethod, Config, PassStrategy};
+use crate::coordinator::scheduler::{is_backpressure, Class, Request, Scheduler};
+use crate::coordinator::{Cluster, Driver, SessionId};
+use crate::util::json::{self, Json, JsonWriter};
+use crate::util::stats::Summary;
+use crate::util::tensor::Tensor;
+
+use super::parser::{read_request, HttpRequest, Limits};
+use super::response::{write_error, write_simple, ChunkedWriter};
+use super::router::{route, Route};
+
+/// Front-door knobs (`apb serve --http <addr> [--http-conns N]`).
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Connection cap: accepts beyond this are answered 503 and closed
+    /// immediately (one handler thread per live connection).
+    pub max_conns: usize,
+    /// Admission-queue bound handed to the scheduler (submits beyond it
+    /// are 429s).
+    pub max_queue: usize,
+    /// Idle keep-alive read timeout per connection, seconds.
+    pub read_timeout_s: u64,
+    pub limits: Limits,
+}
+
+impl Default for HttpOptions {
+    fn default() -> HttpOptions {
+        HttpOptions {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 64,
+            max_queue: 64,
+            read_timeout_s: 30,
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// Shared accept-side counters, folded into `GET /v1/metrics`.
+#[derive(Default)]
+struct Counters {
+    open_conns: AtomicUsize,
+    total_conns: AtomicU64,
+    conn_rejected_503: AtomicU64,
+}
+
+/// One parsed `/v1/generate` body.
+struct GenerateSpec {
+    doc: Vec<i32>,
+    query: Vec<i32>,
+    max_new: usize,
+    opts: ApbOptions,
+    class: Class,
+    /// Keep the session resident after the stream completes (returns a
+    /// `session` id usable for follow-up turns).
+    keep: bool,
+    /// Follow-up turn against a kept session.
+    session: Option<SessionId>,
+    turn: Vec<i32>,
+}
+
+/// Engine → handler stream events. The engine pre-serializes every body
+/// so handler threads only frame bytes.
+enum Event {
+    /// Terminal pre-stream rejection (4xx/5xx before any token).
+    Reject { status: u16, detail: String, retry_after: bool },
+    /// One NDJSON token-event line (sent as its own HTTP chunk).
+    Chunk(String),
+    /// Final NDJSON line; the stream ends after it.
+    Done(String),
+}
+
+enum ClearOutcome {
+    Cleared,
+    NotFound,
+    Busy,
+}
+
+enum EngineCmd {
+    Generate(Box<GenerateSpec>, Sender<Event>),
+    Metrics(Sender<String>),
+    ClearSession(SessionId, Sender<ClearOutcome>),
+    Shutdown(Sender<()>),
+}
+
+/// A live multi-turn decode stream (persistent-session generate or
+/// follow-up turn), advanced one *batched* decode step per engine
+/// iteration — multiple turn streams share one stacked pass, exactly like
+/// the scheduler's decode tick.
+struct TurnStream {
+    sid: SessionId,
+    tx: Sender<Event>,
+    produced: Vec<i32>,
+    max_new: usize,
+    prev: i32,
+}
+
+/// Scheduler-request stream state: outbound channel + tokens already
+/// flushed.
+struct SchedStream {
+    tx: Sender<Event>,
+    sent: usize,
+}
+
+/// The running front door. Owns the engine + accept threads; dropping it
+/// performs a best-effort graceful shutdown.
+pub struct Server {
+    local_addr: SocketAddr,
+    engine_tx: Sender<EngineCmd>,
+    engine_join: Option<thread::JoinHandle<()>>,
+    accept_join: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    shut: bool,
+}
+
+impl Server {
+    /// Bind `opts.addr`, start the engine (which builds the cluster under
+    /// `driver`) and the accept loop. Fails fast if the bind or the
+    /// cluster start fails.
+    pub fn start(cfg: Config, driver: Driver, opts: HttpOptions) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&opts.addr).with_context(|| format!("bind {}", opts.addr))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        let (engine_tx, engine_rx) = mpsc::channel::<EngineCmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let counters = Arc::new(Counters::default());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let engine_cfg = cfg;
+        let engine_counters = Arc::clone(&counters);
+        let engine_opts = opts.clone();
+        let engine_join = thread::Builder::new()
+            .name("apb-http-engine".into())
+            .spawn(move || {
+                engine_main(engine_cfg, driver, engine_opts, engine_rx, ready_tx, engine_counters)
+            })
+            .context("spawn engine thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                let _ = engine_join.join();
+                anyhow::bail!("cluster start failed: {msg}");
+            }
+            Err(_) => {
+                let _ = engine_join.join();
+                anyhow::bail!("engine thread died during startup");
+            }
+        }
+
+        let accept_tx = engine_tx.clone();
+        let accept_counters = Arc::clone(&counters);
+        let accept_stop = Arc::clone(&stop);
+        let accept_opts = opts;
+        let accept_join = thread::Builder::new()
+            .name("apb-http-accept".into())
+            .spawn(move || accept_main(listener, accept_opts, accept_tx, accept_stop, accept_counters))
+            .context("spawn accept thread")?;
+
+        Ok(Server {
+            local_addr,
+            engine_tx,
+            engine_join: Some(engine_join),
+            accept_join: Some(accept_join),
+            stop,
+            counters,
+            shut: false,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful shutdown: stop accepting, reject new generates with 503,
+    /// drain every in-flight stream to completion, drop the cluster.
+    pub fn shutdown(&mut self) -> Result<()> {
+        if self.shut {
+            return Ok(());
+        }
+        self.shut = true;
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self.engine_tx.send(EngineCmd::Shutdown(ack_tx)).is_ok() {
+            let _ = ack_rx.recv_timeout(Duration::from_secs(120));
+        }
+        if let Some(j) = self.engine_join.take() {
+            let _ = j.join();
+        }
+        // Give straggling handler threads (clients that haven't closed) a
+        // moment to notice; they hold no cluster state either way.
+        for _ in 0..200 {
+            if self.counters.open_conns.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    }
+
+    /// Block until the accept loop exits (serve-forever mode; ^C kills
+    /// the process, `shutdown` from another thread ends it gracefully).
+    pub fn join(mut self) -> Result<()> {
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        self.shutdown()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop + connection handlers
+// ---------------------------------------------------------------------------
+
+fn accept_main(
+    listener: TcpListener,
+    opts: HttpOptions,
+    engine_tx: Sender<EngineCmd>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        counters.total_conns.fetch_add(1, Ordering::SeqCst);
+        if counters.open_conns.load(Ordering::SeqCst) >= opts.max_conns {
+            // Connection cap: shed load at the edge, before a thread or a
+            // queue slot is committed.
+            counters.conn_rejected_503.fetch_add(1, Ordering::SeqCst);
+            let mut w = stream;
+            let _ = write_error(&mut w, 503, "connection limit reached", Some(1));
+            continue;
+        }
+        counters.open_conns.fetch_add(1, Ordering::SeqCst);
+        let tx = engine_tx.clone();
+        let conn_counters = Arc::clone(&counters);
+        let conn_opts = opts.clone();
+        let spawned = thread::Builder::new().name("apb-http-conn".into()).spawn(move || {
+            handle_conn(stream, conn_opts, tx);
+            conn_counters.open_conns.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            counters.open_conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, opts: HttpOptions, engine_tx: Sender<EngineCmd>) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(opts.read_timeout_s.max(1)))).ok();
+    let Ok(reader_stream) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader, &opts.limits) {
+            Ok(None) => break, // clean keep-alive close
+            Ok(Some(req)) => req,
+            Err(e) => {
+                // 408 (idle timeout) closes quietly; real parse errors get
+                // their mapped status before the connection drops.
+                if e.status != 408 {
+                    let _ = write_error(&mut writer, e.status, &e.msg, None);
+                }
+                break;
+            }
+        };
+        let close = req.wants_close();
+        let ok = dispatch(&req, &mut writer, &engine_tx);
+        if close || !ok {
+            break;
+        }
+    }
+}
+
+/// Route + serve one request. Returns false when the connection should
+/// close (stream write failure or engine gone).
+fn dispatch(req: &HttpRequest, w: &mut TcpStream, engine_tx: &Sender<EngineCmd>) -> bool {
+    let routed = match route(&req.method, req.path()) {
+        Ok(r) => r,
+        Err((status, detail)) => return write_error(w, status, &detail, None).is_ok(),
+    };
+    match routed {
+        Route::Health => {
+            let body = JsonWriter::obj().str_field("status", "ok").close();
+            write_simple(w, 200, "application/json", body.as_bytes(), &[]).is_ok()
+        }
+        Route::Metrics => {
+            let (tx, rx) = mpsc::channel();
+            if engine_tx.send(EngineCmd::Metrics(tx)).is_err() {
+                return write_error(w, 503, "engine stopped", None).is_ok();
+            }
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(body) => {
+                    write_simple(w, 200, "application/json", body.as_bytes(), &[]).is_ok()
+                }
+                Err(_) => write_error(w, 500, "metrics timed out", None).is_ok(),
+            }
+        }
+        Route::ClearSession(sid) => {
+            let (tx, rx) = mpsc::channel();
+            if engine_tx.send(EngineCmd::ClearSession(sid, tx)).is_err() {
+                return write_error(w, 503, "engine stopped", None).is_ok();
+            }
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(ClearOutcome::Cleared) => {
+                    let body = JsonWriter::obj().num_field("session", sid as f64)
+                        .bool_field("cleared", true).close();
+                    write_simple(w, 200, "application/json", body.as_bytes(), &[]).is_ok()
+                }
+                Ok(ClearOutcome::NotFound) => {
+                    write_error(w, 404, &format!("no persistent session {sid}"), None).is_ok()
+                }
+                Ok(ClearOutcome::Busy) => {
+                    write_error(w, 409, &format!("session {sid} has a stream in flight"), None)
+                        .is_ok()
+                }
+                Err(_) => write_error(w, 500, "clear timed out", None).is_ok(),
+            }
+        }
+        Route::Generate => {
+            let body = String::from_utf8_lossy(&req.body);
+            let (tx, rx) = mpsc::channel();
+            // Body parsing happens on the engine thread? No: here, but the
+            // spec needs the config. The engine validates geometry; the
+            // handler only checks JSON shape via the engine's parser — we
+            // ship the raw body and let the engine parse so the config
+            // stays in one place.
+            if engine_tx.send(EngineCmd::Generate(
+                match parse_probe(&body) {
+                    Ok(spec) => spec,
+                    Err((status, detail)) => {
+                        return write_error(w, status, &detail, None).is_ok()
+                    }
+                },
+                tx,
+            )).is_err() {
+                return write_error(w, 503, "engine stopped", None).is_ok();
+            }
+            stream_events(w, &rx)
+        }
+    }
+}
+
+/// Handler-side pre-parse: JSON syntax + field extraction that needs no
+/// config (geometry checks happen on the engine, which owns the config).
+fn parse_probe(body: &str) -> std::result::Result<Box<GenerateSpec>, (u16, String)> {
+    let v = Json::parse(body).map_err(|e| (400, format!("body is not JSON: {e}")))?;
+    let get_usize = |k: &str| -> std::result::Result<Option<usize>, (u16, String)> {
+        match v.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j.as_usize().map(Some).ok_or((400, format!("'{k}' must be a non-negative integer"))),
+        }
+    };
+    let get_tokens = |k: &str| -> std::result::Result<Option<Vec<i32>>, (u16, String)> {
+        match v.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => {
+                let arr = j.as_arr().ok_or((400, format!("'{k}' must be an array")))?;
+                arr.iter()
+                    .map(|t| {
+                        t.as_i64()
+                            .and_then(|x| i32::try_from(x).ok())
+                            .ok_or((400, format!("'{k}' must hold i32 tokens")))
+                    })
+                    .collect::<std::result::Result<Vec<i32>, _>>()
+                    .map(Some)
+            }
+        }
+    };
+    let get_str = |k: &str| -> std::result::Result<Option<&str>, (u16, String)> {
+        match v.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j.as_str().map(Some).ok_or((400, format!("'{k}' must be a string"))),
+        }
+    };
+
+    let mut opts = ApbOptions::default();
+    if let Some(m) = get_str("method")? {
+        opts.method = AttnMethod::parse(m).map_err(|e| (400, format!("{e:#}")))?;
+    }
+    if let Some(ct) = get_usize("chunk_tokens")? {
+        opts.chunk_tokens = Some(ct);
+    }
+    if let Some(ps) = get_str("pass_strategy")? {
+        opts.pass_strategy =
+            Some(PassStrategy::parse(ps).map_err(|e| (400, format!("{e:#}")))?);
+    }
+    let class = match get_str("class")? {
+        Some(c) => Class::parse(c).ok_or((400, format!("'{c}' is not a class")))?,
+        None => Class::default(),
+    };
+    let keep = match v.get("keep") {
+        None | Some(Json::Null) => false,
+        Some(j) => j.as_bool().ok_or((400, "'keep' must be a bool".to_string()))?,
+    };
+    let session = match v.get("session") {
+        None | Some(Json::Null) => None,
+        Some(j) => Some(
+            j.as_i64()
+                .and_then(|x| u64::try_from(x).ok())
+                .ok_or((400, "'session' must be a session id".to_string()))?,
+        ),
+    };
+    let turn = get_tokens("turn")?.unwrap_or_default();
+    if session.is_some() && turn.is_empty() {
+        return Err((400, "'session' requires a non-empty 'turn' token array".into()));
+    }
+    if session.is_none() && !turn.is_empty() {
+        return Err((400, "'turn' requires 'session'".into()));
+    }
+    let (doc, query) = if session.is_some() {
+        (Vec::new(), Vec::new())
+    } else {
+        (
+            get_tokens("doc")?.ok_or((400, "'doc' token array is required".to_string()))?,
+            get_tokens("query")?.ok_or((400, "'query' token array is required".to_string()))?,
+        )
+    };
+    let max_new = get_usize("max_new")?.unwrap_or(0); // 0 → engine default
+    Ok(Box::new(GenerateSpec { doc, query, max_new, opts, class, keep, session, turn }))
+}
+
+/// Pump engine events onto the wire. The first event decides the shape:
+/// a `Reject` is a plain status response; anything else opens a chunked
+/// 200 and streams until `Done`.
+fn stream_events(w: &mut TcpStream, rx: &Receiver<Event>) -> bool {
+    let first = match rx.recv_timeout(Duration::from_secs(300)) {
+        Ok(e) => e,
+        Err(_) => return write_error(w, 500, "engine did not respond", None).is_ok(),
+    };
+    match first {
+        Event::Reject { status, detail, retry_after } => {
+            write_error(w, status, &detail, if retry_after { Some(1) } else { None }).is_ok()
+        }
+        first => {
+            let Ok(mut cw) = ChunkedWriter::begin(&mut *w, 200, "application/x-ndjson", &[])
+            else {
+                return false;
+            };
+            let mut ev = first;
+            loop {
+                match ev {
+                    Event::Chunk(line) => {
+                        if cw.chunk(line.as_bytes()).is_err() {
+                            return false;
+                        }
+                    }
+                    Event::Done(line) => {
+                        if cw.chunk(line.as_bytes()).is_err() {
+                            return false;
+                        }
+                        return cw.finish().is_ok();
+                    }
+                    Event::Reject { .. } => return false, // engine never rejects mid-stream
+                }
+                ev = match rx.recv_timeout(Duration::from_secs(300)) {
+                    Ok(e) => e,
+                    Err(_) => return false,
+                };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Persistent session ids live far above the scheduler's (which start at
+/// `LEGACY_SESSION + 1` and count up) so the two allocators never collide.
+const PERSIST_SID_BASE: SessionId = 1_000_000;
+
+fn reject(tx: &Sender<Event>, status: u16, detail: impl Into<String>, retry_after: bool) {
+    let _ = tx.send(Event::Reject { status, detail: detail.into(), retry_after });
+}
+
+fn token_line(index: usize, token: i32) -> String {
+    let mut line = JsonWriter::obj()
+        .str_field("event", "token")
+        .num_field("index", index as f64)
+        .num_field("token", token as f64)
+        .close();
+    line.push('\n');
+    line
+}
+
+fn argmax_token(row: &[f32]) -> i32 {
+    Tensor::argmax_row(row) as i32
+}
+
+struct Engine<'a> {
+    cfg: &'a Config,
+    sched: Scheduler<'a>,
+    cluster: &'a Cluster,
+    capacity: usize,
+    persist: HashSet<SessionId>,
+    next_psid: SessionId,
+    streams: HashMap<u64, SchedStream>,
+    turns: Vec<TurnStream>,
+    keep_q: VecDeque<(Box<GenerateSpec>, Sender<Event>)>,
+    next_req_id: u64,
+    completed_seen: usize,
+    served: u64,
+    rejected_429: u64,
+    draining: bool,
+    counters: Arc<Counters>,
+}
+
+fn engine_main(
+    cfg: Config,
+    driver: Driver,
+    opts: HttpOptions,
+    rx: Receiver<EngineCmd>,
+    ready_tx: Sender<std::result::Result<(), String>>,
+    counters: Arc<Counters>,
+) {
+    let cluster = match Cluster::start_with(&cfg, driver) {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let _ = ready_tx.send(Ok(()));
+    let sched = Scheduler::new(&cluster, opts.max_queue);
+    let mut eng = Engine {
+        cfg: &cfg,
+        capacity: cfg.apb.max_resident,
+        sched,
+        cluster: &cluster,
+        persist: HashSet::new(),
+        next_psid: PERSIST_SID_BASE,
+        streams: HashMap::new(),
+        turns: Vec::new(),
+        keep_q: VecDeque::new(),
+        next_req_id: 1,
+        completed_seen: 0,
+        served: 0,
+        rejected_429: 0,
+        draining: false,
+        counters,
+    };
+    let mut drain_ack: Option<Sender<()>> = None;
+
+    loop {
+        // 1) Commands. Block (with a short poll) when no stream can make
+        // progress anyway — keeps the engine cold between requests instead
+        // of spinning the loop.
+        let mut disconnected = false;
+        if !eng.can_progress() && !eng.draining {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(cmd) => eng.handle(cmd, &mut drain_ack),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => eng.handle(cmd, &mut drain_ack),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if disconnected && !eng.can_progress() {
+            // Every Server/handler sender is gone and nothing left can
+            // advance: there is no one to stream to.
+            break;
+        }
+
+        // 2..5) One quiescent-boundary slice of work.
+        eng.step();
+
+        if eng.draining {
+            if eng.idle() {
+                if let Some(ack) = drain_ack.take() {
+                    let _ = ack.send(());
+                }
+                break;
+            }
+            if !eng.can_progress() {
+                // Queued work that can never admit (every KV slot is a
+                // persistent session nobody will DELETE while draining):
+                // fail the stragglers rather than hang shutdown.
+                eng.fail_all_streams("server is draining");
+                if let Some(ack) = drain_ack.take() {
+                    let _ = ack.send(());
+                }
+                break;
+            }
+        }
+    }
+}
+
+impl<'a> Engine<'a> {
+    fn idle(&self) -> bool {
+        self.sched.queued() == 0
+            && self.sched.resident() == 0
+            && self.streams.is_empty()
+            && self.turns.is_empty()
+            && self.keep_q.is_empty()
+    }
+
+    /// Whether a [`Engine::step`] slice could advance anything right now.
+    /// False both when fully idle and when the only outstanding work is
+    /// queued admissions that cannot seat (`max_resident` == 0 because
+    /// every KV slot is persistent) — in either case the loop should
+    /// block on the command channel instead of spinning.
+    fn can_progress(&self) -> bool {
+        !self.turns.is_empty()
+            || !self.keep_q.is_empty()
+            || (self.effective_capacity() >= 1
+                && (self.sched.queued() > 0 || self.sched.resident() > 0))
+            || self.sched.resident() > 0
+    }
+
+    /// Scheduler slots not reserved by persistent sessions (live or
+    /// queued-to-prefill).
+    fn effective_capacity(&self) -> usize {
+        self.capacity.saturating_sub(self.persist.len() + self.keep_q.len())
+    }
+
+    fn handle(&mut self, cmd: EngineCmd, drain_ack: &mut Option<Sender<()>>) {
+        match cmd {
+            EngineCmd::Generate(spec, tx) => self.handle_generate(spec, tx),
+            EngineCmd::Metrics(tx) => {
+                let _ = tx.send(self.metrics_json());
+            }
+            EngineCmd::ClearSession(sid, tx) => {
+                let outcome = if !self.persist.contains(&sid) {
+                    ClearOutcome::NotFound
+                } else if self.turns.iter().any(|t| t.sid == sid) {
+                    ClearOutcome::Busy
+                } else {
+                    self.persist.remove(&sid);
+                    match self.cluster.clear_session(sid) {
+                        Ok(()) => ClearOutcome::Cleared,
+                        Err(_) => ClearOutcome::Cleared, // slot freed engine-side regardless
+                    }
+                };
+                let _ = tx.send(outcome);
+            }
+            EngineCmd::Shutdown(ack) => {
+                self.draining = true;
+                *drain_ack = Some(ack);
+            }
+        }
+    }
+
+    fn handle_generate(&mut self, mut spec: Box<GenerateSpec>, tx: Sender<Event>) {
+        if self.draining {
+            return reject(&tx, 503, "server is draining", false);
+        }
+        if spec.max_new == 0 {
+            spec.max_new = self.cfg.apb.max_new_tokens.max(1);
+        }
+        if let Some(psid) = spec.session {
+            return self.start_turn(&spec, psid, tx);
+        }
+        // Geometry validation (engine-side: it owns the config).
+        if spec.doc.len() != self.cfg.apb.doc_len() {
+            return reject(
+                &tx,
+                400,
+                format!("doc length {} != configured {}", spec.doc.len(), self.cfg.apb.doc_len()),
+                false,
+            );
+        }
+        if spec.query.len() != self.cfg.apb.query_len {
+            return reject(
+                &tx,
+                400,
+                format!(
+                    "query length {} != configured {}",
+                    spec.query.len(),
+                    self.cfg.apb.query_len
+                ),
+                false,
+            );
+        }
+        if spec.keep {
+            if self.persist.len() + self.keep_q.len() + self.sched.resident() >= self.capacity {
+                self.rejected_429 += 1;
+                return reject(&tx, 429, "kv pool exhausted (persistent sessions)", true);
+            }
+            self.keep_q.push_back((spec, tx));
+            return;
+        }
+        if self.effective_capacity() == 0 {
+            // Every KV slot is (or is about to be) held by a persistent
+            // session: a queued request could never admit. Backpressure,
+            // not an internal error.
+            self.rejected_429 += 1;
+            return reject(&tx, 429, "kv pool exhausted: backpressure", true);
+        }
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        let req = Request {
+            id,
+            doc: std::mem::take(&mut spec.doc),
+            query: std::mem::take(&mut spec.query),
+            max_new: spec.max_new,
+            opts: spec.opts,
+            class: spec.class,
+        };
+        match self.sched.submit(req) {
+            Ok(()) => {
+                self.served += 1;
+                self.streams.insert(id, SchedStream { tx, sent: 0 });
+            }
+            Err(e) if is_backpressure(&e) => {
+                self.rejected_429 += 1;
+                reject(&tx, 429, format!("{e:#}"), true);
+            }
+            Err(e) => reject(&tx, 500, format!("{e:#}"), false),
+        }
+    }
+
+    /// Start a follow-up turn against a kept session: one `append_turn`
+    /// chunk pass yields the first token; the rest decode batched.
+    fn start_turn(&mut self, spec: &GenerateSpec, psid: SessionId, tx: Sender<Event>) {
+        if !self.persist.contains(&psid) {
+            return reject(&tx, 404, format!("no persistent session {psid}"), false);
+        }
+        if self.turns.iter().any(|t| t.sid == psid) {
+            return reject(&tx, 409, format!("session {psid} has a stream in flight"), false);
+        }
+        match self.cluster.append_turn(psid, &spec.turn) {
+            Ok(chunk) => {
+                let vocab = self.cfg.model.vocab_size;
+                let token0 = argmax_token(&chunk.logits[chunk.logits.len() - vocab..]);
+                self.served += 1;
+                let _ = tx.send(Event::Chunk(token_line(0, token0)));
+                self.finish_or_stream_turn(psid, tx, vec![token0], spec.max_new);
+            }
+            Err(e) if is_backpressure(&e) => {
+                self.rejected_429 += 1;
+                reject(&tx, 429, format!("{e:#}"), true);
+            }
+            Err(e) => reject(&tx, 500, format!("{e:#}"), false),
+        }
+    }
+
+    /// Either the stream is complete (send `done`) or it joins the
+    /// batched turn-decode rotation.
+    fn finish_or_stream_turn(
+        &mut self,
+        sid: SessionId,
+        tx: Sender<Event>,
+        produced: Vec<i32>,
+        max_new: usize,
+    ) {
+        if produced.len() >= max_new {
+            let _ = tx.send(Event::Done(done_line_persistent(sid, &produced)));
+        } else {
+            let prev = *produced.last().expect("first token present");
+            self.turns.push(TurnStream { sid, tx, produced, max_new, prev });
+        }
+    }
+
+    /// One engine slice: at most one persistent prefill, one scheduler
+    /// step, one batched turn-decode step, then flush new tokens.
+    fn step(&mut self) {
+        // Reserve scheduler headroom for persistent + queued-keep slots.
+        self.sched.max_resident = self.effective_capacity();
+
+        // (2) One persistent prefill, only while the one-prefill-at-a-time
+        // permit is guaranteed free (no scheduler admission in flight) —
+        // `prefill_session` runs begin→finish inline, i.e. at a fabric-
+        // quiescent boundary, then releases the permit before the next
+        // scheduler step.
+        if !self.keep_q.is_empty() && self.sched.prefill_in_flight().is_none() {
+            let (spec, tx) = self.keep_q.pop_front().expect("non-empty");
+            self.run_keep_prefill(&spec, tx);
+        }
+
+        // (3) One scheduler step (admission chunk interleaved with the
+        // batched decode tick). `max_resident == 0` means every slot is
+        // persistent: queued work waits for a DELETE /v1/session.
+        if self.sched.max_resident >= 1
+            && (self.sched.queued() > 0 || self.sched.resident() > 0)
+        {
+            if let Err(e) = self.sched.step() {
+                self.fail_all_streams(&format!("scheduler error: {e:#}"));
+            }
+        }
+
+        // (4) One batched decode step across live turn streams.
+        self.step_turns();
+
+        // (5) Flush newly decoded scheduler tokens + completed responses.
+        self.flush_sched_streams();
+    }
+
+    fn run_keep_prefill(&mut self, spec: &GenerateSpec, tx: Sender<Event>) {
+        let psid = self.next_psid;
+        self.next_psid += 1;
+        let prefilled = self
+            .cluster
+            .prefill_session(psid, &spec.doc, &spec.query, &spec.opts)
+            .and_then(|_| self.cluster.decode_query_chunk(psid, &spec.query));
+        match prefilled {
+            Ok(chunk) => {
+                self.persist.insert(psid);
+                let vocab = self.cfg.model.vocab_size;
+                let token0 = argmax_token(&chunk.logits[chunk.logits.len() - vocab..]);
+                self.served += 1;
+                let _ = tx.send(Event::Chunk(token_line(0, token0)));
+                self.finish_or_stream_turn(psid, tx, vec![token0], spec.max_new);
+            }
+            Err(e) => {
+                let _ = self.cluster.clear_session(psid);
+                if is_backpressure(&e) {
+                    self.rejected_429 += 1;
+                    reject(&tx, 429, format!("{e:#}"), true);
+                } else {
+                    reject(&tx, 500, format!("{e:#}"), false);
+                }
+            }
+        }
+    }
+
+    fn step_turns(&mut self) {
+        if self.turns.is_empty() {
+            return;
+        }
+        let entries: Vec<(SessionId, i32)> = self.turns.iter().map(|t| (t.sid, t.prev)).collect();
+        let rep = match self.cluster.decode_step_batch(&entries) {
+            Ok(rep) => rep,
+            Err(e) => {
+                let msg = format!("decode error: {e:#}");
+                for t in self.turns.drain(..) {
+                    let _ = t.tx.send(Event::Done(error_done_line(&msg)));
+                }
+                return;
+            }
+        };
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, (sid, row)) in rep.logits.iter().enumerate() {
+            let t = &mut self.turns[i];
+            debug_assert_eq!(t.sid, *sid, "batch rows come back in entry order");
+            let token = argmax_token(row);
+            t.produced.push(token);
+            t.prev = token;
+            let _ = t.tx.send(Event::Chunk(token_line(t.produced.len() - 1, token)));
+            if t.produced.len() >= t.max_new {
+                finished.push(i);
+            }
+        }
+        for i in finished.into_iter().rev() {
+            let t = self.turns.swap_remove(i);
+            let _ = t.tx.send(Event::Done(done_line_persistent(t.sid, &t.produced)));
+        }
+    }
+
+    fn flush_sched_streams(&mut self) {
+        let mut flushes: Vec<(u64, Vec<i32>, usize)> = Vec::new();
+        for (rid, toks) in self.sched.active_tokens() {
+            if let Some(st) = self.streams.get(&rid) {
+                if toks.len() > st.sent {
+                    flushes.push((rid, toks[st.sent..].to_vec(), toks.len()));
+                }
+            }
+        }
+        for (rid, new_toks, total) in flushes {
+            if let Some(st) = self.streams.get_mut(&rid) {
+                for (k, tok) in new_toks.iter().enumerate() {
+                    let _ = st.tx.send(Event::Chunk(token_line(st.sent + k, *tok)));
+                }
+                st.sent = total;
+            }
+        }
+        let completed = &self.sched.completed;
+        for resp in completed.iter().skip(self.completed_seen) {
+            if let Some(st) = self.streams.remove(&resp.id) {
+                for (k, tok) in resp.tokens.iter().enumerate().skip(st.sent) {
+                    let _ = st.tx.send(Event::Chunk(token_line(k, *tok)));
+                }
+                let _ = st.tx.send(Event::Done(done_line_response(resp)));
+            }
+        }
+        self.completed_seen = completed.len();
+    }
+
+    fn fail_all_streams(&mut self, msg: &str) {
+        for (_, st) in self.streams.drain() {
+            let _ = st.tx.send(Event::Done(error_done_line(msg)));
+        }
+        for t in self.turns.drain(..) {
+            let _ = t.tx.send(Event::Done(error_done_line(msg)));
+        }
+    }
+
+    /// The `GET /v1/metrics` body: ServingMetrics (when any request has
+    /// completed) + per-host PoolStats + live engine/edge gauges.
+    fn metrics_json(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema_version", json::num(1.0)),
+            ("config", json::s(&self.cfg.name)),
+            ("driver", json::s(self.cluster.driver().name())),
+            ("queued", json::num(self.sched.queued() as f64)),
+            ("resident", json::num(self.sched.resident() as f64)),
+            ("persistent_sessions", json::num(self.persist.len() as f64)),
+            ("active_turn_streams", json::num(self.turns.len() as f64)),
+            ("served", json::num(self.served as f64)),
+            ("rejected_429", json::num(self.rejected_429 as f64)),
+            (
+                "open_connections",
+                json::num(self.counters.open_conns.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "total_connections",
+                json::num(self.counters.total_conns.load(Ordering::SeqCst) as f64),
+            ),
+            (
+                "connections_rejected_503",
+                json::num(self.counters.conn_rejected_503.load(Ordering::SeqCst) as f64),
+            ),
+        ];
+        match self.sched.metrics_opt() {
+            Some(m) => {
+                fields.push(("n_requests", json::num(m.n_requests as f64)));
+                fields.push(("total_tokens", json::num(m.total_tokens as f64)));
+                fields.push(("peak_resident", json::num(m.peak_resident as f64)));
+                fields.push(("preemptions", json::num(m.preemptions_total as f64)));
+                fields.push(("starved", json::num(m.starved as f64)));
+                fields.push(("prefix_hits", json::num(m.prefix_hits as f64)));
+                fields.push(("decode_att_bytes", json::num(m.decode_att_bytes as f64)));
+                fields.push(("decode_qring_bytes", json::num(m.decode_qring_bytes as f64)));
+                fields.push(("ttft_ms", summary_json(&m.ttft, 1e3)));
+                fields.push(("ttft_ticks", summary_json(&m.ttft_ticks, 1.0)));
+                fields.push(("tpot_ms", summary_json(&m.tpot, 1e3)));
+                let classes: Vec<Json> = m
+                    .per_class
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("class", json::s(c.class.name())),
+                            ("n_requests", json::num(c.n_requests as f64)),
+                            ("slo_met", json::num(c.slo_met as f64)),
+                            ("slo_fraction", json::num(c.slo_fraction)),
+                            ("goodput_tokens", json::num(c.goodput_tokens as f64)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("per_class", Json::Arr(classes)));
+            }
+            None => fields.push(("n_requests", json::num(0.0))),
+        }
+        match self.cluster.pool_stats() {
+            Ok(stats) => {
+                let pool: Vec<Json> = stats
+                    .iter()
+                    .enumerate()
+                    .map(|(host, p)| {
+                        json::obj(vec![
+                            ("host", json::num(host as f64)),
+                            ("resident", json::num(p.resident as f64)),
+                            ("bytes_used", json::num(p.bytes_used as f64)),
+                            ("bytes_reserved", json::num(p.bytes_reserved as f64)),
+                            ("prefix_entries", json::num(p.prefix_entries as f64)),
+                            ("prefix_bytes", json::num(p.prefix_bytes as f64)),
+                            ("slab_allocs", json::num(p.slab_allocs as f64)),
+                            ("slab_reuses", json::num(p.slab_reuses as f64)),
+                            ("slabs_free", json::num(p.slabs_free as f64)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("pool", Json::Arr(pool)));
+            }
+            Err(e) => fields.push(("pool_error", json::s(&format!("{e:#}")))),
+        }
+        json::obj(fields).dumps()
+    }
+}
+
+fn summary_json(s: &Summary, scale: f64) -> Json {
+    json::obj(vec![
+        ("n", json::num(s.n as f64)),
+        ("mean", json::num(s.mean * scale)),
+        ("min", json::num(s.min * scale)),
+        ("p50", json::num(s.p50 * scale)),
+        ("p90", json::num(s.p90 * scale)),
+        ("p95", json::num(s.p95 * scale)),
+        ("p99", json::num(s.p99 * scale)),
+        ("max", json::num(s.max * scale)),
+    ])
+}
+
+fn done_line_response(resp: &crate::coordinator::scheduler::Response) -> String {
+    let mut line = JsonWriter::obj()
+        .str_field("event", "done")
+        .num_field("id", resp.id as f64)
+        .tokens_field("tokens", &resp.tokens)
+        .num_field("n_tokens", resp.tokens.len() as f64)
+        .num_field("ttft_ticks", resp.ttft_ticks as f64)
+        .num_field("queue_wait_ticks", resp.queue_wait_ticks as f64)
+        .num_field("prefill_chunks", resp.prefill_chunks as f64)
+        .num_field("preemptions", resp.preemptions as f64)
+        .num_field("decode_att_bytes", resp.decode_att_bytes as f64)
+        .num_field("decode_qring_bytes", resp.decode_qring_bytes as f64)
+        .bool_field("prefix_hit", resp.prefill.prefix_hit)
+        .raw_field("session", "null")
+        .close();
+    line.push('\n');
+    line
+}
+
+fn done_line_persistent(sid: SessionId, tokens: &[i32]) -> String {
+    let mut line = JsonWriter::obj()
+        .str_field("event", "done")
+        .tokens_field("tokens", tokens)
+        .num_field("n_tokens", tokens.len() as f64)
+        .num_field("session", sid as f64)
+        .close();
+    line.push('\n');
+    line
+}
+
+fn error_done_line(msg: &str) -> String {
+    let mut line = JsonWriter::obj()
+        .str_field("event", "done")
+        .str_field("error", msg)
+        .close();
+    line.push('\n');
+    line
+}

@@ -55,6 +55,7 @@ pub mod bench_harness;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod http;
 pub mod kvcache;
 pub mod oracle;
 pub mod report;

@@ -8,7 +8,7 @@
 //!   eval     [--suite ruler]     oracle accuracy table
 //!   golden                       replay + verify the python golden run
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use apb::attnsim::{estimate, speed_tok_per_s, Hyper, Method, A800, LLAMA31_8B};
 use apb::bench_harness::Table;
@@ -16,7 +16,8 @@ use apb::cluster::Interconnect;
 use apb::config::{ApbOptions, AttnMethod, PassStrategy};
 use apb::coordinator::scheduler::{Request, Scheduler};
 use apb::coordinator::{Cluster, Driver};
-use apb::util::json::{self, Json};
+use apb::http::{HttpClient, HttpOptions, HttpResponse, Server};
+use apb::util::json::{self, Json, JsonWriter};
 use apb::workload::{self, TraceSpec};
 use apb::oracle::{expected_score, AccMethod, ApbQuality, EvalCtx};
 use apb::ruler::tasks::{infbench_tasks, ruler_tasks, ModelCol};
@@ -44,8 +45,17 @@ const USAGE: &str = "usage: apb <info|run|serve|simulate|eval|golden> [options]
            goodput and writes BENCH_serving.json)
            --trace-seed N (reseed the trace generator)
            --sweep 1,2,4 (with --trace: replay the trace CLOSED-LOOP at
-           each multiprogramming level and print the latency/goodput
-           curve instead of the open-loop run)
+           each multiprogramming level, print the latency/goodput curve
+           instead of the open-loop run, and write BENCH_sweep.json)
+           --http 127.0.0.1:8080 (serve over HTTP/1.1 instead of the
+           in-process demo: POST /v1/generate streams NDJSON token
+           events via chunked transfer-encoding, GET /v1/metrics,
+           DELETE /v1/session/<id>; docs/serving-guide.md. With --smoke:
+           run the self-contained CI drill — health check, 429 + retry
+           under a pool filled by persistent sessions, closed-loop
+           'smoke'-trace replay, metrics sanity — then exit)
+           --http-conns N (connection cap for --http; default 64)
+           --queue N (admission queue bound; default 64)
   simulate --lengths 32768,131072 --hosts 8
   eval     --suite ruler|infbench --n 131072 --hosts 8
   golden   --config tiny";
@@ -173,6 +183,9 @@ fn serve(args: &Args) -> Result<()> {
     // Cluster-wide chunked-prefill granularity (per-request overrides ride
     // on ApbOptions::chunk_tokens).
     cfg.apb.chunk_tokens = args.usize_or("chunk-tokens", cfg.apb.chunk_tokens)?.max(1);
+    if args.get("http").is_some() {
+        return serve_http(args, cfg, driver_from(args)?);
+    }
     let cluster = Cluster::start_with(&cfg, driver_from(args)?)?;
     if args.get("trace").is_some() {
         return serve_trace(args, &cfg, &cluster);
@@ -271,6 +284,141 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `apb serve --http <addr>`: run the std-only HTTP/1.1 front door
+/// (`rust/src/http/`, `docs/ADR-008-http-front-door.md`) on this config.
+/// Without `--smoke` the server runs until the process is killed; with
+/// `--smoke` it drills itself over loopback — health check, 429 +
+/// Retry-After under a pool fully held by persistent sessions (then
+/// recovery after `DELETE /v1/session/<id>`), a closed-loop replay of the
+/// `smoke` trace over real connections, a metrics sanity pass — and exits.
+fn serve_http(args: &Args, cfg: apb::config::Config, driver: Driver) -> Result<()> {
+    let opts = HttpOptions {
+        addr: args.str_or("http", "127.0.0.1:0"),
+        max_conns: args.usize_or("http-conns", 64)?,
+        max_queue: args.usize_or("queue", 64)?,
+        ..HttpOptions::default()
+    };
+    let smoke = args.has("smoke");
+    let mut server = Server::start(cfg.clone(), driver, opts)?;
+    let addr = server.local_addr().to_string();
+    println!("apb http front door on {addr} (config '{}', driver {})",
+             cfg.name, driver.name());
+    if !smoke {
+        return server.join();
+    }
+    // Run the drill before shutdown either way, so a failed gate still
+    // tears the server down instead of leaking threads into the test run.
+    let outcome = http_smoke(&cfg, &addr);
+    server.shutdown()?;
+    outcome?;
+    println!("apb serve --http --smoke OK (driver {})", driver.name());
+    Ok(())
+}
+
+/// Extract the persistent `session` id from a completed keep-generate
+/// stream (the terminal `done` event carries it).
+fn done_session(resp: &HttpResponse) -> Result<u64> {
+    let body = resp.body_str();
+    let last = body
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .context("empty generate stream")?;
+    let ev = Json::parse(last)?;
+    anyhow::ensure!(ev.req("event")?.as_str() == Some("done"),
+                    "stream did not end in a done event: {last}");
+    ev.req("session")?
+        .as_i64()
+        .map(|s| s as u64)
+        .context("done event without a session id")
+}
+
+/// The `--http --smoke` gate body. Asserts the three observables CI
+/// cares about: full completion of a closed-loop trace replay, at least
+/// one response streamed across >= 2 HTTP chunks, and backpressure
+/// observed as 429 + Retry-After (with recovery after a session clear).
+fn http_smoke(cfg: &apb::config::Config, addr: &str) -> Result<()> {
+    let mut client = HttpClient::connect(addr)?;
+    let resp = client.request("GET", "/v1/healthz", None)?;
+    anyhow::ensure!(resp.status == 200, "healthz returned {}", resp.status);
+
+    // Undersize the pool from the outside: park a persistent session in
+    // every KV slot, so the next plain generate cannot ever admit.
+    let mut rng = Rng::new(41);
+    let mut kept: Vec<u64> = Vec::new();
+    for _ in 0..cfg.apb.max_resident {
+        let inst = gen_instance(cfg, TaskKind::SingleNiah, &mut rng);
+        let body = JsonWriter::obj()
+            .tokens_field("doc", &inst.doc)
+            .tokens_field("query", &inst.query)
+            .num_field("max_new", 1.0)
+            .bool_field("keep", true)
+            .close();
+        let resp = client.request("POST", "/v1/generate", Some(&body))?;
+        anyhow::ensure!(resp.status == 200, "keep generate returned {}", resp.status);
+        kept.push(done_session(&resp)?);
+    }
+    let inst = gen_instance(cfg, TaskKind::SingleNiah, &mut rng);
+    let body = JsonWriter::obj()
+        .tokens_field("doc", &inst.doc)
+        .tokens_field("query", &inst.query)
+        .num_field("max_new", 2.0)
+        .close();
+    let resp = client.request("POST", "/v1/generate", Some(&body))?;
+    anyhow::ensure!(resp.status == 429, "full pool must 429, got {}", resp.status);
+    anyhow::ensure!(resp.header("retry-after").is_some(), "429 without Retry-After");
+    // Freeing one slot un-wedges the identical request.
+    let resp = client.request("DELETE", &format!("/v1/session/{}", kept[0]), None)?;
+    anyhow::ensure!(resp.status == 200, "clear session returned {}", resp.status);
+    let resp = client.request("POST", "/v1/generate", Some(&body))?;
+    anyhow::ensure!(resp.status == 200, "post-clear generate returned {}", resp.status);
+    for sid in &kept[1..] {
+        let resp = client.request("DELETE", &format!("/v1/session/{sid}"), None)?;
+        anyhow::ensure!(resp.status == 200, "clear session {sid} returned {}", resp.status);
+    }
+    println!("[http smoke] backpressure: 429 + Retry-After on a full pool, \
+              recovered after DELETE /v1/session");
+
+    // Closed-loop replay of the seeded smoke trace over real connections.
+    let spec = TraceSpec::by_name("smoke").expect("smoke is a named spec");
+    let trace = workload::generate(cfg, &spec)?;
+    let report = workload::http::drive_http_trace(addr, &trace, 2)?;
+    anyhow::ensure!(
+        report.completed == trace.arrivals.len(),
+        "smoke: {} of {} HTTP requests completed cleanly (429 {}, errors {}, dropped {})",
+        report.completed, trace.arrivals.len(), report.rejected_429, report.errors,
+        report.dropped
+    );
+    anyhow::ensure!(report.mismatches == 0,
+                    "smoke: {} streams disagreed with their done.tokens", report.mismatches);
+    anyhow::ensure!(report.multi_chunk >= 1,
+                    "smoke: no response streamed across >= 2 HTTP chunks");
+    println!("[http smoke] trace replay: {} completed | {} tokens | {} multi-chunk \
+              streams | {} 429s absorbed",
+             report.completed, report.total_tokens, report.multi_chunk,
+             report.rejected_429);
+
+    // Metrics sanity: well-formed JSON, counters advanced, percentiles
+    // ordered.
+    let resp = client.request("GET", "/v1/metrics", None)?;
+    anyhow::ensure!(resp.status == 200, "metrics returned {}", resp.status);
+    let m = Json::parse(&resp.body_str())?;
+    let n = m.req("n_requests")?.as_f64().context("n_requests")?;
+    anyhow::ensure!(n >= trace.arrivals.len() as f64,
+                    "metrics n_requests {n} < trace size {}", trace.arrivals.len());
+    let rejected = m.req("rejected_429")?.as_f64().context("rejected_429")?;
+    anyhow::ensure!(rejected >= 1.0, "the observed 429 was not counted");
+    let tt = m.req("ttft_ticks")?;
+    let p50 = tt.req("p50")?.as_f64().context("p50")?;
+    let p95 = tt.req("p95")?.as_f64().context("p95")?;
+    let p99 = tt.req("p99")?.as_f64().context("p99")?;
+    anyhow::ensure!(p50 <= p95 && p95 <= p99,
+                    "ttft percentiles disordered: {p50}/{p95}/{p99}");
+    println!("[http smoke] metrics: n_requests {n:.0} | ttft ticks p50/p95/p99 \
+              {p50:.0}/{p95:.0}/{p99:.0}");
+    Ok(())
+}
+
 /// `apb serve --trace <spec>`: expand a named workload spec into a seeded
 /// trace, drive it through the SLO scheduler on this cluster, report
 /// percentile latency + per-class goodput, and write the schema-versioned
@@ -317,6 +465,37 @@ fn serve_trace(args: &Args, cfg: &apb::config::Config, cluster: &Cluster) -> Res
             ]);
         }
         table.print();
+        // The sweep twin of BENCH_serving.json: the closed-loop
+        // latency/goodput curve, schema-versioned for the CI validator.
+        let rows: Vec<Json> = points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("concurrency", json::num(p.concurrency as f64)),
+                    ("completed", json::num(p.completed as f64)),
+                    ("final_tick", json::num(p.final_tick as f64)),
+                    ("total_tokens", json::num(p.total_tokens as f64)),
+                    ("goodput_tok_per_tick", json::num(p.goodput_tok_per_tick)),
+                    ("ttft_ticks_p50", json::num(p.ttft_ticks_p50)),
+                    ("ttft_ticks_p95", json::num(p.ttft_ticks_p95)),
+                    ("slo_fraction", json::num(p.slo_fraction)),
+                ])
+            })
+            .collect();
+        let bench = json::obj(vec![
+            ("bench", json::s("serving_sweep")),
+            ("schema_version", json::num(1.0)),
+            ("config", json::s(&cfg.name)),
+            ("driver", json::s(cluster.driver().name())),
+            ("smoke", Json::Bool(args.has("smoke"))),
+            ("trace", json::s(spec.name)),
+            ("trace_seed", json::num(spec.seed as f64)),
+            ("n_arrivals", json::num(trace.arrivals.len() as f64)),
+            ("levels", Json::Arr(levels.iter().map(|l| json::num(*l as f64)).collect())),
+            ("points", Json::Arr(rows)),
+        ]);
+        std::fs::write("BENCH_sweep.json", bench.pretty())?;
+        println!("[bench json] BENCH_sweep.json");
         if args.has("smoke") {
             for p in &points {
                 anyhow::ensure!(p.completed == trace.arrivals.len(),

@@ -221,6 +221,88 @@ pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }
 
+/// An i32 token slice as a JSON array (the `/v1/generate` wire shape).
+pub fn i32_arr(xs: &[i32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Incremental single-allocation object writer — the streaming twin of
+/// [`Json::dumps`]. The HTTP front door serializes one event line per
+/// decoded token; building a `BTreeMap<String, Json>` per token would
+/// allocate per key on the per-token hot path, so this writer appends
+/// fields straight into one `String` (same escaping as the tree
+/// serializer) and preserves insertion order. `Json::parse` reads its
+/// output back verbatim (round-trip tested below).
+pub struct JsonWriter {
+    out: String,
+    first: bool,
+}
+
+impl JsonWriter {
+    /// Start an object: `{`.
+    pub fn obj() -> JsonWriter {
+        JsonWriter { out: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.out.push(',');
+        }
+        self.first = false;
+        write_escaped(&mut self.out, k);
+        self.out.push(':');
+    }
+
+    pub fn num_field(mut self, k: &str, v: f64) -> JsonWriter {
+        self.key(k);
+        if v.fract() == 0.0 && v.abs() < 9e15 {
+            self.out.push_str(&format!("{}", v as i64));
+        } else {
+            self.out.push_str(&format!("{v}"));
+        }
+        self
+    }
+
+    pub fn str_field(mut self, k: &str, v: &str) -> JsonWriter {
+        self.key(k);
+        write_escaped(&mut self.out, v);
+        self
+    }
+
+    pub fn bool_field(mut self, k: &str, v: bool) -> JsonWriter {
+        self.key(k);
+        self.out.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// A pre-serialized JSON value (nested object/array) under `k`.
+    pub fn raw_field(mut self, k: &str, raw_json: &str) -> JsonWriter {
+        self.key(k);
+        self.out.push_str(raw_json);
+        self
+    }
+
+    /// An i32 array field without intermediate `Json` nodes.
+    pub fn tokens_field(mut self, k: &str, xs: &[i32]) -> JsonWriter {
+        self.key(k);
+        self.out.push('[');
+        for (i, x) in xs.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            self.out.push_str(&x.to_string());
+        }
+        self.out.push(']');
+        self
+    }
+
+    /// Close the object: `}`.
+    pub fn close(mut self) -> String {
+        self.out.push('}');
+        self.out
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -474,5 +556,33 @@ mod tests {
         assert_eq!(v.get("n").unwrap().as_usize(), Some(7));
         assert_eq!(v.get("missing"), None);
         assert!(v.req("missing").is_err());
+    }
+
+    #[test]
+    fn json_writer_output_parses_back() {
+        let inner = JsonWriter::obj().num_field("p50", 1.5).num_field("p99", 3.0).close();
+        let line = JsonWriter::obj()
+            .str_field("event", "done\n\"quoted\"")
+            .num_field("index", 3.0)
+            .num_field("big", 1e16)
+            .bool_field("ok", true)
+            .tokens_field("tokens", &[5, -1, 127])
+            .raw_field("ttft", &inner)
+            .close();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.req("event").unwrap().as_str(), Some("done\n\"quoted\""));
+        assert_eq!(v.req("index").unwrap().as_usize(), Some(3));
+        assert_eq!(v.req("big").unwrap().as_f64(), Some(1e16));
+        assert_eq!(v.req("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            v.req("tokens").unwrap().as_arr().unwrap().iter().map(|t| t.as_i64().unwrap())
+                .collect::<Vec<_>>(),
+            vec![5, -1, 127]
+        );
+        assert_eq!(v.req("ttft").unwrap().req("p99").unwrap().as_f64(), Some(3.0));
+        // Empty object is valid too.
+        assert_eq!(Json::parse(&JsonWriter::obj().close()).unwrap(), Json::Obj(Default::default()));
+        // And the writer agrees with the tree serializer on token arrays.
+        assert_eq!(i32_arr(&[5, -1, 127]).dumps(), "[5,-1,127]");
     }
 }

@@ -1,0 +1,233 @@
+//! Closed-loop HTTP load driver: replay a [`Trace`](super::Trace) against
+//! a running `apb serve --http` front door instead of an in-process
+//! scheduler.
+//!
+//! This is the network dual of [`super::run_trace_closed_loop`]: `N`
+//! worker threads each hold one keep-alive [`HttpClient`] connection and
+//! race down the shared arrival list, so the offered multiprogramming
+//! level equals the worker count. The trace's arrival clock is ignored —
+//! closed-loop drivers measure the server's capacity, not the arrival
+//! process. Per response the driver verifies the streaming contract the
+//! tier-1 suite pins bit-exactly: every `token` event line arrives in its
+//! own HTTP chunk, indices are dense, and the terminal `done` event's
+//! `tokens` array equals the streamed sequence. `429 Too Many Requests`
+//! is retried after the server's `Retry-After` hint (capped so smoke runs
+//! stay fast) and counted, feeding the CI gate that wants backpressure
+//! *observed*, not assumed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::scheduler::Request;
+use crate::http::client::{HttpClient, HttpResponse};
+use crate::util::json::{Json, JsonWriter};
+
+use super::Trace;
+
+/// Aggregate outcome of one closed-loop HTTP replay.
+#[derive(Debug, Clone, Default)]
+pub struct HttpLoadReport {
+    /// Requests taken off the trace (== trace length when all workers ran
+    /// to completion).
+    pub attempted: usize,
+    /// Requests that streamed to a clean `done` event.
+    pub completed: usize,
+    /// Total `429 Too Many Requests` responses observed (each is retried
+    /// until it clears or the retry budget runs out).
+    pub rejected_429: usize,
+    /// Requests dropped after exhausting the 429 retry budget.
+    pub dropped: usize,
+    /// Non-(200|429) responses and transport failures.
+    pub errors: usize,
+    /// Responses whose token events arrived in >= 2 distinct HTTP chunks —
+    /// the "actually streamed" observable (chunk boundaries are preserved
+    /// by [`HttpClient`]).
+    pub multi_chunk: usize,
+    /// Tokens summed over clean completions.
+    pub total_tokens: usize,
+    /// Completions whose streamed token sequence disagreed with the
+    /// terminal `done.tokens` array (always 0 unless the server is broken).
+    pub mismatches: usize,
+}
+
+/// Per-request attempts before a persistently-429ing request is dropped.
+const MAX_429_RETRIES: usize = 200;
+
+/// Serialize one trace request as a `/v1/generate` body.
+pub fn generate_body(req: &Request) -> String {
+    let mut w = JsonWriter::obj()
+        .tokens_field("doc", &req.doc)
+        .tokens_field("query", &req.query)
+        .num_field("max_new", req.max_new as f64)
+        .str_field("class", req.class.name());
+    if let Some(ct) = req.opts.chunk_tokens {
+        w = w.num_field("chunk_tokens", ct as f64);
+    }
+    if let Some(ps) = req.opts.pass_strategy {
+        w = w.str_field("pass_strategy", ps.name());
+    }
+    w.close()
+}
+
+/// Outcome of decoding one streamed generate response.
+struct StreamOutcome {
+    tokens: Vec<i32>,
+    token_chunks: usize,
+    clean: bool,
+    matched: bool,
+}
+
+/// Decode the NDJSON event stream out of a chunked response body.
+fn decode_stream(resp: &HttpResponse) -> Result<StreamOutcome> {
+    let mut streamed: Vec<i32> = Vec::new();
+    let mut done_tokens: Option<Vec<i32>> = None;
+    let mut token_chunks = 0usize;
+    let mut clean = false;
+    for chunk in &resp.chunks {
+        let text = std::str::from_utf8(chunk).context("non-UTF-8 event chunk")?;
+        let mut chunk_has_token = false;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = Json::parse(line).with_context(|| format!("bad event line '{line}'"))?;
+            match ev.req("event").ok().and_then(|e| e.as_str()) {
+                Some("token") => {
+                    let idx = ev.req("index").ok().and_then(|v| v.as_usize());
+                    if idx != Some(streamed.len()) {
+                        bail!("token index {idx:?}, expected {}", streamed.len());
+                    }
+                    let tok = ev
+                        .req("token")
+                        .ok()
+                        .and_then(|v| v.as_i64())
+                        .context("token event without token")?;
+                    streamed.push(tok as i32);
+                    chunk_has_token = true;
+                }
+                Some("done") => {
+                    clean = ev.get("error").is_none();
+                    done_tokens = ev.get("tokens").map(|t| {
+                        t.as_arr()
+                            .map(|a| a.iter().filter_map(|x| x.as_i64().map(|v| v as i32)).collect())
+                            .unwrap_or_default()
+                    });
+                }
+                other => bail!("unknown event {other:?}"),
+            }
+        }
+        if chunk_has_token {
+            token_chunks += 1;
+        }
+    }
+    let matched = match &done_tokens {
+        Some(toks) => *toks == streamed,
+        None => false,
+    };
+    Ok(StreamOutcome { tokens: streamed, token_chunks, clean: clean && done_tokens.is_some(), matched })
+}
+
+/// Replay `trace` against `addr` with `concurrency` keep-alive worker
+/// connections. Returns the merged report; transport errors surface in
+/// [`HttpLoadReport::errors`] rather than aborting the other workers.
+pub fn drive_http_trace(addr: &str, trace: &Trace, concurrency: usize) -> Result<HttpLoadReport> {
+    if concurrency == 0 {
+        bail!("closed-loop HTTP replay needs concurrency >= 1");
+    }
+    let bodies: Arc<Vec<String>> =
+        Arc::new(trace.arrivals.iter().map(|a| generate_body(&a.req)).collect());
+    let next = Arc::new(AtomicUsize::new(0));
+    let addr = addr.to_string();
+    let workers = concurrency.min(bodies.len()).max(1);
+    let mut joins = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let bodies = Arc::clone(&bodies);
+        let next = Arc::clone(&next);
+        let addr = addr.clone();
+        joins.push(thread::spawn(move || worker_main(&addr, &bodies, &next)));
+    }
+    let mut report = HttpLoadReport::default();
+    for j in joins {
+        let part = j.join().map_err(|_| anyhow::anyhow!("HTTP load worker panicked"))??;
+        report.attempted += part.attempted;
+        report.completed += part.completed;
+        report.rejected_429 += part.rejected_429;
+        report.dropped += part.dropped;
+        report.errors += part.errors;
+        report.multi_chunk += part.multi_chunk;
+        report.total_tokens += part.total_tokens;
+        report.mismatches += part.mismatches;
+    }
+    Ok(report)
+}
+
+fn worker_main(
+    addr: &str,
+    bodies: &[String],
+    next: &AtomicUsize,
+) -> Result<HttpLoadReport> {
+    let mut report = HttpLoadReport::default();
+    let mut client = HttpClient::connect(addr)?;
+    loop {
+        let i = next.fetch_add(1, Ordering::SeqCst);
+        if i >= bodies.len() {
+            return Ok(report);
+        }
+        report.attempted += 1;
+        let mut attempts = 0usize;
+        loop {
+            let resp = match client.request("POST", "/v1/generate", Some(&bodies[i])) {
+                Ok(r) => r,
+                Err(_) => {
+                    // Reconnect once (the server may have closed an idle
+                    // keep-alive connection); a second failure is an error.
+                    client = HttpClient::connect(addr)?;
+                    match client.request("POST", "/v1/generate", Some(&bodies[i])) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            report.errors += 1;
+                            break;
+                        }
+                    }
+                }
+            };
+            match resp.status {
+                429 => {
+                    report.rejected_429 += 1;
+                    attempts += 1;
+                    if attempts > MAX_429_RETRIES {
+                        report.dropped += 1;
+                        break;
+                    }
+                    // Honor Retry-After, capped so smoke runs stay fast.
+                    let hint_s: u64 = resp
+                        .header("retry-after")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(0);
+                    thread::sleep(Duration::from_millis((hint_s * 1000).clamp(10, 100)));
+                }
+                200 => {
+                    match decode_stream(&resp) {
+                        Ok(out) if out.clean => {
+                            report.completed += 1;
+                            report.total_tokens += out.tokens.len();
+                            if out.token_chunks >= 2 {
+                                report.multi_chunk += 1;
+                            }
+                            if !out.matched {
+                                report.mismatches += 1;
+                            }
+                        }
+                        _ => report.errors += 1,
+                    }
+                    break;
+                }
+                _ => {
+                    report.errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+}

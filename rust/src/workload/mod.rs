@@ -48,6 +48,8 @@
 //! multiprogramming level and [`sweep_closed_loop`] maps out the
 //! latency/goodput curve across levels.
 
+pub mod http;
+
 use anyhow::{bail, Result};
 
 use crate::config::Config;

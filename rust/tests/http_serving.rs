@@ -1,0 +1,418 @@
+//! Tier-1 conformance suite for the HTTP/1.1 front door
+//! (`rust/src/http/`, `docs/ADR-008-http-front-door.md`).
+//!
+//! What it pins, end-to-end over real loopback sockets:
+//!
+//! * **Bit-identity**: the token stream out of `POST /v1/generate` equals
+//!   a direct `Cluster` prefill+generate of the same request, for every
+//!   `AttnMethod`, and the terminal `done` event's `tokens` array equals
+//!   the streamed sequence (dense indices, own chunk per event line).
+//! * **Multi-turn**: `keep: true` returns a session id whose follow-up
+//!   `turn` streams match a direct `append_turn` + greedy decode mirror.
+//! * **Backpressure**: a KV pool fully held by persistent sessions turns
+//!   plain generates into `429` + `Retry-After`; `DELETE /v1/session/<id>`
+//!   frees a slot and the identical request then succeeds.
+//! * **Metrics**: `GET /v1/metrics` is valid JSON whose latency summaries
+//!   satisfy p50 <= p95 <= p99, with per-host pool stats.
+//! * **Concurrency**: parallel connections stream identical tokens under
+//!   BOTH host drivers (sequential and threaded legs in one test, on top
+//!   of whatever `APB_DRIVER` leg CI pinned for the rest of the suite).
+//!
+//! Runs on the native SimEngine (non-skipping tier-1; prints `APB-RUN`).
+
+use std::thread;
+
+use apb::config::{ApbOptions, AttnMethod, Config};
+use apb::coordinator::{Cluster, Driver};
+use apb::http::{HttpClient, HttpOptions, HttpResponse, Server};
+use apb::util::json::{Json, JsonWriter};
+use apb::util::rng::Rng;
+use apb::util::tensor::Tensor;
+
+/// Seeded (doc, query) of the config's exact geometry.
+fn request_tokens(cfg: &Config, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let doc: Vec<i32> = (0..cfg.apb.doc_len())
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    let query: Vec<i32> = (0..cfg.apb.query_len)
+        .map(|_| rng.range(1, cfg.model.vocab_size as i64) as i32)
+        .collect();
+    (doc, query)
+}
+
+fn start_server(driver: Driver) -> Server {
+    Server::start(Config::sim_tiny(), driver, HttpOptions::default()).expect("server start")
+}
+
+fn generate_body(doc: &[i32], query: &[i32], max_new: usize, method: &str) -> String {
+    JsonWriter::obj()
+        .tokens_field("doc", doc)
+        .tokens_field("query", query)
+        .num_field("max_new", max_new as f64)
+        .str_field("method", method)
+        .close()
+}
+
+/// A decoded `/v1/generate` stream, with the wire-contract assertions
+/// (dense indices, done.tokens == streamed sequence, no error) applied.
+struct Streamed {
+    tokens: Vec<i32>,
+    done: Json,
+    /// HTTP chunks that carried at least one token event — >= 2 proves the
+    /// response actually streamed rather than arriving as one buffer.
+    token_chunks: usize,
+}
+
+fn decode_stream(resp: &HttpResponse) -> Streamed {
+    assert_eq!(resp.status, 200, "generate failed: {}", resp.body_str());
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut done: Option<Json> = None;
+    let mut token_chunks = 0usize;
+    for chunk in &resp.chunks {
+        let text = std::str::from_utf8(chunk).expect("UTF-8 event chunk");
+        let mut chunk_has_token = false;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = Json::parse(line).expect("event line is JSON");
+            let kind = ev
+                .req("event")
+                .expect("event field")
+                .as_str()
+                .expect("event is a string")
+                .to_string();
+            match kind.as_str() {
+                "token" => {
+                    assert_eq!(
+                        ev.req("index").unwrap().as_usize(),
+                        Some(tokens.len()),
+                        "token indices must be dense and in order"
+                    );
+                    tokens.push(ev.req("token").unwrap().as_i64().expect("token i32") as i32);
+                    chunk_has_token = true;
+                }
+                "done" => {
+                    assert!(done.is_none(), "two done events in one stream");
+                    done = Some(ev);
+                }
+                other => panic!("unknown event kind '{other}'"),
+            }
+        }
+        if chunk_has_token {
+            token_chunks += 1;
+        }
+    }
+    let done = done.expect("stream must end in a done event");
+    assert!(done.get("error").is_none(), "stream errored: {}", done.dumps());
+    let echoed: Vec<i32> = done
+        .req("tokens")
+        .expect("done.tokens")
+        .as_arr()
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_i64().expect("token i32") as i32)
+        .collect();
+    assert_eq!(echoed, tokens, "done.tokens must equal the streamed sequence");
+    Streamed { tokens, done, token_chunks }
+}
+
+#[test]
+fn streamed_generate_is_bit_identical_to_a_direct_cluster_for_all_methods() {
+    let driver = Driver::from_env();
+    println!("APB-RUN http_serving backend=sim driver={}", driver.name());
+    let cfg = Config::sim_tiny();
+    let server = start_server(driver);
+    let addr = server.local_addr().to_string();
+    // Independent direct cluster: same config seed => identical synthetic
+    // weights, so it is a true oracle for the server's internal cluster.
+    let oracle = Cluster::start_with(&cfg, driver).expect("oracle cluster");
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let max_new = 5;
+    let methods = [
+        (AttnMethod::Apb, "apb"),
+        (AttnMethod::StarAttn, "star"),
+        (AttnMethod::RingAttn, "ring"),
+        (AttnMethod::Dense, "dense"),
+    ];
+    for (i, (method, name)) in methods.into_iter().enumerate() {
+        let (doc, query) = request_tokens(&cfg, 0xD0C0 + i as u64);
+        let resp = client
+            .request("POST", "/v1/generate", Some(&generate_body(&doc, &query, max_new, name)))
+            .expect("request");
+        let got = decode_stream(&resp);
+        assert!(
+            got.token_chunks >= 2,
+            "method {name}: response arrived in {} token chunk(s) — not streamed",
+            got.token_chunks
+        );
+        assert_eq!(got.tokens.len(), max_new, "method {name}: token budget");
+        oracle.clear().expect("clear oracle");
+        let opts = ApbOptions { method, ..Default::default() };
+        oracle.prefill(&doc, &query, &opts).expect("oracle prefill");
+        let want = oracle.generate(&query, max_new).expect("oracle generate").tokens;
+        assert_eq!(
+            got.tokens, want,
+            "method {name}: HTTP stream diverged from the direct cluster"
+        );
+    }
+}
+
+#[test]
+fn keep_and_append_turn_streams_match_a_direct_session_mirror() {
+    let driver = Driver::from_env();
+    println!("APB-RUN http_serving_turns backend=sim driver={}", driver.name());
+    let cfg = Config::sim_tiny();
+    let server = start_server(driver);
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let (doc, query) = request_tokens(&cfg, 0x7EE7);
+    let max_new = 3;
+
+    // keep: true => persistent session + streamed first turn.
+    let body = JsonWriter::obj()
+        .tokens_field("doc", &doc)
+        .tokens_field("query", &query)
+        .num_field("max_new", max_new as f64)
+        .bool_field("keep", true)
+        .close();
+    let got = decode_stream(&client.request("POST", "/v1/generate", Some(&body)).expect("keep"));
+    let sid = got.done.req("session").expect("session id").as_i64().expect("numeric") as u64;
+
+    // Follow-up turn against the kept session.
+    let (_, turn) = request_tokens(&cfg, 0x7EE8);
+    let body2 = JsonWriter::obj()
+        .num_field("session", sid as f64)
+        .tokens_field("turn", &turn)
+        .num_field("max_new", max_new as f64)
+        .close();
+    let got2 = decode_stream(&client.request("POST", "/v1/generate", Some(&body2)).expect("turn"));
+
+    // Direct mirror: same ops on an independent cluster.
+    let mirror = Cluster::start_with(&cfg, driver).expect("mirror cluster");
+    let vocab = cfg.model.vocab_size;
+    let opts = ApbOptions::default();
+    mirror.prefill_session(1, &doc, &query, &opts).expect("prefill");
+    let chunk = mirror.decode_query_chunk(1, &query).expect("query chunk");
+    let mut tok = Tensor::argmax_row(&chunk.logits[chunk.logits.len() - vocab..]) as i32;
+    let mut want = vec![tok];
+    while want.len() < max_new {
+        let rep = mirror.decode_step_batch(&[(1, tok)]).expect("step");
+        tok = Tensor::argmax_row(&rep.logits[0].1) as i32;
+        want.push(tok);
+    }
+    assert_eq!(got.tokens, want, "keep-generate diverged from the direct mirror");
+
+    let chunk2 = mirror.append_turn(1, &turn).expect("append turn");
+    let mut tok2 = Tensor::argmax_row(&chunk2.logits[chunk2.logits.len() - vocab..]) as i32;
+    let mut want2 = vec![tok2];
+    while want2.len() < max_new {
+        let rep = mirror.decode_step_batch(&[(1, tok2)]).expect("step");
+        tok2 = Tensor::argmax_row(&rep.logits[0].1) as i32;
+        want2.push(tok2);
+    }
+    assert_eq!(got2.tokens, want2, "append-turn stream diverged from the direct mirror");
+
+    // Clearing the session invalidates further turns.
+    let resp = client
+        .request("DELETE", &format!("/v1/session/{sid}"), None)
+        .expect("clear");
+    assert_eq!(resp.status, 200);
+    let resp = client.request("POST", "/v1/generate", Some(&body2)).expect("stale turn");
+    assert_eq!(resp.status, 404, "turn on a cleared session must 404");
+}
+
+#[test]
+fn pool_exhaustion_returns_429_and_recovers_after_session_clear() {
+    let driver = Driver::from_env();
+    println!("APB-RUN http_serving_backpressure backend=sim driver={}", driver.name());
+    let cfg = Config::sim_tiny();
+    let server = start_server(driver);
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+
+    // Park a persistent session in every KV slot.
+    let mut kept = Vec::new();
+    for i in 0..cfg.apb.max_resident {
+        let (doc, query) = request_tokens(&cfg, 0xF111 + i as u64);
+        let body = JsonWriter::obj()
+            .tokens_field("doc", &doc)
+            .tokens_field("query", &query)
+            .num_field("max_new", 1.0)
+            .bool_field("keep", true)
+            .close();
+        let got =
+            decode_stream(&client.request("POST", "/v1/generate", Some(&body)).expect("keep"));
+        kept.push(got.done.req("session").unwrap().as_i64().unwrap() as u64);
+    }
+
+    // A plain generate can now never admit: backpressure, not a 5xx.
+    let (doc, query) = request_tokens(&cfg, 0xF200);
+    let body = generate_body(&doc, &query, 2, "apb");
+    let resp = client.request("POST", "/v1/generate", Some(&body)).expect("overload");
+    assert_eq!(resp.status, 429, "full pool must map to 429: {}", resp.body_str());
+    let retry: u64 = resp
+        .header("retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .expect("Retry-After is seconds");
+    assert!(retry >= 1);
+
+    // Freeing one slot un-wedges the identical request.
+    let resp = client
+        .request("DELETE", &format!("/v1/session/{}", kept[0]), None)
+        .expect("clear");
+    assert_eq!(resp.status, 200);
+    let got = decode_stream(&client.request("POST", "/v1/generate", Some(&body)).expect("retry"));
+    assert_eq!(got.tokens.len(), 2);
+
+    // Session-clear edges: double clear and unknown ids are 404s.
+    let resp = client
+        .request("DELETE", &format!("/v1/session/{}", kept[0]), None)
+        .expect("double clear");
+    assert_eq!(resp.status, 404, "double clear must 404");
+    let resp = client.request("DELETE", "/v1/session/999999999", None).expect("unknown");
+    assert_eq!(resp.status, 404);
+}
+
+#[test]
+fn metrics_roundtrip_reports_ordered_percentiles_and_pool_stats() {
+    let driver = Driver::from_env();
+    println!("APB-RUN http_serving_metrics backend=sim driver={}", driver.name());
+    let cfg = Config::sim_tiny();
+    let server = start_server(driver);
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let n = 3usize;
+    for i in 0..n {
+        let (doc, query) = request_tokens(&cfg, 0x3E7 + i as u64);
+        let resp = client
+            .request("POST", "/v1/generate", Some(&generate_body(&doc, &query, 3, "apb")))
+            .expect("generate");
+        decode_stream(&resp);
+    }
+    let resp = client.request("GET", "/v1/metrics", None).expect("metrics");
+    assert_eq!(resp.status, 200);
+    let m = Json::parse(&resp.body_str()).expect("metrics JSON parses");
+    assert_eq!(m.req("schema_version").unwrap().as_i64(), Some(1));
+    assert_eq!(m.req("driver").unwrap().as_str(), Some(driver.name()));
+    assert!(m.req("n_requests").unwrap().as_usize().unwrap() >= n);
+    assert!(m.req("served").unwrap().as_usize().unwrap() >= n);
+    let pool = m.req("pool").unwrap().as_arr().expect("pool array");
+    assert_eq!(pool.len(), cfg.apb.n_hosts, "one pool entry per host");
+    for host in pool {
+        assert!(host.req("bytes_used").unwrap().as_f64().is_some());
+        assert!(host.req("slabs_free").unwrap().as_f64().is_some());
+    }
+    for summary in ["ttft_ticks", "ttft_ms", "tpot_ms"] {
+        let s = m.req(summary).unwrap();
+        let p50 = s.req("p50").unwrap().as_f64().unwrap();
+        let p95 = s.req("p95").unwrap().as_f64().unwrap();
+        let p99 = s.req("p99").unwrap().as_f64().unwrap();
+        assert!(
+            p50 <= p95 && p95 <= p99,
+            "{summary} percentiles disordered: {p50}/{p95}/{p99}"
+        );
+    }
+}
+
+#[test]
+fn concurrent_connections_stream_identical_tokens_on_both_drivers() {
+    println!("APB-RUN http_serving_concurrent backend=sim");
+    let cfg = Config::sim_tiny();
+    let max_new = 4;
+    let n_conns = 4usize;
+    let reqs: Vec<(Vec<i32>, Vec<i32>)> =
+        (0..n_conns).map(|i| request_tokens(&cfg, 0xCC00 + i as u64)).collect();
+    // One sequential direct oracle serves as the reference for BOTH legs —
+    // so this also proves the two drivers agree with each other over HTTP.
+    let want: Vec<Vec<i32>> = {
+        let oracle = Cluster::start_with(&cfg, Driver::Sequential).expect("oracle");
+        reqs.iter()
+            .map(|(doc, query)| {
+                oracle.clear().expect("clear");
+                oracle.prefill(doc, query, &ApbOptions::default()).expect("prefill");
+                oracle.generate(query, max_new).expect("generate").tokens
+            })
+            .collect()
+    };
+    for driver in [Driver::Sequential, Driver::Threaded] {
+        let server = start_server(driver);
+        let addr = server.local_addr().to_string();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|(doc, query)| {
+                let body = generate_body(doc, query, max_new, "apb");
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut client = HttpClient::connect(&addr).expect("connect");
+                    let resp =
+                        client.request("POST", "/v1/generate", Some(&body)).expect("generate");
+                    decode_stream(&resp).tokens
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let got = h.join().expect("client thread");
+            assert_eq!(
+                got, want[i],
+                "driver {}: concurrent connection {i} diverged from the oracle",
+                driver.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn malformed_requests_map_to_4xx_and_keep_the_connection_alive() {
+    let driver = Driver::from_env();
+    println!("APB-RUN http_serving_errors backend=sim driver={}", driver.name());
+    let cfg = Config::sim_tiny();
+    let server = start_server(driver);
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let (doc, query) = request_tokens(&cfg, 0xE44);
+
+    let resp = client.request("GET", "/v1/healthz", None).expect("health");
+    assert_eq!(resp.status, 200);
+
+    // Every rejection below is answered on the SAME keep-alive connection.
+    let cases: [(String, u16); 7] = [
+        ("this is not json".into(), 400),
+        // wrong geometry
+        (generate_body(&[1, 2, 3], &query, 2, "apb"), 400),
+        // missing doc/query
+        (JsonWriter::obj().num_field("max_new", 2.0).close(), 400),
+        // unknown method
+        (generate_body(&doc, &query, 2, "bogus"), 400),
+        // turn without session / session without turn
+        (
+            JsonWriter::obj().tokens_field("turn", &[1, 2]).num_field("max_new", 1.0).close(),
+            400,
+        ),
+        (JsonWriter::obj().num_field("session", 7.0).close(), 400),
+        // turn against a session that never existed
+        (
+            JsonWriter::obj()
+                .num_field("session", 123456.0)
+                .tokens_field("turn", &[1, 2])
+                .close(),
+            404,
+        ),
+    ];
+    for (body, want) in &cases {
+        let resp = client.request("POST", "/v1/generate", Some(body)).expect("request");
+        assert_eq!(resp.status, *want, "body {body:?} -> {}", resp.body_str());
+    }
+    let resp = client.request("GET", "/v1/generate", None).expect("wrong verb");
+    assert_eq!(resp.status, 405);
+    let resp = client.request("GET", "/v1/nope", None).expect("unknown route");
+    assert_eq!(resp.status, 404);
+    let resp = client.request("DELETE", "/v1/session/notanumber", None).expect("bad id");
+    assert_eq!(resp.status, 404);
+
+    // ...and the connection still serves a real generate afterwards.
+    let resp = client
+        .request("POST", "/v1/generate", Some(&generate_body(&doc, &query, 2, "apb")))
+        .expect("valid generate");
+    let got = decode_stream(&resp);
+    assert_eq!(got.tokens.len(), 2);
+}
